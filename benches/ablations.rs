@@ -1,0 +1,232 @@
+//! E1/E9/E10 + design-choice ablations:
+//!   * Fig. 4  — save-timeline comparison (snapshot frequency per persist);
+//!   * Fig. 3  — modeled GPU/CPU utilization during 3D pretraining;
+//!   * §6.2a   — CPU memory accounting (<= 3x payload claim, OPT-2.7B DP-6);
+//!   * ablations: tiny-bucket size sweep, sharding on/off, RAIM5 on/off,
+//!     clean-copy depth — each isolating one design choice from §4.
+
+use reft::config::{zoo, FtConfig, FtMethod};
+use reft::hwsim::{ClusterHw, HwSpec};
+use reft::snapshot::{cost, SnapshotPlan};
+use reft::topology::{ParallelPlan, Topology};
+use reft::util::{human_bytes, human_secs};
+
+fn reft_cost_with(
+    topo: &Topology,
+    plan: &SnapshotPlan,
+    ft: &FtConfig,
+    iter_secs: f64,
+) -> cost::SaveCost {
+    let mut hw = ClusterHw::new(HwSpec::scaled(topo.nodes, topo.gpus_per_node));
+    let ctx = cost::SaveCtx { topo, plan, ft, iter_compute_secs: iter_secs };
+    cost::method_save_cost(&mut hw, &ctx)
+}
+
+fn main() {
+    fig4_timeline();
+    fig3_utilization();
+    memory_accounting();
+    bucket_sweep();
+    sharding_ablation();
+    raim5_ablation();
+}
+
+/// Fig. 4: under one persist budget, how many snapshots does each method fit?
+fn fig4_timeline() {
+    println!("=== Fig. 4 — snapshots per persisting period ===\n");
+    let spec = zoo::zoo_model("opt-350m").unwrap();
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let plan = SnapshotPlan::build(&topo, &[spec.save_bytes()]);
+    let iter = 1.0;
+    let costs = cost::compare_methods(&topo, &plan, iter, true);
+    let persist_time = costs
+        .iter()
+        .find(|c| c.method == "torchsnapshot")
+        .unwrap()
+        .total;
+    println!("persisting period (sharded ckpt I/O): {}", human_secs(persist_time));
+    println!(
+        "{:<14} {:>14} {:>22}",
+        "method", "save makespan", "saves per persist"
+    );
+    for c in &costs {
+        let per = (persist_time / c.total).floor().max(1.0);
+        println!(
+            "{:<14} {:>14} {:>22}",
+            c.method,
+            human_secs(c.total),
+            if c.method.starts_with("reft") {
+                format!("{per:.0}  (in-memory, I/O-free)")
+            } else {
+                "1  (bound to storage I/O)".to_string()
+            }
+        );
+    }
+    let sn = costs.iter().find(|c| c.method == "reft-sn").unwrap();
+    assert!(persist_time / sn.total > 5.0, "REFT must fit many snapshots per persist");
+    println!();
+}
+
+/// Fig. 3: GPU vs CPU utilization during 3D pretraining of OPT-2.7B
+/// (2 DP x 4 TP x 3 PP on the testbed), with and without REFT.
+fn fig3_utilization() {
+    println!("=== Fig. 3 — modeled utilization, OPT-2.7B 2DPx4TPx3PP ===\n");
+    let spec = zoo::zoo_model("opt-2.7b").unwrap();
+    let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+    let stage_bytes: Vec<u64> = (0..3).map(|s| spec.stage_params(s, 3) * 16).collect();
+    let plan = SnapshotPlan::build(&topo, &stage_bytes);
+    let iter = 2.0; // s/iter for 2.7B on V100s (order of magnitude)
+    let n_micro = 8;
+    let bubble = reft::pipeline::bubble_fraction(3, n_micro);
+
+    let mut csv = String::from("config,gpu_util,cpu_util\n");
+    for (name, method) in [("baseline (no FT)", FtMethod::None), ("with REFT-Sn", FtMethod::ReftSn)]
+    {
+        let ft = FtConfig { method, ..FtConfig::default() };
+        let c = reft_cost_with(&topo, &plan, &ft, iter);
+        let gpu = (1.0 - bubble) * iter / (iter + c.stall);
+        let cpu = (0.05 + (c.shamem + c.ec_encode) / (iter + c.stall)).min(1.0);
+        println!(
+            "  {name:<18} GPU ~{:>5.1}%   CPU ~{:>5.1}%   (stall {} per save)",
+            gpu * 100.0,
+            cpu * 100.0,
+            human_secs(c.stall)
+        );
+        csv.push_str(&format!("{name},{gpu:.4},{cpu:.4}\n"));
+    }
+    std::fs::create_dir_all("artifacts/bench_results").unwrap();
+    std::fs::write("artifacts/bench_results/fig3_utilization.csv", csv).unwrap();
+    println!("  (paper's point: CPU headroom is large; REFT's extra CPU use");
+    println!("   costs almost no GPU time)\n");
+}
+
+/// §6.2a: peak CPU memory <= 3x payload; OPT-2.7B DP-6 example.
+fn memory_accounting() {
+    println!("=== §6.2a — CPU memory accounting (OPT-2.7B, DP-6) ===\n");
+    let spec = zoo::zoo_model("opt-2.7b").unwrap();
+    let payload = spec.save_bytes();
+    // 6-way DP on 6 nodes: each node's SMP holds shard + parity + dirty
+    let shard = payload / 6;
+    let per_node = |clean: u64, with_parity: bool| {
+        let parity = if with_parity { shard.div_ceil(5) } else { 0 };
+        let dirty = shard; // one in-flight dirty buffer
+        clean * shard + parity + dirty
+    };
+    println!(
+        "full FT payload: {} ({} params x 16 B)",
+        human_bytes(payload),
+        spec.total_params()
+    );
+    for (label, clean, parity) in [
+        ("1 clean copy, RAIM5 on", 1u64, true),
+        ("2 clean copies, RAIM5 on", 2, true),
+        ("1 clean copy, RAIM5 off", 1, false),
+    ] {
+        let b = per_node(clean, parity);
+        println!(
+            "  {label:<26} per-node SMP memory {:>10}  ({:.2}x of node shard)",
+            human_bytes(b),
+            b as f64 / shard as f64
+        );
+        assert!(
+            b <= 3 * shard + shard,
+            "exceeds the paper's <= 3x + buffer budget"
+        );
+    }
+    println!(
+        "  paper quote: peak 20.45 GB incl. loader cache on this workload\n   (our 1-clean+parity per-node figure: {})\n",
+        human_bytes(per_node(1, true))
+    );
+}
+
+/// Ablation: tiny-bucket size vs stall + makespan (the §4.1 trade).
+fn bucket_sweep() {
+    println!("=== Ablation — tiny-bucket size (OPT-350M, DP-24) ===\n");
+    let spec = zoo::zoo_model("opt-350m").unwrap();
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let plan = SnapshotPlan::build(&topo, &[spec.save_bytes()]);
+    println!(
+        "{:>12} {:>14} {:>14}",
+        "bucket", "save makespan", "ramp share"
+    );
+    let mut prev_total = f64::INFINITY;
+    for bucket in [1 << 20, 4 << 20, 16 << 20, 64 << 20, 256 << 20] {
+        let ft = FtConfig {
+            method: FtMethod::ReftSn,
+            bucket_bytes: bucket,
+            ..FtConfig::default()
+        };
+        let c = reft_cost_with(&topo, &plan, &ft, 1.0);
+        let ramp = 2.0 * bucket as f64 / HwSpec::paper_testbed().shamem_bw;
+        println!(
+            "{:>12} {:>14} {:>13.1}%",
+            human_bytes(bucket as u64),
+            human_secs(c.total),
+            ramp / c.total * 100.0
+        );
+        // bigger buckets should never make the modeled makespan *better*
+        // than the pipeline bottleneck floor by much — monotone-ish growth
+        assert!(c.total < prev_total * 10.0);
+        prev_total = c.total;
+    }
+    println!("  (small buckets: negligible ramp, bounded PCIe interference;");
+    println!("   the interference coefficient is what Fig. 11 pays for bulk copies)\n");
+}
+
+/// Ablation: intra-SG sharding on/off (the m-fold d2h reduction of §4.1).
+fn sharding_ablation() {
+    println!("=== Ablation — SG sharding on/off (OPT-350M) ===\n");
+    let spec = zoo::zoo_model("opt-350m").unwrap();
+    // sharded: DP-24 across 6 nodes; unsharded: same cluster, 1 DP path
+    let sharded_topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let unsharded_topo = Topology::build(ParallelPlan::dp_only(1), 6, 4).unwrap();
+    let ft = FtConfig { method: FtMethod::ReftSn, ..FtConfig::default() };
+    let c_sh = reft_cost_with(
+        &sharded_topo,
+        &SnapshotPlan::build(&sharded_topo, &[spec.save_bytes()]),
+        &ft,
+        1.0,
+    );
+    let c_un = reft_cost_with(
+        &unsharded_topo,
+        &SnapshotPlan::build(&unsharded_topo, &[spec.save_bytes()]),
+        &ft,
+        1.0,
+    );
+    println!(
+        "  sharded over 6 nodes : makespan {}  d2h {}",
+        human_secs(c_sh.total),
+        human_secs(c_sh.d2h)
+    );
+    println!(
+        "  single-node snapshot : makespan {}  d2h {}",
+        human_secs(c_un.total),
+        human_secs(c_un.d2h)
+    );
+    println!(
+        "  sharding speedup: {:.1}x (paper: ~m-fold with m SG members)\n",
+        c_un.total / c_sh.total
+    );
+    assert!(c_un.total / c_sh.total > 3.0);
+}
+
+/// Ablation: RAIM5 on/off — protection vs doubled snapshot volume (§4.3).
+fn raim5_ablation() {
+    println!("=== Ablation — RAIM5 on/off (OPT-350M, DP-24) ===\n");
+    let spec = zoo::zoo_model("opt-350m").unwrap();
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let plan = SnapshotPlan::build(&topo, &[spec.save_bytes()]);
+    for (label, raim5) in [("RAIM5 off", false), ("RAIM5 on ", true)] {
+        let ft = FtConfig { method: FtMethod::ReftSn, raim5, ..FtConfig::default() };
+        let c = reft_cost_with(&topo, &plan, &ft, 1.0);
+        println!(
+            "  {label}: makespan {}  d2h {}  xor {}  -> survives node loss: {}",
+            human_secs(c.total),
+            human_secs(c.d2h),
+            human_secs(c.ec_encode),
+            raim5
+        );
+    }
+    println!("  (the 2x d2h volume buys single-node-loss recovery per SG —");
+    println!("   Eq. 7 turns the restart rate quadratically smaller)");
+}

@@ -1,0 +1,80 @@
+//! E8 — Appendix A: optimal snapshot/checkpoint intervals (Eq. 4–11),
+//! swept over failure rates and save costs, plus the induced total-overhead
+//! comparison (Eq. 4) showing why high-frequency cheap snapshots beat
+//! low-frequency expensive checkpoints.
+
+use reft::reliability::intervals::{self, reft_fail_rate, save_overhead};
+use reft::util::human_secs;
+
+fn main() {
+    println!("=== Appendix A — optimal fault-tolerance intervals ===\n");
+
+    // measured-ish costs from the save-cost model (OPT-350M, DP-24 class):
+    let t_comp = 1.0; // s per iteration
+    let t_sn = 0.18; // REFT snapshot makespan
+    let t_ck = 2.4; // sharded checkpoint makespan
+    let n = 6;
+
+    println!("inputs: T_comp={t_comp}s, T_sn={t_sn}s, T_ckpt={t_ck}s, SG n={n}\n");
+    println!(
+        "{:<12} {:>14} {:>14} {:>14} {:>10}",
+        "λ_node (/s)", "T_re_sn", "T_ckpt", "T_re_ckpt", "stretch"
+    );
+    for lam in [1e-3, 1e-4, 1e-5, 1e-6] {
+        let s = intervals::schedule(t_sn, t_ck, t_comp, lam, n);
+        println!(
+            "{:<12.0e} {:>14} {:>14} {:>14} {:>9.1}x",
+            lam,
+            human_secs(s.t_re_sn),
+            human_secs(s.t_ckpt),
+            human_secs(s.t_re_ckpt),
+            s.t_re_ckpt / s.t_ckpt
+        );
+    }
+
+    // Eq. 4 total overhead comparison over a 30-day run at λ = 1e-5 /s
+    println!("\n--- Eq. 4 total FT overhead over a 30-day run (λ=1e-5/s) ---");
+    let lam = 1e-5;
+    let t_total = 30.0 * 86400.0;
+    let resched = 30.0;
+
+    // checkpoint-based: restart on every node failure
+    let s = intervals::schedule(t_sn, t_ck, t_comp, lam, n);
+    let o_ck = save_overhead(t_ck, t_comp).max(1e-6);
+    let ck_restart = 20.0 + s.t_ckpt / 2.0 + resched; // load + avg recompute
+    let ck_overhead = o_ck * t_total / s.t_ckpt + ck_restart * t_total * lam;
+
+    // REFT: snapshots are ~free (overlapped); restarts from memory on the
+    // node-failure rate, from checkpoint only on the exceedance rate
+    let o_sn = save_overhead(t_sn, t_comp).max(1e-6);
+    let reft_mem_restart = 60.0 + s.t_re_sn / 2.0 + resched; // decode + recompute
+    let lam_re = reft_fail_rate(lam, n);
+    let reft_ck_restart = 20.0 + s.t_re_ckpt / 2.0 + resched;
+    let reft_overhead = o_sn * t_total / s.t_re_sn
+        + reft_mem_restart * t_total * lam
+        + reft_ck_restart * t_total * lam_re;
+
+    println!(
+        "  checkpoint-based: {:>12}  ({:.2}% of run)",
+        human_secs(ck_overhead),
+        ck_overhead / t_total * 100.0
+    );
+    println!(
+        "  REFT            : {:>12}  ({:.3}% of run)",
+        human_secs(reft_overhead),
+        reft_overhead / t_total * 100.0
+    );
+    println!(
+        "  REFT reduces cumulative FT overhead by {:.1}x",
+        ck_overhead / reft_overhead
+    );
+    assert!(reft_overhead < ck_overhead);
+
+    // sensitivity: REFT's advantage vs SG size
+    println!("\n--- exceedance rate vs SG size (λ_node=1e-4) ---");
+    println!("{:<6} {:>14} {:>12}", "n", "λ_re", "vs λ_node");
+    for n in [2usize, 3, 4, 6, 8, 12] {
+        let r = reft_fail_rate(1e-4, n);
+        println!("{n:<6} {r:>14.3e} {:>11.0}x", 1e-4 / r);
+    }
+}

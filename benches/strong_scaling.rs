@@ -1,0 +1,107 @@
+//! E5/E6 — Fig. 10 (saving speed) + Fig. 11 (saving overhead) in strong
+//! scaling: OPT-1.3B and OPT-2.7B under PP ∈ {1, 2, 4, 6} with TP=4, DP=1
+//! (§6.1; RAIM5 off in the paper's strong-scaling runs due to GPU limits —
+//! mirrored here).
+//!
+//! With DP=1 every SG has one node, so REFT's sharding is per-stage only:
+//! speed grows with PP because stages persist/flush in parallel, while
+//! CheckFreq's single-rank-per-stage copies and the shared cloud link
+//! saturate. Overheads (Fig. 11) stay near-zero for REFT (tiny buckets) and
+//! grow with payload for the unsharded baseline.
+
+use reft::config::zoo;
+use reft::snapshot::{cost, SnapshotPlan};
+use reft::topology::{ParallelPlan, Topology};
+use reft::util::human_secs;
+
+fn main() {
+    println!("=== Strong scaling — Fig. 10 (speed) + Fig. 11 (overhead) ===");
+    let pps = [1usize, 2, 4, 6];
+    for model in ["opt-1.3b", "opt-2.7b"] {
+        let spec = zoo::zoo_model(model).unwrap();
+        println!(
+            "\n--- {} ({:.2}B params, payload {:.1} GB) — TP=4, DP=1 ---",
+            model,
+            spec.total_params() as f64 / 1e9,
+            spec.save_bytes() as f64 / 1e9
+        );
+        println!("Fig. 10 — saving speed (GB/s):");
+        println!(
+            "{:<14} {:>9} {:>9} {:>9} {:>9}",
+            "method", "PP-1", "PP-2", "PP-4", "PP-6"
+        );
+        let mut speed_tbl: Vec<(String, Vec<f64>)> = Vec::new();
+        let mut stall_tbl: Vec<(String, Vec<f64>)> = Vec::new();
+        for method in ["checkfreq", "torchsnapshot", "reft-sn", "reft-ckpt"] {
+            let mut speeds = Vec::new();
+            let mut stalls = Vec::new();
+            for &pp in &pps {
+                let topo = Topology::build(ParallelPlan::new(1, 4, pp), 6, 4).unwrap();
+                let stage_bytes: Vec<u64> =
+                    (0..pp).map(|s| spec.stage_params(s, pp) * 16).collect();
+                let plan = SnapshotPlan::build(&topo, &stage_bytes);
+                // paper's strong-scaling runs exclude RAIM5
+                let costs = cost::compare_methods(&topo, &plan, 1.0, false);
+                let c = costs.iter().find(|c| c.method == method).unwrap();
+                speeds.push(c.speed() / 1e9);
+                stalls.push(c.stall);
+            }
+            println!(
+                "{:<14} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+                method, speeds[0], speeds[1], speeds[2], speeds[3]
+            );
+            speed_tbl.push((method.to_string(), speeds));
+            stall_tbl.push((method.to_string(), stalls));
+        }
+        println!("Fig. 11 — saving overhead (training stall per save):");
+        println!(
+            "{:<14} {:>9} {:>9} {:>9} {:>9}",
+            "method", "PP-1", "PP-2", "PP-4", "PP-6"
+        );
+        for (m, stalls) in &stall_tbl {
+            println!(
+                "{:<14} {:>9} {:>9} {:>9} {:>9}",
+                m,
+                human_secs(stalls[0]),
+                human_secs(stalls[1]),
+                human_secs(stalls[2]),
+                human_secs(stalls[3])
+            );
+        }
+        // shape checks
+        let find = |tbl: &[(String, Vec<f64>)], m: &str| {
+            tbl.iter().find(|t| t.0 == m).unwrap().1.clone()
+        };
+        let sn = find(&speed_tbl, "reft-sn");
+        let cf = find(&speed_tbl, "checkfreq");
+        let sn_stall = find(&stall_tbl, "reft-sn");
+        let cf_stall = find(&stall_tbl, "checkfreq");
+        println!("\nshape checks ({model}):");
+        println!(
+            "  REFT-Sn speed grows with PP: {:.2} -> {:.2} GB/s ({})",
+            sn[0],
+            sn[3],
+            ok(sn[3] > sn[0])
+        );
+        println!(
+            "  REFT-Sn > CheckFreq at every PP ({})",
+            ok(sn.iter().zip(&cf).all(|(a, b)| a > b))
+        );
+        println!(
+            "  REFT stall << CheckFreq stall: {} vs {} at PP-6 ({})",
+            human_secs(sn_stall[3]),
+            human_secs(cf_stall[3]),
+            ok(sn_stall[3] < cf_stall[3] * 0.5)
+        );
+        assert!(sn.iter().zip(&cf).all(|(a, b)| a > b));
+        assert!(sn_stall[3] < cf_stall[3]);
+    }
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

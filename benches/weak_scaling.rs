@@ -1,0 +1,68 @@
+//! E4 — weak scaling (§6.2a): saving speed of OPT-125M and OPT-350M
+//! pretraining under DP ∈ {1, 4, 12, 24}, per fault-tolerance method.
+//!
+//! Paper headlines reproduced in shape:
+//!   * REFT-Sn scales ~18.7x from DP-1 to DP-24 on OPT-350M;
+//!   * at DP-24 REFT-Sn is ~14.11x TorchSnapshot and ~106x CheckFreq;
+//!   * REFT-Ckpt trails TorchSnapshot slightly (tiny buckets trade top
+//!     speed for minimal interference).
+
+use reft::config::zoo;
+use reft::snapshot::{cost, SnapshotPlan};
+use reft::topology::{ParallelPlan, Topology};
+
+fn main() {
+    println!("=== Weak scaling — saving speed (GB/s), paper §6.2a ===");
+    let dps = [1usize, 4, 12, 24];
+    for model in ["opt-125m", "opt-350m"] {
+        let spec = zoo::zoo_model(model).unwrap();
+        let payload = spec.save_bytes();
+        println!(
+            "\n--- {} ({:.0}M params, payload {:.2} GB) ---",
+            model,
+            spec.total_params() as f64 / 1e6,
+            payload as f64 / 1e9
+        );
+        println!(
+            "{:<14} {:>9} {:>9} {:>9} {:>9}",
+            "method", "DP-1", "DP-4", "DP-12", "DP-24"
+        );
+        let mut table: Vec<(String, Vec<f64>)> = Vec::new();
+        for method in ["checkfreq", "torchsnapshot", "reft-sn", "reft-ckpt"] {
+            let mut speeds = Vec::new();
+            for &dp in &dps {
+                let nodes = dp.div_ceil(4).max(1);
+                let topo = Topology::build(ParallelPlan::dp_only(dp), nodes, 4).unwrap();
+                let plan = SnapshotPlan::build(&topo, &[payload]);
+                let costs = cost::compare_methods(&topo, &plan, 1.0, true);
+                let c = costs.iter().find(|c| c.method == method).unwrap();
+                speeds.push(c.speed() / 1e9);
+            }
+            println!(
+                "{:<14} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+                method, speeds[0], speeds[1], speeds[2], speeds[3]
+            );
+            table.push((method.to_string(), speeds));
+        }
+        let find = |m: &str| &table.iter().find(|t| t.0 == m).unwrap().1;
+        let sn = find("reft-sn");
+        let ts = find("torchsnapshot");
+        let cf = find("checkfreq");
+        println!("\nshape checks ({model}):");
+        println!(
+            "  REFT-Sn scaling DP-1 -> DP-24: {:.1}x   (paper: 18.74x on OPT-350M)",
+            sn[3] / sn[0]
+        );
+        println!(
+            "  REFT-Sn / TorchSnapshot @DP-24: {:.1}x  (paper: 14.11x)",
+            sn[3] / ts[3]
+        );
+        println!(
+            "  REFT-Sn / CheckFreq    @DP-24: {:.1}x  (paper: 106.02x)",
+            sn[3] / cf[3]
+        );
+        assert!(sn[3] / ts[3] > 4.0, "REFT/TS ratio collapsed");
+        assert!(sn[3] / cf[3] > 25.0, "REFT/CF ratio collapsed");
+        assert!(sn[3] > sn[0] * 4.0, "weak scaling is flat");
+    }
+}

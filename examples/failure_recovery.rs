@@ -1,0 +1,106 @@
+//! Failure-recovery walkthrough at the byte level: the paper's Fig. 2
+//! workflow on a live 6-node cluster — snapshot, lose nodes in different
+//! patterns, watch the elastic decision tree pick SMP-restore / RAIM5-decode
+//! / checkpoint-fallback, and verify every recovered byte.
+//!
+//! ```bash
+//! cargo run --release --example failure_recovery
+//! ```
+//! (No artifacts needed — this exercises the FT fabric directly.)
+
+use reft::config::FtConfig;
+use reft::elastic::{decide, NodeStatus, RecoveryDecision, ReftCluster};
+use reft::topology::{ParallelPlan, Topology};
+use reft::util::human_bytes;
+use reft::util::rng::Rng;
+
+fn payloads(stage_bytes: &[u64], seed: u64) -> Vec<Vec<u8>> {
+    let mut rng = Rng::seed_from(seed);
+    stage_bytes
+        .iter()
+        .map(|&b| (0..b).map(|_| rng.next_u64() as u8).collect())
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    // the paper's Fig. 3 topology: 2 DP x 4 TP x 3 PP on 6 nodes x 4 GPUs
+    let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4)?;
+    let stage_bytes = vec![8_000_000u64, 6_000_000, 7_000_000];
+    let ft = FtConfig::default();
+
+    println!("== REFT failure-recovery walkthrough ==");
+    println!("topology: 2 DP x 4 TP x 3 PP on 6 nodes (paper Fig. 3 setup)");
+    for sg in topo.sharding_groups() {
+        println!("  SG_{} (stage {}) = nodes {:?}", sg.stage, sg.stage, sg.nodes);
+    }
+
+    println!("\n-- bring-up + first snapshot round --");
+    let mut cluster = ReftCluster::start(topo.clone(), &stage_bytes, ft)?;
+    let data = payloads(&stage_bytes, 42);
+    let v = cluster.snapshot_all(&data)?;
+    println!(
+        "snapshot v{v}: {} sharded across SGs, RAIM5 parity placed",
+        human_bytes(stage_bytes.iter().sum())
+    );
+    println!(
+        "SMP-resident bytes: {}",
+        human_bytes(cluster.resident_bytes()? as u64)
+    );
+
+    // scenario 1: software failure — SMPs untouched
+    println!("\n-- scenario 1: software failure on node 2 --");
+    let mut status = vec![NodeStatus::Healthy; 6];
+    status[2] = NodeStatus::Unhealthy;
+    let d = decide(&topo, &status, true, true);
+    println!("decision: {d:?}");
+    assert_eq!(d, RecoveryDecision::ResumeFromSmp);
+    let restored = cluster.restore_all(&[])?;
+    assert_eq!(restored, data);
+    println!("restored all 3 stage payloads bit-exact from SMPs ✓");
+
+    // scenario 2: single node loss — RAIM5 decode
+    println!("\n-- scenario 2: hardware failure, node 4 offline --");
+    let mut status = vec![NodeStatus::Healthy; 6];
+    status[4] = NodeStatus::Offline;
+    let d = decide(&topo, &status, true, true);
+    println!("decision: {d:?}");
+    cluster.kill_node(4);
+    let restored = cluster.restore_all(&[4])?;
+    assert_eq!(restored, data);
+    println!("node 4's shard XOR-decoded from SG peers, payloads bit-exact ✓");
+    cluster.replace_node(4)?;
+    let v = cluster.snapshot_all(&data)?;
+    println!("substitute node joined; snapshot v{v} re-covers the full group ✓");
+
+    // scenario 3: two losses in one SG — exceeds protection
+    println!("\n-- scenario 3: nodes 0 and 3 offline (both in SG_0) --");
+    let mut status = vec![NodeStatus::Healthy; 6];
+    status[0] = NodeStatus::Offline;
+    status[3] = NodeStatus::Offline;
+    let d = decide(&topo, &status, true, true);
+    println!("decision: {d:?}");
+    assert_eq!(d, RecoveryDecision::LoadCheckpoint);
+    cluster.kill_node(0);
+    cluster.kill_node(3);
+    let err = cluster.restore_all(&[0, 3]).unwrap_err();
+    println!("in-memory restore correctly refused: {err}");
+    println!("(training would reload the latest REFT-Ckpt from storage)");
+
+    // scenario 4: RAIM5 disabled
+    println!("\n-- scenario 4: same single-node loss with RAIM5 disabled --");
+    let d = decide(
+        &topo,
+        &{
+            let mut s = vec![NodeStatus::Healthy; 6];
+            s[4] = NodeStatus::Offline;
+            s
+        },
+        false,
+        true,
+    );
+    println!("decision: {d:?} (no parity -> must hit storage)");
+    assert_eq!(d, RecoveryDecision::LoadCheckpoint);
+
+    println!("\nall scenarios behaved per the paper's recovery tree ✓");
+    Ok(())
+}

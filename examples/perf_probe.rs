@@ -1,0 +1,26 @@
+// §Perf dev probe: live snapshot/restore throughput across RAIM5/bucket
+// configurations (used for the EXPERIMENTS.md §Perf iteration log).
+use reft::config::FtConfig;
+use reft::elastic::ReftCluster;
+use reft::topology::{ParallelPlan, Topology};
+use std::time::Instant;
+
+fn main() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let plen = 192 * 1024 * 1024usize;
+    let payload = vec![0xABu8; plen];
+    for (raim5, bucket) in [(false, 16<<20), (true, 16<<20), (true, 1<<20), (true, 64<<20)] {
+        let ft = FtConfig { bucket_bytes: bucket, raim5, ..FtConfig::default() };
+        let mut c = ReftCluster::start(topo.clone(), &[plen as u64], ft).unwrap();
+        let payloads = vec![payload.clone()];
+        c.snapshot_all(&payloads).unwrap(); // warm
+        let t0 = Instant::now();
+        for _ in 0..3 { c.snapshot_all(&payloads).unwrap(); }
+        let dt = t0.elapsed().as_secs_f64() / 3.0;
+        println!("raim5={raim5} bucket={}MiB: snapshot {:.0} ms ({:.2} GB/s)", bucket>>20, dt*1e3, plen as f64/dt/1e9);
+        let t0 = Instant::now();
+        for _ in 0..3 { std::hint::black_box(c.restore_all(&[]).unwrap()); }
+        let dt = t0.elapsed().as_secs_f64() / 3.0;
+        println!("  restore {:.0} ms ({:.2} GB/s)", dt*1e3, plen as f64/dt/1e9);
+    }
+}

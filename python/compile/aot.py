@@ -1,0 +1,237 @@
+"""AOT pipeline: lower L2 stage functions (which embed the L1 Pallas kernels)
+to HLO *text* artifacts + a JSON manifest for the rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized protos — is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here, at build time (`make artifacts`). The rust binary is
+self-contained afterwards.
+
+Usage:
+    python -m compile.aot --out ../artifacts --model tiny --stages 4
+    python -m compile.aot --out ../artifacts --model e2e-25m --stages 2 --full
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: str) -> dict:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {"path": os.path.relpath(path), "bytes": len(text)}
+
+
+def spec_f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def spec_i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_model(cfg: M.ModelConfig, n_stages: int, out_dir: str, *,
+                 with_full: bool, lr: float) -> dict:
+    """Export one model's stage artifacts + manifest dict."""
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    B, T, D = cfg.batch, cfg.seq, cfg.d_model
+    adam = M.make_adam(cfg, lr=lr)
+
+    layer_split = M.split_layers(cfg.n_layers, n_stages)
+    stages = []
+    for s in range(n_stages):
+        specs = M.stage_specs(cfg, s, n_stages)
+        n_params = M.specs_size(specs)
+        fns = M.make_stage_fns(cfg, s, n_stages)
+        first, last = s == 0, s == n_stages - 1
+        arts = {}
+
+        flat = spec_f32(n_params)
+        hid = spec_f32(B, T, D)
+        tok = spec_i32(B, T)
+
+        if first and last:
+            arts["fwd_bwd"] = lower_to_file(
+                fns["fwd_bwd"], (flat, tok, tok), os.path.join(mdir, f"stage{s}_fwd_bwd.hlo.txt"))
+        elif first:
+            arts["fwd"] = lower_to_file(
+                fns["fwd"], (flat, tok), os.path.join(mdir, f"stage{s}_fwd.hlo.txt"))
+            arts["bwd"] = lower_to_file(
+                fns["bwd"], (flat, tok, hid), os.path.join(mdir, f"stage{s}_bwd.hlo.txt"))
+        elif last:
+            arts["fwd"] = lower_to_file(
+                fns["fwd"], (flat, hid, tok), os.path.join(mdir, f"stage{s}_fwd.hlo.txt"))
+            arts["fwdbwd"] = lower_to_file(
+                fns["fwdbwd"], (flat, hid, tok), os.path.join(mdir, f"stage{s}_fwdbwd.hlo.txt"))
+        else:
+            arts["fwd"] = lower_to_file(
+                fns["fwd"], (flat, hid), os.path.join(mdir, f"stage{s}_fwd.hlo.txt"))
+            arts["bwd"] = lower_to_file(
+                fns["bwd"], (flat, hid, hid), os.path.join(mdir, f"stage{s}_bwd.hlo.txt"))
+
+        arts["adam"] = lower_to_file(
+            adam, (flat, flat, flat, flat, spec_f32(1)),
+            os.path.join(mdir, f"adam_stage{s}.hlo.txt"))
+
+        params, off = [], 0
+        for sp in specs:
+            params.append({"name": sp.name, "shape": list(sp.shape),
+                           "offset": off, "size": sp.size, "init": sp.init})
+            off += sp.size
+        stages.append({
+            "index": s,
+            "kind": "single" if (first and last) else
+                    ("first" if first else ("last" if last else "mid")),
+            "layers": layer_split[s],
+            "n_params": n_params,
+            "artifacts": arts,
+            "params": params,
+        })
+
+    manifest = {
+        "model": cfg.name,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "seq": cfg.seq,
+            "batch": cfg.batch, "lr": lr,
+        },
+        "n_stages": n_stages,
+        "total_params": sum(st["n_params"] for st in stages),
+        "stages": stages,
+    }
+
+    if with_full and n_stages > 1:
+        # whole-model fwd_bwd + adam for pure-DP runs on the same preset
+        specs = M.stage_specs(cfg, 0, 1)
+        n_total = M.specs_size(specs)
+        flat = spec_f32(n_total)
+        tok = spec_i32(B, T)
+        full_arts = {
+            "fwd_bwd": lower_to_file(M.make_full_fwd_bwd(cfg), (flat, tok, tok),
+                                     os.path.join(mdir, "full_fwd_bwd.hlo.txt")),
+            "adam": lower_to_file(adam, (flat, flat, flat, flat, spec_f32(1)),
+                                  os.path.join(mdir, "adam_full.hlo.txt")),
+        }
+        params, off = [], 0
+        for sp in specs:
+            params.append({"name": sp.name, "shape": list(sp.shape),
+                           "offset": off, "size": sp.size, "init": sp.init})
+            off += sp.size
+        manifest["full"] = {"n_params": n_total, "artifacts": full_arts, "params": params}
+
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def export_golden(cfg: M.ModelConfig, n_stages: int, out_dir: str) -> None:
+    """Emit seeded example inputs + expected outputs so the rust integration
+    tests can verify end-to-end numerics of the loaded artifacts (this is the
+    cross-language correctness contract)."""
+    import numpy as np
+
+    mdir = os.path.join(out_dir, cfg.name, "golden")
+    os.makedirs(mdir, exist_ok=True)
+    key = jax.random.PRNGKey(1234)
+    tokens = jax.random.randint(jax.random.PRNGKey(5678), (cfg.batch, cfg.seq),
+                                0, cfg.vocab, dtype=jnp.int32)
+    targets = jnp.roll(tokens, -1, axis=1)
+
+    stage_flats = []
+    for s in range(n_stages):
+        key, sub = jax.random.split(key)
+        stage_flats.append(M.init_params(sub, M.stage_specs(cfg, s, n_stages)))
+    full_flat = jnp.concatenate(stage_flats)
+
+    loss, grads = M.make_full_fwd_bwd(cfg)(full_flat, tokens, targets)
+    adam = M.make_adam(cfg, lr=1e-3)
+    m = jnp.zeros_like(full_flat)
+    v = jnp.zeros_like(full_flat)
+    p2, m2, v2 = adam(full_flat, m, v, grads, jnp.ones(1))
+
+    def dump(name, arr, dtype):
+        np.asarray(arr, dtype=dtype).tofile(os.path.join(mdir, name))
+
+    dump("full_flat.f32", full_flat, np.float32)
+    dump("tokens.i32", tokens, np.int32)
+    dump("targets.i32", targets, np.int32)
+    dump("grads.f32", grads, np.float32)
+    dump("adam_p.f32", p2, np.float32)
+    dump("adam_m.f32", m2, np.float32)
+    dump("adam_v.f32", v2, np.float32)
+
+    # staged pipeline trace: y0 -> ... -> loss + per-stage grads
+    acts, x = [], tokens
+    for s in range(n_stages - 1):
+        fns = M.make_stage_fns(cfg, s, n_stages)
+        x = fns["fwd"](stage_flats[s], x) if s else fns["fwd"](stage_flats[0], tokens)
+        acts.append(x)
+        dump(f"act{s}.f32", x, np.float32)
+    last = M.make_stage_fns(cfg, n_stages - 1, n_stages)
+    loss_staged, dx, _glast = last["fwdbwd"](stage_flats[-1], acts[-1], targets)
+    dump("dx_last.f32", dx, np.float32)
+
+    meta = {
+        "loss": float(loss),
+        "loss_staged": float(loss_staged),
+        "grads_l2": float(jnp.sqrt((grads ** 2).sum())),
+        "n_params": int(full_flat.shape[0]),
+        "stage_sizes": [int(f.shape[0]) for f in stage_flats],
+    }
+    with open(os.path.join(mdir, "golden.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+DEFAULT_EXPORTS = [
+    # (preset, n_stages, with_full)  — what `make artifacts` builds
+    ("tiny", 4, True),
+    ("e2e-25m", 2, True),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default=None, help="preset name; default = standard set")
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--full", action="store_true", help="also export whole-model fwd_bwd")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    jobs = ([(args.model, args.stages, args.full)] if args.model
+            else DEFAULT_EXPORTS)
+    for preset, n_stages, full in jobs:
+        cfg = M.PRESETS[preset]
+        man = export_model(cfg, n_stages, args.out, with_full=full, lr=args.lr)
+        if preset == "tiny":
+            export_golden(cfg, n_stages, args.out)
+        print(f"exported {preset}: {man['total_params']} params, "
+              f"{n_stages} stages -> {args.out}/{preset}/")
+
+
+if __name__ == "__main__":
+    main()

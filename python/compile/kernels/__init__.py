@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the REFT reproduction.
+
+All kernels are authored for TPU structure (VMEM tiling via BlockSpec, MXU-shaped
+matmul tiles) but lowered with ``interpret=True`` so the resulting HLO executes
+on the CPU PJRT plugin used by the rust runtime. See DESIGN.md
+§Hardware-Adaptation for the CUDA->TPU mapping rationale.
+"""
+
+from .flash_attention import flash_attention
+from .fused_adam import fused_adam
+
+__all__ = ["flash_attention", "fused_adam"]

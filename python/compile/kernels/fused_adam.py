@@ -1,0 +1,103 @@
+"""Fused Adam optimizer update as a Pallas kernel over flat parameter buffers.
+
+The REFT data path manages every pipeline stage's parameters as one flat f32
+buffer (that is what gets sharded, bucketed, snapshotted and XOR-parity-coded),
+so the optimizer consumes the same layout. A naive jnp Adam emits 8+ separate
+elementwise HLO ops, each a full read+write pass over params/moments (4 buffers
+x several passes of HBM traffic). This kernel fuses the whole update into one
+pass: read (p, m, v, g) tiles, write (p', m', v') tiles.
+
+TPU structure: a 1-D grid over ``block`` -sized tiles of the flat buffer; this
+is VPU (vector unit) work, so ``block`` is a multiple of the 8x128 vreg lane
+layout (default 64Ki elements = 256 KiB/input tile; 7 tiles resident -> ~1.8 MiB
+of VMEM, well within budget, leaving headroom for double buffering).
+
+Per-element roofline: 4 f32 reads + 3 f32 writes = 28 B of HBM traffic for
+~12 flops -> firmly memory-bound; fusing is the whole optimization (one pass
+instead of the ~4x the unfused chain pays). The bias-correction scalars depend
+on the step count, which changes every iteration, so ``step`` is a runtime
+``f32[1]`` input (kept in SMEM on real TPU) rather than a compile-time constant
+— the rust runtime bumps it without re-compiling the artifact.
+
+Hyper-parameters (lr, betas, eps, weight decay) are compile-time constants baked
+into the HLO, matching how the rust coordinator treats them (fixed per run).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 65536
+
+# NOTE on interpret=True performance: each grid step of an interpreted
+# pallas_call lowers to a dynamic-update-slice over the FULL output buffer
+# inside an XLA while loop, so many small blocks are quadratic in total
+# traffic on CPU. The AOT exporter therefore passes block >= n (one grid
+# step). The 64Ki default documents the *TPU* tiling (8x128 vreg multiples,
+# ~1.8 MiB VMEM residency) that a Mosaic build would use.
+AOT_BLOCK = 1 << 26  # >= any exported model's stage size -> single grid step
+
+
+def _adam_kernel(step_ref, p_ref, m_ref, v_ref, g_ref, po_ref, mo_ref, vo_ref,
+                 *, lr, beta1, beta2, eps, weight_decay):
+    t = step_ref[0]
+    p = p_ref[...]
+    m = m_ref[...]
+    v = v_ref[...]
+    g = g_ref[...]
+    if weight_decay != 0.0:
+        g = g + weight_decay * p  # decoupled-free (classic Adam w/ L2) form
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * (g * g)
+    # bias correction: 1 - beta^t, computed from the runtime step scalar
+    bc1 = 1.0 - jnp.exp(t * jnp.log(beta1))
+    bc2 = 1.0 - jnp.exp(t * jnp.log(beta2))
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    po_ref[...] = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    mo_ref[...] = m_new
+    vo_ref[...] = v_new
+
+
+def fused_adam(p, m, v, g, step, *, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+               weight_decay=0.0, block=DEFAULT_BLOCK):
+    """One Adam step over flat f32 buffers.
+
+    Args:
+      p, m, v, g: ``f32[n]`` parameters, first/second moments, gradients.
+      step: ``f32[1]`` 1-based step count (for bias correction).
+    Returns:
+      ``(p', m', v')`` updated flat buffers.
+    """
+    (n,) = p.shape
+    block = min(block, n)
+    # pad to a whole number of blocks; padded lanes are dropped on return
+    pad = (-n) % block
+    if pad:
+        zpad = lambda a: jnp.pad(a, (0, pad))
+        p, m, v, g = zpad(p), zpad(m), zpad(v), zpad(g)
+    nblocks = (n + pad) // block
+
+    kern = functools.partial(
+        _adam_kernel, lr=lr, beta1=beta1, beta2=beta2, eps=eps, weight_decay=weight_decay
+    )
+    out_shape = [jax.ShapeDtypeStruct((n + pad,), jnp.float32)] * 3
+    tile = pl.BlockSpec((block,), lambda i: (i,))
+    p2, m2, v2 = pl.pallas_call(
+        kern,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),  # step scalar, broadcast to all tiles
+            tile, tile, tile, tile,
+        ],
+        out_specs=[tile, tile, tile],
+        out_shape=out_shape,
+        interpret=True,
+    )(step, p, m, v, g)
+    if pad:
+        p2, m2, v2 = p2[:n], m2[:n], v2[:n]
+    return p2, m2, v2

@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness signal).
+
+These are the mathematically transparent implementations the kernels are
+verified against in ``python/tests/`` (pytest + hypothesis shape/dtype sweeps).
+They deliberately materialise the full score matrix / use the unfused update
+chain so any kernel bug shows up as a numeric divergence, not a shared mistake.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, causal=True):
+    """Plain softmax attention over ``[heads, seq, d]`` (scores materialised)."""
+    h, seq, d = q.shape
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq, seq), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v)
+
+
+def ref_adam(p, m, v, g, step, *, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+             weight_decay=0.0):
+    """Textbook Adam on flat buffers; ``step`` is a 1-based python/array scalar."""
+    t = jnp.asarray(step, dtype=jnp.float32).reshape(())
+    if weight_decay != 0.0:
+        g = g + weight_decay * p
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1 ** t)
+    v_hat = v_new / (1.0 - beta2 ** t)
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new

@@ -1,0 +1,331 @@
+"""Layer-2: OPT-style decoder-only transformer in JAX, split into pipeline
+stage functions for the rust coordinator.
+
+Every pipeline stage's parameters live in ONE flat f32 buffer. That is a
+deliberate contract with the rust side: the flat buffer is the unit that REFT
+shards across the sharding group, copies device->host in tiny buckets, double-
+buffers on the SMP and XOR-parity-codes in RAIM5. The stage functions take the
+flat buffer and unflatten it internally (XLA folds the slices/reshapes away),
+so rust never needs to know the pytree structure — only the manifest's
+(name, shape, offset, init) records, which it uses for initialisation.
+
+Stage functions exported per model (see aot.py):
+  stage0_fwd   (flat[N0], tokens i32[B,T])            -> y f32[B,T,D]
+  stage0_bwd   (flat, tokens, dy)                     -> grads f32[N0]
+  mid{i}_fwd   (flat[Ni], x f32[B,T,D])               -> y
+  mid{i}_bwd   (flat, x, dy)                          -> (dx, grads)
+  last_fwd     (flat[NL], x, targets i32[B,T])        -> loss f32[]
+  last_fwdbwd  (flat, x, targets)                     -> (loss, dx, grads)
+  fwd_bwd      (flat[N], tokens, targets)             -> (loss, grads)
+  adam_*       (p, m, v, g, step f32[1])              -> (p', m', v')
+
+Backward stages recompute the forward from the stage input (activation
+rematerialisation) — the standard memory/compute trade for pipeline training,
+and it keeps each bwd artifact self-contained (no residual plumbing across the
+rust boundary).
+
+Architecture (OPT family): learned positional embeddings, pre-LN blocks,
+GELU MLP (4x), untied LM head, causal attention via the L1 Pallas
+flash-attention kernel, Adam via the L1 fused-adam kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, fused_adam
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int  # microbatch size the artifacts are specialised for
+    use_pallas: bool = True  # False -> ref attention (debug / ablation)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+PRESETS = {
+    # integration-test scale: compiles + runs in milliseconds
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=4, n_heads=4,
+                        d_ff=256, seq=32, batch=2),
+    # end-to-end example scale (~34M params): a few hundred steps on 1 CPU core
+    "e2e-25m": ModelConfig("e2e-25m", vocab=8192, d_model=512, n_layers=8,
+                           n_heads=8, d_ff=2048, seq=128, batch=4),
+    # ~124M params: runnable, exported on demand (heavier compile/exec)
+    "e2e-100m": ModelConfig("e2e-100m", vocab=32768, d_model=768, n_layers=12,
+                            n_heads=12, d_ff=3072, seq=256, batch=2),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameter layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init: str  # "normal:<std>" | "zeros" | "ones"
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def block_specs(cfg: ModelConfig, layer: int) -> list:
+    """Parameter layout of one pre-LN transformer block."""
+    d, f = cfg.d_model, cfg.d_ff
+    p = f"h{layer}."
+    std = "normal:0.02"
+    return [
+        ParamSpec(p + "ln1_g", (d,), "ones"),
+        ParamSpec(p + "ln1_b", (d,), "zeros"),
+        ParamSpec(p + "w_qkv", (d, 3 * d), std),
+        ParamSpec(p + "b_qkv", (3 * d,), "zeros"),
+        ParamSpec(p + "w_o", (d, d), std),
+        ParamSpec(p + "b_o", (d,), "zeros"),
+        ParamSpec(p + "ln2_g", (d,), "ones"),
+        ParamSpec(p + "ln2_b", (d,), "zeros"),
+        ParamSpec(p + "w_fc", (d, f), std),
+        ParamSpec(p + "b_fc", (f,), "zeros"),
+        ParamSpec(p + "w_proj", (f, d), std),
+        ParamSpec(p + "b_proj", (d,), "zeros"),
+    ]
+
+
+def split_layers(n_layers: int, n_stages: int) -> list:
+    """Balanced contiguous layer split (earlier stages get the remainder)."""
+    assert 1 <= n_stages <= n_layers
+    base, rem = divmod(n_layers, n_stages)
+    out, start = [], 0
+    for s in range(n_stages):
+        cnt = base + (1 if s < rem else 0)
+        out.append(list(range(start, start + cnt)))
+        start += cnt
+    return out
+
+
+def stage_specs(cfg: ModelConfig, stage: int, n_stages: int) -> list:
+    """Flat-buffer layout of one pipeline stage."""
+    layers = split_layers(cfg.n_layers, n_stages)[stage]
+    specs = []
+    if stage == 0:
+        specs.append(ParamSpec("tok_emb", (cfg.vocab, cfg.d_model), "normal:0.02"))
+        specs.append(ParamSpec("pos_emb", (cfg.seq, cfg.d_model), "normal:0.02"))
+    for l in layers:
+        specs.extend(block_specs(cfg, l))
+    if stage == n_stages - 1:
+        specs.append(ParamSpec("lnf_g", (cfg.d_model,), "ones"))
+        specs.append(ParamSpec("lnf_b", (cfg.d_model,), "zeros"))
+        specs.append(ParamSpec("lm_head", (cfg.d_model, cfg.vocab), "normal:0.02"))
+    return specs
+
+
+def specs_size(specs) -> int:
+    return sum(s.size for s in specs)
+
+
+def unflatten(flat: jnp.ndarray, specs) -> dict:
+    """Slice the flat buffer into named tensors (static offsets; XLA folds it)."""
+    out, off = {}, 0
+    for s in specs:
+        out[s.name] = flat[off:off + s.size].reshape(s.shape)
+        off += s.size
+    return out
+
+
+def init_params(key, specs) -> jnp.ndarray:
+    """Python-side init (mirrors the rust-side manifest-driven init)."""
+    parts = []
+    for s in specs:
+        if s.init == "zeros":
+            parts.append(jnp.zeros((s.size,), jnp.float32))
+        elif s.init == "ones":
+            parts.append(jnp.ones((s.size,), jnp.float32))
+        else:
+            std = float(s.init.split(":")[1])
+            key, sub = jax.random.split(key)
+            parts.append(jax.random.normal(sub, (s.size,), jnp.float32) * std)
+    return jnp.concatenate(parts)
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(cfg: ModelConfig, p: dict, prefix: str, x):
+    """x: [B, T, D] -> [B, T, D] causal MHA via the Pallas kernel."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    qkv = x @ p[prefix + "w_qkv"] + p[prefix + "b_qkv"]  # [B,T,3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    # [B,T,D] -> [B,H,T,dh]
+    to_heads = lambda a: a.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    q, k, v = to_heads(q), to_heads(k), to_heads(v)
+    if cfg.use_pallas:
+        o = jax.vmap(lambda qq, kk, vv: flash_attention(qq, kk, vv))(q, k, v)
+    else:
+        o = jax.vmap(lambda qq, kk, vv: kref.ref_attention(qq, kk, vv))(q, k, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return o @ p[prefix + "w_o"] + p[prefix + "b_o"]
+
+
+def _block(cfg: ModelConfig, p: dict, layer: int, x):
+    pre = f"h{layer}."
+    x = x + _attention(cfg, p, pre, _layer_norm(x, p[pre + "ln1_g"], p[pre + "ln1_b"]))
+    hdn = _layer_norm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+    hdn = jax.nn.gelu(hdn @ p[pre + "w_fc"] + p[pre + "b_fc"], approximate=True)
+    return x + hdn @ p[pre + "w_proj"] + p[pre + "b_proj"]
+
+
+def stage_forward(cfg: ModelConfig, stage: int, n_stages: int) -> Callable:
+    """Build the forward fn of one stage over its flat param buffer.
+
+    first stage : (flat, tokens)      -> hidden
+    mid stage   : (flat, hidden)      -> hidden
+    last stage  : (flat, hidden, tgt) -> loss   (mean token cross-entropy)
+    """
+    specs = stage_specs(cfg, stage, n_stages)
+    layers = split_layers(cfg.n_layers, n_stages)[stage]
+    first, last = stage == 0, stage == n_stages - 1
+
+    def hidden_path(p, x):
+        for l in layers:
+            x = _block(cfg, p, l, x)
+        return x
+
+    if first and last:  # single-stage model == full model w/o loss split
+        def fn(flat, tokens, targets):
+            p = unflatten(flat, specs)
+            x = p["tok_emb"][tokens] + p["pos_emb"][None, :tokens.shape[1], :]
+            x = hidden_path(p, x)
+            return _loss_head(cfg, p, x, targets)
+        return fn
+    if first:
+        def fn(flat, tokens):
+            p = unflatten(flat, specs)
+            x = p["tok_emb"][tokens] + p["pos_emb"][None, :tokens.shape[1], :]
+            return hidden_path(p, x)
+        return fn
+    if last:
+        def fn(flat, x, targets):
+            p = unflatten(flat, specs)
+            x = hidden_path(p, x)
+            return _loss_head(cfg, p, x, targets)
+        return fn
+
+    def fn(flat, x):
+        p = unflatten(flat, specs)
+        return hidden_path(p, x)
+    return fn
+
+
+def _loss_head(cfg: ModelConfig, p: dict, x, targets):
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    logits = x @ p["lm_head"]  # [B,T,V]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# exported entry points (what aot.py lowers)
+# ---------------------------------------------------------------------------
+
+
+def make_stage_fns(cfg: ModelConfig, stage: int, n_stages: int) -> dict:
+    """Forward/backward closures for one stage, keyed by artifact kind."""
+    fwd = stage_forward(cfg, stage, n_stages)
+    first, last = stage == 0, stage == n_stages - 1
+    out = {}
+
+    if first and last:
+        def fwd_bwd(flat, tokens, targets):
+            loss, grads = jax.value_and_grad(fwd)(flat, tokens, targets)
+            return loss, grads
+        out["fwd_bwd"] = fwd_bwd
+        return out
+
+    if first:
+        out["fwd"] = fwd
+
+        def bwd(flat, tokens, dy):
+            _, pull = jax.vjp(lambda f: fwd(f, tokens), flat)
+            (dflat,) = pull(dy)
+            return dflat
+        out["bwd"] = bwd
+    elif last:
+        def last_fwd(flat, x, targets):
+            return fwd(flat, x, targets)
+        out["fwd"] = last_fwd
+
+        def fwdbwd(flat, x, targets):
+            (loss, (dflat, dx)) = jax.value_and_grad(fwd, argnums=(0, 1))(flat, x, targets)
+            return loss, dx, dflat
+        out["fwdbwd"] = fwdbwd
+    else:
+        out["fwd"] = fwd
+
+        def bwd(flat, x, dy):
+            _, pull = jax.vjp(fwd, flat, x)
+            dflat, dx = pull(dy)
+            return dx, dflat
+        out["bwd"] = bwd
+    return out
+
+
+def make_full_fwd_bwd(cfg: ModelConfig) -> Callable:
+    """(flat, tokens, targets) -> (loss, grads) over the whole model (DP mode)."""
+    fn = stage_forward(cfg, 0, 1)
+
+    def fwd_bwd(flat, tokens, targets):
+        loss, grads = jax.value_and_grad(fn)(flat, tokens, targets)
+        return loss, grads
+    return fwd_bwd
+
+
+def make_adam(cfg: ModelConfig, lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8,
+              weight_decay=0.0) -> Callable:
+    """(p, m, v, g, step) -> (p', m', v') via the fused Pallas kernel.
+
+    Exports use one grid step (block >= n): under interpret=True each grid
+    step costs a full-buffer dynamic-update-slice, so fine CPU tiling is
+    pathological — see kernels/fused_adam.py.
+    """
+    from .kernels.fused_adam import AOT_BLOCK
+
+    def adam(p, m, v, g, step):
+        if cfg.use_pallas:
+            return fused_adam(p, m, v, g, step, lr=lr, beta1=beta1, beta2=beta2,
+                              eps=eps, weight_decay=weight_decay,
+                              block=AOT_BLOCK)
+        return kref.ref_adam(p, m, v, g, step[0], lr=lr, beta1=beta1,
+                             beta2=beta2, eps=eps, weight_decay=weight_decay)
+    return adam

@@ -1,0 +1,164 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps the shape space (heads, seq, d_head, block sizes) and the
+dtype-adjacent knobs; every property asserts allclose against ref.py. These are
+the build-time gate for the artifacts the rust runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, fused_adam
+from compile.kernels import ref
+from compile.kernels.flash_attention import _pick_block
+
+jax.config.update("jax_enable_x64", False)
+
+ATOL = 2e-5
+RTOL = 2e-5
+
+
+def rand(key, *shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# flash attention — forward
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    h=st.integers(1, 4),
+    seq_pow=st.integers(2, 7),  # seq in [4, 128]
+    d=st.sampled_from([8, 16, 32, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fwd_matches_ref(h, seq_pow, d, causal, seed):
+    seq = 2 ** seq_pow
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k0, (h, seq, d), jnp.float32)
+    k = jax.random.normal(k1, (h, seq, d), jnp.float32)
+    v = jax.random.normal(k2, (h, seq, d), jnp.float32)
+    o = flash_attention(q, k, v, causal=causal)
+    o_ref = ref.ref_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seq=st.sampled_from([24, 48, 96]),  # non-power-of-two seq exercises _pick_block
+    block_q=st.sampled_from([8, 16, 128]),
+    block_k=st.sampled_from([8, 24, 128]),
+)
+def test_fwd_block_size_invariance(seq, block_q, block_k):
+    q, k, v = rand(1, 2, seq, 16), rand(2, 2, seq, 16), rand(3, 2, seq, 16)
+    o = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+    o_ref = ref.ref_attention(q, k, v)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+
+
+def test_pick_block_divides():
+    for seq in [1, 2, 24, 96, 128, 100, 17]:
+        for want in [1, 8, 64, 128, 1000]:
+            b = _pick_block(seq, want)
+            assert 1 <= b <= max(1, min(want, seq)) and seq % b == 0
+
+
+def test_fwd_under_jit_and_vmap():
+    q, k, v = rand(1, 3, 2, 32, 16), rand(2, 3, 2, 32, 16), rand(3, 3, 2, 32, 16)
+    f = jax.jit(jax.vmap(lambda a, b, c: flash_attention(a, b, c)))
+    o = f(q, k, v)
+    o_ref = jax.vmap(lambda a, b, c: ref.ref_attention(a, b, c))(q, k, v)
+    np.testing.assert_allclose(o, o_ref, atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# flash attention — backward (custom VJP kernels)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.integers(1, 3),
+    seq=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([8, 32]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_bwd_matches_ref_vjp(h, seq, d, causal, seed):
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = jax.random.normal(k0, (h, seq, d), jnp.float32)
+    k = jax.random.normal(k1, (h, seq, d), jnp.float32)
+    v = jax.random.normal(k2, (h, seq, d), jnp.float32)
+    do = jax.random.normal(k3, (h, seq, d), jnp.float32)
+
+    _, pull = jax.vjp(lambda a, b, c: flash_attention(a, b, c, causal=causal), q, k, v)
+    dq, dk, dv = pull(do)
+    _, pull_ref = jax.vjp(lambda a, b, c: ref.ref_attention(a, b, c, causal=causal), q, k, v)
+    dq_r, dk_r, dv_r = pull_ref(do)
+    np.testing.assert_allclose(dq, dq_r, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(dk, dk_r, atol=5e-5, rtol=5e-5)
+    np.testing.assert_allclose(dv, dv_r, atol=5e-5, rtol=5e-5)
+
+
+def test_bwd_through_scalar_loss():
+    q, k, v = rand(7, 2, 32, 16), rand(8, 2, 32, 16), rand(9, 2, 32, 16)
+    g = jax.grad(lambda a: flash_attention(a, k, v).sum())(q)
+    g_ref = jax.grad(lambda a: ref.ref_attention(a, k, v).sum())(q)
+    np.testing.assert_allclose(g, g_ref, atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused adam
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 5000),
+    step=st.integers(1, 10_000),
+    lr=st.sampled_from([1e-4, 1e-3, 1e-2]),
+    wd=st.sampled_from([0.0, 0.01]),
+    block=st.sampled_from([64, 256, 65536]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_adam_matches_ref(n, step, lr, wd, block, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = jax.random.normal(ks[0], (n,), jnp.float32)
+    m = jax.random.normal(ks[1], (n,), jnp.float32) * 0.1
+    v = jnp.abs(jax.random.normal(ks[2], (n,), jnp.float32)) * 0.01
+    g = jax.random.normal(ks[3], (n,), jnp.float32)
+    stepf = jnp.array([float(step)], jnp.float32)
+
+    out = fused_adam(p, m, v, g, stepf, lr=lr, weight_decay=wd, block=block)
+    out_ref = ref.ref_adam(p, m, v, g, float(step), lr=lr, weight_decay=wd)
+    for a, b, name in zip(out, out_ref, ["p", "m", "v"]):
+        np.testing.assert_allclose(a, b, atol=1e-6, rtol=1e-5, err_msg=name)
+
+
+def test_adam_moments_start_zero():
+    """First step from zero moments == SGD-ish step of size ~lr (bias-corrected)."""
+    n = 128
+    p = jnp.ones((n,))
+    g = jnp.ones((n,))
+    z = jnp.zeros((n,))
+    p2, m2, v2 = fused_adam(p, z, z, g, jnp.ones(1), lr=1e-3)
+    # bias correction makes m_hat = g, v_hat = g^2 -> update = lr * sign(g)
+    np.testing.assert_allclose(p2, p - 1e-3 / (1.0 + 1e-8), rtol=1e-6)
+    np.testing.assert_allclose(m2, 0.1 * g, rtol=1e-6)
+    np.testing.assert_allclose(v2, 0.001 * g * g, rtol=1e-4)
+
+
+def test_adam_padding_tail_not_written():
+    """n not divisible by block: outputs only cover [0, n)."""
+    n, block = 100, 64
+    p = jnp.arange(n, dtype=jnp.float32)
+    z = jnp.zeros(n)
+    g = jnp.ones(n)
+    p2, m2, v2 = fused_adam(p, z, z, g, jnp.ones(1), block=block)
+    assert p2.shape == (n,) and m2.shape == (n,) and v2.shape == (n,)

@@ -1,0 +1,165 @@
+"""L2 model correctness: stage composition, shapes, gradients, layouts.
+
+Key invariant for the whole system: running the pipeline stage functions in
+sequence (with activation hand-off) must equal the whole-model function — the
+rust pipeline engine depends on that equivalence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.PRESETS["tiny"]
+CFG_REF = M.ModelConfig(**{**CFG.__dict__, "use_pallas": False})
+
+
+def tiny_batch(seed=0):
+    k = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(k, (CFG.batch, CFG.seq), 0, CFG.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    return tokens, targets
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+
+def test_split_layers_balanced_and_contiguous():
+    for n_layers in range(1, 13):
+        for n_stages in range(1, n_layers + 1):
+            split = M.split_layers(n_layers, n_stages)
+            flat = [l for part in split for l in part]
+            assert flat == list(range(n_layers))
+            sizes = [len(p) for p in split]
+            assert max(sizes) - min(sizes) <= 1
+
+
+@pytest.mark.parametrize("n_stages", [1, 2, 4])
+def test_stage_specs_cover_model(n_stages):
+    total = sum(M.specs_size(M.stage_specs(CFG, s, n_stages)) for s in range(n_stages))
+    assert total == M.specs_size(M.stage_specs(CFG, 0, 1))
+
+
+def test_unflatten_roundtrip():
+    specs = M.stage_specs(CFG, 0, 2)
+    n = M.specs_size(specs)
+    flat = jnp.arange(n, dtype=jnp.float32)
+    p = M.unflatten(flat, specs)
+    off = 0
+    for s in specs:
+        np.testing.assert_array_equal(
+            p[s.name].reshape(-1), flat[off:off + s.size])
+        off += s.size
+
+
+def test_init_matches_spec_kinds():
+    specs = M.stage_specs(CFG, 1, 2)
+    flat = M.init_params(jax.random.PRNGKey(0), specs)
+    p = M.unflatten(flat, specs)
+    for s in specs:
+        if s.init == "ones":
+            np.testing.assert_array_equal(p[s.name], jnp.ones(s.shape))
+        elif s.init == "zeros":
+            np.testing.assert_array_equal(p[s.name], jnp.zeros(s.shape))
+        else:
+            std = float(s.init.split(":")[1])
+            assert abs(float(p[s.name].std()) - std) < std  # loose sanity
+
+
+# ---------------------------------------------------------------------------
+# stage composition == full model
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_stages", [2, 4])
+def test_pipeline_composition_equals_full_model(n_stages):
+    tokens, targets = tiny_batch()
+    key = jax.random.PRNGKey(42)
+    full_specs = M.stage_specs(CFG, 0, 1)
+    # build per-stage params, then concatenate into the full flat layout
+    stage_flats = []
+    for s in range(n_stages):
+        key, sub = jax.random.split(key)
+        stage_flats.append(M.init_params(sub, M.stage_specs(CFG, s, n_stages)))
+    full_flat = jnp.concatenate(stage_flats)
+    assert full_flat.shape[0] == M.specs_size(full_specs)
+
+    # full model loss
+    full_fn = M.stage_forward(CFG, 0, 1)
+    loss_full = full_fn(full_flat, tokens, targets)
+
+    # staged loss
+    x = tokens
+    for s in range(n_stages):
+        fn = M.stage_forward(CFG, s, n_stages)
+        if s == n_stages - 1:
+            loss_staged = fn(stage_flats[s], x, targets)
+        else:
+            x = fn(stage_flats[s], x)
+    np.testing.assert_allclose(loss_full, loss_staged, rtol=1e-5, atol=1e-5)
+
+
+def test_staged_grads_equal_full_grads():
+    n_stages = 2
+    tokens, targets = tiny_batch(3)
+    key = jax.random.PRNGKey(7)
+    flats = []
+    for s in range(n_stages):
+        key, sub = jax.random.split(key)
+        flats.append(M.init_params(sub, M.stage_specs(CFG, s, n_stages)))
+    full_flat = jnp.concatenate(flats)
+
+    loss_full, g_full = M.make_full_fwd_bwd(CFG)(full_flat, tokens, targets)
+
+    fns0 = M.make_stage_fns(CFG, 0, n_stages)
+    fns1 = M.make_stage_fns(CFG, 1, n_stages)
+    y0 = fns0["fwd"](flats[0], tokens)
+    loss, dx, g1 = fns1["fwdbwd"](flats[1], y0, targets)
+    g0 = fns0["bwd"](flats[0], tokens, dx)
+
+    np.testing.assert_allclose(loss, loss_full, rtol=1e-5, atol=1e-5)
+    n0 = flats[0].shape[0]
+    np.testing.assert_allclose(g0, g_full[:n0], rtol=5e-4, atol=5e-5)
+    np.testing.assert_allclose(g1, g_full[n0:], rtol=5e-4, atol=5e-5)
+
+
+def test_pallas_and_ref_model_agree():
+    """The whole transformer with the Pallas kernels == with ref attention."""
+    tokens, targets = tiny_batch(1)
+    flat = M.init_params(jax.random.PRNGKey(5), M.stage_specs(CFG, 0, 1))
+    loss_pallas = M.stage_forward(CFG, 0, 1)(flat, tokens, targets)
+    loss_ref = M.stage_forward(CFG_REF, 0, 1)(flat, tokens, targets)
+    np.testing.assert_allclose(loss_pallas, loss_ref, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# training sanity
+# ---------------------------------------------------------------------------
+
+
+def test_loss_decreases_under_adam():
+    tokens, targets = tiny_batch(2)
+    flat = M.init_params(jax.random.PRNGKey(0), M.stage_specs(CFG, 0, 1))
+    m = jnp.zeros_like(flat)
+    v = jnp.zeros_like(flat)
+    fwd_bwd = jax.jit(M.make_full_fwd_bwd(CFG))
+    adam = jax.jit(M.make_adam(CFG, lr=1e-3))
+    losses = []
+    for step in range(1, 11):
+        loss, g = fwd_bwd(flat, tokens, targets)
+        losses.append(float(loss))
+        flat, m, v = adam(flat, m, v, g, jnp.array([float(step)], jnp.float32))
+    assert losses[-1] < losses[0], losses
+    assert np.isfinite(losses).all()
+
+
+def test_loss_is_log_vocab_at_init_scale():
+    """Random init -> loss ~ ln(vocab)."""
+    tokens, targets = tiny_batch(4)
+    flat = M.init_params(jax.random.PRNGKey(9), M.stage_specs(CFG, 0, 1))
+    loss = float(M.stage_forward(CFG, 0, 1)(flat, tokens, targets))
+    assert abs(loss - np.log(CFG.vocab)) < 1.0

@@ -1,0 +1,220 @@
+//! Checkpoint container format.
+//!
+//! Layout (little-endian):
+//! ```text
+//! magic  "REFTCKPT"            8 bytes
+//! version u32                  4
+//! step    u64                  8
+//! model   len-prefixed utf-8   4 + n
+//! n_sections u32               4
+//! per section:
+//!   kind   u8                  (1 = stage payload, 2 = rng, 3 = meta)
+//!   id     u32                 (stage index)
+//!   len    u64
+//!   crc32  u32                 (of the body)
+//!   body   len bytes
+//! trailer crc32 u32            (of everything before it)
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"REFTCKPT";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SectionKind {
+    StagePayload = 1,
+    Rng = 2,
+    Meta = 3,
+}
+
+impl SectionKind {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            1 => SectionKind::StagePayload,
+            2 => SectionKind::Rng,
+            3 => SectionKind::Meta,
+            other => bail!("unknown section kind {other}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Section {
+    pub kind: SectionKind,
+    pub id: u32,
+    pub body: Vec<u8>,
+}
+
+/// An in-memory checkpoint being built or parsed.
+#[derive(Debug, Clone)]
+pub struct CheckpointFile {
+    pub model: String,
+    pub step: u64,
+    pub sections: Vec<Section>,
+}
+
+impl CheckpointFile {
+    pub fn new(model: impl Into<String>, step: u64) -> Self {
+        CheckpointFile { model: model.into(), step, sections: Vec::new() }
+    }
+
+    pub fn add_section(&mut self, kind: SectionKind, id: u32, body: Vec<u8>) {
+        self.sections.push(Section { kind, id, body });
+    }
+
+    pub fn stage_payload(&self, stage: u32) -> Option<&[u8]> {
+        self.sections
+            .iter()
+            .find(|s| s.kind == SectionKind::StagePayload && s.id == stage)
+            .map(|s| s.body.as_slice())
+    }
+
+    /// Serialize with per-section CRCs + trailer CRC.
+    pub fn encode(&self) -> Vec<u8> {
+        let body_len: usize = self.sections.iter().map(|s| 21 + s.body.len()).sum();
+        let mut out = Vec::with_capacity(28 + self.model.len() + body_len + 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&self.step.to_le_bytes());
+        out.extend_from_slice(&(self.model.len() as u32).to_le_bytes());
+        out.extend_from_slice(self.model.as_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for s in &self.sections {
+            out.push(s.kind as u8);
+            out.extend_from_slice(&s.id.to_le_bytes());
+            out.extend_from_slice(&(s.body.len() as u64).to_le_bytes());
+            out.extend_from_slice(&crc32fast::hash(&s.body).to_le_bytes());
+            out.extend_from_slice(&s.body);
+        }
+        let trailer = crc32fast::hash(&out);
+        out.extend_from_slice(&trailer.to_le_bytes());
+        out
+    }
+
+    /// Parse + verify all checksums.
+    pub fn decode(bytes: &[u8]) -> Result<CheckpointFile> {
+        let mut r = Reader { b: bytes, pos: 0 };
+        if r.take(8)? != MAGIC {
+            bail!("bad checkpoint magic");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let step = r.u64()?;
+        let name_len = r.u32()? as usize;
+        let model = String::from_utf8(r.take(name_len)?.to_vec()).context("model name utf8")?;
+        let n = r.u32()? as usize;
+        let mut sections = Vec::with_capacity(n);
+        for _ in 0..n {
+            let kind = SectionKind::from_u8(r.u8()?)?;
+            let id = r.u32()?;
+            let len = r.u64()? as usize;
+            let crc = r.u32()?;
+            let body = r.take(len)?.to_vec();
+            if crc32fast::hash(&body) != crc {
+                bail!("section (kind {kind:?}, id {id}) CRC mismatch — checkpoint corrupt");
+            }
+            sections.push(Section { kind, id, body });
+        }
+        let trailer_pos = r.pos;
+        let trailer = r.u32()?;
+        if crc32fast::hash(&bytes[..trailer_pos]) != trailer {
+            bail!("trailer CRC mismatch — checkpoint truncated or corrupt");
+        }
+        if r.pos != bytes.len() {
+            bail!("trailing garbage after checkpoint");
+        }
+        Ok(CheckpointFile { model, step, sections })
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("checkpoint truncated at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CheckpointFile {
+        let mut c = CheckpointFile::new("tiny", 123);
+        c.add_section(SectionKind::StagePayload, 0, vec![1, 2, 3, 4]);
+        c.add_section(SectionKind::StagePayload, 1, vec![9; 1000]);
+        c.add_section(SectionKind::Rng, 0, vec![0xAA; 32]);
+        c
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = sample();
+        let bytes = c.encode();
+        let back = CheckpointFile::decode(&bytes).unwrap();
+        assert_eq!(back.model, "tiny");
+        assert_eq!(back.step, 123);
+        assert_eq!(back.sections.len(), 3);
+        assert_eq!(back.stage_payload(0), Some(&[1u8, 2, 3, 4][..]));
+        assert_eq!(back.stage_payload(1).unwrap().len(), 1000);
+        assert!(back.stage_payload(7).is_none());
+    }
+
+    #[test]
+    fn detects_body_corruption() {
+        let bytes_ok = sample().encode();
+        for &pos in &[40usize, 60, 200] {
+            let mut bytes = bytes_ok.clone();
+            bytes[pos] ^= 0x01;
+            assert!(CheckpointFile::decode(&bytes).is_err(), "flip at {pos}");
+        }
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let bytes = sample().encode();
+        for cut in [bytes.len() - 1, bytes.len() / 2, 10] {
+            assert!(CheckpointFile::decode(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_version() {
+        let mut bytes = sample().encode();
+        bytes[0] = b'X';
+        assert!(CheckpointFile::decode(&bytes).is_err());
+        let mut bytes2 = sample().encode();
+        bytes2[8] = 99; // version
+        assert!(CheckpointFile::decode(&bytes2).is_err());
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let c = CheckpointFile::new("m", 0);
+        let back = CheckpointFile::decode(&c.encode()).unwrap();
+        assert!(back.sections.is_empty());
+    }
+}

@@ -1,0 +1,16 @@
+//! Checkpoint subsystem: the durable-storage backstop (paper: REFT-Ckpt and
+//! the CheckFreq / TorchSnapshot baselines all end here eventually).
+//!
+//! * [`format`] — a checksummed binary container for stage payloads
+//!   (magic + version + metadata + per-section CRC32), so a torn or corrupt
+//!   checkpoint is *detected* at load (the paper lists "checkpointing
+//!   errors" among observed software failures — we refuse to restore bad
+//!   data instead of silently training on it).
+//! * [`storage`] — pluggable backends: in-memory (tests/benches) and local
+//!   directory (the e2e example persists real files).
+
+pub mod format;
+pub mod storage;
+
+pub use format::{CheckpointFile, SectionKind};
+pub use storage::{DirStorage, MemStorage, Storage};

@@ -1,0 +1,193 @@
+//! Storage backends for checkpoints.
+//!
+//! `MemStorage` backs tests and the simulated baselines (bytes are real,
+//! latency comes from the hwsim timeline); `DirStorage` writes real files
+//! for the e2e example so a restart genuinely reloads from disk.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A key-value blob store ("the unified cloud storage system" of §6.1).
+pub trait Storage: Send + Sync {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()>;
+    fn get(&self, key: &str) -> Result<Vec<u8>>;
+    fn exists(&self, key: &str) -> bool;
+    fn list(&self) -> Vec<String>;
+    fn delete(&self, key: &str) -> Result<()>;
+
+    /// Latest checkpoint key by lexicographic order of a zero-padded step
+    /// prefix (the naming convention [`step_key`] produces).
+    fn latest(&self) -> Option<String> {
+        self.list().into_iter().max()
+    }
+}
+
+/// Conventional checkpoint key: sortable by step.
+pub fn step_key(model: &str, step: u64) -> String {
+    format!("{model}/step-{step:012}")
+}
+
+/// In-memory store.
+#[derive(Debug, Default)]
+pub struct MemStorage {
+    blobs: Mutex<BTreeMap<String, Vec<u8>>>,
+}
+
+impl MemStorage {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.blobs.lock().unwrap().values().map(Vec::len).sum()
+    }
+}
+
+impl Storage for MemStorage {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.blobs
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), bytes.to_vec());
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.blobs
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("no blob `{key}`"))
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.blobs.lock().unwrap().contains_key(key)
+    }
+
+    fn list(&self) -> Vec<String> {
+        self.blobs.lock().unwrap().keys().cloned().collect()
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.blobs.lock().unwrap().remove(key);
+        Ok(())
+    }
+}
+
+/// Directory-backed store (keys become sanitized file names).
+#[derive(Debug)]
+pub struct DirStorage {
+    root: PathBuf,
+}
+
+impl DirStorage {
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)
+            .with_context(|| format!("creating {}", root.display()))?;
+        Ok(DirStorage { root })
+    }
+
+    fn path_of(&self, key: &str) -> PathBuf {
+        self.root.join(key.replace('/', "__"))
+    }
+
+    fn key_of(name: &str) -> String {
+        name.replace("__", "/")
+    }
+}
+
+impl Storage for DirStorage {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        // write-then-rename so a crash mid-write never leaves a torn blob
+        // under the final name (checkpointing errors are a real failure class)
+        let tmp = self.path_of(key).with_extension("tmp");
+        std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, self.path_of(key)).context("atomic rename")?;
+        Ok(())
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        std::fs::read(self.path_of(key)).with_context(|| format!("reading blob `{key}`"))
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        self.path_of(key).exists()
+    }
+
+    fn list(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.root) {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if !name.ends_with(".tmp") {
+                    out.push(Self::key_of(&name));
+                }
+            }
+        }
+        out.sort();
+        out
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        let p = self.path_of(key);
+        if p.exists() {
+            std::fs::remove_file(p)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exercise(store: &dyn Storage) {
+        assert!(store.list().is_empty());
+        store.put(&step_key("m", 5), b"five").unwrap();
+        store.put(&step_key("m", 40), b"forty").unwrap();
+        store.put(&step_key("m", 12), b"twelve").unwrap();
+        assert_eq!(store.get(&step_key("m", 12)).unwrap(), b"twelve");
+        assert!(store.exists(&step_key("m", 5)));
+        assert!(!store.exists(&step_key("m", 6)));
+        // zero-padded keys sort numerically
+        assert_eq!(store.latest().unwrap(), step_key("m", 40));
+        store.delete(&step_key("m", 40)).unwrap();
+        assert_eq!(store.latest().unwrap(), step_key("m", 12));
+        assert!(store.get("missing").is_err());
+    }
+
+    #[test]
+    fn mem_storage_semantics() {
+        let s = MemStorage::new();
+        exercise(&s);
+        assert_eq!(s.total_bytes(), "five".len() + "twelve".len());
+    }
+
+    #[test]
+    fn dir_storage_semantics() {
+        let dir = std::env::temp_dir().join(format!("reft-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = DirStorage::new(&dir).unwrap();
+        exercise(&s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dir_storage_persists_across_instances() {
+        let dir = std::env::temp_dir().join(format!("reft-test2-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let s = DirStorage::new(&dir).unwrap();
+            s.put("a/b", b"data").unwrap();
+        }
+        let s2 = DirStorage::new(&dir).unwrap();
+        assert_eq!(s2.get("a/b").unwrap(), b"data");
+        assert_eq!(s2.list(), vec!["a/b".to_string()]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,254 @@
+//! Configuration system: model zoo, parallelism plans, fault-tolerance
+//! policies and run configs (JSON files or CLI overrides).
+//!
+//! Two kinds of "model" exist on purpose:
+//! * **Artifact models** (`tiny`, `e2e-25m`, ...) — exported by `aot.py` with
+//!   real HLO + manifest; the trainer executes them via PJRT.
+//! * **Zoo models** (`opt-125m` ... `opt-2.7b`) — the paper's evaluation
+//!   subjects. Their *parameter sizes* drive the data-path benches (saving
+//!   speed, overheads), which move real bytes but do not need real compute.
+
+pub mod zoo;
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::topology::ParallelPlan;
+use crate::util::json::Json;
+
+pub use zoo::{ModelSpec, OPT_ZOO};
+
+/// Which fault-tolerance method a run uses (paper §6.1 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FtMethod {
+    /// no fault tolerance (upper-bound throughput)
+    None,
+    /// CheckFreq-style fully asynchronous checkpointing (unsharded d2h +
+    /// serialize + storage I/O pipeline)
+    CheckFreq,
+    /// TorchSnapshot-style DP-sharded asynchronous checkpointing
+    TorchSnapshot,
+    /// REFT in-memory snapshotting (SMP + optional RAIM5), cloud persist
+    /// only as a rare backstop
+    ReftSn,
+    /// REFT's sharded checkpointing path (snapshot -> SMP -> storage)
+    ReftCkpt,
+}
+
+impl FtMethod {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" => FtMethod::None,
+            "checkfreq" => FtMethod::CheckFreq,
+            "torchsnapshot" => FtMethod::TorchSnapshot,
+            "reft-sn" | "reftsn" | "reft_sn" => FtMethod::ReftSn,
+            "reft-ckpt" | "reftckpt" | "reft_ckpt" => FtMethod::ReftCkpt,
+            other => anyhow::bail!("unknown fault-tolerance method `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FtMethod::None => "none",
+            FtMethod::CheckFreq => "checkfreq",
+            FtMethod::TorchSnapshot => "torchsnapshot",
+            FtMethod::ReftSn => "reft-sn",
+            FtMethod::ReftCkpt => "reft-ckpt",
+        }
+    }
+}
+
+/// Fault-tolerance policy knobs.
+#[derive(Debug, Clone)]
+pub struct FtConfig {
+    pub method: FtMethod,
+    /// snapshot every k iterations (REFT-Sn) / checkpoint interval for baselines
+    pub snapshot_interval: usize,
+    /// persist to storage every k snapshots (REFT-Ckpt backstop)
+    pub persist_every: usize,
+    /// tiny-bucket size in bytes for d2h snapshot copies (§4.1)
+    pub bucket_bytes: usize,
+    /// enable RAIM5 parity protection (§4.3)
+    pub raim5: bool,
+    /// number of clean snapshot copies kept on each SMP (>= 1)
+    pub clean_copies: usize,
+}
+
+impl Default for FtConfig {
+    fn default() -> Self {
+        FtConfig {
+            method: FtMethod::ReftSn,
+            snapshot_interval: 1,
+            persist_every: 50,
+            bucket_bytes: 16 * 1024 * 1024,
+            raim5: true,
+            clean_copies: 1,
+        }
+    }
+}
+
+/// A full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// artifact model name (must exist under `artifacts/`) or zoo name
+    pub model: String,
+    pub plan: ParallelPlan,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub steps: usize,
+    /// microbatches per iteration (pipeline) / grad-accum factor (DP)
+    pub microbatches: usize,
+    pub ft: FtConfig,
+    pub seed: u64,
+    /// artifacts directory
+    pub artifacts_dir: String,
+    /// fp32 bytes per parameter element
+    pub dtype_bytes: usize,
+    /// Adam keeps 3 extra states per parameter (paper §6.1: "triple extra")
+    pub opt_state_multiplier: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "tiny".into(),
+            plan: ParallelPlan::dp_only(1),
+            nodes: 1,
+            gpus_per_node: 4,
+            steps: 10,
+            microbatches: 4,
+            ft: FtConfig::default(),
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            dtype_bytes: 4,
+            opt_state_multiplier: 3,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse a JSON config file; missing fields keep defaults.
+    pub fn from_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {}", path.as_ref().display()))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("config: {e}"))?;
+        let mut c = RunConfig::default();
+        if let Some(s) = j.get("model").and_then(Json::as_str) {
+            c.model = s.to_string();
+        }
+        if let Some(p) = j.get("parallel") {
+            c.plan = ParallelPlan::new(
+                p.get("dp").and_then(Json::as_usize).unwrap_or(1),
+                p.get("tp").and_then(Json::as_usize).unwrap_or(1),
+                p.get("pp").and_then(Json::as_usize).unwrap_or(1),
+            );
+        }
+        if let Some(n) = j.get("nodes").and_then(Json::as_usize) {
+            c.nodes = n;
+        }
+        if let Some(n) = j.get("gpus_per_node").and_then(Json::as_usize) {
+            c.gpus_per_node = n;
+        }
+        if let Some(n) = j.get("steps").and_then(Json::as_usize) {
+            c.steps = n;
+        }
+        if let Some(n) = j.get("microbatches").and_then(Json::as_usize) {
+            c.microbatches = n;
+        }
+        if let Some(n) = j.get("seed").and_then(Json::as_f64) {
+            c.seed = n as u64;
+        }
+        if let Some(s) = j.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = s.to_string();
+        }
+        if let Some(ft) = j.get("ft") {
+            if let Some(s) = ft.get("method").and_then(Json::as_str) {
+                c.ft.method = FtMethod::parse(s)?;
+            }
+            if let Some(n) = ft.get("snapshot_interval").and_then(Json::as_usize) {
+                c.ft.snapshot_interval = n.max(1);
+            }
+            if let Some(n) = ft.get("persist_every").and_then(Json::as_usize) {
+                c.ft.persist_every = n.max(1);
+            }
+            if let Some(n) = ft.get("bucket_bytes").and_then(Json::as_usize) {
+                c.ft.bucket_bytes = n.max(4096);
+            }
+            if let Some(b) = ft.get("raim5").and_then(Json::as_bool) {
+                c.ft.raim5 = b;
+            }
+            if let Some(n) = ft.get("clean_copies").and_then(Json::as_usize) {
+                c.ft.clean_copies = n.max(1);
+            }
+        }
+        Ok(c)
+    }
+
+    /// Bytes of FT payload per parameter (weights + Adam states).
+    pub fn bytes_per_param(&self) -> u64 {
+        (self.dtype_bytes * (1 + self.opt_state_multiplier)) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_roundtrip() {
+        let c = RunConfig::default();
+        assert_eq!(c.model, "tiny");
+        assert_eq!(c.bytes_per_param(), 16);
+    }
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"{
+            "model": "opt-350m",
+            "parallel": {"dp": 6, "tp": 4, "pp": 1},
+            "nodes": 6, "gpus_per_node": 4,
+            "steps": 100, "microbatches": 8, "seed": 7,
+            "ft": {"method": "reft-sn", "snapshot_interval": 2,
+                   "persist_every": 10, "bucket_bytes": 8388608,
+                   "raim5": true, "clean_copies": 2}
+        }"#;
+        let c = RunConfig::from_json_text(text).unwrap();
+        assert_eq!(c.model, "opt-350m");
+        assert_eq!(c.plan, ParallelPlan::new(6, 4, 1));
+        assert_eq!(c.ft.method, FtMethod::ReftSn);
+        assert_eq!(c.ft.clean_copies, 2);
+        assert_eq!(c.ft.bucket_bytes, 8 * 1024 * 1024);
+    }
+
+    #[test]
+    fn parse_partial_keeps_defaults() {
+        let c = RunConfig::from_json_text(r#"{"model": "tiny"}"#).unwrap();
+        assert_eq!(c.steps, RunConfig::default().steps);
+        assert!(c.ft.raim5);
+    }
+
+    #[test]
+    fn ft_method_names_roundtrip() {
+        for m in [
+            FtMethod::None,
+            FtMethod::CheckFreq,
+            FtMethod::TorchSnapshot,
+            FtMethod::ReftSn,
+            FtMethod::ReftCkpt,
+        ] {
+            assert_eq!(FtMethod::parse(m.name()).unwrap(), m);
+        }
+        assert!(FtMethod::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_json() {
+        assert!(RunConfig::from_json_text("{").is_err());
+        assert!(RunConfig::from_json_text(r#"{"ft": {"method": "nope"}}"#).is_err());
+    }
+}

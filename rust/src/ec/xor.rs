@@ -1,0 +1,132 @@
+//! The XOR hot path: RAIM5 encode/decode is pure `dst ^= src` streaming over
+//! multi-GB buffers, so this is one of the three §Perf targets (DESIGN.md).
+//!
+//! Strategy: process the unaligned head byte-wise, then the body as u64 words
+//! in 4-word unrolled chunks (ILP: four independent xor chains), then the
+//! tail byte-wise. On x86-64 the auto-vectorizer turns the word loop into
+//! SSE2/AVX2 loads/xors/stores; the unroll exists to defeat the
+//! one-chain-per-iteration serialization, not to hand-roll SIMD.
+//! `benches/hotpath.rs` tracks throughput vs `memcpy` (RAID5's write penalty
+//! bound: parity XOR should run at >= 1/2 memcpy speed).
+
+/// `dst[i] ^= src[i]` for the overlapping length, optimized.
+#[inline]
+pub fn xor_into(dst: &mut [u8], src: &[u8]) {
+    let n = dst.len().min(src.len());
+    let (dst, src) = (&mut dst[..n], &src[..n]);
+
+    // head: align dst to 8 bytes
+    let head = dst.as_ptr().align_offset(8).min(n);
+    for i in 0..head {
+        dst[i] ^= src[i];
+    }
+    let dst = &mut dst[head..];
+    let src = &src[head..];
+
+    let words = dst.len() / 8;
+    let chunks = words / 4;
+    unsafe {
+        let d = dst.as_mut_ptr() as *mut u64;
+        let s = src.as_ptr() as *const u64;
+        // NOTE: src may be unaligned; use read_unaligned for it.
+        for c in 0..chunks {
+            let i = c * 4;
+            let s0 = (s.add(i)).read_unaligned();
+            let s1 = (s.add(i + 1)).read_unaligned();
+            let s2 = (s.add(i + 2)).read_unaligned();
+            let s3 = (s.add(i + 3)).read_unaligned();
+            *d.add(i) ^= s0;
+            *d.add(i + 1) ^= s1;
+            *d.add(i + 2) ^= s2;
+            *d.add(i + 3) ^= s3;
+        }
+        for i in chunks * 4..words {
+            *d.add(i) ^= (s.add(i)).read_unaligned();
+        }
+    }
+    // tail
+    for i in words * 8..dst.len() {
+        dst[i] ^= src[i];
+    }
+}
+
+/// Byte-wise reference implementation (correctness oracle + perf baseline).
+#[inline]
+pub fn xor_into_scalar(dst: &mut [u8], src: &[u8]) {
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d ^= *s;
+    }
+}
+
+/// XOR-fold many sources into one fresh parity buffer of length `len`.
+pub fn parity_of(sources: &[&[u8]], len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; len];
+    for s in sources {
+        xor_into(&mut out, s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_bytes(n: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::seed_from(seed);
+        (0..n).map(|_| rng.next_u64() as u8).collect()
+    }
+
+    #[test]
+    fn matches_scalar_on_many_shapes() {
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000, 4096, 100_003] {
+            let src = rand_bytes(n, n as u64);
+            let mut a = rand_bytes(n, n as u64 + 1);
+            let mut b = a.clone();
+            xor_into(&mut a, &src);
+            xor_into_scalar(&mut b, &src);
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn unaligned_offsets() {
+        let src = rand_bytes(4096, 10);
+        let base = rand_bytes(4200, 11);
+        for off in 0..16 {
+            let mut a = base.clone();
+            let mut b = base.clone();
+            xor_into(&mut a[off..off + 4096], &src);
+            xor_into_scalar(&mut b[off..off + 4096], &src);
+            assert_eq!(a, b, "off={off}");
+        }
+    }
+
+    #[test]
+    fn mismatched_lengths_use_overlap() {
+        let mut d = vec![0xFFu8; 10];
+        xor_into(&mut d, &[0x0F; 4]);
+        assert_eq!(&d[..4], &[0xF0; 4]);
+        assert_eq!(&d[4..], &[0xFF; 6]);
+    }
+
+    #[test]
+    fn xor_is_involution() {
+        let src = rand_bytes(10_000, 42);
+        let orig = rand_bytes(10_000, 43);
+        let mut d = orig.clone();
+        xor_into(&mut d, &src);
+        xor_into(&mut d, &src);
+        assert_eq!(d, orig);
+    }
+
+    #[test]
+    fn parity_reconstructs_any_member() {
+        let a = rand_bytes(1000, 1);
+        let b = rand_bytes(1000, 2);
+        let c = rand_bytes(1000, 3);
+        let p = parity_of(&[&a, &b, &c], 1000);
+        let rec_b = parity_of(&[&p, &a, &c], 1000);
+        assert_eq!(rec_b, b);
+    }
+}

@@ -1,0 +1,352 @@
+//! The live REFT cluster: per-node SMP threads + the snapshot/recovery
+//! orchestration over them. This is what the trainer and the e2e examples
+//! drive — real bytes, real threads, real XOR decode.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::FtConfig;
+use crate::ec::Raim5Group;
+use crate::smp::{Signal, Smp, SmpMsg};
+use crate::snapshot::{BucketPipe, SnapshotPlan};
+use crate::topology::Topology;
+
+/// The in-memory fault-tolerance fabric of one training cluster.
+pub struct ReftCluster {
+    pub topo: Topology,
+    pub plan: SnapshotPlan,
+    pub ft: FtConfig,
+    /// SMP per node; `None` marks a node that was lost and not yet replaced
+    smps: Vec<Option<Smp>>,
+    /// RAIM5 layout per PP stage (only for SGs with >= 2 nodes)
+    groups: BTreeMap<usize, Raim5Group>,
+    /// the snapshot version counter (one per completed snapshot round)
+    pub version: u64,
+}
+
+impl ReftCluster {
+    /// Bring up SMPs on every node and signal SNAP.
+    pub fn start(topo: Topology, stage_payload_bytes: &[u64], ft: FtConfig) -> Result<Self> {
+        let plan = SnapshotPlan::build(&topo, stage_payload_bytes);
+        let mut groups = BTreeMap::new();
+        if ft.raim5 {
+            for stage in 0..topo.plan.pp {
+                let lens = plan.sg_shard_lens(stage);
+                if lens.len() >= 2 {
+                    groups.insert(stage, Raim5Group::plan(&lens)?);
+                }
+            }
+        }
+        let smps: Vec<Option<Smp>> = (0..topo.nodes)
+            .map(|n| Some(Smp::spawn(n, ft.clean_copies)))
+            .collect();
+        for smp in smps.iter().flatten() {
+            smp.send(SmpMsg::Signal(Signal::Snap))?;
+        }
+        Ok(ReftCluster { topo, plan, ft, smps, groups, version: 0 })
+    }
+
+    pub fn smp(&self, node: usize) -> Option<&Smp> {
+        self.smps.get(node).and_then(Option::as_ref)
+    }
+
+    /// Snapshot one stage's payload across its sharding group in tiny
+    /// buckets, then (if enabled) compute + place the RAIM5 parities.
+    /// `payload` is the stage's full FT payload (identical across DP paths
+    /// after gradient sync, so any replica is a valid source — §4.1).
+    pub fn snapshot_stage(&mut self, version: u64, stage: usize, payload: &[u8]) -> Result<()> {
+        let stage_len = self.plan.stage_bytes[stage] as usize;
+        anyhow::ensure!(
+            payload.len() == stage_len,
+            "stage {stage} payload {} != planned {stage_len}",
+            payload.len()
+        );
+        let shards: Vec<_> = self.plan.shards_for_stage(stage).cloned().collect();
+        for shard in &shards {
+            let Some(smp) = self.smp(shard.node) else {
+                bail!("node {} is offline — cannot snapshot", shard.node);
+            };
+            let total = shard.len() as usize;
+            smp.send(SmpMsg::BeginSnapshot { version, stage, total_len: total })?;
+            // one write into the node's "shared-memory segment" per shard;
+            // buckets are zero-copy views into it (the SMP does the flush
+            // copy into its dirty buffer — the paper's Fig. 6 data flow)
+            let seg = std::sync::Arc::new(
+                payload[shard.range.start as usize..shard.range.end as usize].to_vec(),
+            );
+            for r in BucketPipe::new(0..shard.len(), self.ft.bucket_bytes) {
+                smp.send(SmpMsg::Bucket {
+                    version,
+                    stage,
+                    // SMP-local offsets are shard-relative
+                    offset: r.start as usize,
+                    data: crate::smp::BucketRef::Shared {
+                        seg: std::sync::Arc::clone(&seg),
+                        range: r.start as usize..r.end as usize,
+                    },
+                })?;
+            }
+            smp.send(SmpMsg::EndSnapshot { version, stage })?;
+        }
+        // parity pass: encode from the same payload bytes the SMPs now hold
+        if let Some(group) = self.groups.get(&stage) {
+            let views: Vec<&[u8]> = shards
+                .iter()
+                .map(|s| &payload[s.range.start as usize..s.range.end as usize])
+                .collect();
+            for (host_idx, shard) in shards.iter().enumerate() {
+                let parity = group.encode_parity(host_idx, &views);
+                let Some(smp) = self.smp(shard.node) else {
+                    bail!("node {} offline during parity placement", shard.node);
+                };
+                smp.send(SmpMsg::StoreParity { version, stage, data: parity })?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Snapshot all stages (one consistent version).
+    pub fn snapshot_all(&mut self, payloads: &[Vec<u8>]) -> Result<u64> {
+        anyhow::ensure!(payloads.len() == self.topo.plan.pp);
+        self.version += 1;
+        let v = self.version;
+        for (stage, payload) in payloads.iter().enumerate() {
+            self.snapshot_stage(v, stage, payload)?;
+        }
+        Ok(v)
+    }
+
+    /// Restore one stage's full payload from SMP shards, RAIM5-decoding the
+    /// shards of `dead` nodes. Errors if protection is exceeded.
+    pub fn restore_stage(&self, stage: usize, dead: &[usize]) -> Result<Vec<u8>> {
+        let shards: Vec<_> = self.plan.shards_for_stage(stage).cloned().collect();
+        let dead_in_sg: Vec<usize> = (0..shards.len())
+            .filter(|&i| dead.contains(&shards[i].node) || self.smp(shards[i].node).is_none())
+            .collect();
+        let mut parts: Vec<Option<(u64, Vec<u8>)>> = Vec::with_capacity(shards.len());
+        for (i, shard) in shards.iter().enumerate() {
+            if dead_in_sg.contains(&i) {
+                parts.push(None);
+                continue;
+            }
+            let smp = self.smp(shard.node).context("survivor SMP gone")?;
+            parts.push(smp.get_clean(stage)?);
+        }
+        // consistency: all survivors must agree on the snapshot version
+        let versions: Vec<u64> = parts.iter().flatten().map(|(v, _)| *v).collect();
+        anyhow::ensure!(!versions.is_empty(), "no clean snapshot for stage {stage}");
+        let v = versions[0];
+        anyhow::ensure!(
+            versions.iter().all(|&x| x == v),
+            "inconsistent snapshot versions {versions:?} for stage {stage}"
+        );
+
+        let mut shard_bytes: Vec<Vec<u8>> = Vec::with_capacity(shards.len());
+        for p in &parts {
+            shard_bytes.push(p.as_ref().map(|(_, d)| d.clone()).unwrap_or_default());
+        }
+        if !dead_in_sg.is_empty() {
+            let group = self
+                .groups
+                .get(&stage)
+                .context("node lost but RAIM5 is not enabled for this stage")?;
+            anyhow::ensure!(
+                dead_in_sg.len() == 1,
+                "{} nodes lost in SG {stage} — exceeds RAIM5 protection",
+                dead_in_sg.len()
+            );
+            let lost = dead_in_sg[0];
+            // gather parities from survivors
+            let mut parities: Vec<Vec<u8>> = vec![Vec::new(); shards.len()];
+            for (i, shard) in shards.iter().enumerate() {
+                if i == lost {
+                    parities[i] = vec![0u8; group.parity_len()];
+                    continue;
+                }
+                let smp = self.smp(shard.node).context("survivor SMP gone")?;
+                let (pv, pdata) = smp
+                    .get_parity(stage)?
+                    .with_context(|| format!("no parity on node {}", shard.node))?;
+                anyhow::ensure!(pv == v, "parity version {pv} != snapshot {v}");
+                parities[i] = pdata;
+            }
+            let views: Vec<&[u8]> = shard_bytes.iter().map(Vec::as_slice).collect();
+            let pviews: Vec<&[u8]> = parities.iter().map(Vec::as_slice).collect();
+            shard_bytes[lost] = group.decode(lost, &views, &pviews)?;
+        }
+        // stitch the full payload back together
+        let mut out = vec![0u8; self.plan.stage_bytes[stage] as usize];
+        for (shard, bytes) in shards.iter().zip(&shard_bytes) {
+            anyhow::ensure!(
+                bytes.len() == shard.len() as usize,
+                "shard on node {} has {} bytes, expected {}",
+                shard.node,
+                bytes.len(),
+                shard.len()
+            );
+            out[shard.range.start as usize..shard.range.end as usize].copy_from_slice(bytes);
+        }
+        Ok(out)
+    }
+
+    /// Restore every stage (see [`Self::restore_stage`]).
+    pub fn restore_all(&self, dead: &[usize]) -> Result<Vec<Vec<u8>>> {
+        (0..self.topo.plan.pp)
+            .map(|s| self.restore_stage(s, dead))
+            .collect()
+    }
+
+    /// Simulate losing a node: its SMP dies with all buffers.
+    pub fn kill_node(&mut self, node: usize) {
+        if let Some(mut smp) = self.smps[node].take() {
+            smp.kill();
+        }
+    }
+
+    /// Elastic substitute-node introduction: a fresh SMP joins in place of a
+    /// lost one (empty — it will be filled by decode + the next snapshot).
+    pub fn replace_node(&mut self, node: usize) -> Result<()> {
+        anyhow::ensure!(self.smps[node].is_none(), "node {node} is not vacant");
+        let smp = Smp::spawn(node, self.ft.clean_copies);
+        smp.send(SmpMsg::Signal(Signal::Snap))?;
+        self.smps[node] = Some(smp);
+        Ok(())
+    }
+
+    /// Nodes currently alive.
+    pub fn alive_nodes(&self) -> Vec<usize> {
+        (0..self.topo.nodes)
+            .filter(|&n| self.smps[n].is_some())
+            .collect()
+    }
+
+    /// Total bytes resident across all SMPs (the paper's §6.2a memory-usage
+    /// accounting).
+    pub fn resident_bytes(&self) -> Result<usize> {
+        let mut total = 0;
+        for smp in self.smps.iter().flatten() {
+            total += smp.stats()?.bytes_resident;
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ParallelPlan;
+    use crate::util::rng::Rng;
+
+    fn payload(len: usize, seed: u64) -> Vec<u8> {
+        let mut rng = Rng::seed_from(seed);
+        (0..len).map(|_| rng.next_u64() as u8).collect()
+    }
+
+    fn dp6_cluster(raim5: bool) -> (ReftCluster, Vec<Vec<u8>>) {
+        let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+        let bytes = vec![60_000u64];
+        let ft = FtConfig { raim5, bucket_bytes: 4096, ..FtConfig::default() };
+        let cluster = ReftCluster::start(topo, &bytes, ft).unwrap();
+        let payloads = vec![payload(60_000, 9)];
+        (cluster, payloads)
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let (mut c, payloads) = dp6_cluster(true);
+        c.snapshot_all(&payloads).unwrap();
+        let restored = c.restore_all(&[]).unwrap();
+        assert_eq!(restored, payloads);
+    }
+
+    #[test]
+    fn survives_single_node_loss_via_raim5() {
+        let (mut c, payloads) = dp6_cluster(true);
+        c.snapshot_all(&payloads).unwrap();
+        c.kill_node(3);
+        let restored = c.restore_all(&[3]).unwrap();
+        assert_eq!(restored, payloads, "decoded shard must be bit-identical");
+    }
+
+    #[test]
+    fn two_losses_exceed_protection() {
+        let (mut c, payloads) = dp6_cluster(true);
+        c.snapshot_all(&payloads).unwrap();
+        c.kill_node(1);
+        c.kill_node(4);
+        assert!(c.restore_all(&[1, 4]).is_err());
+    }
+
+    #[test]
+    fn without_raim5_node_loss_is_fatal_for_inmemory_path() {
+        let (mut c, payloads) = dp6_cluster(false);
+        c.snapshot_all(&payloads).unwrap();
+        c.kill_node(0);
+        assert!(c.restore_all(&[0]).is_err());
+        // but the in-memory path still works with all nodes alive
+        let (mut c2, payloads2) = dp6_cluster(false);
+        c2.snapshot_all(&payloads2).unwrap();
+        assert_eq!(c2.restore_all(&[]).unwrap(), payloads2);
+    }
+
+    #[test]
+    fn restore_uses_latest_consistent_version() {
+        let (mut c, mut payloads) = dp6_cluster(true);
+        c.snapshot_all(&payloads).unwrap();
+        payloads[0] = payload(60_000, 77);
+        c.snapshot_all(&payloads).unwrap();
+        let restored = c.restore_all(&[]).unwrap();
+        assert_eq!(restored, payloads);
+    }
+
+    #[test]
+    fn replace_node_and_resnapshot() {
+        let (mut c, payloads) = dp6_cluster(true);
+        c.snapshot_all(&payloads).unwrap();
+        c.kill_node(2);
+        let restored = c.restore_all(&[2]).unwrap();
+        assert_eq!(restored, payloads);
+        // elastic substitution: fresh node joins, next snapshot covers it
+        c.replace_node(2).unwrap();
+        assert_eq!(c.alive_nodes().len(), 6);
+        c.snapshot_all(&payloads).unwrap();
+        let again = c.restore_all(&[]).unwrap();
+        assert_eq!(again, payloads);
+    }
+
+    #[test]
+    fn multi_stage_3d_roundtrip_with_loss() {
+        // 2 DP x 4 TP x 3 PP on the full testbed
+        let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+        let bytes = vec![40_000u64, 30_000, 50_000];
+        let ft = FtConfig { bucket_bytes: 1024, ..FtConfig::default() };
+        let mut c = ReftCluster::start(topo, &bytes, ft).unwrap();
+        let payloads: Vec<Vec<u8>> = bytes
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| payload(b as usize, i as u64))
+            .collect();
+        c.snapshot_all(&payloads).unwrap();
+        // lose one node: it belongs to exactly one SG here
+        c.kill_node(4);
+        let restored = c.restore_all(&[4]).unwrap();
+        assert_eq!(restored, payloads);
+    }
+
+    #[test]
+    fn memory_accounting_within_paper_bound() {
+        // §6.2a: REFT uses at most ~3x (payload) of CPU memory per node
+        // budget; with parity ~ payload/m extra, resident should be well
+        // under 2x the total payload for one clean copy
+        let (mut c, payloads) = dp6_cluster(true);
+        c.snapshot_all(&payloads).unwrap();
+        let resident = c.resident_bytes().unwrap();
+        let payload_total: usize = payloads.iter().map(Vec::len).sum();
+        assert!(resident >= payload_total);
+        assert!(
+            resident <= payload_total * 2,
+            "{resident} vs payload {payload_total}"
+        );
+    }
+}

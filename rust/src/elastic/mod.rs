@@ -1,0 +1,184 @@
+//! Elastic failure handling (paper §3 workflow + §4.2 "Elastic
+//! Functionality"): status propagation, the recovery decision tree, and the
+//! live recovery orchestrator that drives SMPs and RAIM5.
+//!
+//! Decision tree on failure (paper Fig. 2):
+//! 1. **software failure** (UNHEALTHY): training processes died, SMPs alive →
+//!    resume directly from the SMPs' clean snapshots;
+//! 2. **hardware failure, <= 1 node per SG** (OFFLINE): a substitute node
+//!    joins; its shard is rebuilt by the RAIM5 subtraction decoder from the
+//!    surviving SG members;
+//! 3. **protection exceeded** (>= 2 nodes in one SG, or RAIM5 disabled):
+//!    fall back to the latest durable checkpoint;
+//! 4. nothing durable either → fatal (restart from scratch).
+
+pub mod controller;
+
+pub use controller::ReftCluster;
+
+use crate::topology::Topology;
+
+/// Per-node rendezvous status.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    Healthy,
+    /// training process dead, node + SMP alive
+    Unhealthy,
+    /// node lost
+    Offline,
+}
+
+/// What recovery path to take.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RecoveryDecision {
+    /// everything healthy — nothing to do
+    None,
+    /// resume from SMP clean snapshots (software failures only)
+    ResumeFromSmp,
+    /// decode the listed (stage, lost node) shards via RAIM5, then resume
+    DecodeRaim5 { lost: Vec<(usize, usize)> },
+    /// in-memory protection exceeded — reload the durable checkpoint
+    LoadCheckpoint,
+    /// no checkpoint available either
+    Fatal,
+}
+
+/// The pure decision function (property-tested in `rust/tests/proptests.rs`).
+pub fn decide(
+    topo: &Topology,
+    status: &[NodeStatus],
+    raim5: bool,
+    ckpt_available: bool,
+) -> RecoveryDecision {
+    assert!(status.len() >= topo.nodes_in_use());
+    let any_unhealthy = status.iter().any(|s| *s == NodeStatus::Unhealthy);
+    let offline: Vec<usize> = status
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| **s == NodeStatus::Offline)
+        .map(|(i, _)| i)
+        .collect();
+
+    if offline.is_empty() {
+        if any_unhealthy {
+            return RecoveryDecision::ResumeFromSmp;
+        }
+        return RecoveryDecision::None;
+    }
+
+    // hardware losses: check per-SG tolerance
+    let mut lost = Vec::new();
+    for sg in topo.sharding_groups() {
+        let dead: Vec<usize> = sg
+            .nodes
+            .iter()
+            .copied()
+            .filter(|n| offline.contains(n))
+            .collect();
+        if dead.is_empty() {
+            continue;
+        }
+        // single-node SGs have no peers to decode from
+        if !raim5 || dead.len() > 1 || sg.len() < 2 {
+            return if ckpt_available {
+                RecoveryDecision::LoadCheckpoint
+            } else {
+                RecoveryDecision::Fatal
+            };
+        }
+        lost.push((sg.stage, dead[0]));
+    }
+    if lost.is_empty() {
+        // offline nodes host no SG (idle spares) — treat as software-level
+        return if any_unhealthy {
+            RecoveryDecision::ResumeFromSmp
+        } else {
+            RecoveryDecision::None
+        };
+    }
+    RecoveryDecision::DecodeRaim5 { lost }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ParallelPlan;
+
+    fn topo_2x4x3() -> Topology {
+        Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap()
+    }
+
+    #[test]
+    fn all_healthy_is_none() {
+        let t = topo_2x4x3();
+        let s = vec![NodeStatus::Healthy; 6];
+        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::None);
+    }
+
+    #[test]
+    fn software_failure_resumes_from_smp() {
+        let t = topo_2x4x3();
+        let mut s = vec![NodeStatus::Healthy; 6];
+        s[2] = NodeStatus::Unhealthy;
+        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::ResumeFromSmp);
+        // multiple software failures still fine
+        s[4] = NodeStatus::Unhealthy;
+        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::ResumeFromSmp);
+    }
+
+    #[test]
+    fn single_node_loss_decodes() {
+        let t = topo_2x4x3();
+        let mut s = vec![NodeStatus::Healthy; 6];
+        s[0] = NodeStatus::Offline; // node 0 hosts stage 0 of DP path 0
+        match decide(&t, &s, true, true) {
+            RecoveryDecision::DecodeRaim5 { lost } => {
+                assert_eq!(lost, vec![(0, 0)]);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn one_loss_per_sg_is_still_decodable() {
+        let t = topo_2x4x3();
+        let mut s = vec![NodeStatus::Healthy; 6];
+        // nodes 0 (SG0, dp0) and 4 (SG1, dp1): different SGs -> decodable
+        s[0] = NodeStatus::Offline;
+        s[4] = NodeStatus::Offline;
+        match decide(&t, &s, true, true) {
+            RecoveryDecision::DecodeRaim5 { lost } => {
+                assert_eq!(lost.len(), 2);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn two_losses_same_sg_falls_back() {
+        let t = topo_2x4x3();
+        let mut s = vec![NodeStatus::Healthy; 6];
+        // SG0 = {node0 (dp0), node3 (dp1)}
+        s[0] = NodeStatus::Offline;
+        s[3] = NodeStatus::Offline;
+        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::LoadCheckpoint);
+        assert_eq!(decide(&t, &s, true, false), RecoveryDecision::Fatal);
+    }
+
+    #[test]
+    fn raim5_disabled_always_falls_back_on_hw_loss() {
+        let t = topo_2x4x3();
+        let mut s = vec![NodeStatus::Healthy; 6];
+        s[1] = NodeStatus::Offline;
+        assert_eq!(decide(&t, &s, false, true), RecoveryDecision::LoadCheckpoint);
+    }
+
+    #[test]
+    fn single_node_sg_cannot_decode() {
+        // PP-6 strong scaling: each SG has exactly one node
+        let t = Topology::build(ParallelPlan::new(1, 4, 6), 6, 4).unwrap();
+        let mut s = vec![NodeStatus::Healthy; 6];
+        s[2] = NodeStatus::Offline;
+        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::LoadCheckpoint);
+    }
+}

@@ -1,0 +1,227 @@
+//! Cluster hardware model: nodes, their GPUs and the interconnect resources,
+//! built from an [`HwSpec`] (defaults = the paper's Table 1 testbed).
+
+use super::resource::Resource;
+
+/// Hardware specification (paper Table 1 + §6.1 defaults).
+#[derive(Debug, Clone)]
+pub struct HwSpec {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// per-GPU PCIe link bandwidth, bytes/s (paper: 15.7 GB/s)
+    pub pcie_bw: f64,
+    /// per-node aggregate host root-complex / memory-bus budget for d2h, bytes/s
+    pub host_bus_bw: f64,
+    /// host shared-memory copy bandwidth (SMP flush path), bytes/s
+    pub shamem_bw: f64,
+    /// per-node NIC to the cloud store, bytes/s (paper: 10 Gbps)
+    pub nic_bw: f64,
+    /// cloud object-store aggregate ingest, bytes/s
+    pub cloud_bw: f64,
+    /// local disk write bandwidth, bytes/s
+    pub disk_bw: f64,
+    /// CPU-side serialization throughput (tensor -> byte stream), bytes/s
+    pub serialize_bw: f64,
+    /// CPU-side XOR parity throughput (RAIM5 encode), bytes/s
+    pub xor_bw: f64,
+    /// CPU memory per node, bytes (paper: 512 GB)
+    pub cpu_mem: u64,
+    /// GPU memory per device, bytes (paper: 32 GB V100)
+    pub gpu_mem: u64,
+    /// intra-node GPU-GPU interconnect (PCIe P2P; NVLink on DGX), bytes/s
+    pub p2p_bw: f64,
+    /// inter-node training-traffic bandwidth (for PP/DP comm), bytes/s
+    pub internode_bw: f64,
+}
+
+impl Default for HwSpec {
+    fn default() -> Self {
+        Self::paper_testbed()
+    }
+}
+
+impl HwSpec {
+    /// Paper Table 1: 6 nodes x 4 V100 (32 GB), Xeon 4114, 512 GB host RAM,
+    /// PCIe 15.7 GB/s, 10 Gbps network.
+    pub fn paper_testbed() -> Self {
+        const GB: f64 = 1e9;
+        HwSpec {
+            nodes: 6,
+            gpus_per_node: 4,
+            pcie_bw: 15.7 * GB,
+            host_bus_bw: 60.0 * GB,     // 2-socket Xeon 4114 class memory bus budget
+                                        // (keeps 4 parallel d2h flows link-bound,
+                                        // matching Fig. 9's >3x parallel speedup)
+            shamem_bw: 12.0 * GB,       // host memcpy into SMP shared memory
+            nic_bw: 1.25 * GB,          // 10 Gbps
+            cloud_bw: 3.0 * GB,         // object store aggregate ingest
+            disk_bw: 1.0 * GB,          // local SATA/NVMe class
+            serialize_bw: 1.6 * GB,     // pickle-style tensor serialization
+            xor_bw: 8.0 * GB,           // single-core-ish XOR parity stream
+            cpu_mem: 512 * 1024u64.pow(3),
+            gpu_mem: 32 * 1024u64.pow(3),
+            p2p_bw: 12.0 * GB,
+            internode_bw: 1.25 * GB,
+        }
+    }
+
+    /// Scale the testbed to `nodes` x `gpus_per_node` keeping link classes.
+    pub fn scaled(nodes: usize, gpus_per_node: usize) -> Self {
+        HwSpec { nodes, gpus_per_node, ..Self::paper_testbed() }
+    }
+}
+
+/// Per-node resource set.
+#[derive(Debug, Clone)]
+pub struct NodeHw {
+    pub id: usize,
+    /// one PCIe link per GPU (d2h + h2d share it)
+    pub pcie: Vec<Resource>,
+    /// aggregate host root complex: all concurrent d2h flows share this too
+    pub host_bus: Resource,
+    /// shared-memory copy engine (training proc -> SMP buffers)
+    pub shamem: Resource,
+    /// NIC toward cloud storage
+    pub nic: Resource,
+    /// local disk
+    pub disk: Resource,
+    /// serialization "engine" (a CPU core's worth of pickle throughput)
+    pub serialize: Resource,
+    /// XOR parity engine (RAIM5 encode/decode on CPU)
+    pub xor: Resource,
+    /// intra-node GPU p2p fabric
+    pub p2p: Resource,
+}
+
+impl NodeHw {
+    fn new(id: usize, spec: &HwSpec) -> Self {
+        let mk = |n: String, bw: f64, lat: f64| Resource::new(n, bw, lat);
+        NodeHw {
+            id,
+            pcie: (0..spec.gpus_per_node)
+                .map(|g| mk(format!("n{id}.pcie{g}"), spec.pcie_bw, 20e-6))
+                .collect(),
+            host_bus: mk(format!("n{id}.hostbus"), spec.host_bus_bw, 0.0),
+            shamem: mk(format!("n{id}.shamem"), spec.shamem_bw, 5e-6),
+            nic: mk(format!("n{id}.nic"), spec.nic_bw, 100e-6),
+            disk: mk(format!("n{id}.disk"), spec.disk_bw, 200e-6),
+            serialize: mk(format!("n{id}.ser"), spec.serialize_bw, 10e-6),
+            xor: mk(format!("n{id}.xor"), spec.xor_bw, 2e-6),
+            p2p: mk(format!("n{id}.p2p"), spec.p2p_bw, 10e-6),
+        }
+    }
+
+    /// Cost a parallel device->host copy of `per_gpu_bytes[g]` from each GPU
+    /// starting at `t`: each flow is limited by its own PCIe link, and all
+    /// flows share the host bus. Returns per-GPU end times.
+    pub fn d2h_parallel(&mut self, t: f64, per_gpu_bytes: &[u64]) -> Vec<f64> {
+        assert!(per_gpu_bytes.len() <= self.pcie.len());
+        // per-link lower bound
+        let link_ends: Vec<f64> = per_gpu_bytes
+            .iter()
+            .zip(self.pcie.iter_mut())
+            .map(|(&b, link)| link.transfer(t, b).1)
+            .collect();
+        // shared-bus bound
+        let bus_ends = self.host_bus.fair_share(t, per_gpu_bytes);
+        link_ends
+            .into_iter()
+            .zip(bus_ends)
+            .map(|(a, b)| a.max(b))
+            .collect()
+    }
+}
+
+/// The whole simulated cluster.
+#[derive(Debug, Clone)]
+pub struct ClusterHw {
+    pub spec: HwSpec,
+    pub nodes: Vec<NodeHw>,
+    /// cloud object store: aggregate ingest shared by all nodes
+    pub cloud: Resource,
+}
+
+impl ClusterHw {
+    pub fn new(spec: HwSpec) -> Self {
+        let nodes = (0..spec.nodes).map(|i| NodeHw::new(i, &spec)).collect();
+        let cloud = Resource::new("cloud", spec.cloud_bw, 2e-3);
+        ClusterHw { spec, nodes, cloud }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.spec.nodes * self.spec.gpus_per_node
+    }
+
+    /// Cost a persist of `per_node_bytes[n]` from every node to cloud storage
+    /// starting at `t` (each node's flow is NIC-bound, all share the store).
+    pub fn persist_to_cloud(&mut self, t: f64, per_node_bytes: &[u64]) -> Vec<f64> {
+        let nic_ends: Vec<f64> = per_node_bytes
+            .iter()
+            .zip(self.nodes.iter_mut())
+            .map(|(&b, n)| n.nic.transfer(t, b).1)
+            .collect();
+        let cloud_ends = self.cloud.fair_share(t, per_node_bytes);
+        nic_ends
+            .into_iter()
+            .zip(cloud_ends)
+            .map(|(a, b)| a.max(b))
+            .collect()
+    }
+
+    /// Reset all timeline horizons (fresh experiment on the same topology).
+    pub fn reset(&mut self) {
+        *self = ClusterHw::new(self.spec.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let hw = ClusterHw::new(HwSpec::paper_testbed());
+        assert_eq!(hw.nodes.len(), 6);
+        assert_eq!(hw.total_gpus(), 24);
+        assert_eq!(hw.nodes[0].pcie.len(), 4);
+    }
+
+    #[test]
+    fn d2h_parallel_beats_serial_single_link() {
+        // 4 GPUs x 5 GB sharded copy vs 20 GB through one link: the paper's
+        // Fig. 9 claim that sharded d2h is >3x faster than CheckFreq's.
+        let spec = HwSpec::paper_testbed();
+        let mut node = NodeHw::new(0, &spec);
+        let sharded = node
+            .d2h_parallel(0.0, &[5_000_000_000; 4])
+            .into_iter()
+            .fold(0.0, f64::max);
+        let mut node2 = NodeHw::new(0, &spec);
+        let (_, serial) = node2.pcie[0].transfer(0.0, 20_000_000_000);
+        assert!(
+            serial / sharded > 3.0,
+            "serial {serial:.3} s vs sharded {sharded:.3} s"
+        );
+    }
+
+    #[test]
+    fn host_bus_caps_aggregate_d2h() {
+        let mut spec = HwSpec::paper_testbed();
+        spec.host_bus_bw = 20e9; // tighter than 4 x 15.7
+        let mut node = NodeHw::new(0, &spec);
+        let ends = node.d2h_parallel(0.0, &[10_000_000_000; 4]);
+        let t = ends.into_iter().fold(0.0, f64::max);
+        // 40 GB over a 20 GB/s shared bus: can't beat 2 s even with 4 links
+        assert!(t >= 2.0 - 1e-6, "{t}");
+    }
+
+    #[test]
+    fn cloud_persist_shares_store() {
+        let mut hw = ClusterHw::new(HwSpec::scaled(6, 4));
+        // 6 nodes x 10 GB: NIC-bound at 1.25 GB/s -> 8 s each if store keeps up
+        let ends = hw.persist_to_cloud(0.0, &[10_000_000_000; 6]);
+        let t = ends.into_iter().fold(0.0, f64::max);
+        // store ingest 3 GB/s < 6 x 1.25 GB/s aggregate -> store-bound: 60/3 = 20 s
+        assert!((t - 20.0).abs() < 0.5, "{t}");
+    }
+}

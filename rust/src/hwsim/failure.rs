@@ -1,0 +1,178 @@
+//! Failure injection: Weibull time-to-failure per the paper's Assumption 1.
+//!
+//! Two failure classes with distinct recovery semantics (§2.1 "Failure
+//! Types", §4.2 "Elastic Functionality"):
+//!
+//! * **Software** (CUDA fault, data-loader crash, MPI error): the training
+//!   process dies; the node — and its SMP with the clean snapshot — survives.
+//! * **Hardware** (overheating, power, ECC): the node goes OFFLINE; all its
+//!   memory (GPU *and* the SMP's CPU buffers) is lost; recovery needs RAIM5
+//!   parity from SG peers or a checkpoint.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureKind {
+    /// training process dies; SMP survives (UNHEALTHY signal)
+    Software,
+    /// node offline; all volatile state on it is lost (OFFLINE signal)
+    Hardware,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FailureEvent {
+    pub at: f64,
+    pub node: usize,
+    pub kind: FailureKind,
+}
+
+/// Weibull failure model with independent per-node TTF (Assumption 1):
+/// survival S(t) = exp(-lambda * t^c), i.e. scale = lambda^(-1/c).
+#[derive(Debug, Clone)]
+pub struct FailureModel {
+    /// hardware failure rate (per unit time, before the Weibull shaping)
+    pub lambda_hw: f64,
+    /// software failure rate
+    pub lambda_sw: f64,
+    /// Weibull shape parameter c (paper sweeps 1.0 / 1.3 / 1.5 / 2.0)
+    pub shape_c: f64,
+}
+
+impl FailureModel {
+    pub fn new(lambda_hw: f64, lambda_sw: f64, shape_c: f64) -> Self {
+        FailureModel { lambda_hw, lambda_sw, shape_c }
+    }
+
+    /// Single-node survival probability at time t: exp(-lambda t^c) — Eq. (1).
+    pub fn survival(lambda: f64, shape_c: f64, t: f64) -> f64 {
+        (-lambda * t.powf(shape_c)).exp()
+    }
+
+    /// Sample one TTF with S(t) = exp(-lambda t^c): t = (-ln U / lambda)^(1/c).
+    pub fn sample_ttf(&self, rng: &mut Rng, lambda: f64) -> f64 {
+        let u = rng.f64_open();
+        (-u.ln() / lambda).powf(1.0 / self.shape_c)
+    }
+
+    /// Build a failure schedule for `nodes` nodes over [0, horizon]:
+    /// each node draws independent hardware & software TTF processes
+    /// (renewed after each event — i.e. a failure "repairs" and the clock
+    /// restarts, matching elastic restart semantics).
+    pub fn schedule(&self, rng: &mut Rng, nodes: usize, horizon: f64) -> FailureSchedule {
+        let mut events = Vec::new();
+        for node in 0..nodes {
+            for (lambda, kind) in [
+                (self.lambda_hw, FailureKind::Hardware),
+                (self.lambda_sw, FailureKind::Software),
+            ] {
+                if lambda <= 0.0 {
+                    continue;
+                }
+                let mut t = 0.0;
+                loop {
+                    t += self.sample_ttf(rng, lambda);
+                    if t > horizon {
+                        break;
+                    }
+                    events.push(FailureEvent { at: t, node, kind });
+                }
+            }
+        }
+        events.sort_by(|a, b| a.at.total_cmp(&b.at));
+        FailureSchedule { events }
+    }
+}
+
+/// A pre-drawn, time-ordered list of failure events.
+#[derive(Debug, Clone, Default)]
+pub struct FailureSchedule {
+    pub events: Vec<FailureEvent>,
+}
+
+impl FailureSchedule {
+    pub fn empty() -> Self {
+        FailureSchedule { events: Vec::new() }
+    }
+
+    /// Deterministic single event (targeted kill for experiments, §6.2).
+    pub fn single(at: f64, node: usize, kind: FailureKind) -> Self {
+        FailureSchedule { events: vec![FailureEvent { at, node, kind }] }
+    }
+
+    /// Next event strictly after `t`, if any.
+    pub fn next_after(&self, t: f64) -> Option<&FailureEvent> {
+        self.events.iter().find(|e| e.at > t)
+    }
+
+    /// All events within (t0, t1].
+    pub fn in_window(&self, t0: f64, t1: f64) -> impl Iterator<Item = &FailureEvent> {
+        self.events.iter().filter(move |e| e.at > t0 && e.at <= t1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn survival_eq1_shape() {
+        // S is 1 at t=0, decreasing, and matches exp(-lambda t^c)
+        let s = |l, c, t| FailureModel::survival(l, c, t);
+        assert_eq!(s(0.1, 1.3, 0.0), 1.0);
+        assert!(s(0.1, 1.3, 1.0) > s(0.1, 1.3, 5.0));
+        let t: f64 = 2.0;
+        assert!((s(0.2, 1.5, t) - (-0.2 * t.powf(1.5)).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sampled_ttf_matches_survival_curve() {
+        let m = FailureModel::new(0.05, 0.0, 1.3);
+        let mut rng = Rng::seed_from(17);
+        let n = 50_000;
+        let t_probe = 5.0;
+        let analytic = FailureModel::survival(0.05, 1.3, t_probe);
+        let surv = (0..n)
+            .filter(|_| m.sample_ttf(&mut rng, m.lambda_hw) > t_probe)
+            .count() as f64
+            / n as f64;
+        assert!((surv - analytic).abs() < 0.01, "{surv} vs {analytic}");
+    }
+
+    #[test]
+    fn schedule_sorted_and_bounded() {
+        let m = FailureModel::new(0.01, 0.02, 1.0);
+        let mut rng = Rng::seed_from(3);
+        let sched = m.schedule(&mut rng, 8, 1000.0);
+        assert!(!sched.events.is_empty());
+        for w in sched.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        assert!(sched.events.iter().all(|e| e.at <= 1000.0 && e.node < 8));
+        // both kinds appear over a long horizon
+        assert!(sched.events.iter().any(|e| e.kind == FailureKind::Software));
+        assert!(sched.events.iter().any(|e| e.kind == FailureKind::Hardware));
+    }
+
+    #[test]
+    fn schedule_rate_sanity() {
+        // lambda_sw = 0.02/h over 1000 h on 8 nodes -> ~ 0.02*1000*8 = 160 sw events
+        let m = FailureModel::new(0.0, 0.02, 1.0);
+        let mut rng = Rng::seed_from(5);
+        let sched = m.schedule(&mut rng, 8, 1000.0);
+        let n = sched.events.len() as f64;
+        assert!((n - 160.0).abs() < 40.0, "{n}");
+    }
+
+    #[test]
+    fn window_queries() {
+        let sched = FailureSchedule {
+            events: vec![
+                FailureEvent { at: 1.0, node: 0, kind: FailureKind::Software },
+                FailureEvent { at: 2.0, node: 1, kind: FailureKind::Hardware },
+                FailureEvent { at: 3.0, node: 2, kind: FailureKind::Software },
+            ],
+        };
+        assert_eq!(sched.next_after(1.0).unwrap().at, 2.0);
+        assert_eq!(sched.in_window(0.5, 2.5).count(), 2);
+    }
+}

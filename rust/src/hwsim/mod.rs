@@ -1,0 +1,29 @@
+//! Hardware simulator: the substrate standing in for the paper's six-node
+//! 4×V100 testbed (Table 1).
+//!
+//! Design: a *timeline* cost model, not a wall-clock throttle. Every modeled
+//! resource (a PCIe link, a node's host-memory engine, a NIC, the cloud
+//! object store) is a [`Resource`] with a bandwidth, a latency and a
+//! `busy_until` horizon. Data-path operations *actually move the bytes*
+//! (real memcpy / XOR / serialization on real buffers — so correctness and
+//! hot-path optimization are real), while the *time* each device-class
+//! transfer takes is charged to the virtual timeline. Deterministic,
+//! single-threaded, and fast enough to sweep the paper's full parameter grid.
+//!
+//! Fairness: transfers that overlap on a shared resource are resolved with a
+//! progressive-filling (max-min fair share) model — see
+//! [`Resource::fair_share`], which is what makes e.g. four concurrent d2h
+//! copies on one host root complex land at the paper's observed aggregates.
+//!
+//! Failure injection follows the paper's Assumption 1: per-node
+//! Time-To-Failure drawn from a Weibull distribution, independent across
+//! nodes, split into *software* failures (kill the training process, SMP
+//! survives) and *hardware* failures (node offline, memory lost).
+
+pub mod cluster;
+pub mod failure;
+pub mod resource;
+
+pub use cluster::{ClusterHw, HwSpec, NodeHw};
+pub use failure::{FailureEvent, FailureKind, FailureModel, FailureSchedule};
+pub use resource::{Resource, Timeline};

@@ -1,0 +1,40 @@
+//! # REFT — Reliable and Efficient in-memory Fault Tolerance
+//!
+//! A production-shaped reproduction of *"Reliable and Efficient In-Memory
+//! Fault Tolerance of Large Language Model Pretraining"* (Wang et al., 2023)
+//! as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the REFT coordinator: 3D-parallel training
+//!   orchestration, sharded in-memory snapshotting, snapshot management
+//!   processes (SMPs), RAIM5 erasure coding, checkpoint baselines
+//!   (CheckFreq / TorchSnapshot), elastic failure recovery, and the
+//!   hardware/failure simulator that stands in for the paper's V100 testbed.
+//! * **Layer 2** — an OPT-style transformer written in JAX
+//!   (`python/compile/model.py`), AOT-lowered to HLO text per pipeline stage.
+//! * **Layer 1** — Pallas kernels (flash attention, fused Adam) embedded in
+//!   the Layer-2 HLO (`python/compile/kernels/`).
+//!
+//! Python never runs at training time: the [`runtime`] module loads the HLO
+//! artifacts via the PJRT C API (`xla` crate) and executes them from rust.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a bench target.
+
+pub mod checkpoint;
+pub mod collective;
+pub mod config;
+pub mod ec;
+pub mod elastic;
+pub mod hwsim;
+pub mod metrics;
+pub mod model;
+pub mod pipeline;
+pub mod reliability;
+pub mod runtime;
+pub mod smp;
+pub mod snapshot;
+pub mod topology;
+pub mod trainer;
+pub mod util;
+
+pub use config::RunConfig;

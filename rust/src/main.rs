@@ -1,0 +1,281 @@
+//! `reft` — the coordinator CLI / launcher.
+//!
+//! Subcommands (hand-rolled parsing; clap is not in the offline crate set):
+//!
+//! ```text
+//! reft train   [--config cfg.json] [--model M] [--dp N] [--tp N] [--pp N]
+//!              [--steps N] [--micro N] [--ft METHOD] [--snapshot-interval N]
+//!              [--schedule gpipe|1f1b] [--artifacts DIR] [--seed N]
+//! reft survival    [--threshold 0.9]        # Fig. 8 curves + crossing table
+//! reft intervals   [--lambda 1e-4] [--sg 6] # Appendix-A optimal intervals
+//! reft save-cost   [--model opt-350m] [--dp 24]  # one-shot save costing
+//! reft info                                    # artifact + zoo inventory
+//! ```
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use reft::checkpoint::{DirStorage, MemStorage, Storage};
+use reft::config::{zoo, FtMethod, RunConfig};
+use reft::pipeline::Schedule;
+use reft::reliability::{self, survival};
+use reft::snapshot::{cost, SnapshotPlan};
+use reft::topology::{ParallelPlan, Topology};
+use reft::trainer::{DpTrainer, PipelineTrainer};
+use reft::util::{human_bytes, human_secs};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Parse `--key value` pairs after the subcommand.
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .with_context(|| format!("expected --flag, got `{}`", args[i]))?;
+        let v = args
+            .get(i + 1)
+            .with_context(|| format!("--{k} needs a value"))?;
+        out.insert(k.to_string(), v.clone());
+        i += 2;
+    }
+    Ok(out)
+}
+
+fn run() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "survival" => cmd_survival(&flags),
+        "intervals" => cmd_intervals(&flags),
+        "save-cost" => cmd_save_cost(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `reft help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "reft — in-memory fault tolerance for 3D-parallel LLM pretraining\n\
+         \n\
+         usage: reft <command> [--flag value ...]\n\
+         \n\
+         commands:\n\
+           train        run a training job on AOT artifacts (see README)\n\
+           survival     Fig. 8 survival-probability curves + crossing table\n\
+           intervals    Appendix-A optimal snapshot/checkpoint intervals\n\
+           save-cost    cost one parameter save for every FT method\n\
+           info         list artifacts and the OPT model zoo"
+    );
+}
+
+fn build_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(m) = flags.get("model") {
+        cfg.model = m.clone();
+    }
+    let get_usize = |k: &str, d: usize| -> Result<usize> {
+        flags
+            .get(k)
+            .map(|v| v.parse::<usize>().with_context(|| format!("--{k}")))
+            .unwrap_or(Ok(d))
+    };
+    cfg.plan = ParallelPlan::new(
+        get_usize("dp", cfg.plan.dp)?,
+        get_usize("tp", cfg.plan.tp)?,
+        get_usize("pp", cfg.plan.pp)?,
+    );
+    cfg.nodes = get_usize("nodes", cfg.nodes)?;
+    cfg.gpus_per_node = get_usize("gpus-per-node", cfg.gpus_per_node)?;
+    cfg.steps = get_usize("steps", cfg.steps)?;
+    cfg.microbatches = get_usize("micro", cfg.microbatches)?;
+    cfg.ft.snapshot_interval = get_usize("snapshot-interval", cfg.ft.snapshot_interval)?;
+    cfg.ft.persist_every = get_usize("persist-every", cfg.ft.persist_every)?;
+    cfg.ft.bucket_bytes = get_usize("bucket-bytes", cfg.ft.bucket_bytes)?;
+    if let Some(ft) = flags.get("ft") {
+        cfg.ft.method = FtMethod::parse(ft)?;
+    }
+    if let Some(r) = flags.get("raim5") {
+        cfg.ft.raim5 = r == "true" || r == "1";
+    }
+    if let Some(a) = flags.get("artifacts") {
+        cfg.artifacts_dir = a.clone();
+    }
+    if let Some(s) = flags.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
+    let cfg = build_config(flags)?;
+    let schedule = flags
+        .get("schedule")
+        .map(|s| Schedule::parse(s).context("bad --schedule"))
+        .unwrap_or(Ok(Schedule::OneFOneB))?;
+    let storage: Arc<dyn Storage> = match flags.get("ckpt-dir") {
+        Some(dir) => Arc::new(DirStorage::new(dir)?),
+        None => Arc::new(MemStorage::new()),
+    };
+    println!(
+        "train: model={} dp={} tp={} pp={} steps={} ft={} raim5={}",
+        cfg.model,
+        cfg.plan.dp,
+        cfg.plan.tp,
+        cfg.plan.pp,
+        cfg.steps,
+        cfg.ft.method.name(),
+        cfg.ft.raim5
+    );
+    let t0 = std::time::Instant::now();
+    if cfg.plan.pp == 1 && cfg.plan.tp == 1 {
+        let steps = cfg.steps;
+        let mut tr = DpTrainer::new(cfg, storage)?;
+        for s in 0..steps {
+            let rep = tr.step()?;
+            println!(
+                "step {:>5}  loss {:.4}{}{}",
+                rep.step,
+                rep.loss,
+                if rep.snapshotted { "  [snap]" } else { "" },
+                if rep.checkpointed { "  [ckpt]" } else { "" }
+            );
+            let _ = s;
+        }
+        println!("{}", tr.metrics.to_json());
+    } else {
+        let steps = cfg.steps;
+        let mut tr = PipelineTrainer::new(cfg, storage, schedule)?;
+        for _ in 0..steps {
+            let loss = tr.step()?;
+            println!("step {:>5}  loss {:.4}", tr.stages[0].step, loss);
+        }
+        println!("{}", tr.metrics.to_json());
+    }
+    println!("wall time: {}", human_secs(t0.elapsed().as_secs_f64()));
+    Ok(())
+}
+
+fn cmd_survival(flags: &HashMap<String, String>) -> Result<()> {
+    let threshold: f64 = flags
+        .get("threshold")
+        .map(|v| v.parse())
+        .unwrap_or(Ok(0.9))?;
+    let k: usize = flags.get("k").map(|v| v.parse()).unwrap_or(Ok(3072))?;
+    let n: usize = flags.get("sg").map(|v| v.parse()).unwrap_or(Ok(6))?;
+    let lhw: f64 = flags.get("lambda-hw").map(|v| v.parse()).unwrap_or(Ok(1e-4))?;
+    let lsw: f64 = flags.get("lambda-sw").map(|v| v.parse()).unwrap_or(Ok(1e-4))?;
+    println!("Fig. 8 — survival probability, k={k} GPUs, SG size n={n}, λ_hw={lhw}, λ_sw={lsw}");
+    println!("{:<8} {:>14} {:>14} {:>10}", "shape c", "ckpt cross(d)", "REFT cross(d)", "ratio");
+    for c in [1.0, 1.3, 1.5, 2.0] {
+        let t_ck = survival::crossing_time(threshold, |t| survival::ck_survival(k, lhw, lsw, c, t));
+        let t_re =
+            survival::crossing_time(threshold, |t| survival::re_survival(k, n, lhw, c, t, 1.0));
+        println!("{c:<8} {t_ck:>14.3} {t_re:>14.2} {:>9.1}x", t_re / t_ck);
+    }
+    Ok(())
+}
+
+fn cmd_intervals(flags: &HashMap<String, String>) -> Result<()> {
+    let lambda: f64 = flags.get("lambda").map(|v| v.parse()).unwrap_or(Ok(1e-4))?;
+    let n: usize = flags.get("sg").map(|v| v.parse()).unwrap_or(Ok(6))?;
+    let t_comp: f64 = flags.get("t-comp").map(|v| v.parse()).unwrap_or(Ok(1.0))?;
+    let t_sn: f64 = flags.get("t-sn").map(|v| v.parse()).unwrap_or(Ok(0.2))?;
+    let t_ck: f64 = flags.get("t-ck").map(|v| v.parse()).unwrap_or(Ok(5.0))?;
+    let sched = reliability::intervals::schedule(t_sn, t_ck, t_comp, lambda, n);
+    println!("Appendix A — optimal intervals (λ_node={lambda}, SG n={n}, T_comp={t_comp}s)");
+    println!("  T_sn (snapshot)         = {}", human_secs(sched.t_re_sn));
+    println!("  T_ckpt (no REFT)        = {}", human_secs(sched.t_ckpt));
+    println!("  T_re_ckpt (with REFT)   = {}", human_secs(sched.t_re_ckpt));
+    println!(
+        "  checkpoint stretch      = {:.1}x",
+        sched.t_re_ckpt / sched.t_ckpt
+    );
+    Ok(())
+}
+
+fn cmd_save_cost(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flags.get("model").map(String::as_str).unwrap_or("opt-350m");
+    let dp: usize = flags.get("dp").map(|v| v.parse()).unwrap_or(Ok(24))?;
+    let spec = zoo::zoo_model(model)
+        .with_context(|| format!("unknown zoo model `{model}`"))?;
+    let nodes = dp.div_ceil(4).max(1);
+    let topo = Topology::build(ParallelPlan::dp_only(dp), nodes, 4)?;
+    let plan = SnapshotPlan::build(&topo, &[spec.save_bytes()]);
+    println!(
+        "save-cost: {} ({} params, payload {}) on DP-{dp} / {nodes} nodes",
+        model,
+        spec.total_params(),
+        human_bytes(spec.save_bytes())
+    );
+    println!(
+        "{:<14} {:>10} {:>10} {:>10} {:>10} {:>12} {:>10}",
+        "method", "d2h", "serialize", "persist", "total", "speed GB/s", "stall"
+    );
+    for c in cost::compare_methods(&topo, &plan, 1.0, true) {
+        println!(
+            "{:<14} {:>10} {:>10} {:>10} {:>10} {:>12.2} {:>10}",
+            c.method,
+            human_secs(c.d2h),
+            human_secs(c.serialize),
+            human_secs(c.persist),
+            human_secs(c.total),
+            c.speed() / 1e9,
+            human_secs(c.stall)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags
+        .get("artifacts")
+        .map(String::as_str)
+        .unwrap_or("artifacts");
+    println!("OPT zoo (paper evaluation subjects):");
+    for m in zoo::OPT_ZOO {
+        println!(
+            "  {:<10} {:>12} params  payload {}",
+            m.name,
+            m.total_params(),
+            human_bytes(m.save_bytes())
+        );
+    }
+    println!("\nAOT artifacts under `{dir}`:");
+    match std::fs::read_dir(dir) {
+        Ok(rd) => {
+            for e in rd.flatten() {
+                let name = e.file_name().to_string_lossy().to_string();
+                if e.path().join("manifest.json").exists() {
+                    let man = reft::runtime::Manifest::load(dir, &name)?;
+                    println!(
+                        "  {:<10} {:>12} params  {} stages  (batch {} x seq {})",
+                        man.model, man.total_params, man.n_stages, man.hyper.batch, man.hyper.seq
+                    );
+                }
+            }
+        }
+        Err(_) => println!("  (none — run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,236 @@
+//! Metrics: counters, wall-clock timers and simulated-time series.
+//!
+//! Two clocks coexist deliberately (DESIGN.md §Substitutions): *wall time*
+//! measures real work this process does (XOR encode, memcpy, PJRT execute) —
+//! that is what §Perf optimizes — while *sim time* carries the modeled
+//! device-class transfers the benches report in paper shape.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// A monotonically growing set of named counters/gauges/timing stats.
+/// Thread-safe; cheap enough for hot-path increments outside the innermost
+/// loops.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    timers: BTreeMap<String, TimerStat>,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TimerStat {
+    pub count: u64,
+    pub total: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl TimerStat {
+    fn record(&mut self, secs: f64) {
+        if self.count == 0 {
+            self.min = secs;
+            self.max = secs;
+        } else {
+            self.min = self.min.min(secs);
+            self.max = self.max.max(secs);
+        }
+        self.count += 1;
+        self.total += secs;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total / self.count as f64
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn gauge(&self, name: &str, value: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
+    }
+
+    pub fn record_secs(&self, name: &str, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.timers.entry(name.to_string()).or_default().record(secs);
+    }
+
+    /// Time a closure under `name` (wall clock).
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_secs(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge_value(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    pub fn timer(&self, name: &str) -> TimerStat {
+        self.inner
+            .lock()
+            .unwrap()
+            .timers
+            .get(name)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Dump everything as JSON (for EXPERIMENTS.md tables and CI diffing).
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let counters = Json::Obj(
+            g.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                .collect(),
+        );
+        let gauges = Json::Obj(
+            g.gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        let timers = Json::Obj(
+            g.timers
+                .iter()
+                .map(|(k, t)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![
+                            ("count", Json::from(t.count as usize)),
+                            ("total_s", Json::from(t.total)),
+                            ("mean_s", Json::from(t.mean())),
+                            ("min_s", Json::from(t.min)),
+                            ("max_s", Json::from(t.max)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("counters", counters),
+            ("gauges", gauges),
+            ("timers", timers),
+        ])
+    }
+}
+
+/// A time series sampled on the simulation clock — used for the Fig. 3-style
+/// utilization traces (GPU busy %, CPU busy %, host memory in use).
+#[derive(Debug, Default, Clone)]
+pub struct Trace {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Trace {
+    pub fn new(name: impl Into<String>) -> Self {
+        Trace { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        self.points.push((t, v));
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|(_, v)| v).sum::<f64>() / self.points.len() as f64
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("t,value\n");
+        for (t, v) in &self.points {
+            s.push_str(&format!("{t:.6},{v:.6}\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let m = Metrics::new();
+        m.inc("saves", 1);
+        m.inc("saves", 2);
+        m.gauge("mem", 12.5);
+        assert_eq!(m.counter("saves"), 3);
+        assert_eq!(m.gauge_value("mem"), Some(12.5));
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timer_stats() {
+        let m = Metrics::new();
+        m.record_secs("op", 1.0);
+        m.record_secs("op", 3.0);
+        let t = m.timer("op");
+        assert_eq!(t.count, 2);
+        assert_eq!(t.mean(), 2.0);
+        assert_eq!(t.min, 1.0);
+        assert_eq!(t.max, 3.0);
+    }
+
+    #[test]
+    fn time_closure_runs_once() {
+        let m = Metrics::new();
+        let mut calls = 0;
+        let out = m.time("f", || {
+            calls += 1;
+            42
+        });
+        assert_eq!((out, calls), (42, 1));
+        assert_eq!(m.timer("f").count, 1);
+    }
+
+    #[test]
+    fn json_dump_contains_everything() {
+        let m = Metrics::new();
+        m.inc("c", 5);
+        m.gauge("g", 1.5);
+        m.record_secs("t", 0.25);
+        let j = m.to_json();
+        assert_eq!(j.at(&["counters", "c"]).as_usize(), Some(5));
+        assert_eq!(j.at(&["gauges", "g"]).as_f64(), Some(1.5));
+        assert_eq!(j.at(&["timers", "t", "count"]).as_usize(), Some(1));
+    }
+
+    #[test]
+    fn trace_csv() {
+        let mut tr = Trace::new("gpu");
+        tr.push(0.0, 0.9);
+        tr.push(1.0, 0.7);
+        assert!((tr.mean() - 0.8).abs() < 1e-12);
+        assert!(tr.to_csv().lines().count() == 3);
+    }
+}

@@ -1,0 +1,253 @@
+//! Pipeline-parallel microbatch scheduling: GPipe and 1F1B (the synchronous
+//! schedules the paper's training substrate uses — §7.1 notes REFT targets
+//! *synchronous* pipeline parallelism à la Megatron/OPT).
+//!
+//! A schedule is, per stage, an ordered list of [`Op`]s. The trainer executes
+//! them against the PJRT stage artifacts; the scheduler here also provides
+//! bubble accounting used by the utilization trace (Fig. 3) and validity
+//! checking (every fwd before its bwd, dependencies across stages satisfied).
+
+/// One scheduled operation on a stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// forward of microbatch i
+    Fwd(usize),
+    /// backward of microbatch i
+    Bwd(usize),
+}
+
+/// Which schedule shape to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// all forwards, then all backwards (high activation memory)
+    GPipe,
+    /// one-forward-one-backward steady state (Megatron default)
+    OneFOneB,
+}
+
+impl Schedule {
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s.to_ascii_lowercase().as_str() {
+            "gpipe" => Some(Schedule::GPipe),
+            "1f1b" | "onefoneb" => Some(Schedule::OneFOneB),
+            _ => None,
+        }
+    }
+}
+
+/// Build the per-stage op sequence for `n_stages` stages and `n_micro`
+/// microbatches.
+pub fn build(schedule: Schedule, n_stages: usize, n_micro: usize) -> Vec<Vec<Op>> {
+    match schedule {
+        Schedule::GPipe => gpipe(n_stages, n_micro),
+        Schedule::OneFOneB => one_f_one_b(n_stages, n_micro),
+    }
+}
+
+fn gpipe(n_stages: usize, n_micro: usize) -> Vec<Vec<Op>> {
+    (0..n_stages)
+        .map(|_| {
+            let mut ops: Vec<Op> = (0..n_micro).map(Op::Fwd).collect();
+            // backwards run in reverse microbatch order (last fwd's
+            // activations are hottest)
+            ops.extend((0..n_micro).rev().map(Op::Bwd));
+            ops
+        })
+        .collect()
+}
+
+/// Standard 1F1B: stage s runs `warmup = min(n_stages - s - 1, n_micro)`
+/// forwards, then alternates 1F1B, then drains remaining backwards.
+fn one_f_one_b(n_stages: usize, n_micro: usize) -> Vec<Vec<Op>> {
+    (0..n_stages)
+        .map(|s| {
+            let warmup = (n_stages - s - 1).min(n_micro);
+            let mut ops = Vec::with_capacity(2 * n_micro);
+            let mut next_f = 0;
+            let mut next_b = 0;
+            for _ in 0..warmup {
+                ops.push(Op::Fwd(next_f));
+                next_f += 1;
+            }
+            while next_f < n_micro {
+                ops.push(Op::Fwd(next_f));
+                next_f += 1;
+                ops.push(Op::Bwd(next_b));
+                next_b += 1;
+            }
+            while next_b < n_micro {
+                ops.push(Op::Bwd(next_b));
+                next_b += 1;
+            }
+            ops
+        })
+        .collect()
+}
+
+/// Validate a schedule: per stage each microbatch appears exactly once as
+/// Fwd and once as Bwd, Fwd(i) precedes Bwd(i), and the global dependency
+/// order is realizable (fwd flows down stages, bwd flows up).
+pub fn validate(sched: &[Vec<Op>], n_micro: usize) -> Result<(), String> {
+    let n_stages = sched.len();
+    for (s, ops) in sched.iter().enumerate() {
+        let mut fseen = vec![false; n_micro];
+        let mut bseen = vec![false; n_micro];
+        for op in ops {
+            match *op {
+                Op::Fwd(i) => {
+                    if fseen[i] {
+                        return Err(format!("stage {s}: Fwd({i}) twice"));
+                    }
+                    fseen[i] = true;
+                }
+                Op::Bwd(i) => {
+                    if !fseen[i] {
+                        return Err(format!("stage {s}: Bwd({i}) before Fwd({i})"));
+                    }
+                    if bseen[i] {
+                        return Err(format!("stage {s}: Bwd({i}) twice"));
+                    }
+                    bseen[i] = true;
+                }
+            }
+        }
+        if !fseen.iter().all(|&b| b) || !bseen.iter().all(|&b| b) {
+            return Err(format!("stage {s}: incomplete microbatch coverage"));
+        }
+    }
+    // cross-stage realizability: simulate with dependency counters
+    let mut done_f = vec![vec![false; n_micro]; n_stages];
+    let mut done_b = vec![vec![false; n_micro]; n_stages];
+    let mut cursor = vec![0usize; n_stages];
+    let total: usize = sched.iter().map(Vec::len).sum();
+    let mut executed = 0;
+    loop {
+        let mut progressed = false;
+        for s in 0..n_stages {
+            while cursor[s] < sched[s].len() {
+                let ready = match sched[s][cursor[s]] {
+                    Op::Fwd(i) => s == 0 || done_f[s - 1][i],
+                    Op::Bwd(i) => {
+                        done_f[s][i] && (s == n_stages - 1 || done_b[s + 1][i])
+                    }
+                };
+                if !ready {
+                    break;
+                }
+                match sched[s][cursor[s]] {
+                    Op::Fwd(i) => done_f[s][i] = true,
+                    Op::Bwd(i) => done_b[s][i] = true,
+                }
+                cursor[s] += 1;
+                executed += 1;
+                progressed = true;
+            }
+        }
+        if executed == total {
+            return Ok(());
+        }
+        if !progressed {
+            return Err("schedule deadlocks".to_string());
+        }
+    }
+}
+
+/// Peak number of in-flight activations on stage `s` (memory planning).
+pub fn peak_activations(sched: &[Vec<Op>], s: usize) -> usize {
+    let mut live = 0usize;
+    let mut peak = 0;
+    for op in &sched[s] {
+        match op {
+            Op::Fwd(_) => {
+                live += 1;
+                peak = peak.max(live);
+            }
+            Op::Bwd(_) => live -= 1,
+        }
+    }
+    peak
+}
+
+/// Ideal bubble fraction of a synchronous pipeline:
+/// (p - 1) / (m + p - 1) — the utilization ceiling Fig. 3 reflects.
+pub fn bubble_fraction(n_stages: usize, n_micro: usize) -> f64 {
+    let p = n_stages as f64;
+    let m = n_micro as f64;
+    (p - 1.0) / (m + p - 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpipe_valid_for_grid() {
+        for p in 1..=6 {
+            for m in 1..=8 {
+                let s = build(Schedule::GPipe, p, m);
+                validate(&s, m).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_valid_for_grid() {
+        for p in 1..=6 {
+            for m in 1..=8 {
+                let s = build(Schedule::OneFOneB, p, m);
+                validate(&s, m).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn one_f_one_b_caps_activation_memory() {
+        // the whole point of 1F1B: peak activations on stage 0 is <= p,
+        // while GPipe holds all m microbatches
+        let p = 4;
+        let m = 16;
+        let g = build(Schedule::GPipe, p, m);
+        let f = build(Schedule::OneFOneB, p, m);
+        assert_eq!(peak_activations(&g, 0), m);
+        assert!(peak_activations(&f, 0) <= p);
+    }
+
+    #[test]
+    fn last_stage_alternates_strictly() {
+        let s = build(Schedule::OneFOneB, 4, 6);
+        let last = &s[3];
+        // no warmup on the last stage: F0 B0 F1 B1 ...
+        assert_eq!(last[0], Op::Fwd(0));
+        assert_eq!(last[1], Op::Bwd(0));
+        assert_eq!(last[2], Op::Fwd(1));
+    }
+
+    #[test]
+    fn validator_catches_bad_schedules() {
+        // Bwd before Fwd
+        let bad = vec![vec![Op::Bwd(0), Op::Fwd(0)]];
+        assert!(validate(&bad, 1).is_err());
+        // missing microbatch
+        let bad2 = vec![vec![Op::Fwd(0), Op::Bwd(0)]];
+        assert!(validate(&bad2, 2).is_err());
+        // deadlock: stage 1 wants Fwd(1) before stage 0 produced it
+        let bad3 = vec![
+            vec![Op::Fwd(0), Op::Bwd(0), Op::Fwd(1), Op::Bwd(1)],
+            vec![Op::Fwd(1), Op::Fwd(0), Op::Bwd(0), Op::Bwd(1)],
+        ];
+        assert!(validate(&bad3, 2).is_err());
+    }
+
+    #[test]
+    fn bubble_shrinks_with_microbatches() {
+        assert!(bubble_fraction(4, 4) > bubble_fraction(4, 32));
+        assert_eq!(bubble_fraction(1, 8), 0.0);
+    }
+
+    #[test]
+    fn schedule_parse() {
+        assert_eq!(Schedule::parse("gpipe"), Some(Schedule::GPipe));
+        assert_eq!(Schedule::parse("1F1B"), Some(Schedule::OneFOneB));
+        assert_eq!(Schedule::parse("x"), None);
+    }
+}

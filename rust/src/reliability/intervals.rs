@@ -1,0 +1,147 @@
+//! Optimal snapshot/checkpoint intervals (paper Appendix A, Eq. 4–11).
+//!
+//! Young-style analysis: total FT overhead over a run of length `T_total` is
+//!   `O_total = O_save * T_total / T_save + O_restart * T_total * lambda`
+//! (Eq. 4), minimized at `T_save = sqrt(2 O_save / lambda)` (Eq. 5).
+//!
+//! REFT's twist: in-memory snapshots change *which* failure rate applies to
+//! the expensive restart path. A checkpoint-based system restarts from
+//! storage on ANY node failure (`lambda_ck = lambda_node`, Eq. 6); REFT only
+//! falls back to a checkpoint when its in-memory protection is exceeded —
+//! more than one node lost in a sharding group of n (Eq. 7):
+//!   `lambda_re = 1 - (1-l)^n - n l (1-l)^(n-1)`.
+//! Since `lambda_re << lambda_ck`, REFT's checkpoint interval stretches by
+//! orders of magnitude while its cheap snapshots run at high frequency
+//! (Eq. 9–11).
+
+/// Eq. 8: effective saving overhead when a save of duration `t_ft` overlaps
+/// an iteration of compute `t_comp`: only the spill beyond the compute window
+/// costs anything. `(|x| + x)/2 = max(0, x)` with `x = t_ft - t_comp`.
+pub fn save_overhead(t_ft: f64, t_comp: f64) -> f64 {
+    (t_ft - t_comp).max(0.0)
+}
+
+/// Eq. 5: optimal save interval given per-save overhead and failure rate.
+pub fn optimal_interval(o_save: f64, lambda_fail: f64) -> f64 {
+    assert!(lambda_fail > 0.0);
+    (2.0 * o_save / lambda_fail).sqrt()
+}
+
+/// Eq. 7: the rate at which REFT's in-memory protection is exceeded
+/// (>= 2 nodes lost in an SG of n), given per-node failure prob `l` per unit
+/// time.
+pub fn reft_fail_rate(lambda_node: f64, n: usize) -> f64 {
+    let l = lambda_node;
+    let nf = n as f64;
+    let r = 1.0 - (1.0 - l).powi(n as i32) - nf * l * (1.0 - l).powi(n as i32 - 1);
+    // n = 1 is exactly zero analytically; clamp the f64 cancellation residue
+    if r < 1e-15 {
+        0.0
+    } else {
+        r
+    }
+}
+
+/// Eq. 11: REFT's optimal checkpoint interval — checkpoint cost in the
+/// numerator, the *exceedance* rate (Eq. 7) in the denominator.
+///
+/// Note on the paper's formula: Eq. 11 as printed puts the snapshot
+/// overhead `(|T_sn - T_comp| + T_sn - T_comp)` in the numerator, which is
+/// identically zero whenever snapshots fully overlap compute — making the
+/// optimum degenerate. We read the intended semantics as "the cost of one
+/// durable checkpoint, amortized against the rate at which one is actually
+/// needed": same Young form, checkpoint overhead over `lambda_re`.
+pub fn reft_ckpt_interval(t_ck: f64, t_comp: f64, lambda_node: f64, n: usize) -> f64 {
+    let o = save_overhead(t_ck, t_comp).max(1e-6);
+    let lam = reft_fail_rate(lambda_node, n);
+    if lam <= 0.0 {
+        return f64::INFINITY;
+    }
+    (2.0 * o / lam).sqrt()
+}
+
+/// The full Appendix-A schedule for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct OptimalIntervals {
+    /// snapshot interval for REFT (Eq. 9, vs the node failure rate)
+    pub t_re_sn: f64,
+    /// checkpoint interval without REFT (Eq. 10)
+    pub t_ckpt: f64,
+    /// checkpoint interval with REFT (Eq. 11)
+    pub t_re_ckpt: f64,
+}
+
+/// Compute all three intervals from measured per-save costs.
+///
+/// * `t_sn` — REFT snapshot duration; `t_ck` — checkpoint duration;
+/// * `t_comp` — per-iteration compute (the overlap window);
+/// * `lambda_node` — per-node failure rate; `n` — SG size.
+pub fn schedule(t_sn: f64, t_ck: f64, t_comp: f64, lambda_node: f64, n: usize) -> OptimalIntervals {
+    let o_sn = save_overhead(t_sn, t_comp).max(1e-6);
+    let o_ck = save_overhead(t_ck, t_comp).max(1e-6);
+    OptimalIntervals {
+        t_re_sn: (2.0 * o_sn / lambda_node).sqrt(),
+        t_ckpt: (2.0 * o_ck / lambda_node).sqrt(),
+        t_re_ckpt: reft_ckpt_interval(t_ck, t_comp, lambda_node, n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq8_overlap_absorbs_fast_saves() {
+        assert_eq!(save_overhead(0.5, 1.0), 0.0);
+        assert_eq!(save_overhead(1.5, 1.0), 0.5);
+        assert_eq!(save_overhead(1.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn eq5_shape() {
+        // cheaper saves or higher failure rates -> shorter intervals
+        assert!(optimal_interval(1.0, 0.01) > optimal_interval(0.1, 0.01));
+        assert!(optimal_interval(1.0, 0.01) < optimal_interval(1.0, 0.001));
+        let t = optimal_interval(2.0, 0.01);
+        assert!((t - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq7_quadratic_in_lambda() {
+        // for small l, exceedance ~ C(n,2) l^2
+        let n = 6;
+        let l = 1e-4;
+        let rate = reft_fail_rate(l, n);
+        let approx = 15.0 * l * l; // C(6,2) = 15
+        assert!((rate / approx - 1.0).abs() < 0.01, "{rate} vs {approx}");
+        // and it is orders of magnitude below the raw node rate
+        assert!(rate < l * 1e-2);
+    }
+
+    #[test]
+    fn reft_stretches_checkpoint_interval() {
+        // paper's qualitative claim: with REFT the expensive checkpoint can
+        // run orders of magnitude less often
+        let sched = schedule(0.2, 5.0, 1.0, 1e-4, 6);
+        // ratio = sqrt(lambda_node / lambda_re) = sqrt(1 / (15 * 1e-4)) ~ 25.8x
+        assert!(sched.t_re_ckpt > sched.t_ckpt * 20.0, "{sched:?}");
+        // snapshots fully overlapped -> snapshot interval is the epsilon-cap
+        assert!(sched.t_re_sn <= sched.t_ckpt);
+    }
+
+    #[test]
+    fn degenerate_group_never_exceeds() {
+        // n = 1: "more than one node in the SG" is impossible only if the
+        // rate formula is consistent — with n=1, exceedance = 1-(1-l)-l = 0
+        assert!(reft_fail_rate(0.01, 1).abs() < 1e-12);
+        assert_eq!(reft_ckpt_interval(1.0, 2.0, 0.01, 1), f64::INFINITY);
+    }
+
+    #[test]
+    fn intervals_monotone_in_group_size() {
+        // bigger SGs -> more pairs -> higher exceedance -> shorter ckpt interval
+        let a = reft_ckpt_interval(2.0, 1.0, 1e-3, 2);
+        let b = reft_ckpt_interval(2.0, 1.0, 1e-3, 6);
+        assert!(a > b);
+    }
+}

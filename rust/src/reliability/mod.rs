@@ -1,0 +1,9 @@
+//! Reliability analytics: the paper's survival-probability model (§5,
+//! Eq. 1–3, Fig. 8) and the optimal snapshot/checkpoint interval derivation
+//! (Appendix A, Eq. 4–11).
+
+pub mod intervals;
+pub mod survival;
+
+pub use intervals::{optimal_interval, reft_ckpt_interval, reft_fail_rate, save_overhead, OptimalIntervals};
+pub use survival::{ck_survival, crossing_time, re_survival, single_survival};

@@ -1,0 +1,140 @@
+//! Survival probability model (paper §5).
+//!
+//! Assumption 1: per-node TTF is Weibull; cumulative single-node survival at
+//! time t is `P = exp(-lambda * t^c)` (Eq. 1).
+//!
+//! * Checkpoint-based FT survives only while *every* node survives both
+//!   hardware and software failure processes:
+//!   `P_ck = (Ps * Ptr)^k`  (Eq. 3).
+//! * REFT survives software failures outright (SMPs hold the snapshots) and
+//!   tolerates one hardware loss per sharding group of n nodes:
+//!   `P_re = (Ps^n + n (1-Ps) Ps^(n-1))^(k/n) * P_smp^k`  (Eq. 2),
+//!   with `P_smp ~ 1` (the SMP is a tiny process; its failure rate is
+//!   negligible next to training-node rates).
+
+/// Eq. 1: single-node survival under one failure process.
+pub fn single_survival(lambda: f64, shape_c: f64, t: f64) -> f64 {
+    (-lambda * t.powf(shape_c)).exp()
+}
+
+/// Eq. 3: checkpoint-based survival of a k-node system (hardware and
+/// software processes both fatal).
+pub fn ck_survival(k: usize, lambda_hw: f64, lambda_sw: f64, shape_c: f64, t: f64) -> f64 {
+    let ps = single_survival(lambda_hw, shape_c, t);
+    let ptr = single_survival(lambda_sw, shape_c, t);
+    (ps * ptr).powi(k as i32)
+}
+
+/// Eq. 2: REFT survival of a k-node system partitioned into SGs of n nodes
+/// (software failures absorbed by SMPs; one hardware loss per SG decodable).
+/// `p_smp` is the per-node SMP survival (default ~1).
+pub fn re_survival(
+    k: usize,
+    n: usize,
+    lambda_hw: f64,
+    shape_c: f64,
+    t: f64,
+    p_smp: f64,
+) -> f64 {
+    assert!(n >= 1 && k % n == 0, "k={k} must be a multiple of n={n}");
+    let ps = single_survival(lambda_hw, shape_c, t);
+    let group = ps.powi(n as i32) + n as f64 * (1.0 - ps) * ps.powi(n as i32 - 1);
+    group.powf(k as f64 / n as f64) * p_smp.powi(k as i32)
+}
+
+/// Largest t with `survival(t) >= threshold`, found by bisection on a
+/// monotone-decreasing curve. This is the "how long can parameters sit in
+/// volatile memory" number Fig. 8 quotes (16.22 days vs 0.5 days).
+pub fn crossing_time(threshold: f64, mut survival: impl FnMut(f64) -> f64) -> f64 {
+    assert!((0.0..1.0).contains(&threshold));
+    // bracket
+    let mut hi = 1.0;
+    while survival(hi) >= threshold && hi < 1e9 {
+        hi *= 2.0;
+    }
+    let mut lo = 0.0;
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if survival(mid) >= threshold {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LHW: f64 = 1e-4;
+    const LSW: f64 = 1e-4;
+
+    #[test]
+    fn eq1_basics() {
+        assert_eq!(single_survival(LHW, 1.3, 0.0), 1.0);
+        assert!(single_survival(LHW, 1.3, 10.0) < 1.0);
+        // heavier shape decays faster past t=1
+        assert!(single_survival(LHW, 2.0, 30.0) < single_survival(LHW, 1.0, 30.0));
+    }
+
+    #[test]
+    fn reft_beats_checkpoint_survival() {
+        // Fig. 8's headline: REFT's curve sits far above checkpointing's
+        for &c in &[1.0, 1.3, 1.5, 2.0] {
+            for &t in &[0.1, 0.5, 1.0, 5.0] {
+                let ck = ck_survival(3072, LHW, LSW, c, t);
+                let re = re_survival(3072, 6, LHW, c, t, 1.0);
+                assert!(re >= ck, "c={c} t={t}: {re} < {ck}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig8_crossing_times_paper_regime() {
+        // 3072-GPU system, SGs of 6 (6 DP paths), lambda = 1e-4, c = 1.3,
+        // threshold 0.9: paper quotes ~16.22 days for REFT vs ~0.5 days for
+        // checkpointing. Time unit = days.
+        let c = 1.3;
+        let t_re = crossing_time(0.9, |t| re_survival(3072, 6, LHW, c, t, 1.0));
+        let t_ck = crossing_time(0.9, |t| ck_survival(3072, LHW, LSW, c, t));
+        assert!(
+            (10.0..25.0).contains(&t_re),
+            "REFT crossing {t_re:.2} days (paper: 16.22)"
+        );
+        assert!(
+            (0.1..0.8).contains(&t_ck),
+            "ckpt crossing {t_ck:.2} days (paper: 0.5)"
+        );
+        assert!(t_re / t_ck > 20.0, "ratio {:.1}", t_re / t_ck);
+    }
+
+    #[test]
+    fn group_term_is_probability() {
+        for &t in &[0.0, 1.0, 10.0, 100.0] {
+            let p = re_survival(12, 6, LHW, 1.3, t, 1.0);
+            assert!((0.0..=1.0).contains(&p), "t={t}: {p}");
+        }
+    }
+
+    #[test]
+    fn smp_failure_rate_degrades_gracefully() {
+        let perfect = re_survival(12, 6, LHW, 1.3, 1.0, 1.0);
+        let leaky = re_survival(12, 6, LHW, 1.3, 1.0, 0.999);
+        assert!(leaky < perfect);
+        assert!(leaky > 0.95 * perfect);
+    }
+
+    #[test]
+    fn crossing_time_monotone_in_threshold() {
+        let f = |t: f64| ck_survival(100, LHW, LSW, 1.3, t);
+        assert!(crossing_time(0.99, f) < crossing_time(0.5, f));
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn re_survival_requires_divisible_groups() {
+        re_survival(10, 3, LHW, 1.3, 1.0, 1.0);
+    }
+}

@@ -1,0 +1,301 @@
+//! Artifact manifest: the JSON contract `aot.py` emits describing each
+//! exported model — stage layouts (name/shape/offset/init per tensor),
+//! artifact paths per stage kind, and the model hyper-parameters.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One tensor inside a stage's flat parameter buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    /// "normal:<std>" | "zeros" | "ones"
+    pub init: String,
+}
+
+/// Artifact paths of one stage (relative to the artifacts root).
+#[derive(Debug, Clone, Default)]
+pub struct StageArtifacts {
+    /// kind -> path (kinds: fwd, bwd, fwdbwd, fwd_bwd, adam)
+    pub by_kind: BTreeMap<String, String>,
+}
+
+impl StageArtifacts {
+    pub fn get(&self, kind: &str) -> Result<&str> {
+        self.by_kind
+            .get(kind)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow::anyhow!("no `{kind}` artifact for this stage"))
+    }
+}
+
+/// One pipeline stage's metadata.
+#[derive(Debug, Clone)]
+pub struct StageMeta {
+    pub index: usize,
+    /// "first" | "mid" | "last" | "single"
+    pub kind: String,
+    pub layers: Vec<usize>,
+    pub n_params: usize,
+    pub artifacts: StageArtifacts,
+    pub params: Vec<ParamMeta>,
+}
+
+/// Hyper-parameters of the exported model.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelHyper {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub lr: f64,
+}
+
+/// A parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub hyper: ModelHyper,
+    pub n_stages: usize,
+    pub total_params: usize,
+    pub stages: Vec<StageMeta>,
+    /// whole-model artifacts for pure-DP runs (fwd_bwd + adam), if exported
+    pub full: Option<StageMeta>,
+}
+
+impl Manifest {
+    /// Load `artifacts/<model>/manifest.json`.
+    pub fn load(artifacts_root: impl AsRef<Path>, model: &str) -> Result<Manifest> {
+        let path = artifacts_root.as_ref().join(model).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let cfg = j.get("config").context("manifest missing `config`")?;
+        let hyper = ModelHyper {
+            vocab: cfg.req_usize("vocab")?,
+            d_model: cfg.req_usize("d_model")?,
+            n_layers: cfg.req_usize("n_layers")?,
+            n_heads: cfg.req_usize("n_heads")?,
+            d_ff: cfg.req_usize("d_ff")?,
+            seq: cfg.req_usize("seq")?,
+            batch: cfg.req_usize("batch")?,
+            lr: cfg.req_f64("lr")?,
+        };
+        let stages = j
+            .req_arr("stages")?
+            .iter()
+            .map(parse_stage)
+            .collect::<Result<Vec<_>>>()?;
+        let full = match j.get("full") {
+            Some(f) if f != &Json::Null => Some(parse_full(f)?),
+            _ => None,
+        };
+        let m = Manifest {
+            model: j.req_str("model")?.to_string(),
+            hyper,
+            n_stages: j.req_usize("n_stages")?,
+            total_params: j.req_usize("total_params")?,
+            stages,
+            full,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural invariants the rest of the system relies on.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.stages.len() == self.n_stages, "stage count mismatch");
+        let sum: usize = self.stages.iter().map(|s| s.n_params).sum();
+        anyhow::ensure!(
+            sum == self.total_params,
+            "stage params {} != total {}",
+            sum,
+            self.total_params
+        );
+        for st in &self.stages {
+            let mut off = 0usize;
+            for p in &st.params {
+                anyhow::ensure!(
+                    p.offset == off,
+                    "stage {} param {} offset {} != {}",
+                    st.index,
+                    p.name,
+                    p.offset,
+                    off
+                );
+                let sz: usize = p.shape.iter().product();
+                anyhow::ensure!(sz == p.size, "param {} size mismatch", p.name);
+                off += p.size;
+            }
+            anyhow::ensure!(
+                off == st.n_params,
+                "stage {} layout sums to {} != {}",
+                st.index,
+                off,
+                st.n_params
+            );
+        }
+        if let Some(full) = &self.full {
+            anyhow::ensure!(
+                full.n_params == self.total_params,
+                "full layout {} != total {}",
+                full.n_params,
+                self.total_params
+            );
+        }
+        Ok(())
+    }
+
+    pub fn stage(&self, i: usize) -> &StageMeta {
+        &self.stages[i]
+    }
+
+    /// Stage sizes in parameters (for sharding plans).
+    pub fn stage_sizes(&self) -> Vec<usize> {
+        self.stages.iter().map(|s| s.n_params).collect()
+    }
+}
+
+fn parse_params(arr: &[Json]) -> Result<Vec<ParamMeta>> {
+    arr.iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p.req_str("name")?.to_string(),
+                shape: p
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("bad shape dim"))
+                    .collect::<Result<Vec<_>>>()?,
+                offset: p.req_usize("offset")?,
+                size: p.req_usize("size")?,
+                init: p.req_str("init")?.to_string(),
+            })
+        })
+        .collect()
+}
+
+fn parse_artifacts(j: &Json) -> Result<StageArtifacts> {
+    let mut by_kind = BTreeMap::new();
+    let obj = j.as_obj().context("artifacts not an object")?;
+    for (kind, v) in obj {
+        let path = v.req_str("path")?;
+        // manifest paths may be relative to repo root ("../artifacts/...")
+        // or artifacts-root-relative; normalize to `<model>/<file>`
+        let norm = normalize_artifact_path(path);
+        by_kind.insert(kind.clone(), norm);
+    }
+    Ok(StageArtifacts { by_kind })
+}
+
+/// Keep only the trailing `<model>/<file>` components.
+fn normalize_artifact_path(p: &str) -> String {
+    let parts: Vec<&str> = p.split('/').filter(|s| !s.is_empty() && *s != "." && *s != "..").collect();
+    if parts.len() >= 2 {
+        // drop any leading "artifacts" prefix
+        let tail = &parts[parts.len() - 2..];
+        if parts.len() >= 3 || parts[0] != "artifacts" {
+            return tail.join("/");
+        }
+    }
+    parts.join("/")
+}
+
+fn parse_stage(j: &Json) -> Result<StageMeta> {
+    Ok(StageMeta {
+        index: j.req_usize("index")?,
+        kind: j.req_str("kind")?.to_string(),
+        layers: j
+            .req_arr("layers")?
+            .iter()
+            .map(|l| l.as_usize().context("bad layer"))
+            .collect::<Result<Vec<_>>>()?,
+        n_params: j.req_usize("n_params")?,
+        artifacts: parse_artifacts(j.get("artifacts").context("missing artifacts")?)?,
+        params: parse_params(j.req_arr("params")?)?,
+    })
+}
+
+fn parse_full(j: &Json) -> Result<StageMeta> {
+    Ok(StageMeta {
+        index: 0,
+        kind: "full".into(),
+        layers: Vec::new(),
+        n_params: j.req_usize("n_params")?,
+        artifacts: parse_artifacts(j.get("artifacts").context("missing artifacts")?)?,
+        params: parse_params(j.req_arr("params")?)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "model": "demo",
+      "config": {"vocab": 256, "d_model": 64, "n_layers": 2, "n_heads": 4,
+                 "d_ff": 256, "seq": 32, "batch": 2, "lr": 0.001},
+      "n_stages": 2,
+      "total_params": 30,
+      "stages": [
+        {"index": 0, "kind": "first", "layers": [0], "n_params": 10,
+         "artifacts": {"fwd": {"path": "../artifacts/demo/stage0_fwd.hlo.txt", "bytes": 10}},
+         "params": [{"name": "a", "shape": [2, 5], "offset": 0, "size": 10, "init": "normal:0.02"}]},
+        {"index": 1, "kind": "last", "layers": [1], "n_params": 20,
+         "artifacts": {"fwdbwd": {"path": "demo/stage1_fwdbwd.hlo.txt", "bytes": 10}},
+         "params": [{"name": "b", "shape": [20], "offset": 0, "size": 20, "init": "zeros"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_validates() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "demo");
+        assert_eq!(m.n_stages, 2);
+        assert_eq!(m.hyper.d_model, 64);
+        assert_eq!(m.stage(0).params[0].shape, vec![2, 5]);
+        assert!(m.full.is_none());
+    }
+
+    #[test]
+    fn artifact_paths_normalized() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(
+            m.stage(0).artifacts.get("fwd").unwrap(),
+            "demo/stage0_fwd.hlo.txt"
+        );
+        assert_eq!(
+            m.stage(1).artifacts.get("fwdbwd").unwrap(),
+            "demo/stage1_fwdbwd.hlo.txt"
+        );
+        assert!(m.stage(0).artifacts.get("bwd").is_err());
+    }
+
+    #[test]
+    fn rejects_inconsistent_layout() {
+        let bad = SAMPLE.replace("\"total_params\": 30", "\"total_params\": 31");
+        assert!(Manifest::parse(&bad).is_err());
+        let bad2 = SAMPLE.replace("\"offset\": 0, \"size\": 20", "\"offset\": 1, \"size\": 20");
+        assert!(Manifest::parse(&bad2).is_err());
+    }
+
+    #[test]
+    fn normalize_path_variants() {
+        assert_eq!(normalize_artifact_path("../artifacts/m/f.txt"), "m/f.txt");
+        assert_eq!(normalize_artifact_path("artifacts/m/f.txt"), "m/f.txt");
+        assert_eq!(normalize_artifact_path("m/f.txt"), "m/f.txt");
+    }
+}

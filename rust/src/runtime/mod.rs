@@ -1,0 +1,183 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from rust.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//! * artifacts are HLO **text** (`HloModuleProto::from_text_file` reassigns
+//!   instruction ids, sidestepping the 64-bit-id protos jax >= 0.5 emits that
+//!   xla_extension 0.5.1 rejects);
+//! * every computation was lowered with `return_tuple=True`, so results come
+//!   back as one tuple literal we decompose;
+//! * parameters are passed positionally in the manifest's declared order.
+//!
+//! Python never runs here — this is the request-path side.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ParamMeta, StageArtifacts, StageMeta};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU engine holding compiled executables keyed by artifact path.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    root: PathBuf,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at the artifacts directory.
+    pub fn cpu(artifacts_root: impl Into<PathBuf>) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, cache: HashMap::new(), root: artifacts_root.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, rel_path: impl AsRef<Path>) -> Result<&xla::PjRtLoadedExecutable> {
+        let full = self.root.join(rel_path.as_ref());
+        if !self.cache.contains_key(&full) {
+            let proto = xla::HloModuleProto::from_text_file(&full)
+                .with_context(|| format!("parsing HLO text {}", full.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", full.display()))?;
+            self.cache.insert(full.clone(), exe);
+        }
+        Ok(&self.cache[&full])
+    }
+
+    /// Execute a loaded artifact on literal inputs; returns the decomposed
+    /// output tuple.
+    ///
+    /// NOTE: the vendored `xla` crate's `execute` leaks the *input* device
+    /// buffers (`buffer.release()` in the C shim is never freed), so this
+    /// entry point is fine for tests/one-shots but NOT for training loops —
+    /// use [`Engine::run_inputs`] there, which goes through owned
+    /// `PjRtBuffer`s + `execute_b` and is leak-free (§Perf iteration log).
+    pub fn run(
+        &mut self,
+        rel_path: impl AsRef<Path>,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(rel_path.as_ref())?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", rel_path.as_ref().display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Leak-free execution from host slices: inputs are uploaded as owned
+    /// `PjRtBuffer`s (dropped after the call), outputs come back as literals.
+    pub fn run_inputs(
+        &mut self,
+        rel_path: impl AsRef<Path>,
+        inputs: &[In<'_>],
+    ) -> Result<Vec<xla::Literal>> {
+        // upload inputs first (cache borrow rules: load() borrows &mut self)
+        let mut bufs = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            let buf = match inp {
+                In::F32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(data, dims, None),
+                In::I32(data, dims) => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(data, dims, None),
+            }
+            .context("uploading input buffer")?;
+            bufs.push(buf);
+        }
+        let exe = self.load(rel_path.as_ref())?;
+        let result = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .with_context(|| format!("executing {}", rel_path.as_ref().display()))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+
+    /// Number of artifacts currently compiled.
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// A borrowed host-side input for [`Engine::run_inputs`].
+pub enum In<'a> {
+    F32(&'a [f32], Vec<usize>),
+    I32(&'a [i32], Vec<usize>),
+}
+
+impl<'a> In<'a> {
+    pub fn f32(data: &'a [f32], dims: &[usize]) -> Self {
+        In::F32(data, dims.to_vec())
+    }
+
+    pub fn i32(data: &'a [i32], dims: &[usize]) -> Self {
+        In::I32(data, dims.to_vec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// literal conversion helpers
+// ---------------------------------------------------------------------------
+
+/// Flat f32 slice -> literal of the given shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != len {}", dims, data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// Flat i32 slice -> literal of the given shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {:?} != len {}", dims, data.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims_i64)?)
+}
+
+/// 1-element f32 literal (e.g. the Adam step scalar input `f32[1]`).
+pub fn lit_f32_scalar_vec(v: f32) -> xla::Literal {
+    xla::Literal::vec1(&[v])
+}
+
+/// Literal -> Vec<f32>.
+pub fn vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Scalar f32 out of a literal (loss outputs are rank-0).
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_errors() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1, 2, 3], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,455 @@
+//! Snapshot Management Process (paper §4.2): a per-node process whose
+//! lifetime is decoupled from the training processes, holding the in-memory
+//! snapshots that survive software failures.
+//!
+//! Here each SMP is an OS thread with its own heap buffers and a message
+//! inbox (the stand-in for POSIX shared memory + the multiprocessing channel
+//! of the PyTorch implementation — same survivability semantics: a training
+//! task can die mid-snapshot and the SMP keeps serving its last *clean*
+//! snapshot; only simulated node loss tears the SMP down).
+//!
+//! Consistency protocol (paper Fig. 6 "Multi Snapshots"):
+//! * the **dirty** snapshot absorbs incoming buckets for version `v`;
+//! * on `EndSnapshot(v)` — all tensors flushed — dirty is *promoted* to the
+//!   clean ring (bounded by `clean_copies` to cap CPU memory);
+//! * readers only ever see promoted (CLEAN) versions, so a crash mid-flush
+//!   can never serve a torn snapshot;
+//! * a stale `EndSnapshot` for a superseded version is ignored.
+//!
+//! The SMP also stores the RAIM5 parity blocks it hosts for its SG peers and
+//! answers elastic status queries (HEALTHY / UNHEALTHY / OFFLINE protocol).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+/// Elastic signals (paper §4.2 "Elastic Functionality").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Signal {
+    /// rendezvous complete, buffers may be allocated
+    Healthy,
+    /// begin accepting snapshot buckets
+    Snap,
+    /// training process failed (software); snapshots stay valid
+    Unhealthy,
+    /// node lost (hardware); the SMP itself is going away
+    Offline,
+}
+
+/// Messages into an SMP.
+pub enum SmpMsg {
+    Signal(Signal),
+    /// open the dirty buffer for a new snapshot version of one stage shard
+    BeginSnapshot { version: u64, stage: usize, total_len: usize },
+    /// one tiny bucket of snapshot bytes. `data` is a view into the writer's
+    /// shared-memory segment (`src[range]`): the channel transfers the Arc
+    /// (zero-copy, like mapping the same shm page), the SMP then copies the
+    /// bucket into its own dirty buffer — the Fig. 6 "flush" step.
+    Bucket { version: u64, stage: usize, offset: usize, data: BucketRef },
+    /// all buckets for (version, stage) sent — promote dirty -> clean
+    EndSnapshot { version: u64, stage: usize },
+    /// store a RAIM5 parity block this node hosts
+    StoreParity { version: u64, stage: usize, data: Vec<u8> },
+    /// fetch the latest clean snapshot of a stage shard
+    GetClean { stage: usize, reply: Sender<Option<(u64, Vec<u8>)>> },
+    /// fetch a hosted parity block
+    GetParity { stage: usize, reply: Sender<Option<(u64, Vec<u8>)>> },
+    /// introspection
+    Stats { reply: Sender<SmpStats> },
+    Shutdown,
+}
+
+/// A bucket's bytes: either an owned vector or a range into a shared
+/// segment (the common, allocation-free path).
+pub enum BucketRef {
+    Owned(Vec<u8>),
+    Shared { seg: std::sync::Arc<Vec<u8>>, range: std::ops::Range<usize> },
+}
+
+impl BucketRef {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            BucketRef::Owned(v) => v,
+            BucketRef::Shared { seg, range } => &seg[range.clone()],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl From<Vec<u8>> for BucketRef {
+    fn from(v: Vec<u8>) -> Self {
+        BucketRef::Owned(v)
+    }
+}
+
+/// Observable SMP state.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SmpStats {
+    pub status: Option<&'static str>,
+    pub clean_versions: BTreeMap<usize, u64>,
+    pub dirty_versions: BTreeMap<usize, u64>,
+    pub bytes_resident: usize,
+    pub buckets_received: u64,
+    pub promotions: u64,
+    pub stale_end_snapshots: u64,
+}
+
+struct DirtyBuf {
+    version: u64,
+    data: Vec<u8>,
+    filled: usize,
+}
+
+struct SmpState {
+    status: Signal,
+    /// per stage: in-flight dirty snapshot
+    dirty: BTreeMap<usize, DirtyBuf>,
+    /// per stage: ring of promoted clean snapshots (newest at back)
+    clean: BTreeMap<usize, VecDeque<(u64, Vec<u8>)>>,
+    /// per stage: hosted parity blocks
+    parity: BTreeMap<usize, (u64, Vec<u8>)>,
+    /// recycled buffers (retired clean snapshots) reused as dirty buffers —
+    /// avoids a zero-fill + page-fault storm on every snapshot round
+    free: BTreeMap<usize, Vec<Vec<u8>>>,
+    clean_copies: usize,
+    accepting: bool,
+    buckets_received: u64,
+    promotions: u64,
+    stale_end_snapshots: u64,
+}
+
+impl SmpState {
+    fn bytes_resident(&self) -> usize {
+        let d: usize = self.dirty.values().map(|b| b.data.len()).sum();
+        let c: usize = self
+            .clean
+            .values()
+            .flat_map(|q| q.iter().map(|(_, v)| v.len()))
+            .sum();
+        let p: usize = self.parity.values().map(|(_, v)| v.len()).sum();
+        // the recycle pool is real resident memory (the paper's
+        // "snapshotting buffer" share of the <= 3x budget)
+        let f: usize = self
+            .free
+            .values()
+            .flat_map(|q| q.iter().map(Vec::len))
+            .sum();
+        d + c + p + f
+    }
+
+    fn handle(&mut self, msg: SmpMsg) -> bool {
+        match msg {
+            SmpMsg::Signal(s) => {
+                self.status = s;
+                match s {
+                    Signal::Snap => self.accepting = true,
+                    Signal::Unhealthy => self.accepting = false, // training gone; keep clean
+                    Signal::Offline => return false,             // node loss: die with buffers
+                    Signal::Healthy => {}
+                }
+            }
+            SmpMsg::BeginSnapshot { version, stage, total_len } => {
+                if self.accepting {
+                    // recycle a retired buffer of the right size if we have
+                    // one: buckets are disjoint and promotion requires full
+                    // coverage, so stale content can never leak out
+                    let data = match self.free.get_mut(&stage).and_then(Vec::pop) {
+                        Some(buf) if buf.len() == total_len => buf,
+                        _ => vec![0; total_len],
+                    };
+                    self.dirty.insert(stage, DirtyBuf { version, data, filled: 0 });
+                }
+            }
+            SmpMsg::Bucket { version, stage, offset, data } => {
+                self.buckets_received += 1;
+                if let Some(buf) = self.dirty.get_mut(&stage) {
+                    let bytes = data.as_slice();
+                    if buf.version == version && offset + bytes.len() <= buf.data.len() {
+                        buf.data[offset..offset + bytes.len()].copy_from_slice(bytes);
+                        buf.filled += bytes.len();
+                    }
+                }
+            }
+            SmpMsg::EndSnapshot { version, stage } => {
+                let complete = matches!(
+                    self.dirty.get(&stage),
+                    Some(b) if b.version == version && b.filled >= b.data.len()
+                );
+                if complete {
+                    let buf = self.dirty.remove(&stage).unwrap();
+                    let ring = self.clean.entry(stage).or_default();
+                    ring.push_back((buf.version, buf.data));
+                    while ring.len() > self.clean_copies {
+                        if let Some((_, retired)) = ring.pop_front() {
+                            let pool = self.free.entry(stage).or_default();
+                            if pool.is_empty() {
+                                pool.push(retired);
+                            }
+                        }
+                    }
+                    self.promotions += 1;
+                } else {
+                    self.stale_end_snapshots += 1;
+                }
+            }
+            SmpMsg::StoreParity { version, stage, data } => {
+                self.parity.insert(stage, (version, data));
+            }
+            SmpMsg::GetClean { stage, reply } => {
+                let out = self
+                    .clean
+                    .get(&stage)
+                    .and_then(|q| q.back())
+                    .map(|(v, d)| (*v, d.clone()));
+                let _ = reply.send(out);
+            }
+            SmpMsg::GetParity { stage, reply } => {
+                let out = self.parity.get(&stage).map(|(v, d)| (*v, d.clone()));
+                let _ = reply.send(out);
+            }
+            SmpMsg::Stats { reply } => {
+                let _ = reply.send(SmpStats {
+                    status: Some(match self.status {
+                        Signal::Healthy => "healthy",
+                        Signal::Snap => "snap",
+                        Signal::Unhealthy => "unhealthy",
+                        Signal::Offline => "offline",
+                    }),
+                    clean_versions: self
+                        .clean
+                        .iter()
+                        .filter_map(|(s, q)| q.back().map(|(v, _)| (*s, *v)))
+                        .collect(),
+                    dirty_versions: self.dirty.iter().map(|(s, b)| (*s, b.version)).collect(),
+                    bytes_resident: self.bytes_resident(),
+                    buckets_received: self.buckets_received,
+                    promotions: self.promotions,
+                    stale_end_snapshots: self.stale_end_snapshots,
+                });
+            }
+            SmpMsg::Shutdown => return false,
+        }
+        true
+    }
+}
+
+/// Handle to a running SMP thread.
+pub struct Smp {
+    pub node: usize,
+    tx: Sender<SmpMsg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Smp {
+    /// Spawn the SMP for `node` with the given clean-ring depth.
+    pub fn spawn(node: usize, clean_copies: usize) -> Smp {
+        let (tx, rx): (Sender<SmpMsg>, Receiver<SmpMsg>) = channel();
+        let handle = std::thread::Builder::new()
+            .name(format!("smp-{node}"))
+            .spawn(move || {
+                let mut st = SmpState {
+                    status: Signal::Healthy,
+                    dirty: BTreeMap::new(),
+                    clean: BTreeMap::new(),
+                    parity: BTreeMap::new(),
+                    free: BTreeMap::new(),
+                    clean_copies: clean_copies.max(1),
+                    accepting: false,
+                    buckets_received: 0,
+                    promotions: 0,
+                    stale_end_snapshots: 0,
+                };
+                while let Ok(msg) = rx.recv() {
+                    if !st.handle(msg) {
+                        break;
+                    }
+                }
+            })
+            .expect("spawning SMP thread");
+        Smp { node, tx, handle: Some(handle) }
+    }
+
+    pub fn send(&self, msg: SmpMsg) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow::anyhow!("SMP {} is gone", self.node))
+    }
+
+    /// Synchronous clean-snapshot fetch.
+    pub fn get_clean(&self, stage: usize) -> Result<Option<(u64, Vec<u8>)>> {
+        let (tx, rx) = channel();
+        self.send(SmpMsg::GetClean { stage, reply: tx })?;
+        Ok(rx.recv()?)
+    }
+
+    /// Synchronous parity fetch.
+    pub fn get_parity(&self, stage: usize) -> Result<Option<(u64, Vec<u8>)>> {
+        let (tx, rx) = channel();
+        self.send(SmpMsg::GetParity { stage, reply: tx })?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn stats(&self) -> Result<SmpStats> {
+        let (tx, rx) = channel();
+        self.send(SmpMsg::Stats { reply: tx })?;
+        Ok(rx.recv()?)
+    }
+
+    /// Simulate node loss: the SMP dies and its buffers are freed. Any
+    /// subsequent `send` fails — exactly what peers observe on a real
+    /// hardware failure.
+    pub fn kill(&mut self) {
+        let _ = self.tx.send(SmpMsg::Signal(Signal::Offline));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.handle.is_some() && self.stats().is_ok()
+    }
+}
+
+impl Drop for Smp {
+    fn drop(&mut self) {
+        let _ = self.tx.send(SmpMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot_roundtrip(smp: &Smp, stage: usize, version: u64, data: &[u8], bucket: usize) {
+        smp.send(SmpMsg::BeginSnapshot { version, stage, total_len: data.len() })
+            .unwrap();
+        let mut off = 0;
+        while off < data.len() {
+            let end = (off + bucket).min(data.len());
+            smp.send(SmpMsg::Bucket {
+                version,
+                stage,
+                offset: off,
+                data: data[off..end].to_vec().into(),
+            })
+            .unwrap();
+            off = end;
+        }
+        smp.send(SmpMsg::EndSnapshot { version, stage }).unwrap();
+    }
+
+    #[test]
+    fn clean_promote_and_fetch() {
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        let payload: Vec<u8> = (0..1000u32).map(|i| i as u8).collect();
+        snapshot_roundtrip(&smp, 0, 1, &payload, 128);
+        let (v, data) = smp.get_clean(0).unwrap().expect("clean exists");
+        assert_eq!(v, 1);
+        assert_eq!(data, payload);
+    }
+
+    #[test]
+    fn incomplete_snapshot_never_served() {
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        smp.send(SmpMsg::BeginSnapshot { version: 1, stage: 0, total_len: 100 })
+            .unwrap();
+        smp.send(SmpMsg::Bucket { version: 1, stage: 0, offset: 0, data: vec![1; 50].into() })
+            .unwrap();
+        // training "crashes" here — EndSnapshot never arrives
+        assert!(smp.get_clean(0).unwrap().is_none());
+        // a premature EndSnapshot is also rejected (filled < total)
+        smp.send(SmpMsg::EndSnapshot { version: 1, stage: 0 }).unwrap();
+        assert!(smp.get_clean(0).unwrap().is_none());
+        assert_eq!(smp.stats().unwrap().stale_end_snapshots, 1);
+    }
+
+    #[test]
+    fn clean_survives_training_failure_and_new_dirty() {
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        snapshot_roundtrip(&smp, 0, 1, &[7u8; 64], 16);
+        // next snapshot starts, then the training process dies mid-flight
+        smp.send(SmpMsg::BeginSnapshot { version: 2, stage: 0, total_len: 64 })
+            .unwrap();
+        smp.send(SmpMsg::Bucket { version: 2, stage: 0, offset: 0, data: vec![9; 16].into() })
+            .unwrap();
+        smp.send(SmpMsg::Signal(Signal::Unhealthy)).unwrap();
+        // version 1 still served, untouched
+        let (v, data) = smp.get_clean(0).unwrap().unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(data, vec![7u8; 64]);
+    }
+
+    #[test]
+    fn clean_ring_bounded() {
+        let smp = Smp::spawn(0, 2);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        for v in 1..=5u64 {
+            snapshot_roundtrip(&smp, 0, v, &[v as u8; 32], 32);
+        }
+        let stats = smp.stats().unwrap();
+        assert_eq!(stats.clean_versions[&0], 5);
+        assert_eq!(stats.promotions, 5);
+        // 2 clean copies + 1 recycled buffer (the snapshotting-buffer share
+        // of the paper's memory budget): 96 bytes, bounded regardless of
+        // how many rounds ran
+        assert_eq!(stats.bytes_resident, 96);
+    }
+
+    #[test]
+    fn multi_stage_independent() {
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        snapshot_roundtrip(&smp, 0, 1, &[1u8; 10], 4);
+        snapshot_roundtrip(&smp, 2, 1, &[2u8; 20], 4);
+        assert_eq!(smp.get_clean(0).unwrap().unwrap().1, vec![1u8; 10]);
+        assert_eq!(smp.get_clean(2).unwrap().unwrap().1, vec![2u8; 20]);
+        assert!(smp.get_clean(1).unwrap().is_none());
+    }
+
+    #[test]
+    fn parity_store_fetch() {
+        let smp = Smp::spawn(3, 1);
+        smp.send(SmpMsg::StoreParity { version: 4, stage: 1, data: vec![0xAB; 16].into() })
+            .unwrap();
+        let (v, p) = smp.get_parity(1).unwrap().unwrap();
+        assert_eq!((v, p), (4, vec![0xAB; 16]));
+        assert!(smp.get_parity(0).unwrap().is_none());
+    }
+
+    #[test]
+    fn kill_simulates_node_loss() {
+        let mut smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        snapshot_roundtrip(&smp, 0, 1, &[1u8; 8], 8);
+        smp.kill();
+        assert!(!smp.is_alive());
+        assert!(smp.get_clean(0).is_err(), "buffers gone with the node");
+    }
+
+    #[test]
+    fn buckets_before_snap_signal_dropped() {
+        let smp = Smp::spawn(0, 1);
+        // no Snap signal yet: BeginSnapshot ignored
+        smp.send(SmpMsg::BeginSnapshot { version: 1, stage: 0, total_len: 8 })
+            .unwrap();
+        smp.send(SmpMsg::Bucket { version: 1, stage: 0, offset: 0, data: vec![1; 8].into() })
+            .unwrap();
+        smp.send(SmpMsg::EndSnapshot { version: 1, stage: 0 }).unwrap();
+        assert!(smp.get_clean(0).unwrap().is_none());
+    }
+}

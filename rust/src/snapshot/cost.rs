@@ -1,0 +1,372 @@
+//! Save-path cost model: how long one parameter save takes — and how much of
+//! it stalls training — under each fault-tolerance method, on the simulated
+//! hardware. This is the engine behind the Fig. 9 micro-benchmark, the
+//! weak-scaling table and Fig. 10/11 strong scaling.
+//!
+//! Pipelines (per save):
+//! * **CheckFreq** (fully async, *unsharded*): one rank per DP replica copies
+//!   the full payload d2h over a single PCIe link, serializes it, streams it
+//!   to cloud storage. Internally chunk-pipelined, so total ≈ max(stage
+//!   bottleneck) + ramp, not the plain sum.
+//! * **TorchSnapshot** (sharded async): the payload is sharded across all DP
+//!   ranks; every GPU copies its 1/m slice in parallel, every node
+//!   serializes and persists its share with parallel I/O.
+//! * **REFT-Sn** (this paper): sharded tiny-bucket d2h (plus the RAIM5
+//!   *redundant* copy when EC is on — doubling d2h volume, §4.3), flush into
+//!   SMP shared memory, XOR parity encode on-node. **No storage I/O at all.**
+//! * **REFT-Ckpt**: REFT-Sn followed by an SMP-driven persist to cloud that
+//!   never blocks training (it bounds persist *frequency*, not step time).
+//!
+//! Stall model (what Fig. 11 plots): snapshot d2h traffic interferes with
+//! training's own PCIe use (data loading, TP/PP traffic). Tiny buckets keep
+//! the interference coefficient low (§4.1 "Minimal Interference"); unsharded
+//! bulk copies steal the link for whole milliseconds at a time.
+
+use crate::config::{FtConfig, FtMethod};
+use crate::hwsim::{ClusterHw, HwSpec};
+use crate::snapshot::SnapshotPlan;
+use crate::topology::Topology;
+
+/// Inputs for one save costing.
+#[derive(Debug, Clone)]
+pub struct SaveCtx<'a> {
+    pub topo: &'a Topology,
+    pub plan: &'a SnapshotPlan,
+    pub ft: &'a FtConfig,
+    /// per-iteration compute time (fwd+bwd), for the overlap/stall model
+    pub iter_compute_secs: f64,
+}
+
+/// Cost breakdown of one save. All times are seconds on the sim timeline;
+/// `total` is the end-to-end makespan of the save pipeline, `stall` the part
+/// that blocks/slows training (the paper's "saving overhead").
+#[derive(Debug, Clone, Default)]
+pub struct SaveCost {
+    pub method: &'static str,
+    pub payload_bytes: u64,
+    pub d2h: f64,
+    pub serialize: f64,
+    pub shamem: f64,
+    pub ec_encode: f64,
+    pub persist: f64,
+    pub total: f64,
+    pub stall: f64,
+}
+
+impl SaveCost {
+    /// Saving speed in bytes/second (the paper's GB/s metric).
+    pub fn speed(&self) -> f64 {
+        if self.total <= 0.0 {
+            0.0
+        } else {
+            self.payload_bytes as f64 / self.total
+        }
+    }
+}
+
+/// Interference coefficients: fraction of snapshot d2h time that surfaces as
+/// training stall. Tiny buckets yield ~5% (copies slot into PCIe idle gaps);
+/// bulk unsharded copies contend hard (~30%). Calibration knobs, documented
+/// in DESIGN.md §Calibration.
+const INTERFERENCE_BUCKETED: f64 = 0.05;
+const INTERFERENCE_BULK: f64 = 0.30;
+
+/// Cost one save under `ft.method`. `hw` carries the timeline state (so
+/// repeated saves on the same `ClusterHw` queue up realistically); pass a
+/// fresh cluster for isolated measurements.
+pub fn method_save_cost(hw: &mut ClusterHw, ctx: &SaveCtx) -> SaveCost {
+    match ctx.ft.method {
+        FtMethod::None => SaveCost { method: "none", ..Default::default() },
+        FtMethod::CheckFreq => checkfreq_cost(hw, ctx),
+        FtMethod::TorchSnapshot => torchsnapshot_cost(hw, ctx),
+        FtMethod::ReftSn => reft_cost(hw, ctx, false),
+        FtMethod::ReftCkpt => reft_cost(hw, ctx, true),
+    }
+}
+
+/// Total FT payload bytes (sum over stages).
+fn total_payload(plan: &SnapshotPlan) -> u64 {
+    plan.stage_bytes.iter().sum()
+}
+
+fn checkfreq_cost(hw: &mut ClusterHw, ctx: &SaveCtx) -> SaveCost {
+    let spec = hw.spec.clone();
+    let payload = total_payload(ctx.plan);
+    // Unsharded: for each PP stage, ONE node of its SG (the first) copies the
+    // whole stage payload over one PCIe link. Stages proceed in parallel on
+    // their own nodes.
+    let mut d2h_max = 0.0f64;
+    let mut ser_max = 0.0f64;
+    let mut per_node_persist = vec![0u64; spec.nodes];
+    for (stage, &bytes) in ctx.plan.stage_bytes.iter().enumerate() {
+        let sg = ctx.topo.sharding_group(stage);
+        let node = sg.nodes[0];
+        let (_, e) = hw.nodes[node].pcie[0].transfer(0.0, bytes);
+        d2h_max = d2h_max.max(e);
+        let (_, se) = hw.nodes[node].serialize.transfer(0.0, bytes);
+        ser_max = ser_max.max(se - 0.0);
+        per_node_persist[node] += bytes;
+    }
+    let persist_end = hw
+        .persist_to_cloud(0.0, &per_node_persist)
+        .into_iter()
+        .fold(0.0, f64::max);
+    // CheckFreq's asynchrony is w.r.t. *training*; within one checkpoint the
+    // snapshot -> serialize -> persist phases run sequentially (its pipeline
+    // overlaps phase k of checkpoint i with training, not with phase k+1)
+    let total = d2h_max + ser_max + persist_end;
+    let stall = d2h_max * INTERFERENCE_BULK
+        + (d2h_max - ctx.iter_compute_secs).max(0.0);
+    SaveCost {
+        method: "checkfreq",
+        payload_bytes: payload,
+        d2h: d2h_max,
+        serialize: ser_max,
+        persist: persist_end,
+        total,
+        stall,
+        ..Default::default()
+    }
+}
+
+fn torchsnapshot_cost(hw: &mut ClusterHw, ctx: &SaveCtx) -> SaveCost {
+    let spec = hw.spec.clone();
+    let payload = total_payload(ctx.plan);
+    // Sharded: every node copies its plan shard via its GPUs' links in
+    // parallel, serializes locally, persists with parallel I/O.
+    let mut d2h_max = 0.0f64;
+    let mut ser_max = 0.0f64;
+    let mut per_node_persist = vec![0u64; spec.nodes];
+    for node in 0..spec.nodes {
+        let bytes = ctx.plan.node_bytes(node);
+        if bytes == 0 {
+            continue;
+        }
+        let per_gpu = per_gpu_bytes(ctx, node);
+        let e = hw.nodes[node]
+            .d2h_parallel(0.0, &per_gpu)
+            .into_iter()
+            .fold(0.0, f64::max);
+        d2h_max = d2h_max.max(e);
+        let (_, se) = hw.nodes[node].serialize.transfer(0.0, bytes);
+        ser_max = ser_max.max(se);
+        per_node_persist[node] = bytes;
+    }
+    let persist_end = hw
+        .persist_to_cloud(0.0, &per_node_persist)
+        .into_iter()
+        .fold(0.0, f64::max);
+    let stages = [d2h_max, ser_max, persist_end];
+    let bottleneck = stages.iter().cloned().fold(0.0, f64::max);
+    let others: f64 = stages.iter().sum::<f64>() - bottleneck;
+    let total = bottleneck + 0.10 * others;
+    // sharded but not bucketed: moderate interference
+    let stall = d2h_max * INTERFERENCE_BULK * 0.5;
+    SaveCost {
+        method: "torchsnapshot",
+        payload_bytes: payload,
+        d2h: d2h_max,
+        serialize: ser_max,
+        persist: persist_end,
+        total,
+        stall,
+        ..Default::default()
+    }
+}
+
+fn reft_cost(hw: &mut ClusterHw, ctx: &SaveCtx, with_persist: bool) -> SaveCost {
+    let spec = hw.spec.clone();
+    let payload = total_payload(ctx.plan);
+    // RAIM5 doubles the snapshotted volume (own shard + redundant peer copy
+    // for parity computation, §4.3 "doubles the snapshotting parameter size")
+    let ec_factor = if ctx.ft.raim5 { 2u64 } else { 1 };
+    let mut d2h_max = 0.0f64;
+    let mut shamem_max = 0.0f64;
+    let mut ec_max = 0.0f64;
+    let mut per_node_persist = vec![0u64; spec.nodes];
+    for node in 0..spec.nodes {
+        let bytes = ctx.plan.node_bytes(node);
+        if bytes == 0 {
+            continue;
+        }
+        let per_gpu: Vec<u64> = per_gpu_bytes(ctx, node).iter().map(|b| b * ec_factor).collect();
+        let e = hw.nodes[node]
+            .d2h_parallel(0.0, &per_gpu)
+            .into_iter()
+            .fold(0.0, f64::max);
+        d2h_max = d2h_max.max(e);
+        // flush into SMP shared memory (no serialization — raw tensors)
+        let (_, fe) = hw.nodes[node].shamem.transfer(0.0, bytes * ec_factor);
+        shamem_max = shamem_max.max(fe);
+        if ctx.ft.raim5 {
+            // XOR encode the redundant copies into the parity block
+            let (_, xe) = hw.nodes[node].xor.transfer(0.0, bytes);
+            ec_max = ec_max.max(xe);
+        }
+        per_node_persist[node] = bytes;
+    }
+    // d2h -> shamem flush -> xor are bucket-pipelined: makespan is the
+    // bottleneck stage plus a one-bucket ramp per extra stage
+    let bucket_ramp = 2.0 * ctx.ft.bucket_bytes as f64 / spec.shamem_bw;
+    let stages = [d2h_max, shamem_max, ec_max];
+    let bottleneck = stages.iter().cloned().fold(0.0, f64::max);
+    let total_sn = bottleneck + bucket_ramp;
+    let mut persist_end = 0.0;
+    if with_persist {
+        persist_end = hw
+            .persist_to_cloud(0.0, &per_node_persist)
+            .into_iter()
+            .fold(0.0, f64::max);
+    }
+    // REFT-Ckpt persists FROM THE SMP, off the training path: it extends the
+    // pipeline makespan but contributes nothing to stall.
+    let total = if with_persist {
+        total_sn.max(persist_end) + 0.10 * total_sn.min(persist_end)
+    } else {
+        total_sn
+    };
+    let stall = d2h_max * INTERFERENCE_BUCKETED;
+    SaveCost {
+        method: if with_persist { "reft-ckpt" } else { "reft-sn" },
+        payload_bytes: payload,
+        d2h: d2h_max,
+        shamem: shamem_max,
+        ec_encode: ec_max,
+        persist: persist_end,
+        total,
+        stall,
+        ..Default::default()
+    }
+}
+
+/// Bytes each GPU of `node` copies under the sharded plan.
+fn per_gpu_bytes(ctx: &SaveCtx, node: usize) -> Vec<u64> {
+    let gpn = ctx.topo.gpus_per_node;
+    let mut per = vec![0u64; gpn];
+    for shard in ctx.plan.shards_for_node(node) {
+        for (gpu, r) in &shard.per_gpu {
+            per[*gpu] += r.end - r.start;
+        }
+    }
+    // drop trailing zero slots so d2h_parallel sees only active links
+    while per.last() == Some(&0) && per.len() > 1 {
+        per.pop();
+    }
+    per
+}
+
+/// Convenience: build everything for a DP-only config on the paper testbed
+/// shape and cost one save per method (used by benches and tests).
+pub fn compare_methods(
+    topo: &Topology,
+    plan: &SnapshotPlan,
+    iter_compute_secs: f64,
+    raim5: bool,
+) -> Vec<SaveCost> {
+    let mut out = Vec::new();
+    for method in [
+        FtMethod::CheckFreq,
+        FtMethod::TorchSnapshot,
+        FtMethod::ReftSn,
+        FtMethod::ReftCkpt,
+    ] {
+        let ft = FtConfig { method, raim5, ..FtConfig::default() };
+        let mut hw = ClusterHw::new(HwSpec::scaled(topo.nodes, topo.gpus_per_node));
+        let ctx = SaveCtx { topo, plan, ft: &ft, iter_compute_secs };
+        out.push(method_save_cost(&mut hw, &ctx));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::ParallelPlan;
+
+    fn setup(dp: usize, nodes: usize, payload: u64) -> (Topology, SnapshotPlan) {
+        let topo = Topology::build(ParallelPlan::dp_only(dp), nodes, 4).unwrap();
+        let plan = SnapshotPlan::build(&topo, &[payload]);
+        (topo, plan)
+    }
+
+    #[test]
+    fn reft_sn_fastest_checkfreq_slowest() {
+        // 20 GB payload on the full testbed (Fig. 9 setting, scaled out)
+        let (topo, plan) = setup(24, 6, 20_000_000_000);
+        let costs = compare_methods(&topo, &plan, 1.0, true);
+        let speed: std::collections::HashMap<_, _> =
+            costs.iter().map(|c| (c.method, c.speed())).collect();
+        assert!(speed["reft-sn"] > speed["torchsnapshot"]);
+        assert!(speed["torchsnapshot"] > speed["checkfreq"]);
+        assert!(speed["reft-sn"] > speed["reft-ckpt"]);
+    }
+
+    #[test]
+    fn reft_vs_torchsnapshot_ratio_in_paper_regime() {
+        // weak scaling DP-24: the paper reports 14.11x; our substrate should
+        // land in the same decade (5x..40x)
+        let (topo, plan) = setup(24, 6, 6_000_000_000);
+        let costs = compare_methods(&topo, &plan, 1.0, true);
+        let speed: std::collections::HashMap<_, _> =
+            costs.iter().map(|c| (c.method, c.speed())).collect();
+        let ratio = speed["reft-sn"] / speed["torchsnapshot"];
+        assert!((5.0..40.0).contains(&ratio), "ratio {ratio}");
+        let ratio_cf = speed["reft-sn"] / speed["checkfreq"];
+        assert!(ratio_cf > 30.0, "vs checkfreq {ratio_cf}");
+    }
+
+    #[test]
+    fn reft_has_no_persist_time() {
+        let (topo, plan) = setup(6, 6, 1_000_000_000);
+        let costs = compare_methods(&topo, &plan, 1.0, false);
+        let sn = costs.iter().find(|c| c.method == "reft-sn").unwrap();
+        assert_eq!(sn.persist, 0.0);
+        assert_eq!(sn.serialize, 0.0);
+        let ck = costs.iter().find(|c| c.method == "checkfreq").unwrap();
+        assert!(ck.persist > 0.0);
+    }
+
+    #[test]
+    fn raim5_doubles_d2h_volume() {
+        let (topo, plan) = setup(6, 6, 2_000_000_000);
+        let with = compare_methods(&topo, &plan, 1.0, true);
+        let without = compare_methods(&topo, &plan, 1.0, false);
+        let d_with = with.iter().find(|c| c.method == "reft-sn").unwrap().d2h;
+        let d_without = without.iter().find(|c| c.method == "reft-sn").unwrap().d2h;
+        assert!(
+            (d_with / d_without - 2.0).abs() < 0.2,
+            "{d_with} vs {d_without}"
+        );
+    }
+
+    #[test]
+    fn stall_ordering_matches_fig11() {
+        let (topo, plan) = setup(12, 6, 5_000_000_000);
+        let costs = compare_methods(&topo, &plan, 0.5, true);
+        let stall: std::collections::HashMap<_, _> =
+            costs.iter().map(|c| (c.method, c.stall)).collect();
+        assert!(stall["reft-sn"] < stall["torchsnapshot"]);
+        assert!(stall["torchsnapshot"] < stall["checkfreq"]);
+    }
+
+    #[test]
+    fn weak_scaling_speed_grows_with_dp() {
+        let speeds: Vec<f64> = [1usize, 4, 12, 24]
+            .iter()
+            .map(|&dp| {
+                let nodes = dp.div_ceil(4);
+                let (topo, plan) = setup(dp, nodes, 6_000_000_000);
+                compare_methods(&topo, &plan, 1.0, true)
+                    .into_iter()
+                    .find(|c| c.method == "reft-sn")
+                    .unwrap()
+                    .speed()
+            })
+            .collect();
+        // within one node (DP-1 vs DP-4) the shamem flush bottleneck caps
+        // speed; once DP spans nodes, scaling is (super)linear in nodes
+        assert!(speeds.windows(2).all(|w| w[1] >= w[0] * 0.999), "{speeds:?}");
+        assert!(speeds[3] > speeds[1] * 2.0, "{speeds:?}");
+        assert!(speeds[3] / speeds[0] > 4.0, "scaling {:.2}x", speeds[3] / speeds[0]);
+    }
+}

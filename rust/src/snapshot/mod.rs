@@ -1,0 +1,20 @@
+//! The REFT snapshot engine (paper §4.1): sharded, parallel, tiny-bucket
+//! asynchronous snapshotting of parameters to CPU memory.
+//!
+//! Three layers:
+//! * [`plan`] — who snapshots which bytes: the intra-pipeline-stage sharding
+//!   across DP paths (one shard per SG member, orthogonal and equal-sized up
+//!   to a remainder), plus the per-GPU split inside a node.
+//! * [`cost`] — the timeline cost model for a *save* under every method
+//!   (CheckFreq, TorchSnapshot, REFT-Sn, REFT-Ckpt): what the saving-speed /
+//!   overhead benches (Fig. 9/10/11, weak scaling) evaluate.
+//! * [`bucket`] — the live tiny-bucket copy pipeline: real bytes moved
+//!   bucket-by-bucket into SMP-owned buffers (what the e2e trainer runs).
+
+pub mod bucket;
+pub mod cost;
+pub mod plan;
+
+pub use bucket::BucketPipe;
+pub use cost::{method_save_cost, SaveCost, SaveCtx};
+pub use plan::{NodeShard, SnapshotPlan};

@@ -1,0 +1,183 @@
+//! Sharding plans: which node snapshots which byte range of which stage.
+//!
+//! Paper §4.1: within sharding group SG_s (the nodes holding PP stage s
+//! across all DP paths), the stage's FT payload `W_s` is partitioned into
+//! `|SG_s|` orthogonal, (near-)equal shards — each node moves only
+//! `|W_s| / m` bytes, which is where the m-fold d2h reduction comes from.
+//! Inside a node the shard is further split across the TP ranks' GPUs so all
+//! PCIe links pull in parallel.
+
+use std::ops::Range;
+
+use crate::topology::Topology;
+
+/// One node's snapshot responsibility for one stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NodeShard {
+    pub node: usize,
+    pub stage: usize,
+    /// byte range into the stage's FT payload
+    pub range: Range<u64>,
+    /// per-GPU sub-ranges (indices are node-local GPU slots)
+    pub per_gpu: Vec<(usize, Range<u64>)>,
+}
+
+impl NodeShard {
+    pub fn len(&self) -> u64 {
+        self.range.end - self.range.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+}
+
+/// The complete sharding plan of a cluster configuration.
+#[derive(Debug, Clone)]
+pub struct SnapshotPlan {
+    pub shards: Vec<NodeShard>,
+    /// per-stage payload sizes the plan was built for
+    pub stage_bytes: Vec<u64>,
+}
+
+impl SnapshotPlan {
+    /// Build the plan: for each PP stage, split its payload across the SG
+    /// members (remainder bytes go to the first members), then split each
+    /// node's shard across the GPUs hosting that stage on that node.
+    pub fn build(topo: &Topology, stage_bytes: &[u64]) -> SnapshotPlan {
+        assert_eq!(stage_bytes.len(), topo.plan.pp, "one payload per PP stage");
+        let mut shards = Vec::new();
+        for (stage, &bytes) in stage_bytes.iter().enumerate() {
+            let sg = topo.sharding_group(stage);
+            let m = sg.len() as u64;
+            let base = bytes / m;
+            let rem = bytes % m;
+            let mut off = 0u64;
+            for (i, &node) in sg.nodes.iter().enumerate() {
+                let len = base + if (i as u64) < rem { 1 } else { 0 };
+                let range = off..off + len;
+                off += len;
+                // GPUs on `node` that host this stage (any DP path)
+                let mut gpus: Vec<usize> = topo
+                    .ranks_on_node(node)
+                    .into_iter()
+                    .filter(|&r| topo.coord_of(r).pp == stage)
+                    .map(|r| topo.placement[r].local_gpu)
+                    .collect();
+                gpus.sort_unstable();
+                gpus.dedup();
+                let per_gpu = split_across_gpus(&range, &gpus);
+                shards.push(NodeShard { node, stage, range, per_gpu });
+            }
+            debug_assert_eq!(off, bytes);
+        }
+        SnapshotPlan { shards, stage_bytes: stage_bytes.to_vec() }
+    }
+
+    pub fn shards_for_node(&self, node: usize) -> impl Iterator<Item = &NodeShard> {
+        self.shards.iter().filter(move |s| s.node == node)
+    }
+
+    pub fn shards_for_stage(&self, stage: usize) -> impl Iterator<Item = &NodeShard> {
+        self.shards.iter().filter(move |s| s.stage == stage)
+    }
+
+    /// Total bytes node `node` is responsible for.
+    pub fn node_bytes(&self, node: usize) -> u64 {
+        self.shards_for_node(node).map(NodeShard::len).sum()
+    }
+
+    /// Per-node shard lengths within one stage's SG (RAIM5 planning input).
+    pub fn sg_shard_lens(&self, stage: usize) -> Vec<usize> {
+        self.shards_for_stage(stage)
+            .map(|s| s.len() as usize)
+            .collect()
+    }
+}
+
+fn split_across_gpus(range: &Range<u64>, gpus: &[usize]) -> Vec<(usize, Range<u64>)> {
+    if gpus.is_empty() {
+        return Vec::new();
+    }
+    let total = range.end - range.start;
+    let g = gpus.len() as u64;
+    let base = total / g;
+    let rem = total % g;
+    let mut off = range.start;
+    gpus.iter()
+        .enumerate()
+        .map(|(i, &gpu)| {
+            let len = base + if (i as u64) < rem { 1 } else { 0 };
+            let r = off..off + len;
+            off += len;
+            (gpu, r)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ParallelPlan, Topology};
+
+    fn plan_for(dp: usize, tp: usize, pp: usize, nodes: usize, gpn: usize, bytes: u64) -> (Topology, SnapshotPlan) {
+        let topo = Topology::build(ParallelPlan::new(dp, tp, pp), nodes, gpn).unwrap();
+        let stage_bytes = vec![bytes; pp];
+        let plan = SnapshotPlan::build(&topo, &stage_bytes);
+        (topo, plan)
+    }
+
+    #[test]
+    fn shards_partition_each_stage() {
+        let (_t, plan) = plan_for(2, 4, 3, 6, 4, 1_000_003);
+        for stage in 0..3 {
+            let mut ranges: Vec<_> = plan
+                .shards_for_stage(stage)
+                .map(|s| s.range.clone())
+                .collect();
+            ranges.sort_by_key(|r| r.start);
+            assert_eq!(ranges.first().unwrap().start, 0);
+            assert_eq!(ranges.last().unwrap().end, 1_000_003);
+            for w in ranges.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "orthogonal + contiguous");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_sizes_near_equal() {
+        let (_t, plan) = plan_for(6, 4, 1, 6, 4, 999_999);
+        let lens: Vec<u64> = plan.shards_for_stage(0).map(NodeShard::len).collect();
+        assert_eq!(lens.len(), 6);
+        let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn per_gpu_split_covers_shard() {
+        let (_t, plan) = plan_for(2, 4, 3, 6, 4, 4096);
+        for s in &plan.shards {
+            let sum: u64 = s.per_gpu.iter().map(|(_, r)| r.end - r.start).sum();
+            assert_eq!(sum, s.len());
+            assert_eq!(s.per_gpu.len(), 4, "all 4 TP GPUs pull in parallel");
+        }
+    }
+
+    #[test]
+    fn dp_only_single_sg() {
+        let (_t, plan) = plan_for(24, 1, 1, 6, 4, 24_000);
+        // 6 nodes in the single SG, 4 GPUs each
+        let shards: Vec<_> = plan.shards_for_stage(0).collect();
+        assert_eq!(shards.len(), 6);
+        assert_eq!(plan.node_bytes(0), 4_000);
+    }
+
+    #[test]
+    fn node_bytes_reduced_by_sharding_factor() {
+        // the paper's m-fold reduction claim
+        let (_t, full) = plan_for(1, 4, 1, 6, 4, 1 << 30);
+        let (_t2, sharded) = plan_for(6, 4, 1, 6, 4, 1 << 30);
+        assert_eq!(full.node_bytes(0), 1 << 30);
+        assert_eq!(sharded.node_bytes(0), (1u64 << 30) / 6 + 1);
+    }
+}

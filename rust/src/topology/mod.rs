@@ -1,0 +1,256 @@
+//! Cluster topology: the DP × TP × PP rank grid and REFT's sharding groups.
+//!
+//! Placement follows the paper (§2.1 Communication Types and Fig. 5): **TP is
+//! intra-node** (it needs the fastest interconnect), **PP stages span nodes**,
+//! and DP paths replicate that arrangement. A *sharding group* (SG) is the set
+//! of nodes holding the same PP stage across all DP paths (§4.1
+//! "Intra-Pipeline-Stage Sharding"): SG_s = { node(d, s) | d in 0..DP }.
+//! The SG is both the unit of snapshot sharding (each member snapshots 1/|SG|
+//! of the stage's bytes) and the RAIM5 parity domain (one parity per stripe,
+//! tolerating one node loss per SG).
+
+use anyhow::{bail, Result};
+
+/// 3D parallelism degrees.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParallelPlan {
+    pub dp: usize,
+    pub tp: usize,
+    pub pp: usize,
+}
+
+impl ParallelPlan {
+    pub fn new(dp: usize, tp: usize, pp: usize) -> Self {
+        ParallelPlan { dp, tp, pp }
+    }
+
+    pub fn world_size(&self) -> usize {
+        self.dp * self.tp * self.pp
+    }
+
+    pub fn dp_only(dp: usize) -> Self {
+        ParallelPlan { dp, tp: 1, pp: 1 }
+    }
+}
+
+/// A global rank's coordinates in the 3D grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct RankCoord {
+    pub dp: usize,
+    pub pp: usize,
+    pub tp: usize,
+}
+
+/// Physical placement of one rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub node: usize,
+    pub local_gpu: usize,
+}
+
+/// The realized topology: rank grid mapped onto nodes/GPUs.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub plan: ParallelPlan,
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// placement\[global_rank\] -> (node, local gpu)
+    pub placement: Vec<Placement>,
+}
+
+impl Topology {
+    /// Build the paper-style placement: TP ranks fill a node's GPUs first
+    /// (TP intra-node), then PP stages advance across nodes, then DP paths
+    /// tile the remainder of the cluster.
+    ///
+    /// Requires `tp <= gpus_per_node` and `gpus_per_node % tp == 0`.
+    pub fn build(plan: ParallelPlan, nodes: usize, gpus_per_node: usize) -> Result<Topology> {
+        if plan.tp > gpus_per_node {
+            bail!(
+                "tp={} exceeds gpus_per_node={} (TP must stay intra-node)",
+                plan.tp,
+                gpus_per_node
+            );
+        }
+        if gpus_per_node % plan.tp != 0 {
+            bail!("gpus_per_node={} not divisible by tp={}", gpus_per_node, plan.tp);
+        }
+        let total_gpus = nodes * gpus_per_node;
+        if plan.world_size() > total_gpus {
+            bail!(
+                "world size {} exceeds cluster capacity {} ({} nodes x {} GPUs)",
+                plan.world_size(),
+                total_gpus,
+                nodes,
+                gpus_per_node
+            );
+        }
+        // groups of `tp` GPUs are allocated in order: (dp, pp) pairs row-major,
+        // pp fastest so a DP path occupies a contiguous run of nodes
+        let tp_groups_per_node = gpus_per_node / plan.tp;
+        let mut placement = vec![Placement { node: 0, local_gpu: 0 }; plan.world_size()];
+        let mut group_idx = 0usize;
+        for dp in 0..plan.dp {
+            for pp in 0..plan.pp {
+                let node = group_idx / tp_groups_per_node;
+                let slot = group_idx % tp_groups_per_node;
+                for tp in 0..plan.tp {
+                    let rank = Self::rank_of(plan, RankCoord { dp, pp, tp });
+                    placement[rank] = Placement { node, local_gpu: slot * plan.tp + tp };
+                }
+                group_idx += 1;
+            }
+        }
+        Ok(Topology { plan, nodes, gpus_per_node, placement })
+    }
+
+    /// global rank = ((dp * PP) + pp) * TP + tp
+    pub fn rank_of(plan: ParallelPlan, c: RankCoord) -> usize {
+        (c.dp * plan.pp + c.pp) * plan.tp + c.tp
+    }
+
+    pub fn coord_of(&self, rank: usize) -> RankCoord {
+        let tp = rank % self.plan.tp;
+        let rest = rank / self.plan.tp;
+        let pp = rest % self.plan.pp;
+        let dp = rest / self.plan.pp;
+        RankCoord { dp, pp, tp }
+    }
+
+    pub fn place(&self, c: RankCoord) -> Placement {
+        self.placement[Self::rank_of(self.plan, c)]
+    }
+
+    /// Nodes hosting pipeline stage `pp` for DP path `dp` (the TP group's nodes).
+    pub fn stage_nodes(&self, dp: usize, pp: usize) -> Vec<usize> {
+        let mut ns: Vec<usize> = (0..self.plan.tp)
+            .map(|tp| self.place(RankCoord { dp, pp, tp }).node)
+            .collect();
+        ns.dedup();
+        ns
+    }
+
+    /// Sharding group s = all nodes hosting PP stage s across every DP path
+    /// (paper Fig. 5: "all PP_0 nodes formulate SG_0").
+    pub fn sharding_group(&self, pp: usize) -> ShardingGroup {
+        let mut nodes = Vec::new();
+        for dp in 0..self.plan.dp {
+            for n in self.stage_nodes(dp, pp) {
+                if !nodes.contains(&n) {
+                    nodes.push(n);
+                }
+            }
+        }
+        ShardingGroup { stage: pp, nodes }
+    }
+
+    pub fn sharding_groups(&self) -> Vec<ShardingGroup> {
+        (0..self.plan.pp).map(|s| self.sharding_group(s)).collect()
+    }
+
+    /// All global ranks placed on `node`.
+    pub fn ranks_on_node(&self, node: usize) -> Vec<usize> {
+        (0..self.plan.world_size())
+            .filter(|&r| self.placement[r].node == node)
+            .collect()
+    }
+
+    /// Number of nodes actually used by the plan.
+    pub fn nodes_in_use(&self) -> usize {
+        let mut seen = vec![false; self.nodes];
+        for p in &self.placement {
+            seen[p.node] = true;
+        }
+        seen.iter().filter(|&&s| s).count()
+    }
+}
+
+/// The unit of REFT sharding + RAIM5 protection: nodes holding one PP stage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardingGroup {
+    pub stage: usize,
+    pub nodes: Vec<usize>,
+}
+
+impl ShardingGroup {
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_3d_example_placement() {
+        // Fig. 3 setup: 2 DP x 4 TP x 3 PP on 6 nodes x 4 GPUs
+        let t = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+        assert_eq!(t.plan.world_size(), 24);
+        // TP stays intra-node: each (dp, pp) group occupies exactly one node
+        for dp in 0..2 {
+            for pp in 0..3 {
+                assert_eq!(t.stage_nodes(dp, pp).len(), 1, "dp{dp} pp{pp}");
+            }
+        }
+        // DP path 0 on nodes 0..3, DP path 1 on nodes 3..6
+        assert_eq!(t.place(RankCoord { dp: 0, pp: 0, tp: 0 }).node, 0);
+        assert_eq!(t.place(RankCoord { dp: 1, pp: 0, tp: 0 }).node, 3);
+    }
+
+    #[test]
+    fn sharding_groups_cover_dp_paths() {
+        let t = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+        let sgs = t.sharding_groups();
+        assert_eq!(sgs.len(), 3);
+        for (s, sg) in sgs.iter().enumerate() {
+            assert_eq!(sg.stage, s);
+            assert_eq!(sg.len(), 2, "one node per DP path in SG_{s}");
+        }
+        // SGs are disjoint here (each node hosts exactly one stage)
+        let mut all: Vec<usize> = sgs.iter().flat_map(|g| g.nodes.clone()).collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 6);
+    }
+
+    #[test]
+    fn dp_only_plan() {
+        let t = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+        assert_eq!(t.plan.world_size(), 24);
+        let sg = t.sharding_group(0);
+        assert_eq!(sg.len(), 6); // every node is in the single SG
+        assert_eq!(t.ranks_on_node(0).len(), 4);
+    }
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let t = Topology::build(ParallelPlan::new(2, 2, 3), 6, 4).unwrap();
+        for r in 0..t.plan.world_size() {
+            assert_eq!(Topology::rank_of(t.plan, t.coord_of(r)), r);
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_plans() {
+        assert!(Topology::build(ParallelPlan::new(1, 8, 1), 2, 4).is_err()); // tp > gpus
+        assert!(Topology::build(ParallelPlan::new(1, 3, 1), 2, 4).is_err()); // 4 % 3 != 0
+        assert!(Topology::build(ParallelPlan::new(4, 4, 4), 2, 4).is_err()); // too big
+    }
+
+    #[test]
+    fn strong_scaling_configs_fit_testbed() {
+        // §6.1: PP in {1, 2, 4, 6} with TP=4, DP=1 on 6 nodes x 4 GPUs
+        for pp in [1usize, 2, 4, 6] {
+            let t = Topology::build(ParallelPlan::new(1, 4, pp), 6, 4).unwrap();
+            assert_eq!(t.nodes_in_use(), pp);
+            for s in 0..pp {
+                assert_eq!(t.sharding_group(s).len(), 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Synchronous data-parallel trainer over the whole-model artifacts.
+//!
+//! Faithful DP semantics on one process: every DP path holds an identical
+//! replica (so one canonical `StageState` suffices), each path computes
+//! `fwd_bwd` on its *own* microbatch, gradients are averaged exactly as a
+//! DDP all-reduce would, and the Adam artifact advances the canonical state.
+//! Fault tolerance wraps the loop per the configured [`FtMethod`].
+
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::{storage::step_key, CheckpointFile, SectionKind, Storage};
+use crate::config::{FtMethod, RunConfig};
+use crate::elastic::ReftCluster;
+use crate::metrics::Metrics;
+use crate::model::{StageState, SyntheticCorpus};
+use crate::runtime::{self, Engine, In, Manifest};
+use crate::topology::Topology;
+
+/// Outcome of one training step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepReport {
+    pub step: u64,
+    pub loss: f32,
+    pub snapshotted: bool,
+    pub checkpointed: bool,
+}
+
+pub struct DpTrainer {
+    pub cfg: RunConfig,
+    pub topo: Topology,
+    engine: Engine,
+    manifest: Manifest,
+    /// canonical replica state (identical across DP paths after all-reduce)
+    pub state: StageState,
+    reft: Option<ReftCluster>,
+    storage: Arc<dyn Storage>,
+    corpus: SyntheticCorpus,
+    pub metrics: Arc<Metrics>,
+    pub losses: Vec<f32>,
+    fwd_bwd_path: String,
+    adam_path: String,
+}
+
+impl DpTrainer {
+    pub fn new(cfg: RunConfig, storage: Arc<dyn Storage>) -> Result<DpTrainer> {
+        anyhow::ensure!(cfg.plan.pp == 1 && cfg.plan.tp == 1, "DpTrainer is DP-only");
+        let topo = Topology::build(cfg.plan, cfg.nodes, cfg.gpus_per_node)?;
+        let manifest = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
+        let full = manifest
+            .full
+            .as_ref()
+            .context("model has no whole-model artifacts (export with --full)")?;
+        let engine = Engine::cpu(&cfg.artifacts_dir)?;
+        // initialise per-stage and concatenate: the full flat layout is the
+        // concatenation of the stage layouts, and doing it this way makes a
+        // DP run bit-identical to a pipeline run with the same seed
+        let mut params = Vec::with_capacity(full.n_params);
+        for st in &manifest.stages {
+            params.extend_from_slice(&StageState::init(st, cfg.seed)?.params);
+        }
+        anyhow::ensure!(params.len() == full.n_params, "stage init layout mismatch");
+        let state = StageState {
+            stage: 0,
+            adam_m: vec![0.0; full.n_params],
+            adam_v: vec![0.0; full.n_params],
+            params,
+            step: 0,
+            rng_state: [cfg.seed, 0, 0xDEAD, 0xBEEF],
+        };
+        let reft = match cfg.ft.method {
+            FtMethod::ReftSn | FtMethod::ReftCkpt => Some(ReftCluster::start(
+                topo.clone(),
+                &[state.payload_bytes() as u64],
+                cfg.ft.clone(),
+            )?),
+            _ => None,
+        };
+        let corpus = SyntheticCorpus::new(manifest.hyper.vocab, cfg.seed ^ 0xC0FFEE);
+        let fwd_bwd_path = full.artifacts.get("fwd_bwd")?.to_string();
+        let adam_path = full.artifacts.get("adam")?.to_string();
+        Ok(DpTrainer {
+            cfg,
+            topo,
+            engine,
+            manifest,
+            state,
+            reft,
+            storage,
+            corpus,
+            metrics: Arc::new(Metrics::new()),
+            losses: Vec::new(),
+            fwd_bwd_path,
+            adam_path,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// One synchronous step across all DP paths. Returns the mean loss.
+    pub fn step(&mut self) -> Result<StepReport> {
+        let dp = self.topo.plan.dp;
+        let (b, t) = (self.manifest.hyper.batch, self.manifest.hyper.seq);
+        let n = self.state.n_params();
+
+        // each DP path computes grads on its own microbatch
+        let mut grad_bufs: Vec<Vec<f32>> = Vec::with_capacity(dp);
+        let mut loss_sum = 0f32;
+        for _path in 0..dp {
+            let (tokens, targets) = self.corpus.next_batch(b, t);
+            let outs = self.metrics.time("fwd_bwd", || {
+                self.engine.run_inputs(
+                    &self.fwd_bwd_path,
+                    &[
+                        In::f32(&self.state.params, &[n]),
+                        In::i32(&tokens, &[b, t]),
+                        In::i32(&targets, &[b, t]),
+                    ],
+                )
+            })?;
+            loss_sum += runtime::scalar_f32(&outs[0])?;
+            grad_bufs.push(runtime::vec_f32(&outs[1])?);
+        }
+        // DDP gradient synchronization (real mean)
+        crate::collective::allreduce_mean(&mut grad_bufs);
+        let grads = &grad_bufs[0];
+
+        // fused-Adam artifact advances the canonical replica
+        self.state.step += 1;
+        let step_in = [self.state.step as f32];
+        let outs = self.metrics.time("adam", || {
+            self.engine.run_inputs(
+                &self.adam_path,
+                &[
+                    In::f32(&self.state.params, &[n]),
+                    In::f32(&self.state.adam_m, &[n]),
+                    In::f32(&self.state.adam_v, &[n]),
+                    In::f32(grads, &[n]),
+                    In::f32(&step_in, &[1]),
+                ],
+            )
+        })?;
+        self.state.params = runtime::vec_f32(&outs[0])?;
+        self.state.adam_m = runtime::vec_f32(&outs[1])?;
+        self.state.adam_v = runtime::vec_f32(&outs[2])?;
+        // advance the (snapshotted) training RNG state
+        self.state.rng_state[2] = self.state.rng_state[2].wrapping_add(1);
+
+        let loss = loss_sum / dp as f32;
+        self.losses.push(loss);
+        self.metrics.inc("steps", 1);
+
+        // fault-tolerance policy
+        let mut snapshotted = false;
+        let mut checkpointed = false;
+        if self.state.step % self.cfg.ft.snapshot_interval as u64 == 0 {
+            match self.cfg.ft.method {
+                FtMethod::ReftSn | FtMethod::ReftCkpt => {
+                    self.snapshot()?;
+                    snapshotted = true;
+                    let persist = self.cfg.ft.persist_every as u64
+                        * self.cfg.ft.snapshot_interval as u64;
+                    if self.cfg.ft.method == FtMethod::ReftCkpt
+                        && self.state.step % persist == 0
+                    {
+                        self.checkpoint()?;
+                        checkpointed = true;
+                    }
+                }
+                FtMethod::CheckFreq | FtMethod::TorchSnapshot => {
+                    // baselines go straight to storage every interval
+                    self.checkpoint()?;
+                    checkpointed = true;
+                }
+                FtMethod::None => {}
+            }
+        }
+        Ok(StepReport { step: self.state.step, loss, snapshotted, checkpointed })
+    }
+
+    pub fn run(&mut self, steps: usize) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            out.push(self.step()?.loss);
+        }
+        Ok(out)
+    }
+
+    /// REFT in-memory snapshot of the canonical state.
+    pub fn snapshot(&mut self) -> Result<u64> {
+        let payload = self.state.to_payload();
+        let reft = self.reft.as_mut().context("REFT not enabled")?;
+        let v = self.metrics.time("snapshot", || reft.snapshot_all(&[payload]))?;
+        self.metrics.inc("snapshots", 1);
+        Ok(v)
+    }
+
+    /// Durable checkpoint (all methods share the container format).
+    pub fn checkpoint(&mut self) -> Result<String> {
+        let mut file = CheckpointFile::new(&self.cfg.model, self.state.step);
+        file.add_section(SectionKind::StagePayload, 0, self.state.to_payload());
+        let key = step_key(&self.cfg.model, self.state.step);
+        let bytes = self.metrics.time("ckpt_encode", || file.encode());
+        self.metrics.time("ckpt_put", || self.storage.put(&key, &bytes))?;
+        self.metrics.inc("checkpoints", 1);
+        Ok(key)
+    }
+
+    // -- failure injection + recovery (live path) ---------------------------
+
+    /// Software failure: all training processes die; parameters in "GPU
+    /// memory" are gone. SMPs survive.
+    pub fn inject_software_failure(&mut self) {
+        self.state.params.clear();
+        self.state.adam_m.clear();
+        self.state.adam_v.clear();
+        self.metrics.inc("failures_software", 1);
+    }
+
+    /// Hardware failure: a node goes away entirely.
+    pub fn inject_node_failure(&mut self, node: usize) {
+        if let Some(reft) = self.reft.as_mut() {
+            reft.kill_node(node);
+        }
+        self.inject_software_failure(); // training collapses cluster-wide
+        self.metrics.inc("failures_hardware", 1);
+    }
+
+    /// Recover from SMPs (decoding via RAIM5 if `dead` nodes are listed),
+    /// falling back to the latest checkpoint when in-memory recovery is
+    /// impossible. Returns the step we resumed from.
+    pub fn recover(&mut self, dead: &[usize]) -> Result<u64> {
+        let n_params = self.manifest.total_params;
+        let restored: Result<Vec<Vec<u8>>> = self
+            .reft
+            .as_ref()
+            .context("REFT not enabled")
+            .and_then(|r| r.restore_all(dead));
+        match restored {
+            Ok(payloads) => {
+                self.state = StageState::from_payload(0, n_params, &payloads[0])?;
+                self.metrics.inc("recoveries_inmemory", 1);
+            }
+            Err(e) => {
+                // in-memory protection exceeded -> durable checkpoint
+                let key = self
+                    .storage
+                    .latest()
+                    .with_context(|| format!("in-memory recovery failed ({e}) and no checkpoint exists"))?;
+                let bytes = self.storage.get(&key)?;
+                let file = CheckpointFile::decode(&bytes)?;
+                let payload = file
+                    .stage_payload(0)
+                    .context("checkpoint missing stage payload")?;
+                self.state = StageState::from_payload(0, n_params, payload)?;
+                self.metrics.inc("recoveries_checkpoint", 1);
+            }
+        }
+        // elastic substitute nodes rejoin, then a fresh snapshot round
+        for &n in dead {
+            if let Some(reft) = self.reft.as_mut() {
+                let _ = reft.replace_node(n);
+            }
+        }
+        if self.reft.is_some() {
+            self.snapshot()?;
+        }
+        Ok(self.state.step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // DpTrainer needs real artifacts; its tests live in
+    // rust/tests/trainer_integration.rs (skipped when artifacts are absent).
+}

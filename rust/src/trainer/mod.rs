@@ -1,0 +1,19 @@
+//! Trainers: the live training loops that execute the PJRT artifacts under a
+//! fault-tolerance policy — the composition point of the whole system.
+//!
+//! * [`dp::DpTrainer`] — synchronous data-parallel training: each DP path
+//!   runs `fwd_bwd` on its own microbatch, gradients are mean-all-reduced
+//!   (real math), Adam runs via the fused Pallas kernel artifact.
+//! * [`pipeline3d::PipelineTrainer`] — 3D (DP × PP) training driven by a
+//!   1F1B/GPipe schedule over the per-stage artifacts, with activation
+//!   hand-off and gradient accumulation.
+//!
+//! Both plug into [`crate::elastic::ReftCluster`] for REFT snapshots and the
+//! [`crate::checkpoint`] stack for durable checkpoints, and both expose
+//! failure-injection entry points used by the recovery tests/examples.
+
+pub mod dp;
+pub mod pipeline3d;
+
+pub use dp::DpTrainer;
+pub use pipeline3d::PipelineTrainer;

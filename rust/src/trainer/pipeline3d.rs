@@ -1,0 +1,469 @@
+//! 3D (DP × TP × PP) trainer: drives the per-stage PJRT artifacts through a
+//! 1F1B/GPipe microbatch schedule with activation hand-off, gradient
+//! accumulation, per-stage Adam, and REFT snapshotting of every stage across
+//! its sharding group.
+//!
+//! Execution model: ranks are simulated on one process, ops run in a
+//! dependency-resolving order identical to the distributed schedule (the
+//! schedule itself is validated in [`crate::pipeline`]); numerics are
+//! bit-equal to the distributed run because synchronous PP has no
+//! scheduling-dependent arithmetic. TP partitions parameter *ownership*
+//! (snapshot/EC data paths) but executes the stage computation unsharded —
+//! see DESIGN.md §Substitutions.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::{storage::step_key, CheckpointFile, SectionKind, Storage};
+use crate::config::{FtMethod, RunConfig};
+use crate::elastic::ReftCluster;
+use crate::metrics::Metrics;
+use crate::model::{StageState, SyntheticCorpus};
+use crate::pipeline::{self, Op, Schedule};
+use crate::runtime::{self, Engine, In, Manifest};
+use crate::topology::Topology;
+
+pub struct PipelineTrainer {
+    pub cfg: RunConfig,
+    pub topo: Topology,
+    engine: Engine,
+    manifest: Manifest,
+    /// canonical per-stage states (identical across DP paths)
+    pub stages: Vec<StageState>,
+    reft: Option<ReftCluster>,
+    storage: Arc<dyn Storage>,
+    corpus: SyntheticCorpus,
+    pub schedule: Schedule,
+    pub metrics: Arc<Metrics>,
+    pub losses: Vec<f32>,
+}
+
+impl PipelineTrainer {
+    pub fn new(cfg: RunConfig, storage: Arc<dyn Storage>, schedule: Schedule) -> Result<Self> {
+        let topo = Topology::build(cfg.plan, cfg.nodes, cfg.gpus_per_node)?;
+        let manifest = Manifest::load(&cfg.artifacts_dir, &cfg.model)?;
+        anyhow::ensure!(
+            manifest.n_stages == cfg.plan.pp,
+            "artifacts exported for {} stages but plan has pp={}",
+            manifest.n_stages,
+            cfg.plan.pp
+        );
+        let engine = Engine::cpu(&cfg.artifacts_dir)?;
+        let stages: Vec<StageState> = manifest
+            .stages
+            .iter()
+            .map(|m| StageState::init(m, cfg.seed))
+            .collect::<Result<_>>()?;
+        let payload_bytes: Vec<u64> = stages
+            .iter()
+            .map(|s| s.payload_bytes() as u64)
+            .collect();
+        let reft = match cfg.ft.method {
+            FtMethod::ReftSn | FtMethod::ReftCkpt => Some(ReftCluster::start(
+                topo.clone(),
+                &payload_bytes,
+                cfg.ft.clone(),
+            )?),
+            _ => None,
+        };
+        let corpus = SyntheticCorpus::new(manifest.hyper.vocab, cfg.seed ^ 0xC0FFEE);
+        Ok(PipelineTrainer {
+            cfg,
+            topo,
+            engine,
+            manifest,
+            stages,
+            reft,
+            storage,
+            corpus,
+            schedule,
+            metrics: Arc::new(Metrics::new()),
+            losses: Vec::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// One full iteration: `microbatches` through the pipe per DP path,
+    /// gradient accumulation + DP all-reduce, per-stage fused Adam.
+    pub fn step(&mut self) -> Result<f32> {
+        let pp = self.cfg.plan.pp;
+        let dp = self.cfg.plan.dp;
+        let n_micro = self.cfg.microbatches;
+        let (b, t) = (self.manifest.hyper.batch, self.manifest.hyper.seq);
+        let d = self.manifest.hyper.d_model;
+
+        // per-DP-path accumulated grads, per stage
+        let mut grad_acc: Vec<Vec<Vec<f32>>> = Vec::with_capacity(dp);
+        let mut loss_total = 0f32;
+
+        for _path in 0..dp {
+            let mut acc: Vec<Vec<f32>> = self
+                .stages
+                .iter()
+                .map(|s| vec![0f32; s.n_params()])
+                .collect();
+            // microbatch data for this path
+            let batches: Vec<(Vec<i32>, Vec<i32>)> =
+                (0..n_micro).map(|_| self.corpus.next_batch(b, t)).collect();
+
+            // dependency-driven execution of the validated schedule
+            let sched = pipeline::build(self.schedule, pp, n_micro);
+            pipeline::validate(&sched, n_micro).map_err(|e| anyhow::anyhow!(e))?;
+
+            // stage activations: input of (stage, micro) saved for bwd
+            let mut act_in: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+            let mut dx_from: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+            let mut done_f = vec![vec![false; n_micro]; pp];
+            let mut done_b = vec![vec![false; n_micro]; pp];
+            let mut cursor = vec![0usize; pp];
+            let total_ops: usize = sched.iter().map(Vec::len).sum();
+            let mut executed = 0usize;
+
+            while executed < total_ops {
+                let mut progressed = false;
+                for s in 0..pp {
+                    while cursor[s] < sched[s].len() {
+                        let op = sched[s][cursor[s]];
+                        let ready = match op {
+                            Op::Fwd(i) => s == 0 || done_f[s - 1][i],
+                            Op::Bwd(i) => {
+                                done_f[s][i] && (s == pp - 1 || done_b[s + 1][i])
+                            }
+                        };
+                        if !ready {
+                            break;
+                        }
+                        match op {
+                            Op::Fwd(i) => {
+                                let loss = self.exec_fwd(
+                                    s, i, &batches[i], &mut act_in, &mut dx_from, &mut acc, b, t, d,
+                                )?;
+                                if let Some(l) = loss {
+                                    loss_total += l;
+                                }
+                                done_f[s][i] = true;
+                            }
+                            Op::Bwd(i) => {
+                                self.exec_bwd(
+                                    s, i, &batches[i], &mut act_in, &mut dx_from, &mut acc, b, t, d,
+                                )?;
+                                done_b[s][i] = true;
+                            }
+                        }
+                        cursor[s] += 1;
+                        executed += 1;
+                        progressed = true;
+                    }
+                }
+                anyhow::ensure!(progressed, "schedule deadlocked at runtime");
+            }
+            grad_acc.push(acc);
+        }
+
+        // DP all-reduce per stage, then mean over microbatches
+        for s in 0..pp {
+            let mut per_path: Vec<Vec<f32>> = grad_acc.iter().map(|g| g[s].clone()).collect();
+            crate::collective::allreduce_mean(&mut per_path);
+            let inv = 1.0 / n_micro as f32;
+            let grads: Vec<f32> = per_path[0].iter().map(|g| g * inv).collect();
+            self.adam_stage(s, &grads)?;
+        }
+        for st in &mut self.stages {
+            st.step += 1;
+            st.rng_state[2] = st.rng_state[2].wrapping_add(1);
+        }
+
+        let loss = loss_total / (dp * n_micro) as f32;
+        self.losses.push(loss);
+        self.metrics.inc("steps", 1);
+
+        // fault tolerance
+        let step = self.stages[0].step;
+        if step % self.cfg.ft.snapshot_interval as u64 == 0 {
+            match self.cfg.ft.method {
+                FtMethod::ReftSn | FtMethod::ReftCkpt => {
+                    self.snapshot()?;
+                    let persist =
+                        self.cfg.ft.persist_every as u64 * self.cfg.ft.snapshot_interval as u64;
+                    if self.cfg.ft.method == FtMethod::ReftCkpt && step % persist == 0 {
+                        self.checkpoint()?;
+                    }
+                }
+                FtMethod::CheckFreq | FtMethod::TorchSnapshot => {
+                    self.checkpoint()?;
+                }
+                FtMethod::None => {}
+            }
+        }
+        Ok(loss)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_fwd(
+        &mut self,
+        s: usize,
+        micro: usize,
+        batch: &(Vec<i32>, Vec<i32>),
+        act_in: &mut HashMap<(usize, usize), Vec<f32>>,
+        dx_from: &mut HashMap<(usize, usize), Vec<f32>>,
+        acc: &mut [Vec<f32>],
+        b: usize,
+        t: usize,
+        d: usize,
+    ) -> Result<Option<f32>> {
+        let pp = self.cfg.plan.pp;
+        let meta = &self.manifest.stages[s];
+        let n = self.stages[s].n_params();
+        let (tokens, targets) = batch;
+        if s == 0 && pp == 1 {
+            // single-stage: fused fwd_bwd artifact
+            let path = meta.artifacts.get("fwd_bwd")?.to_string();
+            let outs = self.metrics.time("stage_fwd", || {
+                self.engine.run_inputs(
+                    &path,
+                    &[
+                        In::f32(&self.stages[s].params, &[n]),
+                        In::i32(tokens, &[b, t]),
+                        In::i32(targets, &[b, t]),
+                    ],
+                )
+            })?;
+            let loss = runtime::scalar_f32(&outs[0])?;
+            let grads = runtime::vec_f32(&outs[1])?;
+            for (a, g) in acc[s].iter_mut().zip(&grads) {
+                *a += g;
+            }
+            return Ok(Some(loss));
+        }
+        if s == 0 {
+            let path = meta.artifacts.get("fwd")?.to_string();
+            let outs = self.metrics.time("stage_fwd", || {
+                self.engine.run_inputs(
+                    &path,
+                    &[In::f32(&self.stages[s].params, &[n]), In::i32(tokens, &[b, t])],
+                )
+            })?;
+            let y = runtime::vec_f32(&outs[0])?;
+            act_in.insert((s + 1, micro), y);
+            return Ok(None);
+        }
+        let x = act_in
+            .get(&(s, micro))
+            .with_context(|| format!("missing activation for stage {s} micro {micro}"))?
+            .clone();
+        if s == pp - 1 {
+            // last stage: fused fwd+bwd (loss, dx, grads)
+            let path = meta.artifacts.get("fwdbwd")?.to_string();
+            let outs = self.metrics.time("stage_fwdbwd", || {
+                self.engine.run_inputs(
+                    &path,
+                    &[
+                        In::f32(&self.stages[s].params, &[n]),
+                        In::f32(&x, &[b, t, d]),
+                        In::i32(targets, &[b, t]),
+                    ],
+                )
+            })?;
+            let loss = runtime::scalar_f32(&outs[0])?;
+            let dx = runtime::vec_f32(&outs[1])?;
+            let grads = runtime::vec_f32(&outs[2])?;
+            for (a, g) in acc[s].iter_mut().zip(&grads) {
+                *a += g;
+            }
+            dx_from.insert((s, micro), dx);
+            return Ok(Some(loss));
+        }
+        // middle stage
+        let path = meta.artifacts.get("fwd")?.to_string();
+        let outs = self.metrics.time("stage_fwd", || {
+            self.engine.run_inputs(
+                &path,
+                &[In::f32(&self.stages[s].params, &[n]), In::f32(&x, &[b, t, d])],
+            )
+        })?;
+        let y = runtime::vec_f32(&outs[0])?;
+        act_in.insert((s + 1, micro), y);
+        Ok(None)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_bwd(
+        &mut self,
+        s: usize,
+        micro: usize,
+        batch: &(Vec<i32>, Vec<i32>),
+        act_in: &mut HashMap<(usize, usize), Vec<f32>>,
+        dx_from: &mut HashMap<(usize, usize), Vec<f32>>,
+        acc: &mut [Vec<f32>],
+        b: usize,
+        t: usize,
+        d: usize,
+    ) -> Result<()> {
+        let pp = self.cfg.plan.pp;
+        if pp == 1 || s == pp - 1 {
+            // single-stage fwd_bwd / last-stage fwdbwd already accumulated
+            return Ok(());
+        }
+        let meta = &self.manifest.stages[s];
+        let n = self.stages[s].n_params();
+        let dy = dx_from
+            .remove(&(s + 1, micro))
+            .with_context(|| format!("missing upstream grad for stage {s} micro {micro}"))?;
+        let (tokens, _) = batch;
+        if s == 0 {
+            let path = meta.artifacts.get("bwd")?.to_string();
+            let outs = self.metrics.time("stage_bwd", || {
+                self.engine.run_inputs(
+                    &path,
+                    &[
+                        In::f32(&self.stages[s].params, &[n]),
+                        In::i32(tokens, &[b, t]),
+                        In::f32(&dy, &[b, t, d]),
+                    ],
+                )
+            })?;
+            let grads = runtime::vec_f32(&outs[0])?;
+            for (a, g) in acc[s].iter_mut().zip(&grads) {
+                *a += g;
+            }
+        } else {
+            let x = act_in
+                .remove(&(s, micro))
+                .with_context(|| format!("missing activation for bwd stage {s} micro {micro}"))?;
+            let path = meta.artifacts.get("bwd")?.to_string();
+            let outs = self.metrics.time("stage_bwd", || {
+                self.engine.run_inputs(
+                    &path,
+                    &[
+                        In::f32(&self.stages[s].params, &[n]),
+                        In::f32(&x, &[b, t, d]),
+                        In::f32(&dy, &[b, t, d]),
+                    ],
+                )
+            })?;
+            let dx = runtime::vec_f32(&outs[0])?;
+            let grads = runtime::vec_f32(&outs[1])?;
+            for (a, g) in acc[s].iter_mut().zip(&grads) {
+                *a += g;
+            }
+            dx_from.insert((s, micro), dx);
+        }
+        Ok(())
+    }
+
+    fn adam_stage(&mut self, s: usize, grads: &[f32]) -> Result<()> {
+        let meta = &self.manifest.stages[s];
+        let n = self.stages[s].n_params();
+        let path = meta.artifacts.get("adam")?.to_string();
+        let step = self.stages[s].step + 1;
+        let step_in = [step as f32];
+        let outs = self.metrics.time("adam", || {
+            self.engine.run_inputs(
+                &path,
+                &[
+                    In::f32(&self.stages[s].params, &[n]),
+                    In::f32(&self.stages[s].adam_m, &[n]),
+                    In::f32(&self.stages[s].adam_v, &[n]),
+                    In::f32(grads, &[n]),
+                    In::f32(&step_in, &[1]),
+                ],
+            )
+        })?;
+        self.stages[s].params = runtime::vec_f32(&outs[0])?;
+        self.stages[s].adam_m = runtime::vec_f32(&outs[1])?;
+        self.stages[s].adam_v = runtime::vec_f32(&outs[2])?;
+        Ok(())
+    }
+
+    pub fn run(&mut self, steps: usize) -> Result<Vec<f32>> {
+        (0..steps).map(|_| self.step()).collect()
+    }
+
+    pub fn snapshot(&mut self) -> Result<u64> {
+        let payloads: Vec<Vec<u8>> = self.stages.iter().map(StageState::to_payload).collect();
+        let reft = self.reft.as_mut().context("REFT not enabled")?;
+        let v = self.metrics.time("snapshot", || reft.snapshot_all(&payloads))?;
+        self.metrics.inc("snapshots", 1);
+        Ok(v)
+    }
+
+    pub fn checkpoint(&mut self) -> Result<String> {
+        let step = self.stages[0].step;
+        let mut file = CheckpointFile::new(&self.cfg.model, step);
+        for (s, st) in self.stages.iter().enumerate() {
+            file.add_section(SectionKind::StagePayload, s as u32, st.to_payload());
+        }
+        let key = step_key(&self.cfg.model, step);
+        self.storage.put(&key, &file.encode())?;
+        self.metrics.inc("checkpoints", 1);
+        Ok(key)
+    }
+
+    // -- failure injection + recovery ---------------------------------------
+
+    pub fn inject_software_failure(&mut self) {
+        for st in &mut self.stages {
+            st.params.clear();
+            st.adam_m.clear();
+            st.adam_v.clear();
+        }
+        self.metrics.inc("failures_software", 1);
+    }
+
+    pub fn inject_node_failure(&mut self, node: usize) {
+        if let Some(reft) = self.reft.as_mut() {
+            reft.kill_node(node);
+        }
+        self.inject_software_failure();
+        self.metrics.inc("failures_hardware", 1);
+    }
+
+    pub fn recover(&mut self, dead: &[usize]) -> Result<u64> {
+        let sizes: Vec<usize> = self.manifest.stages.iter().map(|m| m.n_params).collect();
+        let restored: Result<Vec<Vec<u8>>> = self
+            .reft
+            .as_ref()
+            .context("REFT not enabled")
+            .and_then(|r| r.restore_all(dead));
+        match restored {
+            Ok(payloads) => {
+                for (s, payload) in payloads.iter().enumerate() {
+                    self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
+                }
+                self.metrics.inc("recoveries_inmemory", 1);
+            }
+            Err(e) => {
+                let key = self.storage.latest().with_context(|| {
+                    format!("in-memory recovery failed ({e}) and no checkpoint exists")
+                })?;
+                let file = CheckpointFile::decode(&self.storage.get(&key)?)?;
+                for s in 0..self.stages.len() {
+                    let payload = file
+                        .stage_payload(s as u32)
+                        .with_context(|| format!("checkpoint missing stage {s}"))?;
+                    self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
+                }
+                self.metrics.inc("recoveries_checkpoint", 1);
+            }
+        }
+        for &n in dead {
+            if let Some(reft) = self.reft.as_mut() {
+                let _ = reft.replace_node(n);
+            }
+        }
+        if self.reft.is_some() {
+            self.snapshot()?;
+        }
+        Ok(self.stages[0].step)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Needs artifacts; exercised in rust/tests/trainer_integration.rs.
+}

@@ -1,0 +1,62 @@
+//! Small self-contained utilities the rest of the crate builds on.
+//!
+//! The build environment is offline with a minimal vendored crate set (no
+//! serde / rand / tokio), so this module carries our own JSON codec and a
+//! deterministic PRNG + distribution samplers. Both are tested here and used
+//! pervasively: JSON for the artifact manifest / configs / metric dumps, the
+//! PRNG for parameter init, data synthesis and failure injection.
+
+pub mod json;
+pub mod rng;
+
+/// Format a byte count for humans (binary units).
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Format a duration in seconds adaptively (ns/µs/ms/s).
+pub fn human_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(20 * 1024 * 1024 * 1024), "20.00 GiB");
+    }
+
+    #[test]
+    fn human_secs_ranges() {
+        assert!(human_secs(3e-9).ends_with("ns"));
+        assert!(human_secs(5e-5).ends_with("µs"));
+        assert!(human_secs(0.2).ends_with("ms"));
+        assert!(human_secs(3.0).ends_with(" s"));
+        assert!(human_secs(600.0).ends_with("min"));
+    }
+}

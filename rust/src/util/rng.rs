@@ -1,0 +1,182 @@
+//! Deterministic PRNG + distribution samplers (the vendored crate set has no
+//! `rand`). xoshiro256++ seeded via SplitMix64 — fast, well-tested generator,
+//! deterministic across platforms, which matters for reproducible failure
+//! schedules and synthetic workloads.
+
+/// xoshiro256++ PRNG.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    pub fn seed_from(seed: u64) -> Self {
+        // SplitMix64 expansion of the seed into the full state
+        let mut x = seed;
+        let mut next = || {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = x;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng { s: [next(), next(), next(), next()] }
+    }
+
+    /// Derive an independent stream (for per-rank / per-node RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let a = self.next_u64();
+        Rng::seed_from(a ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = (self.s[0].wrapping_add(self.s[3]))
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in (0, 1] — safe as a log() argument.
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        1.0 - self.f64()
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free variant is fine here; bias
+        // for n << 2^64 is negligible for simulation purposes.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (mean 0, std 1).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Normal f32 with given std (parameter init path).
+    #[inline]
+    pub fn normal_f32(&mut self, std: f32) -> f32 {
+        (self.normal() as f32) * std
+    }
+
+    /// Weibull(shape c, scale lambda) sample — the paper's TTF model
+    /// (Assumption 1): survival S(t) = exp(-(t/lambda)^c).
+    pub fn weibull(&mut self, shape_c: f64, scale: f64) -> f64 {
+        let u = self.f64_open();
+        scale * (-u.ln()).powf(1.0 / shape_c)
+    }
+
+    /// Exponential(rate) sample (Weibull with c = 1).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.f64_open().ln() / rate
+    }
+
+    /// Fill a f32 slice with normals of the given std.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal_f32(std);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::seed_from(42);
+        let mut b = Rng::seed_from(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut a = Rng::seed_from(7);
+        let mut s1 = a.fork(1);
+        let mut s2 = a.fork(2);
+        let x: Vec<u64> = (0..8).map(|_| s1.next_u64()).collect();
+        let y: Vec<u64> = (0..8).map(|_| s2.next_u64()).collect();
+        assert_ne!(x, y);
+    }
+
+    #[test]
+    fn uniform_bounds() {
+        let mut r = Rng::seed_from(1);
+        for _ in 0..10_000 {
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+            let g = r.f64_open();
+            assert!(g > 0.0 && g <= 1.0);
+            let n = r.below(17);
+            assert!(n < 17);
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed_from(3);
+        let n = 200_000;
+        let (mut sum, mut sq) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn weibull_matches_analytic_cdf() {
+        // empirical survival at t = scale must be ~ exp(-1) for any shape
+        let mut r = Rng::seed_from(9);
+        for &c in &[0.7, 1.0, 1.5, 2.0] {
+            let scale = 3.0;
+            let n = 100_000;
+            let surv = (0..n).filter(|_| r.weibull(c, scale) > scale).count() as f64 / n as f64;
+            assert!(
+                (surv - (-1.0f64).exp()).abs() < 0.01,
+                "shape {c}: survival {surv}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut r = Rng::seed_from(11);
+        let rate = 0.25;
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 4.0).abs() < 0.1, "mean {mean}");
+    }
+}

@@ -1,0 +1,96 @@
+//! CLI smoke tests: every subcommand that needs no artifacts must run and
+//! print the expected table shape (the launcher is part of the public
+//! surface).
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_reft"))
+        .args(args)
+        .output()
+        .expect("spawning reft");
+    let text = String::from_utf8_lossy(&out.stdout).to_string()
+        + &String::from_utf8_lossy(&out.stderr);
+    (out.status.success(), text)
+}
+
+#[test]
+fn help_lists_commands() {
+    let (ok, text) = run(&["help"]);
+    assert!(ok);
+    for cmd in ["train", "survival", "intervals", "save-cost", "info"] {
+        assert!(text.contains(cmd), "missing `{cmd}` in help:\n{text}");
+    }
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, text) = run(&[]);
+    assert!(ok);
+    assert!(text.contains("usage"));
+}
+
+#[test]
+fn unknown_command_fails() {
+    let (ok, text) = run(&["frobnicate"]);
+    assert!(!ok);
+    assert!(text.contains("unknown subcommand"));
+}
+
+#[test]
+fn survival_table() {
+    let (ok, text) = run(&["survival"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("Fig. 8"));
+    // all four shape parameters present
+    for c in ["1 ", "1.3", "1.5", "2 "] {
+        assert!(text.contains(c), "missing c={c}:\n{text}");
+    }
+}
+
+#[test]
+fn survival_with_flags() {
+    let (ok, text) = run(&["survival", "--k", "512", "--sg", "8", "--threshold", "0.95"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("k=512"));
+}
+
+#[test]
+fn intervals_table() {
+    let (ok, text) = run(&["intervals", "--lambda", "1e-4", "--sg", "6"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("T_re_ckpt"));
+    assert!(text.contains("checkpoint stretch"));
+}
+
+#[test]
+fn save_cost_table() {
+    let (ok, text) = run(&["save-cost", "--model", "opt-2.7b", "--dp", "24"]);
+    assert!(ok, "{text}");
+    for m in ["checkfreq", "torchsnapshot", "reft-sn", "reft-ckpt"] {
+        assert!(text.contains(m), "missing {m}:\n{text}");
+    }
+}
+
+#[test]
+fn save_cost_rejects_unknown_model() {
+    let (ok, text) = run(&["save-cost", "--model", "gpt-99"]);
+    assert!(!ok);
+    assert!(text.contains("unknown zoo model"));
+}
+
+#[test]
+fn info_lists_zoo() {
+    let (ok, text) = run(&["info"]);
+    assert!(ok, "{text}");
+    for m in ["opt-125m", "opt-350m", "opt-1.3b", "opt-2.7b"] {
+        assert!(text.contains(m));
+    }
+}
+
+#[test]
+fn flags_need_values() {
+    let (ok, text) = run(&["survival", "--k"]);
+    assert!(!ok);
+    assert!(text.contains("needs a value"));
+}

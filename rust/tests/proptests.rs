@@ -1,0 +1,292 @@
+//! Property-based tests over the coordinator invariants (hand-rolled
+//! generator loop on our deterministic PRNG — proptest isn't in the offline
+//! crate set, so each property runs a few hundred randomized cases with a
+//! printed counterexample seed on failure).
+
+use reft::checkpoint::{CheckpointFile, SectionKind};
+use reft::ec::Raim5Group;
+use reft::elastic::{decide, NodeStatus, RecoveryDecision};
+use reft::pipeline::{self, Schedule};
+use reft::snapshot::{BucketPipe, SnapshotPlan};
+use reft::topology::{ParallelPlan, Topology};
+use reft::util::json::Json;
+use reft::util::rng::Rng;
+
+const CASES: usize = 200;
+
+/// RAIM5: encode + single-loss decode is identity for arbitrary group sizes
+/// and (possibly uneven, possibly empty) shard lengths.
+#[test]
+fn prop_raim5_roundtrip() {
+    let mut rng = Rng::seed_from(0xEC);
+    for case in 0..CASES {
+        let n = 2 + rng.below(7); // 2..=8 nodes
+        let lens: Vec<usize> = (0..n).map(|_| rng.below(5000)).collect();
+        let g = Raim5Group::plan(&lens).unwrap();
+        let shards: Vec<Vec<u8>> = lens
+            .iter()
+            .map(|&l| (0..l).map(|_| rng.next_u64() as u8).collect())
+            .collect();
+        let views: Vec<&[u8]> = shards.iter().map(Vec::as_slice).collect();
+        let parities = g.encode_all(&views);
+        let pviews: Vec<&[u8]> = parities.iter().map(Vec::as_slice).collect();
+        let lost = rng.below(n);
+        let mut surv = views.clone();
+        let empty: &[u8] = &[];
+        surv[lost] = empty;
+        let rec = g.decode(lost, &surv, &pviews).unwrap();
+        assert_eq!(rec, shards[lost], "case {case}: n={n} lens={lens:?} lost={lost}");
+    }
+}
+
+/// Snapshot plans partition every stage payload exactly, with near-equal
+/// shards, regardless of topology.
+#[test]
+fn prop_snapshot_plan_partitions() {
+    let mut rng = Rng::seed_from(0x51AD);
+    for case in 0..CASES {
+        let gpn = [2usize, 4, 8][rng.below(3)];
+        let tp = [1usize, 2, gpn][rng.below(3)];
+        let pp = 1 + rng.below(4);
+        let nodes = 1 + rng.below(8);
+        let capacity = nodes * gpn / (tp * pp);
+        if capacity == 0 {
+            continue;
+        }
+        let dp = 1 + rng.below(capacity);
+        let Ok(topo) = Topology::build(ParallelPlan::new(dp, tp, pp), nodes, gpn) else {
+            continue;
+        };
+        let stage_bytes: Vec<u64> = (0..pp).map(|_| rng.below(1 << 20) as u64).collect();
+        let plan = SnapshotPlan::build(&topo, &stage_bytes);
+        for (stage, &bytes) in stage_bytes.iter().enumerate() {
+            let mut ranges: Vec<_> = plan
+                .shards_for_stage(stage)
+                .map(|s| s.range.clone())
+                .collect();
+            ranges.sort_by_key(|r| r.start);
+            let mut expect = 0u64;
+            for r in &ranges {
+                assert_eq!(r.start, expect, "case {case} gap in stage {stage}");
+                expect = r.end;
+            }
+            assert_eq!(expect, bytes, "case {case} stage {stage} not covered");
+            // near-equal shards
+            if !ranges.is_empty() {
+                let lens: Vec<u64> = ranges.iter().map(|r| r.end - r.start).collect();
+                let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+                assert!(mx - mn <= 1, "case {case}: uneven {lens:?}");
+            }
+            // per-GPU sub-ranges cover the shard
+            for s in plan.shards_for_stage(stage) {
+                let sub: u64 = s.per_gpu.iter().map(|(_, r)| r.end - r.start).sum();
+                assert_eq!(sub, s.len(), "case {case}");
+            }
+        }
+    }
+}
+
+/// Recovery decision invariants:
+/// * RAIM5 decode is chosen only when every affected SG lost exactly one node
+///   (and has peers to decode from);
+/// * >= 2 losses in one SG always falls through to checkpoint/fatal;
+/// * pure software failures never touch storage.
+#[test]
+fn prop_recovery_decisions() {
+    let mut rng = Rng::seed_from(0xDEC1DE);
+    for case in 0..CASES {
+        let topo = match rng.below(3) {
+            0 => Topology::build(ParallelPlan::new(2, 4, 3), 6, 4),
+            1 => Topology::build(ParallelPlan::dp_only(24), 6, 4),
+            _ => Topology::build(ParallelPlan::new(1, 4, 6), 6, 4),
+        }
+        .unwrap();
+        let mut status = vec![NodeStatus::Healthy; 6];
+        for s in status.iter_mut() {
+            *s = match rng.below(10) {
+                0 => NodeStatus::Offline,
+                1 | 2 => NodeStatus::Unhealthy,
+                _ => NodeStatus::Healthy,
+            };
+        }
+        let ckpt = rng.below(2) == 0;
+        let d = decide(&topo, &status, true, ckpt);
+
+        let offline: Vec<usize> = (0..6)
+            .filter(|&i| status[i] == NodeStatus::Offline)
+            .collect();
+        let any_unhealthy = status.iter().any(|s| *s == NodeStatus::Unhealthy);
+        let sgs = topo.sharding_groups();
+        let hit_sgs: Vec<_> = sgs
+            .iter()
+            .filter(|sg| sg.nodes.iter().any(|n| offline.contains(n)))
+            .collect();
+        let max_loss_per_sg = hit_sgs
+            .iter()
+            .map(|sg| sg.nodes.iter().filter(|n| offline.contains(n)).count())
+            .max()
+            .unwrap_or(0);
+        let min_hit_sg_size = hit_sgs.iter().map(|sg| sg.len()).min();
+
+        match &d {
+            RecoveryDecision::DecodeRaim5 { lost } => {
+                assert_eq!(max_loss_per_sg, 1, "case {case}: {status:?}");
+                assert!(min_hit_sg_size.unwrap() >= 2, "case {case}");
+                assert!(!lost.is_empty());
+            }
+            RecoveryDecision::LoadCheckpoint => {
+                assert!(ckpt, "case {case}: checkpoint chosen but unavailable");
+                assert!(
+                    max_loss_per_sg > 1 || min_hit_sg_size == Some(1),
+                    "case {case}: fell back although decodable: {status:?}"
+                );
+            }
+            RecoveryDecision::Fatal => {
+                assert!(!ckpt, "case {case}");
+            }
+            RecoveryDecision::ResumeFromSmp => {
+                // only reachable without SG-relevant node losses
+                assert!(hit_sgs.is_empty(), "case {case}: {status:?}");
+                assert!(any_unhealthy, "case {case}");
+            }
+            RecoveryDecision::None => {
+                assert!(hit_sgs.is_empty() && !any_unhealthy, "case {case}: {status:?}");
+            }
+        }
+    }
+}
+
+/// JSON writer/parser round-trip on randomly generated values.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::seed_from(0x150);
+    for case in 0..CASES {
+        let v = gen(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}: {text}");
+    }
+}
+
+/// Bucket pipes tile any range exactly, in order, with every bucket at most
+/// the configured size and only the last one smaller.
+#[test]
+fn prop_bucket_pipe_tiles_exactly() {
+    let mut rng = Rng::seed_from(0xB0C4);
+    for case in 0..CASES {
+        let start = rng.below(10_000) as u64;
+        let len = rng.below(100_000) as u64;
+        let bucket = 1 + rng.below(9_999);
+        let rs: Vec<_> = BucketPipe::new(start..start + len, bucket).collect();
+        if len == 0 {
+            assert!(rs.is_empty());
+            continue;
+        }
+        assert_eq!(rs.first().unwrap().start, start, "case {case}");
+        assert_eq!(rs.last().unwrap().end, start + len);
+        for (i, w) in rs.windows(2).enumerate() {
+            assert_eq!(w[0].end, w[1].start, "case {case} gap at {i}");
+            assert_eq!(w[0].end - w[0].start, bucket as u64, "only last may be short");
+        }
+        assert!(rs.last().unwrap().end - rs.last().unwrap().start <= bucket as u64);
+    }
+}
+
+/// Checkpoint container: decode(encode(x)) == x, and any single-bit flip is
+/// detected.
+#[test]
+fn prop_checkpoint_roundtrip_and_corruption() {
+    let mut rng = Rng::seed_from(0xC4C);
+    for case in 0..60 {
+        let mut f = CheckpointFile::new(format!("m{case}"), rng.next_u64() % 10_000);
+        let sections = 1 + rng.below(4);
+        for id in 0..sections {
+            let len = rng.below(2000);
+            let body: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+            f.add_section(SectionKind::StagePayload, id as u32, body);
+        }
+        let bytes = f.encode();
+        let back = CheckpointFile::decode(&bytes).unwrap();
+        assert_eq!(back.sections.len(), sections);
+        for (a, b) in back.sections.iter().zip(&f.sections) {
+            assert_eq!(a.body, b.body, "case {case}");
+        }
+        // flip one random bit
+        let mut corrupt = bytes.clone();
+        let pos = rng.below(corrupt.len());
+        corrupt[pos] ^= 1 << rng.below(8);
+        assert!(
+            CheckpointFile::decode(&corrupt).is_err(),
+            "case {case}: flip at {pos} undetected"
+        );
+    }
+}
+
+/// Every generated schedule (both shapes, random sizes) passes the validator
+/// and 1F1B's activation peak never exceeds the stage depth bound.
+#[test]
+fn prop_schedules_valid() {
+    let mut rng = Rng::seed_from(0x5CED);
+    for _ in 0..CASES {
+        let p = 1 + rng.below(8);
+        let m = 1 + rng.below(16);
+        for sched in [Schedule::GPipe, Schedule::OneFOneB] {
+            let s = pipeline::build(sched, p, m);
+            pipeline::validate(&s, m).unwrap();
+            if sched == Schedule::OneFOneB {
+                for stage in 0..p {
+                    assert!(pipeline::peak_activations(&s, stage) <= p.min(m) + 1);
+                }
+            }
+        }
+    }
+}
+
+/// StageState payload round-trips for random sizes.
+#[test]
+fn prop_state_payload_roundtrip() {
+    use reft::model::StageState;
+    let mut rng = Rng::seed_from(0x57A7E);
+    for case in 0..60 {
+        let n = 1 + rng.below(5000);
+        let mut st = StageState {
+            stage: case % 7,
+            params: (0..n).map(|_| rng.f32()).collect(),
+            adam_m: (0..n).map(|_| rng.f32()).collect(),
+            adam_v: (0..n).map(|_| rng.f32()).collect(),
+            step: rng.next_u64() % 100_000,
+            rng_state: [rng.next_u64(); 4],
+        };
+        st.rng_state[2] = rng.next_u64();
+        let payload = st.to_payload();
+        let back = StageState::from_payload(st.stage, n, &payload).unwrap();
+        assert_eq!(back.params, st.params, "case {case}");
+        assert_eq!(back.adam_m, st.adam_m);
+        assert_eq!(back.adam_v, st.adam_v);
+        assert_eq!(back.step, st.step);
+        assert_eq!(back.rng_state, st.rng_state);
+    }
+}

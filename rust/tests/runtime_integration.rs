@@ -1,0 +1,169 @@
+//! Integration: rust PJRT runtime executes the AOT artifacts and reproduces
+//! the JAX-side golden numerics — the cross-language correctness contract.
+//!
+//! Requires `make artifacts` (skips gracefully if artifacts are absent so
+//! `cargo test` stays runnable on a fresh checkout).
+
+use std::path::{Path, PathBuf};
+
+use reft::runtime::{self, Engine, Manifest};
+
+fn artifacts_root() -> Option<PathBuf> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("tiny/manifest.json").exists().then_some(root)
+}
+
+fn read_f32(p: &Path) -> Vec<f32> {
+    let b = std::fs::read(p).unwrap();
+    reft::model::bytes_to_f32(&b)
+}
+
+fn read_i32(p: &Path) -> Vec<i32> {
+    let b = std::fs::read(p).unwrap();
+    assert_eq!(b.len() % 4, 0);
+    b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+fn maxdiff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[test]
+fn full_fwd_bwd_matches_golden() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let man = Manifest::load(&root, "tiny").unwrap();
+    let full = man.full.as_ref().expect("tiny exports full artifacts");
+    let g = root.join("tiny/golden");
+
+    let flat = read_f32(&g.join("full_flat.f32"));
+    let tokens = read_i32(&g.join("tokens.i32"));
+    let targets = read_i32(&g.join("targets.i32"));
+    let grads_gold = read_f32(&g.join("grads.f32"));
+    assert_eq!(flat.len(), full.n_params);
+
+    let meta = std::fs::read_to_string(g.join("golden.json")).unwrap();
+    let meta = reft::util::json::Json::parse(&meta).unwrap();
+    let loss_gold = meta.at(&["loss"]).as_f64().unwrap() as f32;
+
+    let mut eng = Engine::cpu(&root).unwrap();
+    let b = man.hyper.batch;
+    let t = man.hyper.seq;
+    let outs = eng
+        .run(
+            full.artifacts.get("fwd_bwd").unwrap(),
+            &[
+                runtime::lit_f32(&flat, &[flat.len()]).unwrap(),
+                runtime::lit_i32(&tokens, &[b, t]).unwrap(),
+                runtime::lit_i32(&targets, &[b, t]).unwrap(),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 2, "loss + grads");
+    let loss = runtime::scalar_f32(&outs[0]).unwrap();
+    let grads = runtime::vec_f32(&outs[1]).unwrap();
+
+    assert!(
+        (loss - loss_gold).abs() < 1e-4,
+        "loss {loss} vs golden {loss_gold}"
+    );
+    let md = maxdiff(&grads, &grads_gold);
+    assert!(md < 1e-4, "grads maxdiff {md}");
+}
+
+#[test]
+fn adam_artifact_matches_golden() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let man = Manifest::load(&root, "tiny").unwrap();
+    let full = man.full.as_ref().unwrap();
+    let g = root.join("tiny/golden");
+
+    let flat = read_f32(&g.join("full_flat.f32"));
+    let grads = read_f32(&g.join("grads.f32"));
+    let p_gold = read_f32(&g.join("adam_p.f32"));
+    let m_gold = read_f32(&g.join("adam_m.f32"));
+    let v_gold = read_f32(&g.join("adam_v.f32"));
+
+    let n = flat.len();
+    let zeros = vec![0f32; n];
+    let mut eng = Engine::cpu(&root).unwrap();
+    let outs = eng
+        .run(
+            full.artifacts.get("adam").unwrap(),
+            &[
+                runtime::lit_f32(&flat, &[n]).unwrap(),
+                runtime::lit_f32(&zeros, &[n]).unwrap(),
+                runtime::lit_f32(&zeros, &[n]).unwrap(),
+                runtime::lit_f32(&grads, &[n]).unwrap(),
+                runtime::lit_f32_scalar_vec(1.0),
+            ],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    let p2 = runtime::vec_f32(&outs[0]).unwrap();
+    let m2 = runtime::vec_f32(&outs[1]).unwrap();
+    let v2 = runtime::vec_f32(&outs[2]).unwrap();
+    assert!(maxdiff(&p2, &p_gold) < 1e-5, "p maxdiff {}", maxdiff(&p2, &p_gold));
+    assert!(maxdiff(&m2, &m_gold) < 1e-6);
+    assert!(maxdiff(&v2, &v_gold) < 1e-6);
+}
+
+#[test]
+fn staged_pipeline_matches_golden_activations() {
+    let Some(root) = artifacts_root() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let man = Manifest::load(&root, "tiny").unwrap();
+    let g = root.join("tiny/golden");
+    let meta = std::fs::read_to_string(g.join("golden.json")).unwrap();
+    let meta = reft::util::json::Json::parse(&meta).unwrap();
+    let stage_sizes: Vec<usize> = meta
+        .at(&["stage_sizes"])
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    // golden was generated with a 2-stage split; the default export is
+    // 4-stage — only run when they match
+    if stage_sizes.len() != man.n_stages {
+        eprintln!(
+            "skipping: golden has {} stages, manifest has {}",
+            stage_sizes.len(),
+            man.n_stages
+        );
+        return;
+    }
+
+    let full_flat = read_f32(&g.join("full_flat.f32"));
+    let tokens = read_i32(&g.join("tokens.i32"));
+    let act0_gold = read_f32(&g.join("act0.f32"));
+
+    let mut eng = Engine::cpu(&root).unwrap();
+    let (b, t) = (man.hyper.batch, man.hyper.seq);
+    let flat0 = &full_flat[..stage_sizes[0]];
+    let outs = eng
+        .run(
+            man.stage(0).artifacts.get("fwd").unwrap(),
+            &[
+                runtime::lit_f32(flat0, &[flat0.len()]).unwrap(),
+                runtime::lit_i32(&tokens, &[b, t]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let act0 = runtime::vec_f32(&outs[0]).unwrap();
+    let md = maxdiff(&act0, &act0_gold);
+    assert!(md < 1e-4, "stage0 activation maxdiff {md}");
+}
