@@ -48,6 +48,13 @@ fn main() -> anyhow::Result<()> {
     let steps: usize = flags.get("steps").map(|s| s.parse()).unwrap_or(Ok(300))?;
     let pp: usize = flags.get("pp").map(|s| s.parse()).unwrap_or(Ok(1))?;
     let dp: usize = flags.get("dp").map(|s| s.parse()).unwrap_or(Ok(2))?;
+    // hierarchical async snapshot coordination (§4.1) is the default here;
+    // `--async false` runs the blocking save path — comparing the two runs'
+    // "save stall" lines is the live sync-vs-async measurement
+    let async_on = flags
+        .get("async")
+        .map(|s| s == "true" || s == "1")
+        .unwrap_or(true);
 
     let mut cfg = RunConfig::default();
     cfg.model = model.clone();
@@ -62,6 +69,7 @@ fn main() -> anyhow::Result<()> {
     cfg.ft.snapshot_interval = 5;
     cfg.ft.persist_every = 4; // durable checkpoint every 20 steps
     cfg.ft.raim5 = true;
+    cfg.ft.async_snapshot = async_on;
 
     // fresh checkpoint dir per run: a stale checkpoint from an earlier run
     // must never satisfy this run's fallback path
@@ -72,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     println!("== REFT end-to-end driver ==");
     println!(
         "model={model} steps={steps} plan=dp{dp}/pp{pp} ft=reft-ckpt \
-         snapshot_every=5 persist_every=50"
+         snapshot_every=5 persist_every=20 async_snapshot={async_on}"
     );
 
     // inject only after at least one snapshot round exists (interval 5)
@@ -122,6 +130,23 @@ fn main() -> anyhow::Result<()> {
                      has no RAIM5 peers — see examples/failure_recovery.rs)"
                 );
             }
+            // the sync-vs-async stall measurement: with --async true the
+            // "snapshot" timer is the L1 enqueue and "snapshot_tick" the L2
+            // per-iteration drain; with --async false "snapshot" is the full
+            // blocking round. Compare the two runs' max values.
+            let snap = $tr.metrics.timer("snapshot");
+            let tick = $tr.metrics.timer("snapshot_tick");
+            println!(
+                "save stall ({}): snapshot() max {:.3} ms / mean {:.3} ms over {} calls; \
+                 tick max {:.3} ms / mean {:.3} ms over {} ticks",
+                if async_on { "async enqueue" } else { "blocking round" },
+                snap.max * 1e3,
+                snap.mean() * 1e3,
+                snap.count,
+                tick.max * 1e3,
+                tick.mean() * 1e3,
+                tick.count
+            );
             format!("{}", $tr.metrics.to_json())
         }};
     }

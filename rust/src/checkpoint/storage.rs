@@ -18,10 +18,25 @@ pub trait Storage: Send + Sync {
     fn list(&self) -> Vec<String>;
     fn delete(&self, key: &str) -> Result<()>;
 
-    /// Latest checkpoint key by lexicographic order of a zero-padded step
-    /// prefix (the naming convention [`step_key`] produces).
+    /// Latest checkpoint key across the whole store by lexicographic order.
+    ///
+    /// CAUTION: with [`step_key`] names this compares the *model* component
+    /// first, so in a store holding several models it returns the newest
+    /// step of the alphabetically-last model — use [`Storage::latest_for`]
+    /// when the model is known (the trainers do).
     fn latest(&self) -> Option<String> {
         self.list().into_iter().max()
+    }
+
+    /// Latest checkpoint key for one model: filters to the `model/step-`
+    /// prefix, where the zero-padded step makes lexicographic max equal
+    /// numeric max.
+    fn latest_for(&self, model: &str) -> Option<String> {
+        let prefix = format!("{model}/step-");
+        self.list()
+            .into_iter()
+            .filter(|k| k.starts_with(&prefix))
+            .max()
     }
 }
 
@@ -159,6 +174,24 @@ mod tests {
         store.delete(&step_key("m", 40)).unwrap();
         assert_eq!(store.latest().unwrap(), step_key("m", 12));
         assert!(store.get("missing").is_err());
+    }
+
+    #[test]
+    fn latest_for_filters_by_model() {
+        // regression: with two models, whole-store `latest()` picks the
+        // alphabetically-last model name, not the newest step
+        let s = MemStorage::new();
+        s.put(&step_key("alpha", 900), b"a900").unwrap();
+        s.put(&step_key("zeta", 3), b"z3").unwrap();
+        assert_eq!(s.latest().unwrap(), step_key("zeta", 3));
+        assert_eq!(s.latest_for("alpha").unwrap(), step_key("alpha", 900));
+        assert_eq!(s.latest_for("zeta").unwrap(), step_key("zeta", 3));
+        // prefix must match the full model segment, not a substring
+        assert!(s.latest_for("alp").is_none());
+        assert!(s.latest_for("missing").is_none());
+        // newest step wins within a model
+        s.put(&step_key("alpha", 1000), b"a1000").unwrap();
+        assert_eq!(s.latest_for("alpha").unwrap(), step_key("alpha", 1000));
     }
 
     #[test]

@@ -73,6 +73,16 @@ pub struct FtConfig {
     pub raim5: bool,
     /// number of clean snapshot copies kept on each SMP (>= 1)
     pub clean_copies: usize,
+    /// drive saves through the hierarchical asynchronous snapshot
+    /// coordinator (§4.1 L1-L3): `snapshot()` enqueues and returns, buckets
+    /// drain across subsequent iteration ticks. Off by default so the
+    /// classic blocking semantics (snapshot complete on return) hold unless
+    /// a run opts in; the e2e driver and the async benches turn it on.
+    pub async_snapshot: bool,
+    /// L2 interference bound: max buckets each node drains per `tick()`.
+    /// `drain_buckets_per_tick * bucket_bytes` is the per-node PCIe budget
+    /// one training iteration donates to snapshot traffic.
+    pub drain_buckets_per_tick: usize,
 }
 
 impl Default for FtConfig {
@@ -84,6 +94,8 @@ impl Default for FtConfig {
             bucket_bytes: 16 * 1024 * 1024,
             raim5: true,
             clean_copies: 1,
+            async_snapshot: false,
+            drain_buckets_per_tick: 8,
         }
     }
 }
@@ -185,6 +197,12 @@ impl RunConfig {
             if let Some(n) = ft.get("clean_copies").and_then(Json::as_usize) {
                 c.ft.clean_copies = n.max(1);
             }
+            if let Some(b) = ft.get("async_snapshot").and_then(Json::as_bool) {
+                c.ft.async_snapshot = b;
+            }
+            if let Some(n) = ft.get("drain_buckets_per_tick").and_then(Json::as_usize) {
+                c.ft.drain_buckets_per_tick = n.max(1);
+            }
         }
         Ok(c)
     }
@@ -223,6 +241,22 @@ mod tests {
         assert_eq!(c.ft.method, FtMethod::ReftSn);
         assert_eq!(c.ft.clean_copies, 2);
         assert_eq!(c.ft.bucket_bytes, 8 * 1024 * 1024);
+    }
+
+    #[test]
+    fn parse_coordinator_knobs() {
+        let text = r#"{
+            "ft": {"async_snapshot": true, "drain_buckets_per_tick": 3}
+        }"#;
+        let c = RunConfig::from_json_text(text).unwrap();
+        assert!(c.ft.async_snapshot);
+        assert_eq!(c.ft.drain_buckets_per_tick, 3);
+        // defaults: blocking semantics, budget floor of 1
+        let d = RunConfig::default();
+        assert!(!d.ft.async_snapshot);
+        assert!(d.ft.drain_buckets_per_tick >= 1);
+        let z = RunConfig::from_json_text(r#"{"ft": {"drain_buckets_per_tick": 0}}"#).unwrap();
+        assert_eq!(z.ft.drain_buckets_per_tick, 1);
     }
 
     #[test]

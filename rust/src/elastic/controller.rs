@@ -1,15 +1,30 @@
 //! The live REFT cluster: per-node SMP threads + the snapshot/recovery
 //! orchestration over them. This is what the trainer and the e2e examples
 //! drive — real bytes, real threads, real XOR decode.
+//!
+//! Two save paths share the SMP protocol:
+//! * the **blocking** path ([`ReftCluster::snapshot_all_blocking`]) drains
+//!   every bucket inside the call — the CheckFreq-shaped baseline behavior
+//!   and the semantics every pre-coordinator test relies on;
+//! * the **asynchronous** path ([`ReftCluster::request_snapshot`] +
+//!   [`ReftCluster::tick`]) goes through the hierarchical coordinator
+//!   (§4.1 L1-L3, `snapshot::coord`): enqueue returns immediately and
+//!   buckets drain across iteration ticks under a per-node budget.
+//!
+//! [`ReftCluster::snapshot_all`] picks the path from
+//! `FtConfig::async_snapshot` but always completes the round before
+//! returning, so its call sites keep snapshot-visible-on-return semantics.
 
 use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::FtConfig;
 use crate::ec::Raim5Group;
-use crate::smp::{Signal, Smp, SmpMsg};
-use crate::snapshot::{BucketPipe, SnapshotPlan};
+use crate::smp::{BucketRef, Signal, Smp, SmpMsg};
+use crate::snapshot::{BucketPipe, CoordSink, SnapshotCoordinator, SnapshotPlan, TickReport};
 use crate::topology::Topology;
 
 /// The in-memory fault-tolerance fabric of one training cluster.
@@ -21,8 +36,72 @@ pub struct ReftCluster {
     smps: Vec<Option<Smp>>,
     /// RAIM5 layout per PP stage (only for SGs with >= 2 nodes)
     groups: BTreeMap<usize, Raim5Group>,
-    /// the snapshot version counter (one per completed snapshot round)
+    /// the asynchronous drain state machine (idle unless a snapshot is in
+    /// flight); also consulted by the blocking path to cancel stale rounds
+    coord: SnapshotCoordinator,
+    /// the snapshot version counter (one per requested snapshot round)
     pub version: u64,
+}
+
+/// [`CoordSink`] over the live SMP channels: every coordinator action is one
+/// FIFO message to the owning node's SMP.
+struct SmpSink<'a> {
+    smps: &'a [Option<Smp>],
+}
+
+impl SmpSink<'_> {
+    fn smp(&self, node: usize) -> Result<&Smp> {
+        self.smps
+            .get(node)
+            .and_then(Option::as_ref)
+            .with_context(|| format!("node {node} is offline — cannot snapshot"))
+    }
+}
+
+impl CoordSink for SmpSink<'_> {
+    fn begin(&mut self, node: usize, version: u64, stage: usize, total_len: usize) -> Result<()> {
+        self.smp(node)?
+            .send(SmpMsg::BeginSnapshot { version, stage, total_len })
+    }
+
+    fn bucket(
+        &mut self,
+        node: usize,
+        version: u64,
+        stage: usize,
+        offset: usize,
+        seg: &Arc<Vec<u8>>,
+        range: Range<usize>,
+    ) -> Result<()> {
+        self.smp(node)?.send(SmpMsg::Bucket {
+            version,
+            stage,
+            offset,
+            data: BucketRef::Shared { seg: Arc::clone(seg), range },
+        })
+    }
+
+    fn end(&mut self, node: usize, version: u64, stage: usize) -> Result<()> {
+        self.smp(node)?.send(SmpMsg::EndSnapshot { version, stage })
+    }
+
+    fn store_parity(
+        &mut self,
+        node: usize,
+        version: u64,
+        stage: usize,
+        data: Vec<u8>,
+    ) -> Result<()> {
+        self.smp(node)?.send(SmpMsg::StoreParity { version, stage, data })
+    }
+
+    fn abort(&mut self, node: usize, version: u64, stage: usize) -> Result<()> {
+        self.smp(node)?.send(SmpMsg::AbortSnapshot { version, stage })
+    }
+
+    fn alive(&mut self, node: usize) -> bool {
+        self.smps.get(node).and_then(Option::as_ref).is_some()
+    }
 }
 
 impl ReftCluster {
@@ -44,11 +123,67 @@ impl ReftCluster {
         for smp in smps.iter().flatten() {
             smp.send(SmpMsg::Signal(Signal::Snap))?;
         }
-        Ok(ReftCluster { topo, plan, ft, smps, groups, version: 0 })
+        let coord = SnapshotCoordinator::new(
+            plan.clone(),
+            groups.clone(),
+            ft.bucket_bytes,
+            ft.drain_buckets_per_tick,
+        );
+        Ok(ReftCluster { topo, plan, ft, smps, groups, coord, version: 0 })
     }
 
     pub fn smp(&self, node: usize) -> Option<&Smp> {
         self.smps.get(node).and_then(Option::as_ref)
+    }
+
+    // -- asynchronous save path (§4.1 hierarchical coordination) -----------
+
+    /// L1 enqueue: open a new snapshot version and return immediately; the
+    /// payload buckets drain across subsequent [`Self::tick`]s. A still
+    /// in-flight older version is aborted (L3 supersession).
+    pub fn request_snapshot(&mut self, payloads: Vec<Vec<u8>>) -> Result<u64> {
+        self.version += 1;
+        let v = self.version;
+        let mut sink = SmpSink { smps: &self.smps };
+        self.coord.submit(v, payloads, &mut sink)?;
+        Ok(v)
+    }
+
+    /// L2 drain: move up to `drain_buckets_per_tick` buckets per node.
+    /// Called by the trainers at every iteration boundary; a no-op when
+    /// nothing is in flight.
+    pub fn tick(&mut self) -> Result<TickReport> {
+        let mut sink = SmpSink { smps: &self.smps };
+        self.coord.tick(&mut sink)
+    }
+
+    /// Tick until the in-flight round completes or aborts (bounded by the
+    /// coordinator's L2 completion bound — never an unbounded spin).
+    pub fn drain_pending(&mut self) -> Result<()> {
+        let bound = self.coord.ticks_bound();
+        for _ in 0..=bound {
+            if self.coord.is_idle() {
+                break;
+            }
+            self.tick()?;
+        }
+        anyhow::ensure!(
+            self.coord.is_idle(),
+            "snapshot backlog failed to drain within {bound} ticks"
+        );
+        Ok(())
+    }
+
+    /// Abort any in-flight asynchronous round (aborts racing dead SMPs are
+    /// ignored by design).
+    pub fn cancel_in_flight(&mut self) {
+        let mut sink = SmpSink { smps: &self.smps };
+        self.coord.abort_in_flight(&mut sink);
+    }
+
+    /// Coordinator introspection (versions, pending buckets, stats).
+    pub fn coordinator(&self) -> &SnapshotCoordinator {
+        &self.coord
     }
 
     /// Snapshot one stage's payload across its sharding group in tiny
@@ -106,9 +241,32 @@ impl ReftCluster {
         Ok(())
     }
 
-    /// Snapshot all stages (one consistent version).
+    /// Snapshot all stages (one consistent version), complete on return.
+    /// Dispatches on `FtConfig::async_snapshot`: the async flavour still
+    /// exercises the coordinator (enqueue + bounded drain), the blocking
+    /// flavour is the legacy in-caller bucket loop. Either way the round is
+    /// fully promoted when this returns, so restore sees it immediately.
     pub fn snapshot_all(&mut self, payloads: &[Vec<u8>]) -> Result<u64> {
+        if self.ft.async_snapshot {
+            let v = self.request_snapshot(payloads.to_vec())?;
+            self.drain_pending()?;
+            anyhow::ensure!(
+                self.coord.stats().last_completed_version == Some(v),
+                "async snapshot v{v} aborted mid-drain"
+            );
+            Ok(v)
+        } else {
+            self.snapshot_all_blocking(payloads)
+        }
+    }
+
+    /// The legacy synchronous save: every bucket of every stage drains
+    /// inside this call (what the async coordinator is measured against,
+    /// and the deterministic path recovery re-protection uses).
+    pub fn snapshot_all_blocking(&mut self, payloads: &[Vec<u8>]) -> Result<u64> {
         anyhow::ensure!(payloads.len() == self.topo.plan.pp);
+        // a round the coordinator still has in flight is now stale
+        self.cancel_in_flight();
         self.version += 1;
         let v = self.version;
         for (stage, payload) in payloads.iter().enumerate() {
@@ -197,11 +355,14 @@ impl ReftCluster {
             .collect()
     }
 
-    /// Simulate losing a node: its SMP dies with all buffers.
+    /// Simulate losing a node: its SMP dies with all buffers. An in-flight
+    /// asynchronous round can no longer complete consistently, so it is
+    /// aborted on the survivors (their last clean version stays served).
     pub fn kill_node(&mut self, node: usize) {
         if let Some(mut smp) = self.smps[node].take() {
             smp.kill();
         }
+        self.cancel_in_flight();
     }
 
     /// Elastic substitute-node introduction: a fresh SMP joins in place of a
@@ -332,6 +493,76 @@ mod tests {
         c.kill_node(4);
         let restored = c.restore_all(&[4]).unwrap();
         assert_eq!(restored, payloads);
+    }
+
+    fn dp6_async_cluster(bucket: usize, budget: usize) -> (ReftCluster, Vec<Vec<u8>>) {
+        let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+        let bytes = vec![60_000u64];
+        let ft = FtConfig {
+            bucket_bytes: bucket,
+            async_snapshot: true,
+            drain_buckets_per_tick: budget,
+            ..FtConfig::default()
+        };
+        let cluster = ReftCluster::start(topo, &bytes, ft).unwrap();
+        let payloads = vec![payload(60_000, 9)];
+        (cluster, payloads)
+    }
+
+    #[test]
+    fn async_compat_wrapper_completes_before_returning() {
+        let (mut c, payloads) = dp6_async_cluster(1024, 2);
+        let v = c.snapshot_all(&payloads).unwrap();
+        assert_eq!(v, 1);
+        assert!(c.coordinator().is_idle());
+        assert_eq!(c.coordinator().stats().completed, 1);
+        assert!(c.coordinator().stats().ticks > 1, "multi-tick drain");
+        assert_eq!(c.restore_all(&[]).unwrap(), payloads);
+    }
+
+    #[test]
+    fn request_snapshot_is_an_enqueue_then_ticks_finish_it() {
+        let (mut c, payloads) = dp6_async_cluster(1024, 2);
+        let v = c.request_snapshot(payloads.clone()).unwrap();
+        assert_eq!(c.coordinator().in_flight_version(), Some(v));
+        assert!(c.coordinator().pending_buckets() > 0);
+        // nothing promoted yet: restore must fail (no clean snapshot)
+        assert!(c.restore_all(&[]).is_err());
+        let bound = c.coordinator().ticks_bound();
+        let mut completed = false;
+        for _ in 0..bound {
+            if c.tick().unwrap().completed {
+                completed = true;
+                break;
+            }
+        }
+        assert!(completed, "must finish within the L2 bound of {bound} ticks");
+        assert_eq!(c.restore_all(&[]).unwrap(), payloads);
+    }
+
+    #[test]
+    fn async_and_blocking_paths_restore_identical_bytes() {
+        let (mut a, payloads) = dp6_async_cluster(4096, 4);
+        a.snapshot_all(&payloads).unwrap();
+        let (mut b, _) = dp6_cluster(true);
+        b.snapshot_all_blocking(&payloads).unwrap();
+        assert_eq!(
+            a.restore_all(&[]).unwrap(),
+            b.restore_all(&[]).unwrap(),
+            "payload through the coordinator must be byte-identical"
+        );
+    }
+
+    #[test]
+    fn node_loss_mid_drain_keeps_previous_version_restorable() {
+        let (mut c, payloads) = dp6_async_cluster(1024, 2);
+        c.snapshot_all(&payloads).unwrap(); // v1 complete
+        let newer = vec![payload(60_000, 33)];
+        c.request_snapshot(newer).unwrap(); // v2 in flight
+        c.tick().unwrap(); // partial drain
+        c.kill_node(2); // v2 aborted on survivors; v1 stays clean
+        let restored = c.restore_all(&[2]).unwrap();
+        assert_eq!(restored, payloads, "torn v2 must never surface");
     }
 
     #[test]

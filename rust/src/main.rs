@@ -112,11 +112,16 @@ fn build_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
     cfg.ft.snapshot_interval = get_usize("snapshot-interval", cfg.ft.snapshot_interval)?;
     cfg.ft.persist_every = get_usize("persist-every", cfg.ft.persist_every)?;
     cfg.ft.bucket_bytes = get_usize("bucket-bytes", cfg.ft.bucket_bytes)?;
+    cfg.ft.drain_buckets_per_tick =
+        get_usize("drain-buckets-per-tick", cfg.ft.drain_buckets_per_tick)?.max(1);
     if let Some(ft) = flags.get("ft") {
         cfg.ft.method = FtMethod::parse(ft)?;
     }
     if let Some(r) = flags.get("raim5") {
         cfg.ft.raim5 = r == "true" || r == "1";
+    }
+    if let Some(a) = flags.get("async-snapshot") {
+        cfg.ft.async_snapshot = a == "true" || a == "1";
     }
     if let Some(a) = flags.get("artifacts") {
         cfg.artifacts_dir = a.clone();

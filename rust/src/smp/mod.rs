@@ -50,6 +50,9 @@ pub enum SmpMsg {
     Bucket { version: u64, stage: usize, offset: usize, data: BucketRef },
     /// all buckets for (version, stage) sent — promote dirty -> clean
     EndSnapshot { version: u64, stage: usize },
+    /// the coordinator superseded or failed (version, stage) mid-flight —
+    /// drop the dirty buffer (recycling it) without promotion
+    AbortSnapshot { version: u64, stage: usize },
     /// store a RAIM5 parity block this node hosts
     StoreParity { version: u64, stage: usize, data: Vec<u8> },
     /// fetch the latest clean snapshot of a stage shard
@@ -101,6 +104,7 @@ pub struct SmpStats {
     pub buckets_received: u64,
     pub promotions: u64,
     pub stale_end_snapshots: u64,
+    pub aborted_in_flight: u64,
 }
 
 struct DirtyBuf {
@@ -125,6 +129,7 @@ struct SmpState {
     buckets_received: u64,
     promotions: u64,
     stale_end_snapshots: u64,
+    aborted_in_flight: u64,
 }
 
 impl SmpState {
@@ -201,6 +206,22 @@ impl SmpState {
                     self.stale_end_snapshots += 1;
                 }
             }
+            SmpMsg::AbortSnapshot { version, stage } => {
+                // only the matching in-flight version is dropped: an abort
+                // for a superseded version must not tear down its successor
+                let matches = matches!(
+                    self.dirty.get(&stage),
+                    Some(b) if b.version == version
+                );
+                if matches {
+                    let buf = self.dirty.remove(&stage).unwrap();
+                    let pool = self.free.entry(stage).or_default();
+                    if pool.is_empty() {
+                        pool.push(buf.data);
+                    }
+                    self.aborted_in_flight += 1;
+                }
+            }
             SmpMsg::StoreParity { version, stage, data } => {
                 self.parity.insert(stage, (version, data));
             }
@@ -234,6 +255,7 @@ impl SmpState {
                     buckets_received: self.buckets_received,
                     promotions: self.promotions,
                     stale_end_snapshots: self.stale_end_snapshots,
+                    aborted_in_flight: self.aborted_in_flight,
                 });
             }
             SmpMsg::Shutdown => return false,
@@ -267,6 +289,7 @@ impl Smp {
                     buckets_received: 0,
                     promotions: 0,
                     stale_end_snapshots: 0,
+                    aborted_in_flight: 0,
                 };
                 while let Ok(msg) = rx.recv() {
                     if !st.handle(msg) {
@@ -439,6 +462,33 @@ mod tests {
         smp.kill();
         assert!(!smp.is_alive());
         assert!(smp.get_clean(0).is_err(), "buffers gone with the node");
+    }
+
+    #[test]
+    fn abort_drops_only_matching_dirty_version() {
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        snapshot_roundtrip(&smp, 0, 1, &[5u8; 64], 16);
+        // v2 in flight...
+        smp.send(SmpMsg::BeginSnapshot { version: 2, stage: 0, total_len: 64 })
+            .unwrap();
+        smp.send(SmpMsg::Bucket { version: 2, stage: 0, offset: 0, data: vec![9; 16].into() })
+            .unwrap();
+        // ...a stale abort for v1 is a no-op...
+        smp.send(SmpMsg::AbortSnapshot { version: 1, stage: 0 }).unwrap();
+        assert_eq!(smp.stats().unwrap().dirty_versions[&0], 2);
+        // ...the matching abort drops v2 without touching clean v1
+        smp.send(SmpMsg::AbortSnapshot { version: 2, stage: 0 }).unwrap();
+        let stats = smp.stats().unwrap();
+        assert!(stats.dirty_versions.is_empty());
+        assert_eq!(stats.aborted_in_flight, 1);
+        let (v, data) = smp.get_clean(0).unwrap().unwrap();
+        assert_eq!((v, data), (1, vec![5u8; 64]));
+        // an EndSnapshot arriving after the abort is stale, not a promotion
+        smp.send(SmpMsg::EndSnapshot { version: 2, stage: 0 }).unwrap();
+        let stats = smp.stats().unwrap();
+        assert_eq!(stats.stale_end_snapshots, 1);
+        assert_eq!(stats.clean_versions[&0], 1);
     }
 
     #[test]

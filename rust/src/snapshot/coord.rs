@@ -1,0 +1,664 @@
+//! Hierarchical asynchronous snapshotting coordination (paper §4.1): the
+//! live-path state machine that drains tiny-bucket snapshot traffic to the
+//! SMPs *across training iterations* instead of stalling the step.
+//!
+//! Three levels of on-device asynchrony:
+//!
+//! * **L1 — the step never blocks.** [`SnapshotCoordinator::submit`] captures
+//!   the serialized stage payloads (zero further copies: buckets are
+//!   `Arc`-backed views) and returns immediately; the trainer's `snapshot()`
+//!   is an enqueue.
+//! * **L2 — bounded interference.** Each [`SnapshotCoordinator::tick`]
+//!   (called at iteration boundaries) moves at most
+//!   `drain_buckets_per_tick` buckets *per node*, so the per-iteration PCIe
+//!   pressure a save adds is a configurable constant, not O(payload).
+//! * **L3 — version supersession + completion.** A newer `submit` aborts the
+//!   stale in-flight version on every SMP (`AbortSnapshot`), `EndSnapshot`
+//!   fires only when **all** buckets of the version have flushed (promotion
+//!   is a near-atomic burst, so readers never observe a cross-stage version
+//!   mix), and RAIM5 parity encoding runs at completion time — off the
+//!   iteration hot path.
+//!
+//! The coordinator is SMP-agnostic: it talks to the cluster through the
+//! [`CoordSink`] trait, which `ReftCluster` implements over its live SMP
+//! channels and the unit tests implement as an event recorder. That keeps the
+//! whole drain/abort/completion protocol testable without threads.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::ec::Raim5Group;
+use crate::snapshot::plan::{NodeShard, SnapshotPlan};
+
+/// Where coordinator traffic goes: one call per SMP-bound message.
+/// Implementations must preserve per-node call order (channels are FIFO).
+pub trait CoordSink {
+    fn begin(&mut self, node: usize, version: u64, stage: usize, total_len: usize) -> Result<()>;
+    /// One tiny bucket. `offset` is shard-relative (the SMP's dirty-buffer
+    /// offset); `range` indexes into `seg`, the stage's full payload.
+    fn bucket(
+        &mut self,
+        node: usize,
+        version: u64,
+        stage: usize,
+        offset: usize,
+        seg: &Arc<Vec<u8>>,
+        range: Range<usize>,
+    ) -> Result<()>;
+    fn end(&mut self, node: usize, version: u64, stage: usize) -> Result<()>;
+    fn store_parity(&mut self, node: usize, version: u64, stage: usize, data: Vec<u8>)
+        -> Result<()>;
+    fn abort(&mut self, node: usize, version: u64, stage: usize) -> Result<()>;
+    /// Liveness probe for the L3 pre-flight: promotion must be all-or-none,
+    /// so the completion burst only starts when every target is reachable.
+    fn alive(&mut self, node: usize) -> bool;
+}
+
+/// One shard's drain progress.
+#[derive(Debug, Clone)]
+struct Worker {
+    shard: NodeShard,
+    /// bytes already sent (shard-relative)
+    sent: u64,
+}
+
+impl Worker {
+    fn remaining_buckets(&self, bucket: u64) -> u64 {
+        (self.shard.len() - self.sent).div_ceil(bucket)
+    }
+
+    fn done(&self) -> bool {
+        self.sent >= self.shard.len()
+    }
+}
+
+#[derive(Debug)]
+struct Inflight {
+    version: u64,
+    /// per-stage payload, shared with every bucket message (zero-copy)
+    payloads: Vec<Arc<Vec<u8>>>,
+    workers: Vec<Worker>,
+}
+
+impl Inflight {
+    fn pending_buckets(&self, bucket: u64) -> u64 {
+        self.workers.iter().map(|w| w.remaining_buckets(bucket)).sum()
+    }
+}
+
+/// Counters the benches and tests observe.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct CoordStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// versions aborted because a newer one arrived (L3)
+    pub superseded: u64,
+    /// versions aborted because an SMP went away mid-drain
+    pub aborted_on_failure: u64,
+    pub ticks: u64,
+    pub buckets_sent: u64,
+    pub last_completed_version: Option<u64>,
+}
+
+/// What one `tick()` did.
+#[derive(Debug, Clone, Default)]
+pub struct TickReport {
+    /// version being drained (before any completion/abort this tick)
+    pub version: Option<u64>,
+    pub buckets_sent: usize,
+    /// the in-flight version fully flushed and promoted this tick
+    pub completed: bool,
+    /// the in-flight version was aborted this tick (SMP failure)
+    pub aborted: bool,
+    /// buckets still queued after this tick
+    pub pending_buckets: u64,
+}
+
+/// The per-cluster snapshot coordinator. Owns no threads and no buffers
+/// beyond the `Arc` payload handles; all I/O goes through the sink.
+#[derive(Debug)]
+pub struct SnapshotCoordinator {
+    plan: SnapshotPlan,
+    /// RAIM5 layout per stage (absent when parity is disabled or the SG is
+    /// a single node)
+    groups: BTreeMap<usize, Raim5Group>,
+    bucket_bytes: u64,
+    drain_buckets_per_tick: u64,
+    inflight: Option<Inflight>,
+    stats: CoordStats,
+}
+
+impl SnapshotCoordinator {
+    pub fn new(
+        plan: SnapshotPlan,
+        groups: BTreeMap<usize, Raim5Group>,
+        bucket_bytes: usize,
+        drain_buckets_per_tick: usize,
+    ) -> SnapshotCoordinator {
+        SnapshotCoordinator {
+            plan,
+            groups,
+            bucket_bytes: (bucket_bytes.max(1)) as u64,
+            drain_buckets_per_tick: (drain_buckets_per_tick.max(1)) as u64,
+            inflight: None,
+            stats: CoordStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> &CoordStats {
+        &self.stats
+    }
+
+    pub fn in_flight_version(&self) -> Option<u64> {
+        self.inflight.as_ref().map(|f| f.version)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.inflight.is_none()
+    }
+
+    /// Buckets still queued for the in-flight version.
+    pub fn pending_buckets(&self) -> u64 {
+        self.inflight
+            .as_ref()
+            .map(|f| f.pending_buckets(self.bucket_bytes))
+            .unwrap_or(0)
+    }
+
+    /// Upper bound on the number of `tick()`s until the current in-flight
+    /// version completes (nodes drain in parallel; the slowest node
+    /// dominates). 0 when idle.
+    pub fn ticks_bound(&self) -> u64 {
+        let Some(f) = self.inflight.as_ref() else {
+            return 0;
+        };
+        let mut per_node: BTreeMap<usize, u64> = BTreeMap::new();
+        for w in &f.workers {
+            *per_node.entry(w.shard.node).or_default() +=
+                w.remaining_buckets(self.bucket_bytes);
+        }
+        per_node
+            .values()
+            .map(|b| b.div_ceil(self.drain_buckets_per_tick))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// L1 enqueue: take ownership of the serialized payloads, abort any
+    /// stale in-flight version (L3), open dirty buffers on every SMP, and
+    /// return without moving a single payload bucket.
+    pub fn submit(
+        &mut self,
+        version: u64,
+        payloads: Vec<Vec<u8>>,
+        sink: &mut impl CoordSink,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            payloads.len() == self.plan.stage_bytes.len(),
+            "submit: {} payloads for {} stages",
+            payloads.len(),
+            self.plan.stage_bytes.len()
+        );
+        for (stage, p) in payloads.iter().enumerate() {
+            anyhow::ensure!(
+                p.len() as u64 == self.plan.stage_bytes[stage],
+                "stage {stage} payload {} != planned {}",
+                p.len(),
+                self.plan.stage_bytes[stage]
+            );
+        }
+        if self.inflight.is_some() {
+            self.abort_in_flight(sink);
+            self.stats.superseded += 1;
+        }
+        let payloads: Vec<Arc<Vec<u8>>> = payloads.into_iter().map(Arc::new).collect();
+        let workers: Vec<Worker> = self
+            .plan
+            .shards
+            .iter()
+            .map(|s| Worker { shard: s.clone(), sent: 0 })
+            .collect();
+        // open every dirty buffer up front so in-flight state is visible on
+        // the SMPs from the moment of the enqueue
+        for w in &workers {
+            if let Err(e) = sink.begin(w.shard.node, version, w.shard.stage, w.shard.len() as usize)
+            {
+                // a dead node at enqueue time: nothing in flight, caller
+                // handles it exactly like the blocking path would
+                self.abort_partial(&workers, version, sink);
+                return Err(e);
+            }
+        }
+        self.inflight = Some(Inflight { version, payloads, workers });
+        self.stats.submitted += 1;
+        Ok(())
+    }
+
+    /// L2 drain: move at most `drain_buckets_per_tick` buckets per node,
+    /// then, if every worker has flushed, run the L3 completion burst
+    /// (EndSnapshot for all shards + parity encode/placement).
+    ///
+    /// SMP failures mid-drain abort the version (reported, not an error):
+    /// snapshotting is background work and must never fail the training
+    /// step; the cluster's recovery path deals with the dead node.
+    pub fn tick(&mut self, sink: &mut impl CoordSink) -> Result<TickReport> {
+        let mut report = TickReport::default();
+        let Some(mut f) = self.inflight.take() else {
+            return Ok(report);
+        };
+        self.stats.ticks += 1;
+        report.version = Some(f.version);
+
+        let mut budget: BTreeMap<usize, u64> = BTreeMap::new();
+        let n = f.workers.len();
+        // rotate the starting worker so multi-stage payloads on one node
+        // share the budget fairly across ticks
+        let start = (self.stats.ticks as usize) % n.max(1);
+        let mut failed = false;
+        'drain: for i in 0..n {
+            let w = &mut f.workers[(start + i) % n];
+            if w.done() {
+                continue;
+            }
+            let left = budget
+                .entry(w.shard.node)
+                .or_insert(self.drain_buckets_per_tick);
+            while *left > 0 && !w.done() {
+                let rel_start = w.sent;
+                let rel_end = (rel_start + self.bucket_bytes).min(w.shard.len());
+                let abs = (w.shard.range.start + rel_start) as usize
+                    ..(w.shard.range.start + rel_end) as usize;
+                if sink
+                    .bucket(
+                        w.shard.node,
+                        f.version,
+                        w.shard.stage,
+                        rel_start as usize,
+                        &f.payloads[w.shard.stage],
+                        abs,
+                    )
+                    .is_err()
+                {
+                    failed = true;
+                    break 'drain;
+                }
+                w.sent = rel_end;
+                *left -= 1;
+                report.buckets_sent += 1;
+                self.stats.buckets_sent += 1;
+            }
+        }
+
+        if failed {
+            self.inflight = Some(f);
+            self.abort_in_flight(sink);
+            self.stats.aborted_on_failure += 1;
+            report.aborted = true;
+            report.pending_buckets = 0;
+            return Ok(report);
+        }
+
+        if f.workers.iter().all(Worker::done) {
+            // L3 pre-flight: if any SMP is already gone, promoting the rest
+            // would retire their last clean version and leave the SG with
+            // mixed clean versions (unrestorable under clean_copies = 1).
+            // Abort instead — every survivor keeps serving the old version.
+            let all_alive = f.workers.iter().all(|w| sink.alive(w.shard.node));
+            if !all_alive || self.flush_completed(&f, sink).is_err() {
+                self.inflight = Some(f);
+                self.abort_in_flight(sink);
+                self.stats.aborted_on_failure += 1;
+                report.aborted = true;
+                return Ok(report);
+            }
+            self.stats.completed += 1;
+            self.stats.last_completed_version = Some(f.version);
+            report.completed = true;
+            report.pending_buckets = 0;
+            return Ok(report);
+        }
+
+        report.pending_buckets = f.pending_buckets(self.bucket_bytes);
+        self.inflight = Some(f);
+        Ok(report)
+    }
+
+    /// L3 completion burst: promote every shard (EndSnapshot), then encode
+    /// and place the RAIM5 parities from the retained payload views.
+    fn flush_completed(&self, f: &Inflight, sink: &mut impl CoordSink) -> Result<()> {
+        for w in &f.workers {
+            sink.end(w.shard.node, f.version, w.shard.stage)?;
+        }
+        for (stage, group) in &self.groups {
+            let payload = &f.payloads[*stage];
+            let shards: Vec<&NodeShard> = f
+                .workers
+                .iter()
+                .filter(|w| w.shard.stage == *stage)
+                .map(|w| &w.shard)
+                .collect();
+            let views: Vec<&[u8]> = shards
+                .iter()
+                .map(|s| &payload[s.range.start as usize..s.range.end as usize])
+                .collect();
+            for (host_idx, shard) in shards.iter().enumerate() {
+                let parity = group.encode_parity(host_idx, &views);
+                sink.store_parity(shard.node, f.version, *stage, parity)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Abort the in-flight version on every SMP that has a dirty buffer for
+    /// it. Send failures are ignored — aborts race node death by design.
+    pub fn abort_in_flight(&mut self, sink: &mut impl CoordSink) {
+        if let Some(f) = self.inflight.take() {
+            let mut seen: Vec<(usize, usize)> = Vec::new();
+            for w in &f.workers {
+                let key = (w.shard.node, w.shard.stage);
+                if !seen.contains(&key) {
+                    seen.push(key);
+                    let _ = sink.abort(w.shard.node, f.version, w.shard.stage);
+                }
+            }
+        }
+    }
+
+    fn abort_partial(&self, workers: &[Worker], version: u64, sink: &mut impl CoordSink) {
+        for w in workers {
+            let _ = sink.abort(w.shard.node, version, w.shard.stage);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::{ParallelPlan, Topology};
+
+    #[derive(Debug, Clone, PartialEq)]
+    enum Ev {
+        Begin(usize, u64, usize, usize),
+        Bucket { node: usize, version: u64, stage: usize, offset: usize, bytes: Vec<u8> },
+        End(usize, u64, usize),
+        Parity(usize, u64, usize, usize),
+        Abort(usize, u64, usize),
+    }
+
+    /// Records every sink call; optionally fails all traffic to one node.
+    #[derive(Default)]
+    struct Recorder {
+        events: Vec<Ev>,
+        dead_node: Option<usize>,
+    }
+
+    impl Recorder {
+        fn check(&mut self, node: usize) -> Result<()> {
+            if self.dead_node == Some(node) {
+                anyhow::bail!("node {node} is gone");
+            }
+            Ok(())
+        }
+    }
+
+    impl CoordSink for Recorder {
+        fn begin(&mut self, node: usize, v: u64, stage: usize, len: usize) -> Result<()> {
+            self.check(node)?;
+            self.events.push(Ev::Begin(node, v, stage, len));
+            Ok(())
+        }
+
+        fn bucket(
+            &mut self,
+            node: usize,
+            version: u64,
+            stage: usize,
+            offset: usize,
+            seg: &Arc<Vec<u8>>,
+            range: Range<usize>,
+        ) -> Result<()> {
+            self.check(node)?;
+            self.events.push(Ev::Bucket {
+                node,
+                version,
+                stage,
+                offset,
+                bytes: seg[range].to_vec(),
+            });
+            Ok(())
+        }
+
+        fn end(&mut self, node: usize, v: u64, stage: usize) -> Result<()> {
+            self.check(node)?;
+            self.events.push(Ev::End(node, v, stage));
+            Ok(())
+        }
+
+        fn store_parity(&mut self, node: usize, v: u64, stage: usize, data: Vec<u8>) -> Result<()> {
+            self.check(node)?;
+            self.events.push(Ev::Parity(node, v, stage, data.len()));
+            Ok(())
+        }
+
+        fn abort(&mut self, node: usize, v: u64, stage: usize) -> Result<()> {
+            self.check(node)?;
+            self.events.push(Ev::Abort(node, v, stage));
+            Ok(())
+        }
+
+        fn alive(&mut self, node: usize) -> bool {
+            self.dead_node != Some(node)
+        }
+    }
+
+    fn coord_for(
+        dp: usize,
+        pp: usize,
+        nodes: usize,
+        gpus_per_node: usize,
+        stage_bytes: &[u64],
+        bucket: usize,
+        budget: usize,
+    ) -> SnapshotCoordinator {
+        let topo = Topology::build(ParallelPlan::new(dp, 1, pp), nodes, gpus_per_node).unwrap();
+        let plan = SnapshotPlan::build(&topo, stage_bytes);
+        let mut groups = BTreeMap::new();
+        for stage in 0..pp {
+            let lens = plan.sg_shard_lens(stage);
+            if lens.len() >= 2 {
+                groups.insert(stage, Raim5Group::plan(&lens).unwrap());
+            }
+        }
+        SnapshotCoordinator::new(plan, groups, bucket, budget)
+    }
+
+    fn payloads(stage_bytes: &[u64]) -> Vec<Vec<u8>> {
+        stage_bytes
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (0..b).map(|j| (j as u8).wrapping_mul(i as u8 + 1)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn submit_returns_before_any_bucket_moves() {
+        let bytes = [40_000u64];
+        let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 4);
+        let mut sink = Recorder::default();
+        c.submit(1, payloads(&bytes), &mut sink).unwrap();
+        assert_eq!(c.in_flight_version(), Some(1));
+        assert!(c.pending_buckets() > 0, "nothing drained yet");
+        // only Begin events so far — the enqueue is O(shards), not O(bytes)
+        assert!(sink.events.iter().all(|e| matches!(e, Ev::Begin(..))));
+        assert_eq!(sink.events.len(), 2, "one begin per node shard");
+    }
+
+    #[test]
+    fn budget_bounds_per_node_traffic_each_tick() {
+        let bytes = [40_000u64];
+        let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 4);
+        let mut sink = Recorder::default();
+        c.submit(1, payloads(&bytes), &mut sink).unwrap();
+        let r = c.tick(&mut sink).unwrap();
+        assert_eq!(r.buckets_sent, 8, "4 buckets x 2 nodes");
+        assert!(!r.completed);
+        for node in 0..2 {
+            let n = sink
+                .events
+                .iter()
+                .filter(|e| matches!(e, Ev::Bucket { node: bn, .. } if *bn == node))
+                .count();
+            assert_eq!(n, 4, "node {node} over budget");
+        }
+    }
+
+    #[test]
+    fn completes_within_ticks_bound_and_payload_is_exact() {
+        let bytes = [40_001u64, 17u64];
+        let mut c = coord_for(2, 2, 4, 1, &bytes, 900, 3);
+        let mut sink = Recorder::default();
+        let data = payloads(&bytes);
+        c.submit(7, data.clone(), &mut sink).unwrap();
+        let bound = c.ticks_bound();
+        assert!(bound > 1, "test should need several ticks, got {bound}");
+        let mut completed = false;
+        for _ in 0..bound {
+            if c.tick(&mut sink).unwrap().completed {
+                completed = true;
+                break;
+            }
+        }
+        assert!(completed, "did not complete within the L2 bound");
+        assert!(c.is_idle());
+        assert_eq!(c.stats().completed, 1);
+
+        // reassemble the payload every stage's SMPs would hold
+        let mut rebuilt: Vec<Vec<u8>> = bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
+        let mut shard_off: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        for w in &c.plan.shards {
+            shard_off.insert((w.node, w.stage), w.range.start as usize);
+        }
+        for e in &sink.events {
+            if let Ev::Bucket { node, stage, offset, bytes, .. } = e {
+                let base = shard_off[&(*node, *stage)];
+                rebuilt[*stage][base + offset..base + offset + bytes.len()]
+                    .copy_from_slice(bytes);
+            }
+        }
+        assert_eq!(rebuilt, data, "drained bytes must tile the payload exactly");
+
+        // L3 ordering: every End comes after the last Bucket, parity after End
+        let last_bucket = sink
+            .events
+            .iter()
+            .rposition(|e| matches!(e, Ev::Bucket { .. }))
+            .unwrap();
+        let first_end = sink
+            .events
+            .iter()
+            .position(|e| matches!(e, Ev::End(..)))
+            .unwrap();
+        let first_parity = sink
+            .events
+            .iter()
+            .position(|e| matches!(e, Ev::Parity(..)))
+            .unwrap();
+        assert!(first_end > last_bucket, "EndSnapshot before full flush");
+        assert!(first_parity > first_end, "parity belongs to completion time");
+    }
+
+    #[test]
+    fn supersession_aborts_stale_version() {
+        let bytes = [40_000u64];
+        let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 2);
+        let mut sink = Recorder::default();
+        c.submit(1, payloads(&bytes), &mut sink).unwrap();
+        c.tick(&mut sink).unwrap(); // partial drain of v1
+        c.submit(2, payloads(&bytes), &mut sink).unwrap();
+        assert_eq!(c.stats().superseded, 1);
+        assert_eq!(c.in_flight_version(), Some(2));
+        let aborts: Vec<_> = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, Ev::Abort(_, 1, _)))
+            .collect();
+        assert_eq!(aborts.len(), 2, "one abort per (node, stage) of v1");
+        // v2 still drains to completion
+        for _ in 0..c.ticks_bound() {
+            if c.tick(&mut sink).unwrap().completed {
+                break;
+            }
+        }
+        assert_eq!(c.stats().last_completed_version, Some(2));
+        // no End was ever issued for the superseded version
+        assert!(!sink.events.iter().any(|e| matches!(e, Ev::End(_, 1, _))));
+    }
+
+    #[test]
+    fn smp_failure_mid_drain_aborts_without_erroring() {
+        let bytes = [40_000u64];
+        let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 4);
+        let mut sink = Recorder::default();
+        c.submit(1, payloads(&bytes), &mut sink).unwrap();
+        c.tick(&mut sink).unwrap();
+        sink.dead_node = Some(1);
+        let r = c.tick(&mut sink).unwrap();
+        assert!(r.aborted);
+        assert!(!r.completed);
+        assert!(c.is_idle(), "failed version is dropped");
+        assert_eq!(c.stats().aborted_on_failure, 1);
+        // the surviving node got an abort for its dirty buffer
+        assert!(sink.events.iter().any(|e| matches!(e, Ev::Abort(0, 1, _))));
+    }
+
+    #[test]
+    fn node_dead_before_completion_burst_aborts_instead_of_partial_promote() {
+        // stage 1 is tiny (drains on tick 1 from nodes 1/3); stage 0 is
+        // large (nodes 0/2 keep draining). Node 1 dies after its buckets
+        // flushed: without the L3 pre-flight the completion burst would
+        // promote v1 on nodes 0/2/3 only, leaving mixed clean versions.
+        let bytes = [40_000u64, 17u64];
+        let mut c = coord_for(2, 2, 4, 1, &bytes, 900, 3);
+        let mut sink = Recorder::default();
+        c.submit(1, payloads(&bytes), &mut sink).unwrap();
+        c.tick(&mut sink).unwrap();
+        sink.dead_node = Some(1);
+        let mut last = TickReport::default();
+        for _ in 0..c.ticks_bound() {
+            last = c.tick(&mut sink).unwrap();
+            if last.completed || last.aborted {
+                break;
+            }
+        }
+        assert!(last.aborted, "must abort, not partially promote");
+        assert!(!last.completed);
+        assert!(c.is_idle());
+        // promotion is all-or-none: NO EndSnapshot was ever sent for v1
+        assert!(!sink.events.iter().any(|e| matches!(e, Ev::End(..))));
+        assert!(!sink.events.iter().any(|e| matches!(e, Ev::Parity(..))));
+    }
+
+    #[test]
+    fn dead_node_at_submit_propagates_like_blocking_path() {
+        let bytes = [40_000u64];
+        let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 4);
+        let mut sink = Recorder { dead_node: Some(0), ..Default::default() };
+        assert!(c.submit(1, payloads(&bytes), &mut sink).is_err());
+        assert!(c.is_idle());
+    }
+
+    #[test]
+    fn tick_when_idle_is_a_cheap_noop() {
+        let bytes = [4_000u64];
+        let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 4);
+        let mut sink = Recorder::default();
+        let r = c.tick(&mut sink).unwrap();
+        assert_eq!(r.buckets_sent, 0);
+        assert!(r.version.is_none());
+        assert!(sink.events.is_empty());
+        assert_eq!(c.ticks_bound(), 0);
+    }
+}

@@ -1,7 +1,7 @@
 //! The REFT snapshot engine (paper §4.1): sharded, parallel, tiny-bucket
 //! asynchronous snapshotting of parameters to CPU memory.
 //!
-//! Three layers:
+//! Four layers:
 //! * [`plan`] — who snapshots which bytes: the intra-pipeline-stage sharding
 //!   across DP paths (one shard per SG member, orthogonal and equal-sized up
 //!   to a remainder), plus the per-GPU split inside a node.
@@ -10,11 +10,17 @@
 //!   overhead benches (Fig. 9/10/11, weak scaling) evaluate.
 //! * [`bucket`] — the live tiny-bucket copy pipeline: real bytes moved
 //!   bucket-by-bucket into SMP-owned buffers (what the e2e trainer runs).
+//! * [`coord`] — the hierarchical asynchronous snapshotting coordinator
+//!   (§4.1 L1-L3): enqueue-and-return saves whose buckets drain across
+//!   subsequent training iterations under a per-node interference budget,
+//!   with version supersession and completion-time parity encoding.
 
 pub mod bucket;
+pub mod coord;
 pub mod cost;
 pub mod plan;
 
 pub use bucket::BucketPipe;
+pub use coord::{CoordSink, CoordStats, SnapshotCoordinator, TickReport};
 pub use cost::{method_save_cost, SaveCost, SaveCtx};
 pub use plan::{NodeShard, SnapshotPlan};

@@ -93,6 +93,29 @@ impl SnapshotPlan {
             .map(|s| s.len() as usize)
             .collect()
     }
+
+    /// Buckets node `node` must move to drain one full snapshot round
+    /// (coordinator L2 planning input).
+    pub fn node_buckets(&self, node: usize, bucket_bytes: usize) -> u64 {
+        let bucket = bucket_bytes.max(1) as u64;
+        self.shards_for_node(node)
+            .map(|s| s.len().div_ceil(bucket))
+            .sum()
+    }
+
+    /// The slowest node's bucket count — with a per-node, per-tick drain
+    /// budget `b`, a snapshot round completes within
+    /// `ceil(max_node_buckets / b)` ticks (the coordinator's completion
+    /// bound, asserted by the async integration tests).
+    pub fn max_node_buckets(&self, bucket_bytes: usize) -> u64 {
+        let nodes: std::collections::BTreeSet<usize> =
+            self.shards.iter().map(|s| s.node).collect();
+        nodes
+            .into_iter()
+            .map(|n| self.node_buckets(n, bucket_bytes))
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 fn split_across_gpus(range: &Range<u64>, gpus: &[usize]) -> Vec<(usize, Range<u64>)> {
@@ -170,6 +193,17 @@ mod tests {
         let shards: Vec<_> = plan.shards_for_stage(0).collect();
         assert_eq!(shards.len(), 6);
         assert_eq!(plan.node_bytes(0), 4_000);
+    }
+
+    #[test]
+    fn bucket_accounting_matches_shard_layout() {
+        let (_t, plan) = plan_for(6, 4, 1, 6, 4, 999_999);
+        // 6 shards of 166667/166666 bytes, bucket 4096
+        let per_node: Vec<u64> = (0..6).map(|n| plan.node_buckets(n, 4096)).collect();
+        assert!(per_node.iter().all(|&b| b == 41), "{per_node:?}");
+        assert_eq!(plan.max_node_buckets(4096), 41);
+        // giant bucket degenerates to one bucket per shard
+        assert_eq!(plan.max_node_buckets(1 << 30), 1);
     }
 
     #[test]

@@ -153,6 +153,10 @@ impl DpTrainer {
         self.losses.push(loss);
         self.metrics.inc("steps", 1);
 
+        // iteration-boundary drain of any in-flight snapshot backlog (§4.1
+        // L2): a bounded bucket budget per node, never O(payload)
+        self.tick_snapshot_backlog()?;
+
         // fault-tolerance policy
         let mut snapshotted = false;
         let mut checkpointed = false;
@@ -189,11 +193,62 @@ impl DpTrainer {
         Ok(out)
     }
 
-    /// REFT in-memory snapshot of the canonical state.
+    /// REFT in-memory snapshot of the canonical state. With
+    /// `async_snapshot` on, this is an L1 enqueue — it returns before any
+    /// payload bucket moves and [`Self::tick_snapshot_backlog`] drains the
+    /// round across the next iterations; otherwise the blocking round runs
+    /// inside this call.
     pub fn snapshot(&mut self) -> Result<u64> {
         let payload = self.state.to_payload();
+        let use_async = self.cfg.ft.async_snapshot;
         let reft = self.reft.as_mut().context("REFT not enabled")?;
-        let v = self.metrics.time("snapshot", || reft.snapshot_all(&[payload]))?;
+        let v = if use_async {
+            let superseded_before = reft.coordinator().stats().superseded;
+            let v = self.metrics.time("snapshot", || reft.request_snapshot(vec![payload]))?;
+            // chronic supersession means the interference budget never lets
+            // a round finish (drain_buckets_per_tick * snapshot_interval <
+            // max_node_buckets): in-memory protection would silently be
+            // zero, so surface it as a counter operators can alert on
+            if reft.coordinator().stats().superseded > superseded_before {
+                self.metrics.inc("snapshots_superseded", 1);
+            }
+            v
+        } else {
+            self.metrics.time("snapshot", || reft.snapshot_all(&[payload]))?
+        };
+        self.metrics.inc("snapshots", 1);
+        Ok(v)
+    }
+
+    /// One coordinator tick (iteration-boundary drain). No-op unless the
+    /// asynchronous save path is enabled and a round is in flight.
+    pub fn tick_snapshot_backlog(&mut self) -> Result<()> {
+        if !self.cfg.ft.async_snapshot {
+            return Ok(());
+        }
+        let Some(reft) = self.reft.as_mut() else {
+            return Ok(());
+        };
+        let report = self.metrics.time("snapshot_tick", || reft.tick())?;
+        if report.completed {
+            self.metrics.inc("snapshots_completed", 1);
+        }
+        if report.aborted {
+            self.metrics.inc("snapshots_aborted", 1);
+        }
+        Ok(())
+    }
+
+    /// Post-recovery re-protection: always blocking, so every SMP holds a
+    /// clean copy of the restored state before training resumes.
+    fn snapshot_blocking_for_recovery(&mut self) -> Result<u64> {
+        let payload = self.state.to_payload();
+        let reft = self.reft.as_mut().context("REFT not enabled")?;
+        // distinct timer: this blocking round must not pollute the
+        // "snapshot" stall measurement (enqueue cost on the async path)
+        let v = self
+            .metrics
+            .time("snapshot_recovery", || reft.snapshot_all_blocking(&[payload]))?;
         self.metrics.inc("snapshots", 1);
         Ok(v)
     }
@@ -245,10 +300,11 @@ impl DpTrainer {
                 self.metrics.inc("recoveries_inmemory", 1);
             }
             Err(e) => {
-                // in-memory protection exceeded -> durable checkpoint
+                // in-memory protection exceeded -> durable checkpoint (of
+                // THIS model — a shared store may hold other models' steps)
                 let key = self
                     .storage
-                    .latest()
+                    .latest_for(&self.cfg.model)
                     .with_context(|| format!("in-memory recovery failed ({e}) and no checkpoint exists"))?;
                 let bytes = self.storage.get(&key)?;
                 let file = CheckpointFile::decode(&bytes)?;
@@ -266,7 +322,7 @@ impl DpTrainer {
             }
         }
         if self.reft.is_some() {
-            self.snapshot()?;
+            self.snapshot_blocking_for_recovery()?;
         }
         Ok(self.state.step)
     }

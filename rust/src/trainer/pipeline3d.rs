@@ -182,6 +182,10 @@ impl PipelineTrainer {
         self.losses.push(loss);
         self.metrics.inc("steps", 1);
 
+        // iteration-boundary drain of any in-flight snapshot backlog (§4.1
+        // L2): a bounded bucket budget per node, never O(payload)
+        self.tick_snapshot_backlog()?;
+
         // fault tolerance
         let step = self.stages[0].step;
         if step % self.cfg.ft.snapshot_interval as u64 == 0 {
@@ -384,10 +388,60 @@ impl PipelineTrainer {
         (0..steps).map(|_| self.step()).collect()
     }
 
+    /// Save the current state through REFT. With `async_snapshot` on, this
+    /// is an L1 enqueue — it returns before any payload bucket moves, and
+    /// [`Self::tick_snapshot_backlog`] drains the round across the next
+    /// iterations. Otherwise the classic blocking round runs here.
     pub fn snapshot(&mut self) -> Result<u64> {
         let payloads: Vec<Vec<u8>> = self.stages.iter().map(StageState::to_payload).collect();
+        let use_async = self.cfg.ft.async_snapshot;
         let reft = self.reft.as_mut().context("REFT not enabled")?;
-        let v = self.metrics.time("snapshot", || reft.snapshot_all(&payloads))?;
+        let v = if use_async {
+            let superseded_before = reft.coordinator().stats().superseded;
+            let v = self.metrics.time("snapshot", || reft.request_snapshot(payloads))?;
+            // chronic supersession = the interference budget never lets a
+            // round finish; protection would silently be zero, so count it
+            if reft.coordinator().stats().superseded > superseded_before {
+                self.metrics.inc("snapshots_superseded", 1);
+            }
+            v
+        } else {
+            self.metrics.time("snapshot", || reft.snapshot_all(&payloads))?
+        };
+        self.metrics.inc("snapshots", 1);
+        Ok(v)
+    }
+
+    /// One coordinator tick (iteration-boundary drain). No-op unless the
+    /// asynchronous save path is enabled and a round is in flight.
+    pub fn tick_snapshot_backlog(&mut self) -> Result<()> {
+        if !self.cfg.ft.async_snapshot {
+            return Ok(());
+        }
+        let Some(reft) = self.reft.as_mut() else {
+            return Ok(());
+        };
+        let report = self.metrics.time("snapshot_tick", || reft.tick())?;
+        if report.completed {
+            self.metrics.inc("snapshots_completed", 1);
+        }
+        if report.aborted {
+            self.metrics.inc("snapshots_aborted", 1);
+        }
+        Ok(())
+    }
+
+    /// Post-recovery re-protection: always blocking, so every SMP holds a
+    /// clean copy of the restored state before training resumes (a
+    /// half-drained asynchronous round protects nothing).
+    fn snapshot_blocking_for_recovery(&mut self) -> Result<u64> {
+        let payloads: Vec<Vec<u8>> = self.stages.iter().map(StageState::to_payload).collect();
+        let reft = self.reft.as_mut().context("REFT not enabled")?;
+        // distinct timer: this blocking round must not pollute the
+        // "snapshot" stall measurement (enqueue cost on the async path)
+        let v = self
+            .metrics
+            .time("snapshot_recovery", || reft.snapshot_all_blocking(&payloads))?;
         self.metrics.inc("snapshots", 1);
         Ok(v)
     }
@@ -438,7 +492,9 @@ impl PipelineTrainer {
                 self.metrics.inc("recoveries_inmemory", 1);
             }
             Err(e) => {
-                let key = self.storage.latest().with_context(|| {
+                // latest checkpoint of THIS model — a shared store may hold
+                // other models' steps with alphabetically-later names
+                let key = self.storage.latest_for(&self.cfg.model).with_context(|| {
                     format!("in-memory recovery failed ({e}) and no checkpoint exists")
                 })?;
                 let file = CheckpointFile::decode(&self.storage.get(&key)?)?;
@@ -457,7 +513,7 @@ impl PipelineTrainer {
             }
         }
         if self.reft.is_some() {
-            self.snapshot()?;
+            self.snapshot_blocking_for_recovery()?;
         }
         Ok(self.stages[0].step)
     }

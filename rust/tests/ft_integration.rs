@@ -135,6 +135,148 @@ fn checkpoint_fallback_flow() {
     assert_eq!(back.stage_payload(0).unwrap(), &data[0][..]);
 }
 
+fn async_ft(bucket: usize, budget: usize) -> FtConfig {
+    FtConfig {
+        bucket_bytes: bucket,
+        async_snapshot: true,
+        drain_buckets_per_tick: budget,
+        ..FtConfig::default()
+    }
+}
+
+/// Acceptance: with the coordinator enabled, a snapshot request returns
+/// before any payload bucket is flushed, completes within the L2 bound of
+/// `tick()`s, and the restored payload is byte-identical to what the
+/// blocking path produces.
+#[test]
+fn async_snapshot_returns_before_flush_then_completes_bounded() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![60_000u64];
+    let data = payloads(&stage_bytes, 11);
+
+    let mut ac = ReftCluster::start(topo.clone(), &stage_bytes, async_ft(1024, 2)).unwrap();
+    let v = ac.request_snapshot(data.clone()).unwrap();
+
+    // L1: the request returned with the round still in flight
+    assert_eq!(ac.coordinator().in_flight_version(), Some(v));
+    assert!(ac.coordinator().pending_buckets() > 0, "returned before flush");
+    // nothing is promoted yet, so nothing restores
+    assert!(ac.restore_all(&[]).is_err());
+
+    // L2: completion within the bounded number of ticks
+    let bound = ac.coordinator().ticks_bound();
+    assert_eq!(bound, 5, "10 buckets per node at 2 per tick");
+    let mut ticks = 0;
+    while !ac.coordinator().is_idle() {
+        assert!(ticks < bound, "exceeded the L2 completion bound");
+        ac.tick().unwrap();
+        ticks += 1;
+    }
+    assert_eq!(ac.coordinator().stats().last_completed_version, Some(v));
+
+    // byte-identical to the blocking path
+    let mut bc =
+        ReftCluster::start(topo, &stage_bytes, FtConfig { bucket_bytes: 1024, ..FtConfig::default() })
+            .unwrap();
+    bc.snapshot_all_blocking(&data).unwrap();
+    let from_async = ac.restore_all(&[]).unwrap();
+    let from_blocking = bc.restore_all(&[]).unwrap();
+    assert_eq!(from_async, data);
+    assert_eq!(from_async, from_blocking);
+}
+
+/// L3 supersession: a newer request aborts the stale in-flight version on
+/// every SMP — its buckets are dropped, its (never-sent) EndSnapshot cannot
+/// promote, and only the newer version ever becomes clean.
+#[test]
+fn supersession_aborts_inflight_buckets_on_smps() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![48_000u64];
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, async_ft(1000, 2)).unwrap();
+
+    let v1_data = payloads(&stage_bytes, 1);
+    let v2_data = payloads(&stage_bytes, 2);
+    let v1 = cluster.request_snapshot(v1_data).unwrap();
+    cluster.tick().unwrap(); // v1 partially drained: dirty buffers live
+    let smp0 = cluster.smp(0).unwrap();
+    assert_eq!(smp0.stats().unwrap().dirty_versions[&0], v1);
+
+    let v2 = cluster.request_snapshot(v2_data.clone()).unwrap();
+    assert_eq!(cluster.coordinator().stats().superseded, 1);
+    // every SMP dropped the v1 dirty buffer and opened v2
+    for node in 0..6 {
+        let stats = cluster.smp(node).unwrap().stats().unwrap();
+        assert_eq!(stats.aborted_in_flight, 1, "node {node}");
+        assert_eq!(stats.dirty_versions[&0], v2, "node {node}");
+    }
+    cluster.drain_pending().unwrap();
+    for node in 0..6 {
+        let stats = cluster.smp(node).unwrap().stats().unwrap();
+        assert_eq!(stats.clean_versions[&0], v2, "node {node}");
+        assert_eq!(stats.promotions, 1, "v1 must never promote on node {node}");
+    }
+    assert_eq!(cluster.restore_all(&[]).unwrap(), v2_data);
+}
+
+/// Failure timing: the writing trainer dies mid-flush of v2 (ticks simply
+/// stop, one node also reports UNHEALTHY). The dirty v2 is never promoted
+/// and every SMP keeps serving the last clean version.
+#[test]
+fn writer_death_mid_flush_keeps_serving_last_clean() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![48_000u64];
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, async_ft(1000, 2)).unwrap();
+
+    let v1_data = payloads(&stage_bytes, 5);
+    cluster.snapshot_all(&v1_data).unwrap(); // v1 clean everywhere
+
+    let v2_data = payloads(&stage_bytes, 6);
+    cluster.request_snapshot(v2_data).unwrap();
+    cluster.tick().unwrap(); // partial flush...
+    cluster.tick().unwrap(); // ...then the writer dies: no more ticks
+
+    // the training processes on node 3 are reported dead (software failure)
+    cluster
+        .smp(3)
+        .unwrap()
+        .send(SmpMsg::Signal(Signal::Unhealthy))
+        .unwrap();
+
+    let restored = cluster.restore_all(&[]).unwrap();
+    assert_eq!(restored, v1_data, "dirty v2 must never surface");
+    for node in 0..6 {
+        let stats = cluster.smp(node).unwrap().stats().unwrap();
+        assert_eq!(stats.clean_versions[&0], 1, "node {node} serves v1");
+        assert_eq!(stats.promotions, 1, "node {node}: v2 not promoted");
+    }
+}
+
+/// Failure timing, SMP protocol level: an `EndSnapshot` that arrives for a
+/// version the dirty buffer no longer holds (superseded mid-flight) is
+/// counted stale and ignored — even though all of v1's bytes were flushed.
+#[test]
+fn stale_end_snapshot_for_superseded_version_is_ignored() {
+    let smp = Smp::spawn(0, 1);
+    smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+    smp.send(SmpMsg::BeginSnapshot { version: 1, stage: 0, total_len: 100 })
+        .unwrap();
+    smp.send(SmpMsg::Bucket { version: 1, stage: 0, offset: 0, data: vec![1; 100].into() })
+        .unwrap();
+    // v2 supersedes before v1's EndSnapshot arrives (slow writer thread)
+    smp.send(SmpMsg::BeginSnapshot { version: 2, stage: 0, total_len: 100 })
+        .unwrap();
+    smp.send(SmpMsg::EndSnapshot { version: 1, stage: 0 }).unwrap();
+    let stats = smp.stats().unwrap();
+    assert_eq!(stats.stale_end_snapshots, 1);
+    assert!(smp.get_clean(0).unwrap().is_none(), "stale End must not promote");
+    // v2 completes normally afterwards
+    smp.send(SmpMsg::Bucket { version: 2, stage: 0, offset: 0, data: vec![2; 100].into() })
+        .unwrap();
+    smp.send(SmpMsg::EndSnapshot { version: 2, stage: 0 }).unwrap();
+    let (v, data) = smp.get_clean(0).unwrap().unwrap();
+    assert_eq!((v, data), (2, vec![2u8; 100]));
+}
+
 /// SMP memory stays bounded across many snapshot rounds (clean-ring cap).
 #[test]
 fn smp_memory_bounded_over_many_rounds() {

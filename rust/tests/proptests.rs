@@ -215,6 +215,69 @@ fn prop_bucket_pipe_tiles_exactly() {
     }
 }
 
+/// BucketPipe tiling, strengthened: for arbitrary (range, bucket size) the
+/// produced buckets are pairwise disjoint, ordered, union-complete (their
+/// lengths sum to the range length with no overlap), every bucket is at most
+/// the configured size, and the iterator agrees with `num_buckets()`.
+#[test]
+fn prop_bucket_pipe_partition_invariants() {
+    let mut rng = Rng::seed_from(0xB17E5);
+    for case in 0..CASES {
+        let start = rng.next_u64() % (1 << 40);
+        let len = rng.below(1 << 20) as u64;
+        let bucket = 1 + rng.below(1 << 17);
+        let pipe = BucketPipe::new(start..start + len, bucket);
+        assert_eq!(pipe.num_buckets(), len.div_ceil(bucket as u64), "case {case}");
+        let rs: Vec<_> = pipe.clone().collect();
+        assert_eq!(rs.len() as u64, pipe.num_buckets(), "case {case}");
+        let mut total = 0u64;
+        let mut cursor = start;
+        for (i, r) in rs.iter().enumerate() {
+            assert!(r.start < r.end, "case {case} bucket {i} empty");
+            assert_eq!(r.start, cursor, "case {case} bucket {i} disjoint+ordered");
+            assert!(r.end - r.start <= bucket as u64, "case {case} bucket {i} oversize");
+            total += r.end - r.start;
+            cursor = r.end;
+        }
+        assert_eq!(total, len, "case {case} union incomplete");
+        assert_eq!(cursor, start + len, "case {case} end mismatch");
+    }
+}
+
+/// RAIM5 rotation invariants for arbitrary group sizes: no node ever hosts
+/// parity protecting its own sub-blocks, and parity placement is balanced —
+/// every node hosts exactly one protected sub-block per peer, so per-node
+/// parity load is within +-1 block across the group (exactly equal here).
+#[test]
+fn prop_raim5_rotation_no_self_parity_and_balanced() {
+    let mut rng = Rng::seed_from(0x5A1_3575);
+    for case in 0..CASES {
+        let n = 2 + rng.below(9); // 2..=10 nodes
+        let lens: Vec<usize> = (0..n).map(|_| 1 + rng.below(4096)).collect();
+        let g = Raim5Group::plan(&lens).unwrap();
+        let mut hosted = vec![0usize; n];
+        for j in 0..n {
+            let mut hosts_for_j = Vec::new();
+            for b in 0..n - 1 {
+                let host = g.parity_node(j, b);
+                assert_ne!(host, j, "case {case}: node {j} hosts its own parity");
+                hosted[host] += 1;
+                hosts_for_j.push(host);
+            }
+            // each peer protects exactly one of j's sub-blocks
+            hosts_for_j.sort_unstable();
+            hosts_for_j.dedup();
+            assert_eq!(hosts_for_j.len(), n - 1, "case {case}: node {j} rotation collides");
+        }
+        let (mn, mx) = (
+            *hosted.iter().min().unwrap(),
+            *hosted.iter().max().unwrap(),
+        );
+        assert!(mx - mn <= 1, "case {case}: parity load {hosted:?} unbalanced");
+        assert_eq!(mn, n - 1, "case {case}: every node hosts n-1 blocks");
+    }
+}
+
 /// Checkpoint container: decode(encode(x)) == x, and any single-bit flip is
 /// detected.
 #[test]

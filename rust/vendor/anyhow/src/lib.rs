@@ -1,0 +1,185 @@
+//! Offline shim for the subset of `anyhow` this workspace uses.
+//!
+//! The build environment has no crates.io access, so the real `anyhow` is
+//! replaced by this API-compatible vendored crate. Covered surface:
+//!
+//! * [`Error`] / [`Result`] with `?` conversion from any
+//!   `std::error::Error + Send + Sync + 'static`
+//! * [`anyhow!`], [`bail!`], [`ensure!`] (with and without a message)
+//! * [`Context::context`] / [`Context::with_context`] on `Result` (both
+//!   std-error and `anyhow::Error` payloads, via `Into<Error>`) and `Option`
+//!
+//! Context frames are joined outermost-first, so `{e}` and `{e:#}` both
+//! render the full cause chain ("outer: inner"), which is what the CLI's
+//! error reporting and the test-suite `contains` assertions rely on.
+//! Deliberately not covered (unused in this tree): downcasting, backtraces,
+//! `source()` chains as distinct objects.
+
+use std::fmt;
+
+/// A string-chained error value. Like the real `anyhow::Error`, this type
+/// intentionally does NOT implement `std::error::Error`, which is what makes
+/// the blanket `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    /// cause chain, outermost context first
+    chain: Vec<String>,
+}
+
+impl Error {
+    pub fn msg(message: impl fmt::Display) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context(mut self, context: impl fmt::Display) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outermost message (the full chain is in `Display`).
+    pub fn to_string_outer(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // include the source chain inline, matching anyhow's `{:#}` shape
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failure values.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<u8> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e.into())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = io_fail().context("reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config: gone");
+        // context on an already-anyhow Result also works
+        let e2: Result<u8> = Err(e);
+        let e2 = e2.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 2: reading config: gone");
+        assert_eq!(format!("{e2:#}"), "step 2: reading config: gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let none: Option<u8> = None;
+        let e = none.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+        assert_eq!(Some(3u8).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x {x} too big");
+            ensure!(x != 7);
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(7).unwrap_err().to_string().contains("x != 7"));
+        assert!(f(3).unwrap_err().to_string().contains("right out"));
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let e = anyhow!("x = {}", 5);
+        assert_eq!(e.to_string_outer(), "x = 5");
+    }
+}

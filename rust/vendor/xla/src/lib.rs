@@ -1,0 +1,279 @@
+//! Offline stub of the `xla` PJRT binding used by `reft::runtime`.
+//!
+//! The real crate links libxla / the PJRT C API and executes the AOT HLO
+//! artifacts exported by `python/compile/aot.py`. This container has no
+//! PJRT runtime, so the binding is replaced by an API-compatible stub:
+//!
+//! * [`Literal`] is fully functional host-side (typed storage + reshape +
+//!   readback) — the literal-conversion helpers in `reft::runtime` and their
+//!   tests run for real against it;
+//! * [`PjRtClient::cpu`] succeeds (trainers construct an engine before
+//!   loading any artifact), but [`HloModuleProto::from_text_file`] and
+//!   [`PjRtClient::compile`] return `Err(Error::Unavailable)`, so every
+//!   artifact-driven path reports a clean "PJRT runtime unavailable" error
+//!   and the artifact-gated tests/benches skip exactly as they do on a
+//!   checkout without `make artifacts`.
+//!
+//! Swap this path dependency for the real binding in `rust/Cargo.toml` to
+//! run the Layer-1/Layer-2 compute; nothing in `reft` changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Binding-level error.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// the stub cannot provide a PJRT runtime
+    Unavailable(String),
+    /// shape/type misuse of a literal
+    Shape(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => {
+                write!(f, "PJRT runtime unavailable in offline build: {what}")
+            }
+            Error::Shape(what) => write!(f, "literal error: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+// ---------------------------------------------------------------------------
+// literals (functional)
+// ---------------------------------------------------------------------------
+
+/// Element types a [`Literal`] can carry. Sealed to f32/i32 — the only types
+/// the artifact interchange uses.
+pub trait ArrayElement: Copy + 'static {
+    fn wrap(data: Vec<Self>, dims: Vec<i64>) -> Literal;
+    fn unwrap(lit: &Literal) -> Result<&[Self]>;
+}
+
+#[derive(Debug, Clone)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side typed nd-array (or tuple of them).
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl ArrayElement for f32 {
+    fn wrap(data: Vec<f32>, dims: Vec<i64>) -> Literal {
+        Literal { storage: Storage::F32(data), dims }
+    }
+
+    fn unwrap(lit: &Literal) -> Result<&[f32]> {
+        match &lit.storage {
+            Storage::F32(v) => Ok(v),
+            _ => Err(Error::Shape("literal is not f32".into())),
+        }
+    }
+}
+
+impl ArrayElement for i32 {
+    fn wrap(data: Vec<i32>, dims: Vec<i64>) -> Literal {
+        Literal { storage: Storage::I32(data), dims }
+    }
+
+    fn unwrap(lit: &Literal) -> Result<&[i32]> {
+        match &lit.storage {
+            Storage::I32(v) => Ok(v),
+            _ => Err(Error::Shape("literal is not i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// 1-D literal over a host slice.
+    pub fn vec1<T: ArrayElement>(data: &[T]) -> Literal {
+        T::wrap(data.to_vec(), vec![data.len() as i64])
+    }
+
+    /// Tuple literal (what `return_tuple=True` computations produce).
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        Literal { storage: Storage::Tuple(elems), dims: Vec::new() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.storage {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Same data, new shape (element counts must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error::Shape("cannot reshape a tuple literal".into()));
+        }
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(Error::Shape(format!(
+                "reshape {:?} -> {dims:?} changes element count",
+                self.dims
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        T::unwrap(self).map(|s| s.to_vec())
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        T::unwrap(self)?
+            .first()
+            .copied()
+            .ok_or_else(|| Error::Shape("empty literal".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.storage {
+            Storage::Tuple(t) => Ok(t),
+            _ => Err(Error::Shape("literal is not a tuple".into())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface (stubbed)
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module. The stub never parses: artifact loading is the gate
+/// where offline builds bail out.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::Unavailable(format!(
+            "cannot parse HLO artifact {}",
+            path.as_ref().display()
+        )))
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("no device buffers in stub".into()))
+    }
+}
+
+/// Input kinds accepted by [`PjRtLoadedExecutable::execute`] /
+/// [`PjRtLoadedExecutable::execute_b`].
+pub trait ExecuteInput {}
+impl ExecuteInput for Literal {}
+impl ExecuteInput for PjRtBuffer {}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: ExecuteInput>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("execute".into()))
+    }
+
+    pub fn execute_b<T: ExecuteInput>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("execute_b".into()))
+    }
+}
+
+/// A PJRT client. Construction succeeds so hosts can build an engine eagerly;
+/// compilation is where the stub reports unavailability.
+pub struct PjRtClient {
+    platform: &'static str,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { platform: "cpu-stub" })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.platform.to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("compile".into()))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Unavailable("buffer_from_host_buffer".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1i32]), Literal::vec1(&[2.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert!(Literal::vec1(&[1i32]).to_tuple().is_err());
+    }
+
+    #[test]
+    fn stub_gates_artifact_paths() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "cpu-stub");
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let e = client
+            .compile(&XlaComputation { _private: () })
+            .err()
+            .unwrap();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}
