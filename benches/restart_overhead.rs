@@ -148,7 +148,9 @@ fn live_part() {
     let ft = FtConfig { bucket_bytes: 16 * 1024 * 1024, ..FtConfig::default() };
     let mut cluster = ReftCluster::start(topo, &[payload_len as u64], ft).unwrap();
     let mut rng = Rng::seed_from(3);
-    let payload: Vec<u8> = (0..payload_len).map(|_| rng.next_u64() as u8).collect();
+    let payload = reft::snapshot::SharedPayload::new(
+        (0..payload_len).map(|_| rng.next_u64() as u8).collect(),
+    );
 
     let t0 = Instant::now();
     cluster.snapshot_all(&[payload.clone()]).unwrap();

@@ -10,15 +10,16 @@
 
 use reft::config::FtConfig;
 use reft::elastic::{decide, NodeStatus, RecoveryDecision, ReftCluster};
+use reft::snapshot::SharedPayload;
 use reft::topology::{ParallelPlan, Topology};
 use reft::util::human_bytes;
 use reft::util::rng::Rng;
 
-fn payloads(stage_bytes: &[u64], seed: u64) -> Vec<Vec<u8>> {
+fn payloads(stage_bytes: &[u64], seed: u64) -> Vec<SharedPayload> {
     let mut rng = Rng::seed_from(seed);
     stage_bytes
         .iter()
-        .map(|&b| (0..b).map(|_| rng.next_u64() as u8).collect())
+        .map(|&b| SharedPayload::new((0..b).map(|_| rng.next_u64() as u8).collect()))
         .collect()
 }
 

@@ -2,17 +2,18 @@
 // configurations (used for the EXPERIMENTS.md §Perf iteration log).
 use reft::config::FtConfig;
 use reft::elastic::ReftCluster;
+use reft::snapshot::SharedPayload;
 use reft::topology::{ParallelPlan, Topology};
 use std::time::Instant;
 
 fn main() {
     let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
     let plen = 192 * 1024 * 1024usize;
-    let payload = vec![0xABu8; plen];
+    let payload = SharedPayload::new(vec![0xABu8; plen]);
     for (raim5, bucket) in [(false, 16<<20), (true, 16<<20), (true, 1<<20), (true, 64<<20)] {
         let ft = FtConfig { bucket_bytes: bucket, raim5, ..FtConfig::default() };
         let mut c = ReftCluster::start(topo.clone(), &[plen as u64], ft).unwrap();
-        let payloads = vec![payload.clone()];
+        let payloads = vec![payload.clone()]; // Arc clone — zero-copy
         c.snapshot_all(&payloads).unwrap(); // warm
         let t0 = Instant::now();
         for _ in 0..3 { c.snapshot_all(&payloads).unwrap(); }

@@ -71,23 +71,43 @@ impl CheckpointFile {
     }
 
     /// Serialize with per-section CRCs + trailer CRC.
+    ///
+    /// The trailer CRC covers everything before it, so a naive encoder
+    /// hashes every section body twice (once for its section CRC, once for
+    /// the trailer) — two full passes over multi-MB payloads. Here the
+    /// trailer is a streaming `crc32fast::Hasher` fed as bytes are written,
+    /// and each body's own hasher is *folded in* via CRC combine, so every
+    /// body is hashed exactly once.
     pub fn encode(&self) -> Vec<u8> {
+        fn put(out: &mut Vec<u8>, trailer: &mut crc32fast::Hasher, bytes: &[u8]) {
+            out.extend_from_slice(bytes);
+            trailer.update(bytes);
+        }
+
         let body_len: usize = self.sections.iter().map(|s| 21 + s.body.len()).sum();
         let mut out = Vec::with_capacity(28 + self.model.len() + body_len + 4);
-        out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&VERSION.to_le_bytes());
-        out.extend_from_slice(&self.step.to_le_bytes());
-        out.extend_from_slice(&(self.model.len() as u32).to_le_bytes());
-        out.extend_from_slice(self.model.as_bytes());
-        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        let mut trailer = crc32fast::Hasher::new();
+        put(&mut out, &mut trailer, MAGIC);
+        put(&mut out, &mut trailer, &VERSION.to_le_bytes());
+        put(&mut out, &mut trailer, &self.step.to_le_bytes());
+        put(&mut out, &mut trailer, &(self.model.len() as u32).to_le_bytes());
+        put(&mut out, &mut trailer, self.model.as_bytes());
+        put(&mut out, &mut trailer, &(self.sections.len() as u32).to_le_bytes());
         for s in &self.sections {
-            out.push(s.kind as u8);
-            out.extend_from_slice(&s.id.to_le_bytes());
-            out.extend_from_slice(&(s.body.len() as u64).to_le_bytes());
-            out.extend_from_slice(&crc32fast::hash(&s.body).to_le_bytes());
+            put(&mut out, &mut trailer, &[s.kind as u8]);
+            put(&mut out, &mut trailer, &s.id.to_le_bytes());
+            put(&mut out, &mut trailer, &(s.body.len() as u64).to_le_bytes());
+            let mut body_crc = crc32fast::Hasher::new();
+            body_crc.update(&s.body);
+            put(
+                &mut out,
+                &mut trailer,
+                &body_crc.clone().finalize().to_le_bytes(),
+            );
             out.extend_from_slice(&s.body);
+            trailer.combine(&body_crc); // body hashed once, folded into trailer
         }
-        let trailer = crc32fast::hash(&out);
+        let trailer = trailer.finalize();
         out.extend_from_slice(&trailer.to_le_bytes());
         out
     }
@@ -216,5 +236,34 @@ mod tests {
         let c = CheckpointFile::new("m", 0);
         let back = CheckpointFile::decode(&c.encode()).unwrap();
         assert!(back.sections.is_empty());
+    }
+
+    /// The streaming single-pass encoder must emit exactly the bytes of the
+    /// naive two-pass reference (hash each body for its section CRC, then
+    /// hash the whole prefix again for the trailer).
+    #[test]
+    fn streaming_encode_matches_two_pass_reference() {
+        fn reference_encode(c: &CheckpointFile) -> Vec<u8> {
+            let mut out = Vec::new();
+            out.extend_from_slice(MAGIC);
+            out.extend_from_slice(&VERSION.to_le_bytes());
+            out.extend_from_slice(&c.step.to_le_bytes());
+            out.extend_from_slice(&(c.model.len() as u32).to_le_bytes());
+            out.extend_from_slice(c.model.as_bytes());
+            out.extend_from_slice(&(c.sections.len() as u32).to_le_bytes());
+            for s in &c.sections {
+                out.push(s.kind as u8);
+                out.extend_from_slice(&s.id.to_le_bytes());
+                out.extend_from_slice(&(s.body.len() as u64).to_le_bytes());
+                out.extend_from_slice(&crc32fast::hash(&s.body).to_le_bytes());
+                out.extend_from_slice(&s.body);
+            }
+            let trailer = crc32fast::hash(&out);
+            out.extend_from_slice(&trailer.to_le_bytes());
+            out
+        }
+        for c in [sample(), CheckpointFile::new("empty", 9)] {
+            assert_eq!(c.encode(), reference_encode(&c));
+        }
     }
 }

@@ -17,7 +17,9 @@ pub mod xor;
 
 use anyhow::{bail, Result};
 
-pub use xor::{xor_into, xor_into_scalar};
+pub use xor::{
+    parity_into, parity_of, xor_into, xor_into_parallel, xor_into_scalar, xor_into_striped,
+};
 
 /// The RAIM5 layout for one sharding group.
 #[derive(Debug, Clone)]
@@ -66,10 +68,12 @@ impl Raim5Group {
     /// mapped sub-block of every other node's shard. `shards[j]` is node j's
     /// data. Returns a `block_len` buffer.
     ///
-    /// Hot path: uses the optimized [`xor_into`].
+    /// Hot path: the striped [`parity_of`] fold — the first contributor is
+    /// copied instead of XORed into a zeroed pass, and large blocks run the
+    /// chain across worker threads (completion-time parity encode, §Perf).
     pub fn encode_parity(&self, host: usize, shards: &[&[u8]]) -> Vec<u8> {
         assert_eq!(shards.len(), self.n);
-        let mut parity = vec![0u8; self.block_len];
+        let mut views: Vec<&[u8]> = Vec::with_capacity(self.n - 1);
         for j in 0..self.n {
             if j == host {
                 continue;
@@ -77,10 +81,10 @@ impl Raim5Group {
             let b = self.block_index_for(host, j);
             let r = self.block_range(j, b);
             if !r.is_empty() {
-                xor_into(&mut parity[..r.len()], &shards[j][r]);
+                views.push(&shards[j][r]);
             }
         }
-        parity
+        parity_of(&views, self.block_len)
     }
 
     /// The sub-block index of node `j` that maps to parity hosted on `host`.
@@ -102,6 +106,32 @@ impl Raim5Group {
             bail!("lost node {lost} out of range");
         }
         let mut out = vec![0u8; self.shard_lens[lost]];
+        self.decode_into(lost, shards, parities, &mut out)?;
+        Ok(out)
+    }
+
+    /// Subtraction-decode the lost shard **directly into `out`** — the
+    /// restore path hands the lost shard's slice of the pre-allocated
+    /// stitched payload here, so there is no decode-then-stitch copy. Each
+    /// stripe block is a striped fold: the hosting parity is copied in,
+    /// then every surviving contributor is XORed away (multi-threaded for
+    /// large blocks).
+    pub fn decode_into(
+        &self,
+        lost: usize,
+        shards: &[&[u8]],
+        parities: &[&[u8]],
+        out: &mut [u8],
+    ) -> Result<()> {
+        if lost >= self.n {
+            bail!("lost node {lost} out of range");
+        }
+        anyhow::ensure!(
+            out.len() == self.shard_lens[lost],
+            "decode buffer {} bytes != lost shard {}",
+            out.len(),
+            self.shard_lens[lost]
+        );
         for b in 0..self.n - 1 {
             let host = self.parity_node(lost, b);
             let r_lost = self.block_range(lost, b);
@@ -109,9 +139,16 @@ impl Raim5Group {
                 continue;
             }
             let width = r_lost.len();
-            // start from the parity hosted on `host`
-            let mut acc = parities[host][..self.block_len].to_vec();
-            // XOR away every other contributor to that parity
+            anyhow::ensure!(
+                parities[host].len() >= width,
+                "parity on node {host} has {} bytes, need {width}",
+                parities[host].len()
+            );
+            // fold: parity first (copied), then XOR away every other
+            // contributor to that parity; bytes past `width` belong to the
+            // zero padding and cancel out, so clamping to `width` is exact
+            let mut srcs: Vec<&[u8]> = Vec::with_capacity(self.n - 1);
+            srcs.push(&parities[host][..width]);
             for j in 0..self.n {
                 if j == host || j == lost {
                     continue;
@@ -119,12 +156,12 @@ impl Raim5Group {
                 let bj = self.block_index_for(host, j);
                 let rj = self.block_range(j, bj);
                 if !rj.is_empty() {
-                    xor_into(&mut acc[..rj.len()], &shards[j][rj]);
+                    srcs.push(&shards[j][rj]);
                 }
             }
-            out[r_lost.clone()].copy_from_slice(&acc[..width]);
+            parity_into(&mut out[r_lost], &srcs);
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Bytes of parity traffic a decode of `lost` must move across the SG
@@ -221,6 +258,29 @@ mod tests {
     #[test]
     fn rejects_single_node_group() {
         assert!(Raim5Group::plan(&[100]).is_err());
+    }
+
+    #[test]
+    fn decode_into_writes_in_place_even_on_dirty_buffer() {
+        let lens = [500usize, 400, 500, 499];
+        let g = Raim5Group::plan(&lens).unwrap();
+        let shards = random_shards(&lens, 77);
+        let views: Vec<&[u8]> = shards.iter().map(Vec::as_slice).collect();
+        let parities = g.encode_all(&views);
+        let pviews: Vec<&[u8]> = parities.iter().map(Vec::as_slice).collect();
+        for lost in 0..lens.len() {
+            let mut surv = views.clone();
+            let empty: &[u8] = &[];
+            surv[lost] = empty;
+            // dirty destination: every byte must be overwritten by the fold
+            let mut out = vec![0xA5u8; lens[lost]];
+            g.decode_into(lost, &surv, &pviews, &mut out).unwrap();
+            assert_eq!(out, shards[lost], "lost {lost}");
+        }
+        let mut wrong = vec![0u8; lens[0] - 1];
+        let mut surv = views.clone();
+        surv[0] = &[];
+        assert!(g.decode_into(0, &surv, &pviews, &mut wrong).is_err());
     }
 
     #[test]

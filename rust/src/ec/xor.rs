@@ -1,15 +1,49 @@
 //! The XOR hot path: RAIM5 encode/decode is pure `dst ^= src` streaming over
 //! multi-GB buffers, so this is one of the three §Perf targets (DESIGN.md).
 //!
-//! Strategy: process the unaligned head byte-wise, then the body as u64 words
-//! in 4-word unrolled chunks (ILP: four independent xor chains), then the
-//! tail byte-wise. On x86-64 the auto-vectorizer turns the word loop into
-//! SSE2/AVX2 loads/xors/stores; the unroll exists to defeat the
-//! one-chain-per-iteration serialization, not to hand-roll SIMD.
+//! Two layers:
+//!
+//! * **Word-unrolled serial kernel** ([`xor_into`]): unaligned head
+//!   byte-wise, body as u64 words in 4-word unrolled chunks (ILP: four
+//!   independent xor chains), tail byte-wise. On x86-64 the auto-vectorizer
+//!   turns the word loop into SSE2/AVX2 loads/xors/stores.
+//! * **Striped multi-threaded fold** ([`xor_into_parallel`],
+//!   [`parity_into`]): for buffers at or above [`PARALLEL_MIN_BYTES`] the
+//!   destination is carved into cache-line-aligned stripes and each worker
+//!   thread runs the *whole* XOR chain over its stripe (every source in
+//!   turn, stripe-resident in cache), falling back to the serial kernel
+//!   below the threshold. This is what RAIM5 completion-time parity encode
+//!   and restore decode run on.
+//!
 //! `benches/hotpath.rs` tracks throughput vs `memcpy` (RAID5's write penalty
-//! bound: parity XOR should run at >= 1/2 memcpy speed).
+//! bound: parity XOR should run at >= 1/2 memcpy speed) and the striped
+//! fold vs the single-thread kernel.
 
-/// `dst[i] ^= src[i]` for the overlapping length, optimized.
+/// Destinations smaller than this stay on the single-thread kernel — thread
+/// spawn + join costs more than the XOR below ~1 MiB.
+pub const PARALLEL_MIN_BYTES: usize = 1 << 20;
+
+/// Minimum *chain work* (destination bytes x sources) per spawned worker:
+/// spawn/join overhead must amortize against the whole chain, so a lone
+/// just-over-threshold `dst ^= src` gets few (or zero) extra threads while
+/// a multi-source parity fold of the same width fans out fully.
+const MIN_WORK_PER_THREAD: usize = 512 * 1024;
+
+/// Smallest stripe handed to a worker (keeps per-thread work meaningful).
+const STRIPE_FLOOR: usize = 128 * 1024;
+
+/// Cap on worker threads (memory-bound work stops scaling well past this).
+const MAX_THREADS: usize = 8;
+
+/// Default worker count for the striped paths.
+pub fn default_xor_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS)
+}
+
+/// `dst[i] ^= src[i]` for the overlapping length, optimized (single thread).
 #[inline]
 pub fn xor_into(dst: &mut [u8], src: &[u8]) {
     let n = dst.len().min(src.len());
@@ -58,13 +92,95 @@ pub fn xor_into_scalar(dst: &mut [u8], src: &[u8]) {
     }
 }
 
+/// `dst ^= src` striped across the default worker count. Falls back to the
+/// serial kernel below [`PARALLEL_MIN_BYTES`].
+pub fn xor_into_parallel(dst: &mut [u8], src: &[u8]) {
+    xor_into_striped(dst, src, default_xor_threads());
+}
+
+/// `dst ^= src` (overlapping length) with an explicit worker count — the
+/// property tests sweep this across thread counts and offsets.
+pub fn xor_into_striped(dst: &mut [u8], src: &[u8], threads: usize) {
+    let n = dst.len().min(src.len());
+    xor_fold_striped(&mut dst[..n], &[&src[..n]], false, threads);
+}
+
+/// Fill `dst` with the XOR fold of `sources`, each source zero-padded (or
+/// truncated) to `dst.len()`: the first source is **copied** into place —
+/// not XORed into a zeroed pass, which would cost one extra full sweep of a
+/// multi-MB buffer — and the rest are XORed in. Striped across threads for
+/// large buffers. With no sources, `dst` is zero-filled.
+pub fn parity_into(dst: &mut [u8], sources: &[&[u8]]) {
+    xor_fold_striped(dst, sources, true, default_xor_threads());
+}
+
 /// XOR-fold many sources into one fresh parity buffer of length `len`.
 pub fn parity_of(sources: &[&[u8]], len: usize) -> Vec<u8> {
     let mut out = vec![0u8; len];
-    for s in sources {
-        xor_into(&mut out, s);
-    }
+    parity_into(&mut out, sources);
     out
+}
+
+/// The striped chain driver. `copy_first` selects fold semantics (`dst` is
+/// *assigned* the fold) vs accumulate semantics (`dst ^=` every source).
+/// Each worker owns one disjoint stripe of `dst` and runs the entire source
+/// chain over it, so the stripe stays hot in cache across the chain.
+pub fn xor_fold_striped(dst: &mut [u8], sources: &[&[u8]], copy_first: bool, threads: usize) {
+    let len = dst.len();
+    let work = len.saturating_mul(sources.len().max(1));
+    let threads = threads.min((work / MIN_WORK_PER_THREAD).max(1));
+    if len < PARALLEL_MIN_BYTES || threads <= 1 {
+        fold_segment(dst, 0, sources, copy_first);
+        return;
+    }
+    let stripe = stripe_len(len, threads);
+    std::thread::scope(|scope| {
+        let mut rest = dst;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = stripe.min(rest.len());
+            let (seg, tail) = std::mem::take(&mut rest).split_at_mut(take);
+            rest = tail;
+            let seg_base = base;
+            base += take;
+            scope.spawn(move || fold_segment(seg, seg_base, sources, copy_first));
+        }
+    });
+}
+
+/// Per-worker chain over one stripe. `seg` covers absolute bytes
+/// `[base, base + seg.len())` of the logical destination buffer.
+fn fold_segment(seg: &mut [u8], base: usize, sources: &[&[u8]], copy_first: bool) {
+    let mut sources = sources;
+    if copy_first {
+        match sources.split_first() {
+            Some((first, rest)) => {
+                let n = first.len().saturating_sub(base).min(seg.len());
+                if n > 0 {
+                    seg[..n].copy_from_slice(&first[base..base + n]);
+                }
+                seg[n..].fill(0);
+                sources = rest;
+            }
+            None => {
+                seg.fill(0);
+                return;
+            }
+        }
+    }
+    for s in sources {
+        let n = s.len().saturating_sub(base).min(seg.len());
+        if n > 0 {
+            xor_into(&mut seg[..n], &s[base..base + n]);
+        }
+    }
+}
+
+/// Stripe size: even split rounded up to a 64-byte cache line, floored so
+/// tiny stripes never fan out across threads.
+fn stripe_len(n: usize, threads: usize) -> usize {
+    let per = n.div_ceil(threads.max(1));
+    per.div_ceil(64).saturating_mul(64).max(STRIPE_FLOOR)
 }
 
 #[cfg(test)]
@@ -128,5 +244,83 @@ mod tests {
         let p = parity_of(&[&a, &b, &c], 1000);
         let rec_b = parity_of(&[&p, &a, &c], 1000);
         assert_eq!(rec_b, b);
+    }
+
+    #[test]
+    fn parity_of_copies_first_source_then_folds() {
+        // fold semantics: out = s0 ^ s1 ^ ..., zero-padded to len
+        let s0 = rand_bytes(100, 20);
+        let s1 = rand_bytes(60, 21);
+        let out = parity_of(&[&s0, &s1], 120);
+        let mut expect = vec![0u8; 120];
+        for (i, &b) in s0.iter().enumerate() {
+            expect[i] ^= b;
+        }
+        for (i, &b) in s1.iter().enumerate() {
+            expect[i] ^= b;
+        }
+        assert_eq!(out, expect);
+        // no sources -> zeroes; one source -> a plain copy
+        assert_eq!(parity_of(&[], 8), vec![0u8; 8]);
+        assert_eq!(parity_of(&[&s0[..]], 100), s0);
+    }
+
+    #[test]
+    fn striped_matches_serial_across_threshold_and_threads() {
+        for n in [
+            0usize,
+            1,
+            4096,
+            PARALLEL_MIN_BYTES - 1,
+            PARALLEL_MIN_BYTES,
+            PARALLEL_MIN_BYTES + 13,
+            3 * PARALLEL_MIN_BYTES + 777,
+        ] {
+            let src = rand_bytes(n, 7 ^ n as u64);
+            let base = rand_bytes(n, 8 ^ n as u64);
+            let mut want = base.clone();
+            xor_into_scalar(&mut want, &src);
+            for threads in [1usize, 2, 3, 8] {
+                let mut got = base.clone();
+                xor_into_striped(&mut got, &src, threads);
+                assert_eq!(got, want, "n={n} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn striped_fold_matches_serial_fold_over_threshold() {
+        let len = 2 * PARALLEL_MIN_BYTES + 999;
+        let srcs: Vec<Vec<u8>> = (0..4)
+            .map(|i| rand_bytes(len - i * 100_000, 30 + i as u64))
+            .collect();
+        let views: Vec<&[u8]> = srcs.iter().map(Vec::as_slice).collect();
+        // serial oracle
+        let mut want = vec![0u8; len];
+        for v in &views {
+            xor_into_scalar(&mut want, v);
+        }
+        let got = parity_of(&views, len);
+        assert_eq!(got, want);
+        // accumulate semantics too (copy_first = false on dirty dst)
+        let base = rand_bytes(len, 99);
+        let mut want2 = base.clone();
+        for v in &views {
+            xor_into_scalar(&mut want2, v);
+        }
+        let mut got2 = base.clone();
+        xor_fold_striped(&mut got2, &views, false, 4);
+        assert_eq!(got2, want2);
+    }
+
+    #[test]
+    fn parity_into_overwrites_stale_destination() {
+        // fold semantics must not depend on prior dst contents
+        let len = PARALLEL_MIN_BYTES + 17;
+        let s = rand_bytes(len / 2, 55);
+        let mut dst = rand_bytes(len, 56); // garbage
+        parity_into(&mut dst, &[&s]);
+        assert_eq!(&dst[..s.len()], &s[..]);
+        assert!(dst[s.len()..].iter().all(|&b| b == 0), "padding zeroed");
     }
 }

@@ -16,14 +16,15 @@
 //! returning, so its call sites keep snapshot-visible-on-return semantics.
 
 use std::collections::BTreeMap;
-use std::ops::Range;
-use std::sync::Arc;
+use std::sync::mpsc::{channel, Receiver};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::FtConfig;
 use crate::ec::Raim5Group;
 use crate::smp::{BucketRef, Signal, Smp, SmpMsg};
+use crate::snapshot::payload::{PayloadView, SharedPayload};
+use crate::snapshot::plan::NodeShard;
 use crate::snapshot::{BucketPipe, CoordSink, SnapshotCoordinator, SnapshotPlan, TickReport};
 use crate::topology::Topology;
 
@@ -70,14 +71,13 @@ impl CoordSink for SmpSink<'_> {
         version: u64,
         stage: usize,
         offset: usize,
-        seg: &Arc<Vec<u8>>,
-        range: Range<usize>,
+        view: PayloadView,
     ) -> Result<()> {
         self.smp(node)?.send(SmpMsg::Bucket {
             version,
             stage,
             offset,
-            data: BucketRef::Shared { seg: Arc::clone(seg), range },
+            data: BucketRef::Shared(view),
         })
     }
 
@@ -140,8 +140,10 @@ impl ReftCluster {
 
     /// L1 enqueue: open a new snapshot version and return immediately; the
     /// payload buckets drain across subsequent [`Self::tick`]s. A still
-    /// in-flight older version is aborted (L3 supersession).
-    pub fn request_snapshot(&mut self, payloads: Vec<Vec<u8>>) -> Result<u64> {
+    /// in-flight older version is aborted (L3 supersession). Takes the
+    /// captured payloads by shared reference — the enqueue moves `Arc`
+    /// handles, never payload bytes.
+    pub fn request_snapshot(&mut self, payloads: Vec<SharedPayload>) -> Result<u64> {
         self.version += 1;
         let v = self.version;
         let mut sink = SmpSink { smps: &self.smps };
@@ -190,7 +192,15 @@ impl ReftCluster {
     /// buckets, then (if enabled) compute + place the RAIM5 parities.
     /// `payload` is the stage's full FT payload (identical across DP paths
     /// after gradient sync, so any replica is a valid source — §4.1).
-    pub fn snapshot_stage(&mut self, version: u64, stage: usize, payload: &[u8]) -> Result<()> {
+    ///
+    /// Zero-copy: every bucket is a [`PayloadView`] into the shared capture;
+    /// the only payload copy is the SMP's flush into its dirty buffer.
+    pub fn snapshot_stage(
+        &mut self,
+        version: u64,
+        stage: usize,
+        payload: &SharedPayload,
+    ) -> Result<()> {
         let stage_len = self.plan.stage_bytes[stage] as usize;
         anyhow::ensure!(
             payload.len() == stage_len,
@@ -204,22 +214,15 @@ impl ReftCluster {
             };
             let total = shard.len() as usize;
             smp.send(SmpMsg::BeginSnapshot { version, stage, total_len: total })?;
-            // one write into the node's "shared-memory segment" per shard;
-            // buckets are zero-copy views into it (the SMP does the flush
-            // copy into its dirty buffer — the paper's Fig. 6 data flow)
-            let seg = std::sync::Arc::new(
-                payload[shard.range.start as usize..shard.range.end as usize].to_vec(),
-            );
-            for r in BucketPipe::new(0..shard.len(), self.ft.bucket_bytes) {
+            for r in BucketPipe::new(shard.range.clone(), self.ft.bucket_bytes) {
                 smp.send(SmpMsg::Bucket {
                     version,
                     stage,
                     // SMP-local offsets are shard-relative
-                    offset: r.start as usize,
-                    data: crate::smp::BucketRef::Shared {
-                        seg: std::sync::Arc::clone(&seg),
-                        range: r.start as usize..r.end as usize,
-                    },
+                    offset: (r.start - shard.range.start) as usize,
+                    data: BucketRef::Shared(
+                        payload.view(r.start as usize..r.end as usize),
+                    ),
                 })?;
             }
             smp.send(SmpMsg::EndSnapshot { version, stage })?;
@@ -228,7 +231,7 @@ impl ReftCluster {
         if let Some(group) = self.groups.get(&stage) {
             let views: Vec<&[u8]> = shards
                 .iter()
-                .map(|s| &payload[s.range.start as usize..s.range.end as usize])
+                .map(|s| &payload.as_slice()[s.range.start as usize..s.range.end as usize])
                 .collect();
             for (host_idx, shard) in shards.iter().enumerate() {
                 let parity = group.encode_parity(host_idx, &views);
@@ -246,7 +249,8 @@ impl ReftCluster {
     /// exercises the coordinator (enqueue + bounded drain), the blocking
     /// flavour is the legacy in-caller bucket loop. Either way the round is
     /// fully promoted when this returns, so restore sees it immediately.
-    pub fn snapshot_all(&mut self, payloads: &[Vec<u8>]) -> Result<u64> {
+    /// `payloads.to_vec()` here clones `Arc` handles, not payload bytes.
+    pub fn snapshot_all(&mut self, payloads: &[SharedPayload]) -> Result<u64> {
         if self.ft.async_snapshot {
             let v = self.request_snapshot(payloads.to_vec())?;
             self.drain_pending()?;
@@ -263,7 +267,7 @@ impl ReftCluster {
     /// The legacy synchronous save: every bucket of every stage drains
     /// inside this call (what the async coordinator is measured against,
     /// and the deterministic path recovery re-protection uses).
-    pub fn snapshot_all_blocking(&mut self, payloads: &[Vec<u8>]) -> Result<u64> {
+    pub fn snapshot_all_blocking(&mut self, payloads: &[SharedPayload]) -> Result<u64> {
         anyhow::ensure!(payloads.len() == self.topo.plan.pp);
         // a round the coordinator still has in flight is now stale
         self.cancel_in_flight();
@@ -277,7 +281,211 @@ impl ReftCluster {
 
     /// Restore one stage's full payload from SMP shards, RAIM5-decoding the
     /// shards of `dead` nodes. Errors if protection is exceeded.
+    ///
+    /// This is the **parallel distributed in-memory load** (paper §4.2
+    /// restart path): shard and parity fetches are issued to every surviving
+    /// SG member up front so all SMPs serialize and ship concurrently, a
+    /// scoped gather thread per survivor stitches its shard directly into
+    /// the pre-allocated output buffer, and a lost shard is XOR-decoded
+    /// straight into its slot (no decode-then-stitch copy).
     pub fn restore_stage(&self, stage: usize, dead: &[usize]) -> Result<Vec<u8>> {
+        let mut out = vec![0u8; self.plan.stage_bytes[stage] as usize];
+        self.restore_stage_into(stage, dead, &mut out)?;
+        Ok(out)
+    }
+
+    fn restore_stage_into(&self, stage: usize, dead: &[usize], out: &mut [u8]) -> Result<()> {
+        let shards: Vec<NodeShard> = self.plan.shards_for_stage(stage).cloned().collect();
+        // The slice carving below requires the plan to tile the stage
+        // payload contiguously in ascending *plan order* and fails loudly
+        // otherwise (the contiguity ensure in the carve loop). Do NOT sort
+        // here: RAIM5 parity placement uses plan-order SG indices, so
+        // silently reordering would decode with mismatched indices.
+        anyhow::ensure!(
+            out.len() == self.plan.stage_bytes[stage] as usize,
+            "restore buffer {} bytes != stage {stage} payload {}",
+            out.len(),
+            self.plan.stage_bytes[stage]
+        );
+        let dead_in_sg: Vec<usize> = (0..shards.len())
+            .filter(|&i| dead.contains(&shards[i].node) || self.smp(shards[i].node).is_none())
+            .collect();
+        let need_decode = !dead_in_sg.is_empty();
+        if need_decode {
+            anyhow::ensure!(
+                self.groups.contains_key(&stage),
+                "node lost but RAIM5 is not enabled for this stage"
+            );
+            anyhow::ensure!(
+                dead_in_sg.len() == 1,
+                "{} nodes lost in SG {stage} — exceeds RAIM5 protection",
+                dead_in_sg.len()
+            );
+        }
+
+        // phase 1: issue every clean (+ parity) fetch before reading any
+        // reply, so all surviving SMPs snapshot-clone and ship concurrently
+        type Reply = Receiver<Option<(u64, Vec<u8>)>>;
+        let mut fetches: Vec<Option<(Reply, Option<Reply>)>> = Vec::with_capacity(shards.len());
+        for (i, shard) in shards.iter().enumerate() {
+            if dead_in_sg.contains(&i) {
+                fetches.push(None);
+                continue;
+            }
+            let smp = self.smp(shard.node).context("survivor SMP gone")?;
+            let (ctx, crx) = channel();
+            smp.send(SmpMsg::GetClean { stage, reply: ctx })?;
+            let prx = if need_decode {
+                let (ptx, prx) = channel();
+                smp.send(SmpMsg::GetParity { stage, reply: ptx })?;
+                Some(prx)
+            } else {
+                None
+            };
+            fetches.push(Some((crx, prx)));
+        }
+
+        // carve the output buffer into disjoint per-shard slices
+        let mut slices: Vec<&mut [u8]> = Vec::with_capacity(shards.len());
+        {
+            let mut rest: &mut [u8] = out;
+            let mut cursor = 0u64;
+            for shard in &shards {
+                anyhow::ensure!(
+                    shard.range.start == cursor,
+                    "stage {stage} shard plan is not contiguous at byte {cursor}"
+                );
+                let (head, tail) = rest.split_at_mut(shard.len() as usize);
+                slices.push(head);
+                rest = tail;
+                cursor = shard.range.end;
+            }
+            anyhow::ensure!(rest.is_empty(), "stage {stage} shard plan under-covers payload");
+        }
+
+        // phase 2: scoped gather — one thread per survivor receives its
+        // shard and copies it straight into the stitched output slice
+        let mut results: Vec<Option<(u64, Option<(u64, Vec<u8>)>)>> = Vec::new();
+        results.resize_with(shards.len(), || None);
+        std::thread::scope(|scope| -> Result<()> {
+            let mut handles = Vec::with_capacity(shards.len());
+            for ((i, fetch), slice) in fetches.into_iter().enumerate().zip(slices) {
+                let Some((crx, prx)) = fetch else {
+                    continue; // lost shard: its slice stays zeroed for decode
+                };
+                let node = shards[i].node;
+                handles.push((
+                    i,
+                    scope.spawn(move || -> Result<(u64, Option<(u64, Vec<u8>)>)> {
+                        let (v, data) = crx
+                            .recv()
+                            .map_err(|_| anyhow!("SMP {node} died mid-restore"))?
+                            .with_context(|| {
+                                format!("no clean snapshot for stage {stage} on node {node}")
+                            })?;
+                        anyhow::ensure!(
+                            data.len() == slice.len(),
+                            "shard on node {node} has {} bytes, expected {}",
+                            data.len(),
+                            slice.len()
+                        );
+                        slice.copy_from_slice(&data);
+                        let parity = match prx {
+                            Some(p) => p
+                                .recv()
+                                .map_err(|_| anyhow!("SMP {node} died mid-restore"))?,
+                            None => None,
+                        };
+                        Ok((v, parity))
+                    }),
+                ));
+            }
+            for (i, h) in handles {
+                let r = h.join().map_err(|_| anyhow!("restore gather thread panicked"))?;
+                results[i] = Some(r?);
+            }
+            Ok(())
+        })?;
+
+        // consistency: all survivors must agree on the snapshot version
+        let versions: Vec<u64> = results.iter().flatten().map(|(v, _)| *v).collect();
+        anyhow::ensure!(!versions.is_empty(), "no clean snapshot for stage {stage}");
+        let v = versions[0];
+        anyhow::ensure!(
+            versions.iter().all(|&x| x == v),
+            "inconsistent snapshot versions {versions:?} for stage {stage}"
+        );
+
+        if let Some(&lost) = dead_in_sg.first() {
+            let group = self.groups.get(&stage).expect("checked above");
+            let empty: &[u8] = &[];
+            let mut parities: Vec<&[u8]> = Vec::with_capacity(shards.len());
+            for (i, r) in results.iter().enumerate() {
+                match r {
+                    Some((_, Some((pv, pdata)))) => {
+                        anyhow::ensure!(*pv == v, "parity version {pv} != snapshot {v}");
+                        parities.push(pdata);
+                    }
+                    Some((_, None)) => {
+                        bail!("no parity on node {}", shards[i].node)
+                    }
+                    // the lost node's own parity is never read by the decoder
+                    None => parities.push(empty),
+                }
+            }
+            // split the output so survivor views and the lost shard's
+            // destination slice can coexist; decode writes in place
+            let lost_start = shards[lost].range.start as usize;
+            let lost_end = shards[lost].range.end as usize;
+            let (head, rest) = out.split_at_mut(lost_start);
+            let (lost_slice, tail) = rest.split_at_mut(lost_end - lost_start);
+            let views: Vec<&[u8]> = shards
+                .iter()
+                .enumerate()
+                .map(|(j, s)| {
+                    let (a, b) = (s.range.start as usize, s.range.end as usize);
+                    if j == lost {
+                        empty
+                    } else if j < lost {
+                        &head[a..b]
+                    } else {
+                        &tail[a - lost_end..b - lost_end]
+                    }
+                })
+                .collect();
+            group.decode_into(lost, &views, &parities, lost_slice)?;
+        }
+        Ok(())
+    }
+
+    /// Restore every stage concurrently (see [`Self::restore_stage`]): each
+    /// stage's gather runs on its own scoped thread, so a multi-stage
+    /// restart overlaps the per-SG network/decode work across stages.
+    pub fn restore_all(&self, dead: &[usize]) -> Result<Vec<Vec<u8>>> {
+        let pp = self.topo.plan.pp;
+        if pp == 1 {
+            return Ok(vec![self.restore_stage(0, dead)?]);
+        }
+        let mut out: Vec<Result<Vec<u8>>> = Vec::with_capacity(pp);
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..pp)
+                .map(|s| scope.spawn(move || self.restore_stage(s, dead)))
+                .collect();
+            for h in handles {
+                out.push(
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("restore stage thread panicked"))),
+                );
+            }
+        });
+        out.into_iter().collect()
+    }
+
+    /// The pre-parallel serial restore: fetch shards one SMP at a time,
+    /// decode into a temporary, stitch at the end. Kept as the measured
+    /// baseline for `benches/hotpath.rs` and as the byte-identity oracle the
+    /// parallel-path tests compare against.
+    pub fn restore_stage_serial(&self, stage: usize, dead: &[usize]) -> Result<Vec<u8>> {
         let shards: Vec<_> = self.plan.shards_for_stage(stage).cloned().collect();
         let dead_in_sg: Vec<usize> = (0..shards.len())
             .filter(|&i| dead.contains(&shards[i].node) || self.smp(shards[i].node).is_none())
@@ -348,10 +556,10 @@ impl ReftCluster {
         Ok(out)
     }
 
-    /// Restore every stage (see [`Self::restore_stage`]).
-    pub fn restore_all(&self, dead: &[usize]) -> Result<Vec<Vec<u8>>> {
+    /// Serial restore of every stage (see [`Self::restore_stage_serial`]).
+    pub fn restore_all_serial(&self, dead: &[usize]) -> Result<Vec<Vec<u8>>> {
         (0..self.topo.plan.pp)
-            .map(|s| self.restore_stage(s, dead))
+            .map(|s| self.restore_stage_serial(s, dead))
             .collect()
     }
 
@@ -399,12 +607,12 @@ mod tests {
     use crate::topology::ParallelPlan;
     use crate::util::rng::Rng;
 
-    fn payload(len: usize, seed: u64) -> Vec<u8> {
+    fn payload(len: usize, seed: u64) -> SharedPayload {
         let mut rng = Rng::seed_from(seed);
-        (0..len).map(|_| rng.next_u64() as u8).collect()
+        SharedPayload::new((0..len).map(|_| rng.next_u64() as u8).collect())
     }
 
-    fn dp6_cluster(raim5: bool) -> (ReftCluster, Vec<Vec<u8>>) {
+    fn dp6_cluster(raim5: bool) -> (ReftCluster, Vec<SharedPayload>) {
         let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
         let bytes = vec![60_000u64];
         let ft = FtConfig { raim5, bucket_bytes: 4096, ..FtConfig::default() };
@@ -483,7 +691,7 @@ mod tests {
         let bytes = vec![40_000u64, 30_000, 50_000];
         let ft = FtConfig { bucket_bytes: 1024, ..FtConfig::default() };
         let mut c = ReftCluster::start(topo, &bytes, ft).unwrap();
-        let payloads: Vec<Vec<u8>> = bytes
+        let payloads: Vec<SharedPayload> = bytes
             .iter()
             .enumerate()
             .map(|(i, &b)| payload(b as usize, i as u64))
@@ -495,7 +703,23 @@ mod tests {
         assert_eq!(restored, payloads);
     }
 
-    fn dp6_async_cluster(bucket: usize, budget: usize) -> (ReftCluster, Vec<Vec<u8>>) {
+    #[test]
+    fn parallel_restore_matches_serial_baseline() {
+        let (mut c, payloads) = dp6_cluster(true);
+        c.snapshot_all(&payloads).unwrap();
+        assert_eq!(
+            c.restore_all(&[]).unwrap(),
+            c.restore_all_serial(&[]).unwrap(),
+            "no-failure gather"
+        );
+        c.kill_node(3);
+        let par = c.restore_all(&[3]).unwrap();
+        let ser = c.restore_all_serial(&[3]).unwrap();
+        assert_eq!(par, ser, "decode-into-place vs decode-then-stitch");
+        assert_eq!(par, payloads);
+    }
+
+    fn dp6_async_cluster(bucket: usize, budget: usize) -> (ReftCluster, Vec<SharedPayload>) {
         let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
         let bytes = vec![60_000u64];
         let ft = FtConfig {
@@ -573,7 +797,7 @@ mod tests {
         let (mut c, payloads) = dp6_cluster(true);
         c.snapshot_all(&payloads).unwrap();
         let resident = c.resident_bytes().unwrap();
-        let payload_total: usize = payloads.iter().map(Vec::len).sum();
+        let payload_total: usize = payloads.iter().map(SharedPayload::len).sum();
         assert!(resident >= payload_total);
         assert!(
             resident <= payload_total * 2,

@@ -25,6 +25,8 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::snapshot::payload::PayloadView;
+
 /// Elastic signals (paper §4.2 "Elastic Functionality").
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Signal {
@@ -44,9 +46,10 @@ pub enum SmpMsg {
     /// open the dirty buffer for a new snapshot version of one stage shard
     BeginSnapshot { version: u64, stage: usize, total_len: usize },
     /// one tiny bucket of snapshot bytes. `data` is a view into the writer's
-    /// shared-memory segment (`src[range]`): the channel transfers the Arc
+    /// shared payload: the channel transfers an `Arc`-backed `PayloadView`
     /// (zero-copy, like mapping the same shm page), the SMP then copies the
-    /// bucket into its own dirty buffer — the Fig. 6 "flush" step.
+    /// bucket into its own dirty buffer — the Fig. 6 "flush" step and the
+    /// *only* payload copy on the whole save path (§Perf copy budget).
     Bucket { version: u64, stage: usize, offset: usize, data: BucketRef },
     /// all buckets for (version, stage) sent — promote dirty -> clean
     EndSnapshot { version: u64, stage: usize },
@@ -64,18 +67,19 @@ pub enum SmpMsg {
     Shutdown,
 }
 
-/// A bucket's bytes: either an owned vector or a range into a shared
-/// segment (the common, allocation-free path).
+/// A bucket's bytes: either an owned vector or a zero-copy view into a
+/// [`SharedPayload`](crate::snapshot::SharedPayload) (the common,
+/// allocation-free path).
 pub enum BucketRef {
     Owned(Vec<u8>),
-    Shared { seg: std::sync::Arc<Vec<u8>>, range: std::ops::Range<usize> },
+    Shared(PayloadView),
 }
 
 impl BucketRef {
     pub fn as_slice(&self) -> &[u8] {
         match self {
             BucketRef::Owned(v) => v,
-            BucketRef::Shared { seg, range } => &seg[range.clone()],
+            BucketRef::Shared(view) => view.as_slice(),
         }
     }
 

@@ -25,12 +25,11 @@
 //! whole drain/abort/completion protocol testable without threads.
 
 use std::collections::BTreeMap;
-use std::ops::Range;
-use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::ec::Raim5Group;
+use crate::snapshot::payload::{PayloadView, SharedPayload};
 use crate::snapshot::plan::{NodeShard, SnapshotPlan};
 
 /// Where coordinator traffic goes: one call per SMP-bound message.
@@ -38,15 +37,14 @@ use crate::snapshot::plan::{NodeShard, SnapshotPlan};
 pub trait CoordSink {
     fn begin(&mut self, node: usize, version: u64, stage: usize, total_len: usize) -> Result<()>;
     /// One tiny bucket. `offset` is shard-relative (the SMP's dirty-buffer
-    /// offset); `range` indexes into `seg`, the stage's full payload.
+    /// offset); `view` is a zero-copy slice of the stage's full payload.
     fn bucket(
         &mut self,
         node: usize,
         version: u64,
         stage: usize,
         offset: usize,
-        seg: &Arc<Vec<u8>>,
-        range: Range<usize>,
+        view: PayloadView,
     ) -> Result<()>;
     fn end(&mut self, node: usize, version: u64, stage: usize) -> Result<()>;
     fn store_parity(&mut self, node: usize, version: u64, stage: usize, data: Vec<u8>)
@@ -79,7 +77,7 @@ impl Worker {
 struct Inflight {
     version: u64,
     /// per-stage payload, shared with every bucket message (zero-copy)
-    payloads: Vec<Arc<Vec<u8>>>,
+    payloads: Vec<SharedPayload>,
     workers: Vec<Worker>,
 }
 
@@ -187,13 +185,14 @@ impl SnapshotCoordinator {
             .unwrap_or(0)
     }
 
-    /// L1 enqueue: take ownership of the serialized payloads, abort any
-    /// stale in-flight version (L3), open dirty buffers on every SMP, and
-    /// return without moving a single payload bucket.
+    /// L1 enqueue: take shared ownership of the captured payloads (`Arc`
+    /// bumps, zero byte copies), abort any stale in-flight version (L3),
+    /// open dirty buffers on every SMP, and return without moving a single
+    /// payload bucket.
     pub fn submit(
         &mut self,
         version: u64,
-        payloads: Vec<Vec<u8>>,
+        payloads: Vec<SharedPayload>,
         sink: &mut impl CoordSink,
     ) -> Result<()> {
         anyhow::ensure!(
@@ -214,7 +213,6 @@ impl SnapshotCoordinator {
             self.abort_in_flight(sink);
             self.stats.superseded += 1;
         }
-        let payloads: Vec<Arc<Vec<u8>>> = payloads.into_iter().map(Arc::new).collect();
         let workers: Vec<Worker> = self
             .plan
             .shards
@@ -277,8 +275,7 @@ impl SnapshotCoordinator {
                         f.version,
                         w.shard.stage,
                         rel_start as usize,
-                        &f.payloads[w.shard.stage],
-                        abs,
+                        f.payloads[w.shard.stage].view(abs),
                     )
                     .is_err()
                 {
@@ -342,7 +339,7 @@ impl SnapshotCoordinator {
                 .collect();
             let views: Vec<&[u8]> = shards
                 .iter()
-                .map(|s| &payload[s.range.start as usize..s.range.end as usize])
+                .map(|s| &payload.as_slice()[s.range.start as usize..s.range.end as usize])
                 .collect();
             for (host_idx, shard) in shards.iter().enumerate() {
                 let parity = group.encode_parity(host_idx, &views);
@@ -417,8 +414,7 @@ mod tests {
             version: u64,
             stage: usize,
             offset: usize,
-            seg: &Arc<Vec<u8>>,
-            range: Range<usize>,
+            view: PayloadView,
         ) -> Result<()> {
             self.check(node)?;
             self.events.push(Ev::Bucket {
@@ -426,7 +422,7 @@ mod tests {
                 version,
                 stage,
                 offset,
-                bytes: seg[range].to_vec(),
+                bytes: view.as_slice().to_vec(),
             });
             Ok(())
         }
@@ -475,11 +471,15 @@ mod tests {
         SnapshotCoordinator::new(plan, groups, bucket, budget)
     }
 
-    fn payloads(stage_bytes: &[u64]) -> Vec<Vec<u8>> {
+    fn payloads(stage_bytes: &[u64]) -> Vec<SharedPayload> {
         stage_bytes
             .iter()
             .enumerate()
-            .map(|(i, &b)| (0..b).map(|j| (j as u8).wrapping_mul(i as u8 + 1)).collect())
+            .map(|(i, &b)| {
+                SharedPayload::new(
+                    (0..b).map(|j| (j as u8).wrapping_mul(i as u8 + 1)).collect(),
+                )
+            })
             .collect()
     }
 

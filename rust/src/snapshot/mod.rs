@@ -14,13 +14,20 @@
 //!   (§4.1 L1-L3): enqueue-and-return saves whose buckets drain across
 //!   subsequent training iterations under a per-node interference budget,
 //!   with version supersession and completion-time parity encoding.
+//! * [`payload`] — the zero-copy payload currency: `Arc`-backed
+//!   [`SharedPayload`]s captured once by the trainer and carried by
+//!   reference (as [`PayloadView`] bucket slices) all the way to the SMP
+//!   dirty-buffer flush, with a process-wide copy audit for the §Perf
+//!   copy-count budget.
 
 pub mod bucket;
 pub mod coord;
 pub mod cost;
+pub mod payload;
 pub mod plan;
 
 pub use bucket::BucketPipe;
 pub use coord::{CoordSink, CoordStats, SnapshotCoordinator, TickReport};
 pub use cost::{method_save_cost, SaveCost, SaveCtx};
+pub use payload::{PayloadView, SharedPayload};
 pub use plan::{NodeShard, SnapshotPlan};

@@ -1,0 +1,271 @@
+//! Shared immutable snapshot payloads — the zero-copy currency of the save
+//! path (DESIGN.md §Perf "copy-count budget").
+//!
+//! A trainer captures its serialized state exactly once (`StageState::
+//! to_payload`), wraps it in a [`SharedPayload`] (an `Arc` handoff, no
+//! copy), and from there every hop — `ReftCluster::snapshot_all`, the
+//! asynchronous coordinator's in-flight round, each tiny-bucket SMP message
+//! — holds either an `Arc` clone of the same allocation or a
+//! [`PayloadView`] (an `Arc` + byte range). The only time payload bytes are
+//! copied again is the SMP's flush of a bucket view into its own dirty
+//! buffer, which is the one copy the paper's Fig. 6 data flow requires
+//! (training memory → SMP-owned memory must cross an ownership boundary).
+//!
+//! The [`copy_audit`] counters exist so tests can *assert* that budget:
+//! every API on this type that deep-copies payload bytes records itself,
+//! and the save-path acceptance test checks the counter does not move
+//! across a full snapshot round.
+
+use std::fmt;
+use std::ops::{Deref, Range};
+use std::sync::Arc;
+
+/// Process-wide accounting of full-payload deep copies. Only the explicit
+/// copying APIs on [`SharedPayload`] ([`SharedPayload::copy_of`],
+/// [`SharedPayload::to_vec`]) record here — `Arc` clones and views are free
+/// and therefore invisible, which is exactly the property under test.
+pub mod copy_audit {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static COPIES: AtomicU64 = AtomicU64::new(0);
+    static BYTES: AtomicU64 = AtomicU64::new(0);
+
+    pub(super) fn record(bytes: usize) {
+        COPIES.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    /// Number of full-payload deep copies since process start.
+    pub fn copies() -> u64 {
+        COPIES.load(Ordering::Relaxed)
+    }
+
+    /// Total payload bytes deep-copied since process start.
+    pub fn bytes() -> u64 {
+        BYTES.load(Ordering::Relaxed)
+    }
+}
+
+/// An immutable, reference-counted snapshot payload. Cloning is an `Arc`
+/// bump; slicing produces [`PayloadView`]s into the same allocation.
+#[derive(Clone)]
+pub struct SharedPayload {
+    buf: Arc<Vec<u8>>,
+}
+
+impl SharedPayload {
+    /// Take ownership of already-serialized bytes. This is the capture
+    /// handoff: the `Vec` moves into the `Arc`, no byte is copied.
+    pub fn new(bytes: Vec<u8>) -> SharedPayload {
+        SharedPayload { buf: Arc::new(bytes) }
+    }
+
+    /// Wrap an existing shared allocation.
+    pub fn from_arc(buf: Arc<Vec<u8>>) -> SharedPayload {
+        SharedPayload { buf }
+    }
+
+    /// Deep-copy `bytes` into a fresh payload. Recorded by [`copy_audit`] —
+    /// the save path must never need this.
+    pub fn copy_of(bytes: &[u8]) -> SharedPayload {
+        copy_audit::record(bytes.len());
+        SharedPayload { buf: Arc::new(bytes.to_vec()) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// The underlying shared allocation.
+    pub fn arc(&self) -> &Arc<Vec<u8>> {
+        &self.buf
+    }
+
+    /// Number of live references to the allocation (tests use this to prove
+    /// the snapshot machinery releases its views after a round drains).
+    pub fn ref_count(&self) -> usize {
+        Arc::strong_count(&self.buf)
+    }
+
+    /// A zero-copy view of `range`.
+    pub fn view(&self, range: Range<usize>) -> PayloadView {
+        assert!(
+            range.start <= range.end && range.end <= self.buf.len(),
+            "view {range:?} out of bounds for payload of {} bytes",
+            self.buf.len()
+        );
+        PayloadView { seg: self.clone(), range }
+    }
+
+    /// A view of the whole payload.
+    pub fn view_all(&self) -> PayloadView {
+        self.view(0..self.len())
+    }
+
+    /// Deep-copy out to an owned `Vec`. Recorded by [`copy_audit`].
+    pub fn to_vec(&self) -> Vec<u8> {
+        copy_audit::record(self.len());
+        self.buf.as_ref().clone()
+    }
+}
+
+impl Deref for SharedPayload {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for SharedPayload {
+    fn from(bytes: Vec<u8>) -> SharedPayload {
+        SharedPayload::new(bytes)
+    }
+}
+
+impl fmt::Debug for SharedPayload {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SharedPayload({} bytes, {} refs)", self.len(), self.ref_count())
+    }
+}
+
+impl PartialEq for SharedPayload {
+    fn eq(&self, other: &SharedPayload) -> bool {
+        Arc::ptr_eq(&self.buf, &other.buf) || self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for SharedPayload {}
+
+impl PartialEq<Vec<u8>> for SharedPayload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<SharedPayload> for Vec<u8> {
+    fn eq(&self, other: &SharedPayload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<[u8]> for SharedPayload {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+/// A byte range into a [`SharedPayload`] — what one tiny-bucket SMP message
+/// carries. Cloning bumps the payload's `Arc`; the bytes are never copied
+/// until the receiving SMP flushes the view into its dirty buffer.
+#[derive(Clone)]
+pub struct PayloadView {
+    seg: SharedPayload,
+    range: Range<usize>,
+}
+
+impl PayloadView {
+    pub fn as_slice(&self) -> &[u8] {
+        &self.seg.as_slice()[self.range.clone()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.range.end - self.range.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.range.is_empty()
+    }
+
+    /// The payload this view points into.
+    pub fn seg(&self) -> &SharedPayload {
+        &self.seg
+    }
+
+    /// The byte range within [`Self::seg`].
+    pub fn range(&self) -> Range<usize> {
+        self.range.clone()
+    }
+}
+
+impl fmt::Debug for PayloadView {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PayloadView({:?} of {} bytes)", self.range, self.seg.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_takes_ownership_without_copying() {
+        // pointer identity proves the move; the copy-audit counter is NOT
+        // asserted here because other tests in this binary legitimately
+        // bump it concurrently (it is process-wide)
+        let bytes: Vec<u8> = (0..255).collect();
+        let ptr = bytes.as_ptr();
+        let p = SharedPayload::new(bytes);
+        assert_eq!(p.as_slice().as_ptr(), ptr, "same allocation");
+    }
+
+    #[test]
+    fn clones_and_views_share_the_allocation() {
+        let p = SharedPayload::new(vec![7u8; 100]);
+        let c = p.clone();
+        let v = p.view(10..20);
+        assert_eq!(p.ref_count(), 3);
+        assert_eq!(c.as_slice().as_ptr(), p.as_slice().as_ptr());
+        assert_eq!(v.as_slice(), &[7u8; 10]);
+        assert_eq!(v.len(), 10);
+        drop(c);
+        drop(v);
+        assert_eq!(p.ref_count(), 1);
+    }
+
+    #[test]
+    fn copying_apis_are_audited() {
+        let p = SharedPayload::new(vec![1u8, 2, 3]);
+        let before = (copy_audit::copies(), copy_audit::bytes());
+        let owned = p.to_vec();
+        assert_eq!(owned, vec![1, 2, 3]);
+        let q = SharedPayload::copy_of(&owned);
+        assert_eq!(q, owned);
+        assert_eq!(copy_audit::copies(), before.0 + 2);
+        assert_eq!(copy_audit::bytes(), before.1 + 6);
+    }
+
+    #[test]
+    fn equality_compares_bytes_across_types() {
+        let p = SharedPayload::new(vec![5u8; 4]);
+        let q = SharedPayload::new(vec![5u8; 4]);
+        assert_eq!(p, q);
+        assert_eq!(p, vec![5u8; 4]);
+        assert_eq!(vec![5u8; 4], p);
+        assert_ne!(p, vec![5u8; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn view_bounds_checked() {
+        let p = SharedPayload::new(vec![0u8; 8]);
+        let _ = p.view(4..9);
+    }
+
+    #[test]
+    fn view_all_and_empty() {
+        let p = SharedPayload::new(Vec::new());
+        assert!(p.is_empty());
+        assert!(p.view_all().is_empty());
+        let q = SharedPayload::new(vec![1, 2]);
+        assert_eq!(q.view_all().as_slice(), &[1, 2]);
+    }
+}

@@ -16,6 +16,7 @@ use crate::elastic::ReftCluster;
 use crate::metrics::Metrics;
 use crate::model::{StageState, SyntheticCorpus};
 use crate::runtime::{self, Engine, In, Manifest};
+use crate::snapshot::SharedPayload;
 use crate::topology::Topology;
 
 /// Outcome of one training step.
@@ -199,7 +200,9 @@ impl DpTrainer {
     /// round across the next iterations; otherwise the blocking round runs
     /// inside this call.
     pub fn snapshot(&mut self) -> Result<u64> {
-        let payload = self.state.to_payload();
+        // single capture: serialize once, then every downstream hop holds
+        // Arc-backed views of this allocation (zero further payload copies)
+        let payload = SharedPayload::new(self.state.to_payload());
         let use_async = self.cfg.ft.async_snapshot;
         let reft = self.reft.as_mut().context("REFT not enabled")?;
         let v = if use_async {
@@ -242,7 +245,7 @@ impl DpTrainer {
     /// Post-recovery re-protection: always blocking, so every SMP holds a
     /// clean copy of the restored state before training resumes.
     fn snapshot_blocking_for_recovery(&mut self) -> Result<u64> {
-        let payload = self.state.to_payload();
+        let payload = SharedPayload::new(self.state.to_payload());
         let reft = self.reft.as_mut().context("REFT not enabled")?;
         // distinct timer: this blocking round must not pollute the
         // "snapshot" stall measurement (enqueue cost on the async path)

@@ -23,6 +23,7 @@ use crate::metrics::Metrics;
 use crate::model::{StageState, SyntheticCorpus};
 use crate::pipeline::{self, Op, Schedule};
 use crate::runtime::{self, Engine, In, Manifest};
+use crate::snapshot::SharedPayload;
 use crate::topology::Topology;
 
 pub struct PipelineTrainer {
@@ -393,7 +394,13 @@ impl PipelineTrainer {
     /// [`Self::tick_snapshot_backlog`] drains the round across the next
     /// iterations. Otherwise the classic blocking round runs here.
     pub fn snapshot(&mut self) -> Result<u64> {
-        let payloads: Vec<Vec<u8>> = self.stages.iter().map(StageState::to_payload).collect();
+        // single capture per stage: serialize once, share Arc-backed views
+        // downstream (zero further payload copies on the save path)
+        let payloads: Vec<SharedPayload> = self
+            .stages
+            .iter()
+            .map(|s| SharedPayload::new(s.to_payload()))
+            .collect();
         let use_async = self.cfg.ft.async_snapshot;
         let reft = self.reft.as_mut().context("REFT not enabled")?;
         let v = if use_async {
@@ -435,7 +442,11 @@ impl PipelineTrainer {
     /// clean copy of the restored state before training resumes (a
     /// half-drained asynchronous round protects nothing).
     fn snapshot_blocking_for_recovery(&mut self) -> Result<u64> {
-        let payloads: Vec<Vec<u8>> = self.stages.iter().map(StageState::to_payload).collect();
+        let payloads: Vec<SharedPayload> = self
+            .stages
+            .iter()
+            .map(|s| SharedPayload::new(s.to_payload()))
+            .collect();
         let reft = self.reft.as_mut().context("REFT not enabled")?;
         // distinct timer: this blocking round must not pollute the
         // "snapshot" stall measurement (enqueue cost on the async path)

@@ -9,14 +9,16 @@ use reft::checkpoint::{storage::step_key, CheckpointFile, MemStorage, SectionKin
 use reft::config::FtConfig;
 use reft::elastic::ReftCluster;
 use reft::smp::{Signal, Smp, SmpMsg};
+use reft::snapshot::payload::copy_audit;
+use reft::snapshot::SharedPayload;
 use reft::topology::{ParallelPlan, Topology};
 use reft::util::rng::Rng;
 
-fn payloads(stage_bytes: &[u64], seed: u64) -> Vec<Vec<u8>> {
+fn payloads(stage_bytes: &[u64], seed: u64) -> Vec<SharedPayload> {
     let mut rng = Rng::seed_from(seed);
     stage_bytes
         .iter()
-        .map(|&b| (0..b).map(|_| rng.next_u64() as u8).collect())
+        .map(|&b| SharedPayload::new((0..b).map(|_| rng.next_u64() as u8).collect()))
         .collect()
 }
 
@@ -117,10 +119,12 @@ fn checkpoint_fallback_flow() {
     let data = payloads(&stage_bytes, 7);
     cluster.snapshot_all(&data).unwrap();
 
-    // persist a durable checkpoint (what REFT-Ckpt does at low frequency)
+    // persist a durable checkpoint (what REFT-Ckpt does at low frequency).
+    // NOTE: an explicit slice copy, not SharedPayload::to_vec — the copy
+    // audit must only ever see deliberate copies (see the zero-copy test)
     let storage = Arc::new(MemStorage::new());
     let mut file = CheckpointFile::new("ft-test", 42);
-    file.add_section(SectionKind::StagePayload, 0, data[0].clone());
+    file.add_section(SectionKind::StagePayload, 0, data[0].as_slice().to_vec());
     storage.put(&step_key("ft-test", 42), &file.encode()).unwrap();
 
     // two nodes die in the single SG: in-memory recovery must refuse
@@ -297,6 +301,101 @@ fn smp_memory_bounded_over_many_rounds() {
         peak <= 4 * payload_total,
         "resident {peak} exceeds 4x payload {payload_total}"
     );
+}
+
+/// Tentpole acceptance: the parallel distributed restore is byte-identical
+/// to the serial baseline under (a) no failure, (b) a software failure
+/// (training dead, SMPs intact), and (c) one node dead (RAIM5 decode-in-
+/// place), on the multi-stage paper topology.
+#[test]
+fn parallel_restore_matches_serial_under_all_failure_scenarios() {
+    let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+    let stage_bytes = vec![40_000u64, 30_000, 50_000];
+    let ft = FtConfig { bucket_bytes: 1024, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    let data = payloads(&stage_bytes, 0xA11);
+    cluster.snapshot_all(&data).unwrap();
+
+    // (a) no failure
+    let par = cluster.restore_all(&[]).unwrap();
+    let ser = cluster.restore_all_serial(&[]).unwrap();
+    assert_eq!(par, ser, "no-failure gather diverged");
+    assert_eq!(par, data);
+
+    // (b) software failure: training processes die, SMPs keep serving
+    cluster
+        .smp(1)
+        .unwrap()
+        .send(SmpMsg::Signal(Signal::Unhealthy))
+        .unwrap();
+    let par = cluster.restore_all(&[]).unwrap();
+    let ser = cluster.restore_all_serial(&[]).unwrap();
+    assert_eq!(par, ser, "software-failure gather diverged");
+    assert_eq!(par, data);
+
+    // (c) one node dead: the lost shards decode straight into the output
+    cluster.kill_node(4);
+    let par = cluster.restore_all(&[4]).unwrap();
+    let ser = cluster.restore_all_serial(&[4]).unwrap();
+    assert_eq!(par, ser, "decode path diverged");
+    assert_eq!(par, data);
+
+    // protection exceeded (both nodes of stage 2's SG) must fail on both paths
+    cluster.kill_node(5);
+    assert!(cluster.restore_all(&[4, 5]).is_err());
+    assert!(cluster.restore_all_serial(&[4, 5]).is_err());
+}
+
+/// Tentpole acceptance: zero full-payload copies between trainer capture
+/// and the SMP dirty-buffer flush, on both save flavours. Verified two
+/// ways: the process-wide copy audit does not move across a snapshot
+/// round, and once the round drains the cluster holds no payload
+/// references (every bucket was a borrowed view, since released).
+#[test]
+fn save_path_performs_zero_full_payload_copies() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![120_000u64];
+    for async_on in [false, true] {
+        let ft = FtConfig {
+            bucket_bytes: 4096,
+            async_snapshot: async_on,
+            drain_buckets_per_tick: 8,
+            ..FtConfig::default()
+        };
+        let mut cluster = ReftCluster::start(topo.clone(), &stage_bytes, ft).unwrap();
+        let data = payloads(&stage_bytes, 99);
+        let copies_before = copy_audit::copies();
+        cluster.snapshot_all(&data).unwrap();
+        assert_eq!(
+            copy_audit::copies(),
+            copies_before,
+            "async={async_on}: save path deep-copied a payload"
+        );
+
+        // barrier: SMP inboxes are FIFO, so a stats round-trip proves every
+        // bucket view was consumed (flushed + dropped)
+        for node in cluster.alive_nodes() {
+            cluster.smp(node).unwrap().stats().unwrap();
+        }
+        assert_eq!(
+            data[0].ref_count(),
+            1,
+            "async={async_on}: snapshot machinery retained payload references"
+        );
+
+        // resident-bytes check: the SMPs hold exactly one materialized copy
+        // (the promoted clean ring) plus RAIM5 parity — not per-hop copies
+        let resident = cluster.resident_bytes().unwrap();
+        let payload_total = 120_000usize;
+        assert!(resident >= payload_total, "clean copy missing");
+        assert!(
+            resident <= 2 * payload_total,
+            "async={async_on}: resident {resident} implies extra copies"
+        );
+
+        // the restored bytes still round-trip
+        assert_eq!(cluster.restore_all(&[]).unwrap(), data);
+    }
 }
 
 /// Direct SMP protocol edge cases under concurrency: two stages snapshotting

@@ -278,6 +278,59 @@ fn prop_raim5_rotation_no_self_parity_and_balanced() {
     }
 }
 
+/// Striped multi-threaded XOR equals the byte-wise scalar oracle for
+/// arbitrary sizes (straddling the threading threshold), worker counts, and
+/// unaligned offsets.
+#[test]
+fn prop_xor_parallel_matches_scalar() {
+    use reft::ec::xor::{xor_into_scalar, xor_into_striped, PARALLEL_MIN_BYTES};
+    let mut rng = Rng::seed_from(0xA50);
+    for case in 0..64 {
+        let n = match case % 4 {
+            0 => rng.below(600),
+            1 => rng.below(200_000),
+            2 => PARALLEL_MIN_BYTES - 8 + rng.below(16), // straddle the gate
+            _ => PARALLEL_MIN_BYTES + rng.below(3 * PARALLEL_MIN_BYTES),
+        };
+        let threads = 1 + rng.below(8);
+        let off = rng.below(16);
+        let src: Vec<u8> = (0..n + off).map(|_| rng.next_u64() as u8).collect();
+        let base: Vec<u8> = (0..n + off).map(|_| rng.next_u64() as u8).collect();
+        let mut a = base.clone();
+        let mut b = base.clone();
+        xor_into_striped(&mut a[off..], &src[off..], threads);
+        xor_into_scalar(&mut b[off..], &src[off..]);
+        assert_eq!(a, b, "case {case}: n={n} threads={threads} off={off}");
+    }
+}
+
+/// The striped parity fold (copy-first + chain) equals a scalar XOR fold
+/// into a zeroed buffer, for uneven source lengths and any thread count.
+#[test]
+fn prop_parity_fold_matches_scalar_fold() {
+    use reft::ec::xor::{xor_fold_striped, xor_into_scalar};
+    let mut rng = Rng::seed_from(0xF01D);
+    for case in 0..CASES {
+        let len = 1 + rng.below(40_000);
+        let n_src = rng.below(5);
+        let srcs: Vec<Vec<u8>> = (0..n_src)
+            .map(|_| {
+                let l = rng.below(len + len / 2 + 1);
+                (0..l).map(|_| rng.next_u64() as u8).collect()
+            })
+            .collect();
+        let views: Vec<&[u8]> = srcs.iter().map(Vec::as_slice).collect();
+        let mut want = vec![0u8; len];
+        for v in &views {
+            xor_into_scalar(&mut want, v);
+        }
+        let threads = 1 + rng.below(4);
+        let mut got: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect(); // dirty
+        xor_fold_striped(&mut got, &views, true, threads);
+        assert_eq!(got, want, "case {case}: len={len} n_src={n_src}");
+    }
+}
+
 /// Checkpoint container: decode(encode(x)) == x, and any single-bit flip is
 /// detected.
 #[test]

@@ -1,0 +1,251 @@
+//! Offline shim for the subset of `crc32fast` this workspace uses.
+//!
+//! The build environment has no crates.io access, so the real `crc32fast`
+//! is replaced by this API-compatible vendored crate. Covered surface:
+//!
+//! * [`hash`] — one-shot CRC-32 (IEEE / zlib polynomial, reflected)
+//! * [`Hasher`] — streaming `new` / `update` / `finalize`, plus
+//!   [`Hasher::combine`]: fold an independently hashed suffix into a prefix
+//!   hasher in O(log len) (the zlib `crc32_combine` GF(2)-matrix trick),
+//!   which is what lets `CheckpointFile::encode` hash each section body
+//!   exactly once while still producing a whole-file trailer CRC.
+//!
+//! The kernel is table-driven slice-by-8 (eight 256-entry tables built at
+//! compile time), processing eight input bytes per step — within a small
+//! factor of the SIMD paths of the real crate and far faster than a
+//! bytewise loop; exact same output for every input.
+
+const POLY: u32 = 0xEDB8_8320; // reflected IEEE 802.3 polynomial
+
+static TABLES: [[u32; 256]; 8] = build_tables();
+
+const fn build_tables() -> [[u32; 256]; 8] {
+    let mut t = [[0u32; 256]; 8];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            k += 1;
+        }
+        t[0][i] = crc;
+        i += 1;
+    }
+    let mut j = 1;
+    while j < 8 {
+        let mut i = 0;
+        while i < 256 {
+            let prev = t[j - 1][i];
+            t[j][i] = (prev >> 8) ^ t[0][(prev & 0xFF) as usize];
+            i += 1;
+        }
+        j += 1;
+    }
+    t
+}
+
+/// Incremental zlib-style CRC update: `crc32_update(crc32_update(0, a), b)`
+/// equals `crc32_update(0, a ++ b)`.
+fn crc32_update(crc: u32, mut buf: &[u8]) -> u32 {
+    let mut crc = !crc;
+    while buf.len() >= 8 {
+        let lo = crc ^ u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]);
+        let hi = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]);
+        crc = TABLES[7][(lo & 0xFF) as usize]
+            ^ TABLES[6][((lo >> 8) & 0xFF) as usize]
+            ^ TABLES[5][((lo >> 16) & 0xFF) as usize]
+            ^ TABLES[4][(lo >> 24) as usize]
+            ^ TABLES[3][(hi & 0xFF) as usize]
+            ^ TABLES[2][((hi >> 8) & 0xFF) as usize]
+            ^ TABLES[1][((hi >> 16) & 0xFF) as usize]
+            ^ TABLES[0][(hi >> 24) as usize];
+        buf = &buf[8..];
+    }
+    for &b in buf {
+        crc = (crc >> 8) ^ TABLES[0][((crc ^ b as u32) & 0xFF) as usize];
+    }
+    !crc
+}
+
+/// One-shot CRC-32 of `buf`.
+pub fn hash(buf: &[u8]) -> u32 {
+    crc32_update(0, buf)
+}
+
+/// Streaming CRC-32 hasher.
+#[derive(Debug, Clone, Default)]
+pub struct Hasher {
+    crc: u32,
+    amount: u64,
+}
+
+impl Hasher {
+    pub fn new() -> Hasher {
+        Hasher { crc: 0, amount: 0 }
+    }
+
+    /// Resume from a known state (`crc` over `amount` prior bytes).
+    pub fn new_with_initial_len(crc: u32, amount: u64) -> Hasher {
+        Hasher { crc, amount }
+    }
+
+    pub fn update(&mut self, buf: &[u8]) {
+        self.crc = crc32_update(self.crc, buf);
+        self.amount += buf.len() as u64;
+    }
+
+    pub fn finalize(self) -> u32 {
+        self.crc
+    }
+
+    pub fn reset(&mut self) {
+        self.crc = 0;
+        self.amount = 0;
+    }
+
+    /// Fold `other` (the CRC of the bytes that *follow* this hasher's) into
+    /// `self`, as if `self.update` had seen those bytes too. O(log len) via
+    /// GF(2) matrix squaring (zlib's `crc32_combine`).
+    pub fn combine(&mut self, other: &Hasher) {
+        self.crc = crc32_combine(self.crc, other.crc, other.amount);
+        self.amount += other.amount;
+    }
+}
+
+fn gf2_matrix_times(mat: &[u32; 32], mut vec: u32) -> u32 {
+    let mut sum = 0u32;
+    let mut i = 0;
+    while vec != 0 {
+        if vec & 1 != 0 {
+            sum ^= mat[i];
+        }
+        vec >>= 1;
+        i += 1;
+    }
+    sum
+}
+
+fn gf2_matrix_square(square: &mut [u32; 32], mat: &[u32; 32]) {
+    for n in 0..32 {
+        square[n] = gf2_matrix_times(mat, mat[n]);
+    }
+}
+
+fn crc32_combine(mut crc1: u32, crc2: u32, mut len2: u64) -> u32 {
+    if len2 == 0 {
+        return crc1; // a zero-length suffix contributes nothing
+    }
+    let mut even = [0u32; 32]; // even-power-of-two zero operators
+    let mut odd = [0u32; 32]; // odd-power-of-two zero operators
+
+    // operator for one zero bit
+    odd[0] = POLY;
+    let mut row = 1u32;
+    for item in odd.iter_mut().skip(1) {
+        *item = row;
+        row <<= 1;
+    }
+    // operator for two zero bits, then four
+    gf2_matrix_square(&mut even, &odd);
+    gf2_matrix_square(&mut odd, &even);
+
+    // apply len2 zero *bytes* to crc1, squaring the operator each round
+    loop {
+        gf2_matrix_square(&mut even, &odd);
+        if len2 & 1 != 0 {
+            crc1 = gf2_matrix_times(&even, crc1);
+        }
+        len2 >>= 1;
+        if len2 == 0 {
+            break;
+        }
+        gf2_matrix_square(&mut odd, &even);
+        if len2 & 1 != 0 {
+            crc1 = gf2_matrix_times(&odd, crc1);
+        }
+        len2 >>= 1;
+    }
+    crc1 ^ crc2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bytewise reference implementation.
+    fn crc32_ref(buf: &[u8]) -> u32 {
+        let mut crc = 0xFFFF_FFFFu32;
+        for &b in buf {
+            crc ^= b as u32;
+            for _ in 0..8 {
+                crc = if crc & 1 != 0 { (crc >> 1) ^ POLY } else { crc >> 1 };
+            }
+        }
+        !crc
+    }
+
+    #[test]
+    fn known_vectors() {
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b""), 0);
+        assert_eq!(hash(b"a"), 0xE8B7_BE43);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn slice_by_8_matches_bytewise_reference() {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 31 + 7) as u8).collect();
+        for n in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000, 9999, 10_000] {
+            assert_eq!(hash(&data[..n]), crc32_ref(&data[..n]), "n={n}");
+        }
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..5000u32).map(|i| (i * 131) as u8).collect();
+        for split in [0usize, 1, 7, 2500, 4999, 5000] {
+            let mut h = Hasher::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finalize(), hash(&data), "split={split}");
+        }
+    }
+
+    #[test]
+    fn combine_equals_concatenation() {
+        let a: Vec<u8> = (0..777u32).map(|i| (i * 3) as u8).collect();
+        let b: Vec<u8> = (0..4096u32).map(|i| (i ^ 0x5A) as u8).collect();
+        let mut ha = Hasher::new();
+        ha.update(&a);
+        let mut hb = Hasher::new();
+        hb.update(&b);
+        ha.combine(&hb);
+        let mut whole = a.clone();
+        whole.extend_from_slice(&b);
+        assert_eq!(ha.finalize(), hash(&whole));
+        // empty suffix is the identity
+        let mut hc = Hasher::new();
+        hc.update(&a);
+        hc.combine(&Hasher::new());
+        assert_eq!(hc.finalize(), hash(&a));
+        // empty prefix too
+        let mut hd = Hasher::new();
+        let mut he = Hasher::new();
+        he.update(&b);
+        hd.combine(&he);
+        assert_eq!(hd.finalize(), hash(&b));
+    }
+
+    #[test]
+    fn reset_and_resume() {
+        let mut h = Hasher::new();
+        h.update(b"junk");
+        h.reset();
+        h.update(b"123456789");
+        let crc = h.finalize();
+        assert_eq!(crc, 0xCBF4_3926);
+        let h2 = Hasher::new_with_initial_len(crc, 9);
+        assert_eq!(h2.finalize(), crc);
+    }
+}
