@@ -20,11 +20,14 @@
 //! `BENCH_SMOKE=1`) shrinks sizes/iterations for an advisory CI run; every
 //! assertion still fires.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use reft::config::FtConfig;
-use reft::ec::{xor_into, xor_into_parallel, xor_into_scalar};
+use reft::checkpoint::{storage::step_key, CheckpointFile, MemStorage, SectionKind, Storage};
+use reft::config::{FtConfig, PersistConfig};
 use reft::elastic::ReftCluster;
+use reft::ec::{xor_into, xor_into_parallel, xor_into_scalar};
+use reft::persist::{self, PersistEngine};
 use reft::snapshot::bucket::copy_bucketed;
 use reft::snapshot::SharedPayload;
 use reft::topology::{ParallelPlan, Topology};
@@ -289,6 +292,95 @@ fn main() {
         failures.push(format!(
             "async per-iteration stall ({async_stall:.4}s) must be strictly lower \
              than blocking ({sync_stall:.4}s) at equal bucket size"
+        ));
+    }
+
+    // REFT-Ckpt durable tier (§6.1 "an SMP-driven persist to cloud that
+    // never blocks training"): trainer-thread cost of one persist event,
+    // inline encode+put (the pre-engine behaviour) vs an enqueue to the
+    // background persistence engine. The engine's writer workers pull clean
+    // shards from the SMPs and commit an atomic manifest off-thread, so the
+    // training-side stall must be strictly below the inline baseline.
+    println!(
+        "durable persist, inline put vs background engine ({} MiB over 6 nodes):",
+        plen / mib
+    );
+    let events = if smoke { 3 } else { 5 };
+    let mut cluster_p = mk_cluster(false);
+    cluster_p.snapshot_all_blocking(&payloads).unwrap();
+    let inline_store = Arc::new(MemStorage::new());
+    let (mut inline_max, mut inline_total) = (0f64, 0f64);
+    for i in 0..events {
+        let t0 = Instant::now();
+        let mut f = CheckpointFile::new("bench-inline", (i + 1) as u64);
+        f.add_section(SectionKind::StagePayload, 0, payloads[0].as_slice().to_vec());
+        inline_store
+            .put(&step_key("bench-inline", (i + 1) as u64), &f.encode())
+            .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        inline_max = inline_max.max(dt);
+        inline_total += dt;
+    }
+    let engine_store = Arc::new(MemStorage::new());
+    let engine = PersistEngine::start(
+        "bench-engine",
+        Arc::clone(&engine_store),
+        cluster_p.plan.clone(),
+        PersistConfig {
+            enabled: true,
+            throttle_bytes_per_sec: 0,
+            chunk_bytes: 1 << 20,
+            ..PersistConfig::default()
+        },
+    );
+    let (mut engine_max, mut engine_total) = (0f64, 0f64);
+    for i in 0..events {
+        let t0 = Instant::now();
+        engine
+            .enqueue((i + 1) as u64, cluster_p.persist_sources(), vec![])
+            .unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        engine_max = engine_max.max(dt);
+        engine_total += dt;
+    }
+    engine.flush().unwrap(); // shutdown barrier, off the measured path
+    let pstats = engine.stats();
+    assert_eq!(
+        pstats.manifests_committed as usize, events,
+        "engine must commit every round: {:?}",
+        pstats.last_error
+    );
+    // sanity: the durable copy is complete and byte-identical
+    let (_, persisted_stages) =
+        persist::load_latest(engine_store.as_ref(), "bench-engine")
+            .unwrap()
+            .expect("committed manifest resolves");
+    assert_eq!(persisted_stages[0], payloads[0].as_slice());
+    println!(
+        "  inline encode+put                      max {:>8.3} ms/event   mean {:>8.3} ms/event",
+        inline_max * 1e3,
+        inline_total / events as f64 * 1e3
+    );
+    println!(
+        "  engine enqueue (background drain)      max {:>8.3} ms/event   mean {:>8.3} ms/event",
+        engine_max * 1e3,
+        engine_total / events as f64 * 1e3
+    );
+    println!(
+        "  -> engine trainer-thread stall = {:.2}% of inline (lower is better)\n",
+        engine_total / inline_total * 100.0
+    );
+    rec(&mut report, "persist_async_vs_inline", vec![
+        ("inline_max_ms", inline_max * 1e3),
+        ("inline_mean_ms", inline_total / events as f64 * 1e3),
+        ("engine_max_ms", engine_max * 1e3),
+        ("engine_mean_ms", engine_total / events as f64 * 1e3),
+        ("stall_ratio", engine_total / inline_total),
+    ]);
+    if engine_total >= inline_total {
+        failures.push(format!(
+            "persist engine trainer-thread stall ({engine_total:.4}s) must be strictly \
+             below the inline encode+put baseline ({inline_total:.4}s)"
         ));
     }
 

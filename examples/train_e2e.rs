@@ -55,6 +55,12 @@ fn main() -> anyhow::Result<()> {
         .get("async")
         .map(|s| s == "true" || s == "1")
         .unwrap_or(true);
+    // `--persist false` reverts to the inline trainer-thread puts — the two
+    // runs' "persist" report lines are the live engine-vs-inline comparison
+    let persist_on = flags
+        .get("persist")
+        .map(|s| s == "true" || s == "1")
+        .unwrap_or(true);
 
     let mut cfg = RunConfig::default();
     cfg.model = model.clone();
@@ -70,6 +76,10 @@ fn main() -> anyhow::Result<()> {
     cfg.ft.persist_every = 4; // durable checkpoint every 20 steps
     cfg.ft.raim5 = true;
     cfg.ft.async_snapshot = async_on;
+    // durable tier via the background persistence engine: persists drain
+    // off the training thread, commit atomic manifests, keep-last-3
+    cfg.ft.persist.enabled = persist_on;
+    cfg.ft.persist.keep_last = 3;
 
     // fresh checkpoint dir per run: a stale checkpoint from an earlier run
     // must never satisfy this run's fallback path
@@ -80,7 +90,8 @@ fn main() -> anyhow::Result<()> {
     println!("== REFT end-to-end driver ==");
     println!(
         "model={model} steps={steps} plan=dp{dp}/pp{pp} ft=reft-ckpt \
-         snapshot_every=5 persist_every=20 async_snapshot={async_on}"
+         snapshot_every=5 persist_every=20 async_snapshot={async_on} \
+         persist_engine={persist_on}"
     );
 
     // inject only after at least one snapshot round exists (interval 5)
@@ -147,6 +158,34 @@ fn main() -> anyhow::Result<()> {
                 tick.mean() * 1e3,
                 tick.count
             );
+            // drain the durable tier before reading its counters: the only
+            // blocking persistence call, and it happens after training
+            $tr.flush_persist()?;
+            let pstall = $tr.metrics.timer("persist_stall");
+            let pflush = $tr.metrics.timer("persist_flush");
+            println!(
+                "persist stall ({}): {} bytes drained in {} manifests \
+                 ({} aborted); trainer-thread stall max {:.3} ms / mean {:.3} ms \
+                 over {} enqueues; shutdown flush {:.1} ms",
+                if persist_on { "background engine" } else { "inline put" },
+                $tr.metrics.counter("persisted_bytes"),
+                $tr.metrics.counter("persist_commits"),
+                $tr.metrics.counter("persist_aborts"),
+                pstall.max * 1e3,
+                pstall.mean() * 1e3,
+                pstall.count,
+                pflush.total * 1e3,
+            );
+            if !persist_on {
+                let enc = $tr.metrics.timer("ckpt_encode");
+                let put = $tr.metrics.timer("ckpt_put");
+                println!(
+                    "  (inline baseline: encode mean {:.3} ms + put mean {:.3} ms \
+                     per checkpoint, on the training thread)",
+                    enc.mean() * 1e3,
+                    put.mean() * 1e3
+                );
+            }
             format!("{}", $tr.metrics.to_json())
         }};
     }

@@ -7,6 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::Mutex;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -99,16 +100,60 @@ pub struct DirStorage {
     root: PathBuf,
 }
 
+/// A `.tmp` scratch file older than this at `DirStorage::new` time is
+/// debris from a crashed mid-write; younger ones may belong to a live
+/// sibling writer mid-rename and are left alone.
+const STALE_TMP_MAX_AGE: Duration = Duration::from_secs(3600);
+
 impl DirStorage {
     pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
         let root = root.into();
         std::fs::create_dir_all(&root)
             .with_context(|| format!("creating {}", root.display()))?;
-        Ok(DirStorage { root })
+        let store = DirStorage { root };
+        // sweep stale `.tmp` debris from crashed mid-writes: `list()` never
+        // surfaces them, but left alone they accumulate forever (and a
+        // half-written blob is useless — the writer re-puts on retry)
+        store.sweep_stale_tmp(STALE_TMP_MAX_AGE);
+        Ok(store)
+    }
+
+    /// Remove `.tmp` scratch files older than `max_age`. Age-gated so a
+    /// restart never unlinks a live sibling writer's in-flight scratch
+    /// file between its write and rename. Files whose age can't be read
+    /// are kept (conservative). Returns the number removed.
+    pub fn sweep_stale_tmp(&self, max_age: Duration) -> usize {
+        let mut removed = 0;
+        if let Ok(rd) = std::fs::read_dir(&self.root) {
+            for e in rd.flatten() {
+                if !e.file_name().to_string_lossy().ends_with(".tmp") {
+                    continue;
+                }
+                let stale = e
+                    .metadata()
+                    .and_then(|m| m.modified())
+                    .ok()
+                    .and_then(|t| t.elapsed().ok())
+                    .is_some_and(|age| age >= max_age);
+                if stale && std::fs::remove_file(e.path()).is_ok() {
+                    removed += 1;
+                }
+            }
+        }
+        removed
     }
 
     fn path_of(&self, key: &str) -> PathBuf {
         self.root.join(key.replace('/', "__"))
+    }
+
+    /// Scratch name for the write-then-rename protocol. Appended, not
+    /// `with_extension`: that would *replace* a key's own extension, so
+    /// sibling keys `a.x` and `a.y` would share one scratch file.
+    fn tmp_path_of(&self, key: &str) -> PathBuf {
+        let mut name = key.replace('/', "__");
+        name.push_str(".tmp");
+        self.root.join(name)
     }
 
     fn key_of(name: &str) -> String {
@@ -118,9 +163,12 @@ impl DirStorage {
 
 impl Storage for DirStorage {
     fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        // `.tmp` names are the scratch namespace: a key ending in it would
+        // be filtered from listings and swept at startup
+        anyhow::ensure!(!key.ends_with(".tmp"), "keys ending in `.tmp` are reserved");
         // write-then-rename so a crash mid-write never leaves a torn blob
         // under the final name (checkpointing errors are a real failure class)
-        let tmp = self.path_of(key).with_extension("tmp");
+        let tmp = self.tmp_path_of(key);
         std::fs::write(&tmp, bytes).with_context(|| format!("writing {}", tmp.display()))?;
         std::fs::rename(&tmp, self.path_of(key)).context("atomic rename")?;
         Ok(())
@@ -207,6 +255,46 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let s = DirStorage::new(&dir).unwrap();
         exercise(&s);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dir_storage_never_lists_or_keeps_tmp_debris() {
+        let dir = std::env::temp_dir().join(format!("reft-test3-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = DirStorage::new(&dir).unwrap();
+        s.put("m/step-000000000001", b"ok").unwrap();
+        // a crashed mid-write leaves a torn scratch file behind
+        let debris = dir.join("m__step-000000000002.tmp");
+        std::fs::write(&debris, b"torn").unwrap();
+        // listings never surface it — a torn write must not become latest()
+        assert_eq!(s.list(), vec!["m/step-000000000001".to_string()]);
+        assert_eq!(s.latest_for("m").unwrap(), "m/step-000000000001");
+        // a restart leaves a FRESH scratch file alone (it may belong to a
+        // live sibling writer between its write and rename)...
+        let s2 = DirStorage::new(&dir).unwrap();
+        assert!(debris.exists(), "fresh tmp must survive the startup sweep");
+        // ...but the sweep removes it once it is stale
+        assert_eq!(s2.sweep_stale_tmp(Duration::ZERO), 1);
+        assert!(!debris.exists(), "stale tmp swept");
+        assert_eq!(s2.get("m/step-000000000001").unwrap(), b"ok");
+        // reserved scratch namespace is refused outright
+        assert!(s2.put("weird.tmp", b"x").is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dir_storage_tmp_names_do_not_clobber_sibling_extensions() {
+        // regression: `with_extension("tmp")` replaced a key's own
+        // extension, so `a.x` and `a.y` shared one scratch file
+        let dir = std::env::temp_dir().join(format!("reft-test4-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = DirStorage::new(&dir).unwrap();
+        s.put("a.x", b"xx").unwrap();
+        s.put("a.y", b"yy").unwrap();
+        assert_eq!(s.get("a.x").unwrap(), b"xx");
+        assert_eq!(s.get("a.y").unwrap(), b"yy");
+        assert_eq!(s.list().len(), 2);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

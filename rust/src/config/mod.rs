@@ -59,6 +59,44 @@ impl FtMethod {
     }
 }
 
+/// Durable-tier persistence knobs (the REFT-Ckpt background drain —
+/// `rust/src/persist/`).
+#[derive(Debug, Clone)]
+pub struct PersistConfig {
+    /// route REFT-Ckpt persists through the background engine instead of
+    /// the inline trainer-thread `storage.put`
+    pub enabled: bool,
+    /// cluster-wide upload pacing budget in bytes/sec (0 = unthrottled):
+    /// persist I/O must not starve training bandwidth
+    pub throttle_bytes_per_sec: u64,
+    /// streaming chunk granularity the throttle meters
+    pub chunk_bytes: usize,
+    /// retention: always keep the newest K manifests (floors at 1)
+    pub keep_last: usize,
+    /// retention: additionally keep every step divisible by N (0 = off)
+    pub keep_every: u64,
+    /// derive the persist cadence live from the Appendix-A interval math
+    /// instead of the static `persist_every` knob
+    pub auto_interval: bool,
+    /// per-node failure rate (per second) fed to the interval scheduler —
+    /// the hwsim λ_node
+    pub lambda_node: f64,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        PersistConfig {
+            enabled: false,
+            throttle_bytes_per_sec: 256 * 1024 * 1024,
+            chunk_bytes: 8 * 1024 * 1024,
+            keep_last: 2,
+            keep_every: 0,
+            auto_interval: false,
+            lambda_node: 1e-4,
+        }
+    }
+}
+
 /// Fault-tolerance policy knobs.
 #[derive(Debug, Clone)]
 pub struct FtConfig {
@@ -83,6 +121,8 @@ pub struct FtConfig {
     /// `drain_buckets_per_tick * bucket_bytes` is the per-node PCIe budget
     /// one training iteration donates to snapshot traffic.
     pub drain_buckets_per_tick: usize,
+    /// durable-tier persistence engine (REFT-Ckpt background drain)
+    pub persist: PersistConfig,
 }
 
 impl Default for FtConfig {
@@ -96,6 +136,7 @@ impl Default for FtConfig {
             clean_copies: 1,
             async_snapshot: false,
             drain_buckets_per_tick: 8,
+            persist: PersistConfig::default(),
         }
     }
 }
@@ -203,6 +244,29 @@ impl RunConfig {
             if let Some(n) = ft.get("drain_buckets_per_tick").and_then(Json::as_usize) {
                 c.ft.drain_buckets_per_tick = n.max(1);
             }
+            if let Some(p) = ft.get("persist") {
+                if let Some(b) = p.get("enabled").and_then(Json::as_bool) {
+                    c.ft.persist.enabled = b;
+                }
+                if let Some(n) = p.get("throttle_bytes_per_sec").and_then(Json::as_f64) {
+                    c.ft.persist.throttle_bytes_per_sec = n as u64;
+                }
+                if let Some(n) = p.get("chunk_bytes").and_then(Json::as_usize) {
+                    c.ft.persist.chunk_bytes = n.max(4096);
+                }
+                if let Some(n) = p.get("keep_last").and_then(Json::as_usize) {
+                    c.ft.persist.keep_last = n.max(1);
+                }
+                if let Some(n) = p.get("keep_every").and_then(Json::as_f64) {
+                    c.ft.persist.keep_every = n as u64;
+                }
+                if let Some(b) = p.get("auto_interval").and_then(Json::as_bool) {
+                    c.ft.persist.auto_interval = b;
+                }
+                if let Some(l) = p.get("lambda_node").and_then(Json::as_f64) {
+                    c.ft.persist.lambda_node = l;
+                }
+            }
         }
         Ok(c)
     }
@@ -257,6 +321,32 @@ mod tests {
         assert!(d.ft.drain_buckets_per_tick >= 1);
         let z = RunConfig::from_json_text(r#"{"ft": {"drain_buckets_per_tick": 0}}"#).unwrap();
         assert_eq!(z.ft.drain_buckets_per_tick, 1);
+    }
+
+    #[test]
+    fn parse_persist_section() {
+        let text = r#"{
+            "ft": {"method": "reft-ckpt",
+                   "persist": {"enabled": true,
+                               "throttle_bytes_per_sec": 1048576,
+                               "chunk_bytes": 65536,
+                               "keep_last": 3, "keep_every": 100,
+                               "auto_interval": true, "lambda_node": 0.001}}
+        }"#;
+        let c = RunConfig::from_json_text(text).unwrap();
+        assert!(c.ft.persist.enabled);
+        assert_eq!(c.ft.persist.throttle_bytes_per_sec, 1 << 20);
+        assert_eq!(c.ft.persist.chunk_bytes, 64 * 1024);
+        assert_eq!(c.ft.persist.keep_last, 3);
+        assert_eq!(c.ft.persist.keep_every, 100);
+        assert!(c.ft.persist.auto_interval);
+        assert!((c.ft.persist.lambda_node - 1e-3).abs() < 1e-12);
+        // defaults: engine off, retention floors
+        let d = RunConfig::default();
+        assert!(!d.ft.persist.enabled);
+        assert!(d.ft.persist.keep_last >= 1);
+        let z = RunConfig::from_json_text(r#"{"ft": {"persist": {"keep_last": 0}}}"#).unwrap();
+        assert_eq!(z.ft.persist.keep_last, 1);
     }
 
     #[test]

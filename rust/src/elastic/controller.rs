@@ -136,6 +136,15 @@ impl ReftCluster {
         self.smps.get(node).and_then(Option::as_ref)
     }
 
+    /// Per-node SMP inbox handles for the persistence engine's writer
+    /// workers (`None` marks a lost node). Captured fresh at every persist
+    /// enqueue so elastic replacements are picked up.
+    pub fn persist_sources(&self) -> Vec<Option<std::sync::mpsc::Sender<SmpMsg>>> {
+        (0..self.topo.nodes)
+            .map(|n| self.smps[n].as_ref().map(Smp::sender))
+            .collect()
+    }
+
     // -- asynchronous save path (§4.1 hierarchical coordination) -----------
 
     /// L1 enqueue: open a new snapshot version and return immediately; the

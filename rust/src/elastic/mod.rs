@@ -9,7 +9,10 @@
 //!    joins; its shard is rebuilt by the RAIM5 subtraction decoder from the
 //!    surviving SG members;
 //! 3. **protection exceeded** (>= 2 nodes in one SG, or RAIM5 disabled):
-//!    fall back to the latest durable checkpoint;
+//!    fall back to the durable tier — the newest *complete* persistence
+//!    manifest when the background engine is on (its atomic commit makes
+//!    partial uploads invisible — see `crate::persist`), else the latest
+//!    inline checkpoint;
 //! 4. nothing durable either → fatal (restart from scratch).
 
 pub mod controller;

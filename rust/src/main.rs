@@ -6,6 +6,9 @@
 //! reft train   [--config cfg.json] [--model M] [--dp N] [--tp N] [--pp N]
 //!              [--steps N] [--micro N] [--ft METHOD] [--snapshot-interval N]
 //!              [--schedule gpipe|1f1b] [--artifacts DIR] [--seed N]
+//!              [--persist-engine BOOL] [--persist-throttle-bytes N]
+//!              [--persist-keep-last N] [--persist-keep-every N]
+//!              [--persist-auto-interval BOOL]
 //! reft survival    [--threshold 0.9]        # Fig. 8 curves + crossing table
 //! reft intervals   [--lambda 1e-4] [--sg 6] # Appendix-A optimal intervals
 //! reft save-cost   [--model opt-350m] [--dp 24]  # one-shot save costing
@@ -123,6 +126,19 @@ fn build_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(a) = flags.get("async-snapshot") {
         cfg.ft.async_snapshot = a == "true" || a == "1";
     }
+    if let Some(p) = flags.get("persist-engine") {
+        cfg.ft.persist.enabled = p == "true" || p == "1";
+    }
+    cfg.ft.persist.throttle_bytes_per_sec = get_usize(
+        "persist-throttle-bytes",
+        cfg.ft.persist.throttle_bytes_per_sec as usize,
+    )? as u64;
+    cfg.ft.persist.keep_last = get_usize("persist-keep-last", cfg.ft.persist.keep_last)?.max(1);
+    cfg.ft.persist.keep_every =
+        get_usize("persist-keep-every", cfg.ft.persist.keep_every as usize)? as u64;
+    if let Some(a) = flags.get("persist-auto-interval") {
+        cfg.ft.persist.auto_interval = a == "true" || a == "1";
+    }
     if let Some(a) = flags.get("artifacts") {
         cfg.artifacts_dir = a.clone();
     }
@@ -167,6 +183,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
             );
             let _ = s;
         }
+        tr.flush_persist()?;
         println!("{}", tr.metrics.to_json());
     } else {
         let steps = cfg.steps;
@@ -175,6 +192,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> Result<()> {
             let loss = tr.step()?;
             println!("step {:>5}  loss {:.4}", tr.stages[0].step, loss);
         }
+        tr.flush_persist()?;
         println!("{}", tr.metrics.to_json());
     }
     println!("wall time: {}", human_secs(t0.elapsed().as_secs_f64()));

@@ -1,0 +1,148 @@
+//! Trainer-side persistence driver: one object owning the engine handle,
+//! the optional live cadence scheduler, and the metric delta-sync, so both
+//! trainers (`DpTrainer`, `PipelineTrainer`) share the exact same durable-
+//! tier behaviour instead of duplicating it.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::checkpoint::Storage;
+use crate::config::FtConfig;
+use crate::metrics::Metrics;
+use crate::smp::SmpMsg;
+use crate::snapshot::SnapshotPlan;
+
+use super::engine::{PersistEngine, PersistStats};
+use super::scheduler::IntervalScheduler;
+
+/// How many recent snapshot-version → capture-step pairs we remember for
+/// honest manifest labeling (the drained round is at most a few versions
+/// behind the enqueue).
+const RECENT_VERSIONS: usize = 32;
+
+pub struct PersistDriver {
+    engine: PersistEngine,
+    /// live Appendix-A cadence (None = static `persist_every` gating)
+    sched: Option<IntervalScheduler>,
+    /// engine counters already folded into the run metrics (delta sync)
+    seen: PersistStats,
+    /// recent (snapshot version, capture step) pairs from the trainer
+    recent_versions: VecDeque<(u64, u64)>,
+    /// commits already fed to the scheduler (skip re-derivation otherwise)
+    observed_commits: u64,
+}
+
+impl PersistDriver {
+    /// Engine + optional scheduler for a REFT-Ckpt run with
+    /// `ft.persist.enabled`. `sg_size` is the sharding-group size driving
+    /// the Eq. 7 exceedance rate (callers pass the widest SG).
+    pub fn start(
+        model: impl Into<String>,
+        storage: Arc<dyn Storage>,
+        plan: SnapshotPlan,
+        ft: &FtConfig,
+        sg_size: usize,
+    ) -> PersistDriver {
+        let engine = PersistEngine::start(model, storage, plan, ft.persist.clone());
+        let sched = ft.persist.auto_interval.then(|| {
+            IntervalScheduler::new(
+                ft.persist.lambda_node,
+                sg_size,
+                (ft.persist_every * ft.snapshot_interval) as u64,
+            )
+        });
+        PersistDriver {
+            engine,
+            sched,
+            seen: PersistStats::default(),
+            recent_versions: VecDeque::new(),
+            observed_commits: 0,
+        }
+    }
+
+    /// Record which trainer step a snapshot version captured, so the
+    /// manifest the engine later commits can state the step its drained
+    /// round actually contains.
+    pub fn note_snapshot(&mut self, version: u64, step: u64) {
+        self.recent_versions.push_back((version, step));
+        while self.recent_versions.len() > RECENT_VERSIONS {
+            self.recent_versions.pop_front();
+        }
+    }
+
+    /// Cadence gate at a snapshot boundary: the scheduler when enabled,
+    /// else the static interval (in steps).
+    pub fn due(&mut self, step: u64, static_interval_steps: u64) -> bool {
+        match self.sched.as_mut() {
+            Some(s) => s.should_persist(step),
+            None => static_interval_steps > 0 && step % static_interval_steps == 0,
+        }
+    }
+
+    /// The trainer-thread persist hand-off: time the enqueue under
+    /// `persist_stall` and fold the engine counters forward.
+    pub fn enqueue(
+        &mut self,
+        step: u64,
+        sources: Vec<Option<Sender<SmpMsg>>>,
+        metrics: &Metrics,
+    ) -> Result<()> {
+        let version_steps: Vec<(u64, u64)> = self.recent_versions.iter().copied().collect();
+        metrics.time("persist_stall", || {
+            self.engine.enqueue(step, sources, version_steps)
+        })?;
+        metrics.inc("persist_enqueues", 1);
+        self.sync(metrics);
+        Ok(())
+    }
+
+    /// Per-step cadence re-derivation from measured costs. A no-op until
+    /// the first job commits — before that `last_job_secs` is 0 and
+    /// feeding it to the Eq. 11 math would clobber the static fallback
+    /// cadence with a fabricated zero-cost measurement (pushing the
+    /// *first* persist out indefinitely) — and between commits, since the
+    /// measurement only changes when a new job lands. The steady-state
+    /// per-step cost is one two-scalar mutex read.
+    pub fn observe(&mut self, metrics: &Metrics) {
+        let Some(sched) = self.sched.as_mut() else {
+            return;
+        };
+        let (commits, last_job_secs) = self.engine.commit_meta();
+        if commits == 0 || commits == self.observed_commits {
+            return;
+        }
+        self.observed_commits = commits;
+        let t_step = metrics.timer("step_wall").mean();
+        let steps = sched.observe(last_job_secs, t_step);
+        metrics.gauge("persist_interval_steps", steps as f64);
+    }
+
+    /// Shutdown barrier: block until every enqueued job committed or
+    /// aborted, then sync counters. The only blocking persistence call.
+    pub fn flush(&mut self, metrics: &Metrics) -> Result<()> {
+        metrics.time("persist_flush", || self.engine.flush())?;
+        self.sync(metrics);
+        Ok(())
+    }
+
+    pub fn stats(&self) -> PersistStats {
+        self.engine.stats()
+    }
+
+    /// Fold the engine's (monotonic) counters into the run metrics as
+    /// deltas, so `persisted_bytes` / `persist_commits` / `persist_aborts`
+    /// read like every other counter.
+    fn sync(&mut self, metrics: &Metrics) {
+        let st = self.engine.stats();
+        metrics.inc("persisted_bytes", st.persisted_bytes - self.seen.persisted_bytes);
+        metrics.inc(
+            "persist_commits",
+            st.manifests_committed - self.seen.manifests_committed,
+        );
+        metrics.inc("persist_aborts", st.jobs_aborted - self.seen.jobs_aborted);
+        self.seen = st;
+    }
+}

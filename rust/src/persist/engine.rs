@@ -1,0 +1,423 @@
+//! The background persistence engine: SMP-driven drain of completed
+//! in-memory snapshot rounds to durable storage, **off the training
+//! thread** (paper §6.1: "an SMP-driven persist to cloud that never blocks
+//! training").
+//!
+//! Shape of the subsystem:
+//!
+//! * the trainer's persist cadence point is an [`PersistEngine::enqueue`] —
+//!   O(nodes) channel-handle clones, no payload bytes — mirroring the L1
+//!   philosophy of the snapshot save path;
+//! * one engine thread owns the job queue; for each job it fans out **one
+//!   writer worker per node** (scoped threads) that pulls that node's clean
+//!   shards straight from its SMP (`GetClean` — readers only ever see
+//!   promoted versions, so a torn round is unobservable) and streams them to
+//!   storage under a shared bytes/sec [`Throttle`], the L2 counterpart:
+//!   persist I/O cannot starve training bandwidth;
+//! * commit is all-or-nothing: the cluster-wide manifest is written only
+//!   after **every** shard landed (see [`super::manifest`]); any worker
+//!   failure — dead SMP, snapshot-version skew across nodes, storage error —
+//!   drops the whole job, leaving the previous manifest as `latest` and the
+//!   partial blobs for the GC sweep;
+//! * after each commit the retention policy runs ([`super::retention`]).
+//!
+//! [`PersistEngine::flush`] is the only blocking call and exists for
+//! shutdown (and tests): it barriers on the queue, not on any in-band step.
+
+use std::collections::BTreeSet;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Storage;
+use crate::config::PersistConfig;
+use crate::smp::SmpMsg;
+use crate::snapshot::SnapshotPlan;
+
+use super::manifest::{manifest_key, shard_key, PersistManifest, ShardEntry};
+use super::retention::{run_gc, RetentionPolicy};
+
+/// Global bytes/sec pacing shared by every writer worker: reserving a
+/// transfer slot advances a single cluster-wide clock, so the sum of all
+/// concurrent uploads never exceeds the configured budget.
+#[derive(Debug)]
+pub struct Throttle {
+    bytes_per_sec: f64,
+    next_free: Mutex<Option<Instant>>,
+}
+
+impl Throttle {
+    /// `bytes_per_sec == 0` disables pacing entirely.
+    pub fn new(bytes_per_sec: u64) -> Throttle {
+        Throttle { bytes_per_sec: bytes_per_sec as f64, next_free: Mutex::new(None) }
+    }
+
+    /// Reserve a slot for `bytes` and sleep until it has drained at the
+    /// configured rate. Returns the seconds slept.
+    pub fn consume(&self, bytes: usize) -> f64 {
+        if self.bytes_per_sec <= 0.0 || bytes == 0 {
+            return 0.0;
+        }
+        let dur = Duration::from_secs_f64(bytes as f64 / self.bytes_per_sec);
+        let now = Instant::now();
+        let until = {
+            let mut g = self.next_free.lock().unwrap();
+            let start = g.map_or(now, |t: Instant| t.max(now));
+            let until = start + dur;
+            *g = Some(until);
+            until
+        };
+        let wait = until.saturating_duration_since(now);
+        if !wait.is_zero() {
+            std::thread::sleep(wait);
+        }
+        wait.as_secs_f64()
+    }
+}
+
+/// Counters the trainers fold into their run metrics and the tests assert.
+#[derive(Debug, Clone, Default)]
+pub struct PersistStats {
+    pub jobs_enqueued: u64,
+    pub manifests_committed: u64,
+    /// jobs dropped without a manifest (dead SMP, version skew across
+    /// nodes, no clean snapshot yet, storage error)
+    pub jobs_aborted: u64,
+    /// shard payload bytes landed under a committed manifest
+    pub persisted_bytes: u64,
+    pub gc_manifests_deleted: u64,
+    pub gc_blobs_deleted: u64,
+    /// cumulative seconds writer workers slept in the throttle
+    pub throttle_wait_s: f64,
+    pub last_commit_step: Option<u64>,
+    pub last_commit_version: Option<u64>,
+    /// wall-clock of the most recent committed job (fetch → manifest + GC)
+    pub last_job_secs: f64,
+    pub last_error: Option<String>,
+}
+
+enum EngineMsg {
+    Job {
+        step: u64,
+        sources: Vec<Option<Sender<SmpMsg>>>,
+        /// recent snapshot-version → capture-step pairs, so the committed
+        /// manifest can record the step its drained round actually
+        /// contains (`snapshot_step`)
+        version_steps: Vec<(u64, u64)>,
+    },
+    Flush(Sender<()>),
+    Shutdown,
+}
+
+/// Handle to the running engine thread. Dropping it drains the queue
+/// (queued jobs still commit) and joins the thread.
+pub struct PersistEngine {
+    tx: Sender<EngineMsg>,
+    handle: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<PersistStats>>,
+}
+
+impl PersistEngine {
+    pub fn start(
+        model: impl Into<String>,
+        storage: Arc<dyn Storage>,
+        plan: SnapshotPlan,
+        cfg: PersistConfig,
+    ) -> PersistEngine {
+        let model = model.into();
+        let stats = Arc::new(Mutex::new(PersistStats::default()));
+        let (tx, rx): (Sender<EngineMsg>, Receiver<EngineMsg>) = channel();
+        let thread_stats = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name("persist-engine".into())
+            .spawn(move || {
+                let throttle = Throttle::new(cfg.throttle_bytes_per_sec);
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        EngineMsg::Job { step, sources, version_steps } => run_job(
+                            &model,
+                            storage.as_ref(),
+                            &plan,
+                            &cfg,
+                            &throttle,
+                            &thread_stats,
+                            step,
+                            sources,
+                            &version_steps,
+                        ),
+                        EngineMsg::Flush(ack) => {
+                            // queue order means every earlier job is done
+                            let _ = ack.send(());
+                        }
+                        EngineMsg::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawning persistence engine thread");
+        PersistEngine { tx, handle: Some(handle), stats }
+    }
+
+    /// Hand the engine a persist request and return immediately. The job
+    /// drains whatever consistent clean snapshot round the SMPs serve at
+    /// fetch time (with the async save path that can be one round behind
+    /// the just-enqueued snapshot — still a complete, promoted round).
+    /// `sources` are per-node SMP inbox handles (`None` = node offline),
+    /// captured at enqueue time so elastic replacements are picked up.
+    /// `version_steps` maps recent snapshot versions to their capture
+    /// steps (may be empty — the manifest's `snapshot_step` then falls
+    /// back to the enqueue step).
+    pub fn enqueue(
+        &self,
+        step: u64,
+        sources: Vec<Option<Sender<SmpMsg>>>,
+        version_steps: Vec<(u64, u64)>,
+    ) -> Result<()> {
+        self.stats.lock().unwrap().jobs_enqueued += 1;
+        self.tx
+            .send(EngineMsg::Job { step, sources, version_steps })
+            .map_err(|_| anyhow::anyhow!("persistence engine is gone"))
+    }
+
+    /// Block until every job enqueued so far has committed or aborted. The
+    /// shutdown barrier — the training loop never calls this mid-run.
+    pub fn flush(&self) -> Result<()> {
+        let (ack_tx, ack_rx) = channel();
+        self.tx
+            .send(EngineMsg::Flush(ack_tx))
+            .map_err(|_| anyhow::anyhow!("persistence engine is gone"))?;
+        ack_rx.recv().context("persistence engine died mid-flush")
+    }
+
+    pub fn stats(&self) -> PersistStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// The two scalars the cadence scheduler needs — no `PersistStats`
+    /// clone (and no `last_error` String allocation) on the training
+    /// thread's per-step path.
+    pub fn commit_meta(&self) -> (u64, f64) {
+        let g = self.stats.lock().unwrap();
+        (g.manifests_committed, g.last_job_secs)
+    }
+}
+
+impl Drop for PersistEngine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(EngineMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One writer worker: pull every clean shard this node owns from its SMP
+/// and stream it to storage under the shared throttle. Returns the snapshot
+/// version served, the manifest entries, bytes moved, and throttle wait.
+fn write_node(
+    model: &str,
+    storage: &dyn Storage,
+    plan: &SnapshotPlan,
+    cfg: &PersistConfig,
+    throttle: &Throttle,
+    step: u64,
+    node: usize,
+    source: Option<Sender<SmpMsg>>,
+) -> Result<(u64, Vec<ShardEntry>, u64, f64)> {
+    let source =
+        source.with_context(|| format!("node {node} is offline — cannot persist"))?;
+    let mut version: Option<u64> = None;
+    let mut entries = Vec::new();
+    let mut total = 0u64;
+    let mut waited = 0f64;
+    for shard in plan.shards_for_node(node) {
+        // Fig. 6 consistency: GetClean only ever serves promoted rounds, so
+        // the durable copy can never observe a torn snapshot
+        let (v, bytes) = crate::smp::get_clean_via(&source, shard.stage)
+            .map_err(|e| anyhow::anyhow!("node {node}: {e}"))?
+            .with_context(|| {
+                format!("no clean snapshot for stage {} on node {node} yet", shard.stage)
+            })?;
+        anyhow::ensure!(
+            bytes.len() as u64 == shard.len(),
+            "clean shard on node {node} is {} bytes, plan says {}",
+            bytes.len(),
+            shard.len()
+        );
+        match version {
+            Some(prev) => anyhow::ensure!(
+                prev == v,
+                "node {node} serves mixed clean versions {prev} / {v}"
+            ),
+            None => version = Some(v),
+        }
+        // throttled streaming upload: pace chunk by chunk so persist I/O
+        // stays inside its bandwidth budget, then land the blob in one
+        // atomic put
+        for piece in bytes.chunks(cfg.chunk_bytes.max(1)) {
+            waited += throttle.consume(piece.len());
+        }
+        let key = shard_key(model, step, shard.stage, node);
+        let crc = crc32fast::hash(&bytes);
+        storage
+            .put(&key, &bytes)
+            .with_context(|| format!("uploading `{key}`"))?;
+        total += bytes.len() as u64;
+        entries.push(ShardEntry {
+            key,
+            stage: shard.stage,
+            node,
+            offset: shard.range.start,
+            len: shard.len(),
+            crc32: crc,
+        });
+    }
+    let version =
+        version.with_context(|| format!("node {node} holds no planned shards"))?;
+    Ok((version, entries, total, waited))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_job(
+    model: &str,
+    storage: &dyn Storage,
+    plan: &SnapshotPlan,
+    cfg: &PersistConfig,
+    throttle: &Throttle,
+    stats: &Mutex<PersistStats>,
+    step: u64,
+    mut sources: Vec<Option<Sender<SmpMsg>>>,
+    version_steps: &[(u64, u64)],
+) {
+    let t0 = Instant::now();
+    let nodes: BTreeSet<usize> = plan.shards.iter().map(|s| s.node).collect();
+    let mut results: Vec<Result<(u64, Vec<ShardEntry>, u64, f64)>> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for &node in &nodes {
+            let source = sources.get_mut(node).and_then(|s| s.take());
+            handles.push(scope.spawn(move || {
+                write_node(model, storage, plan, cfg, throttle, step, node, source)
+            }));
+        }
+        for h in handles {
+            results.push(
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("writer worker panicked"))),
+            );
+        }
+    });
+
+    // all-or-nothing: any worker failure or cross-node version skew drops
+    // the job without a manifest — the previous manifest stays `latest` and
+    // the partial blobs wait for the GC sweep
+    let mut entries = Vec::new();
+    let mut versions: BTreeSet<u64> = BTreeSet::new();
+    let mut total_bytes = 0u64;
+    let mut wait_s = 0f64;
+    let mut error: Option<String> = None;
+    for r in results {
+        match r {
+            Ok((v, es, bytes, wait)) => {
+                versions.insert(v);
+                total_bytes += bytes;
+                wait_s += wait;
+                entries.extend(es);
+            }
+            Err(e) => error = Some(format!("{e:#}")),
+        }
+    }
+    if error.is_none() && versions.len() != 1 {
+        error = Some(format!("snapshot version skew across nodes: {versions:?}"));
+    }
+    if let Some(e) = error {
+        let mut g = stats.lock().unwrap();
+        g.throttle_wait_s += wait_s;
+        g.jobs_aborted += 1;
+        g.last_error = Some(e);
+        return;
+    }
+
+    let version = versions.into_iter().next().expect("checked above");
+    entries.sort_by(|a, b| (a.stage, a.offset).cmp(&(b.stage, b.offset)));
+    // the step whose state the drained round actually contains: with async
+    // snapshots the promoted round can be older than the enqueue step, and
+    // recovery's cross-tier tie-break must not overstate it
+    let snapshot_step = version_steps
+        .iter()
+        .rev()
+        .find(|(v, _)| *v == version)
+        .map(|&(_, s)| s)
+        .unwrap_or(step);
+    let manifest = PersistManifest {
+        model: model.to_string(),
+        step,
+        version,
+        snapshot_step,
+        stage_bytes: plan.stage_bytes.clone(),
+        shards: entries,
+    };
+    let committed = storage.put(&manifest_key(model, step), &manifest.encode());
+    let gc = if committed.is_ok() {
+        let policy = RetentionPolicy { keep_last: cfg.keep_last, keep_every: cfg.keep_every };
+        Some(run_gc(storage, model, &policy))
+    } else {
+        None
+    };
+
+    let mut g = stats.lock().unwrap();
+    g.throttle_wait_s += wait_s;
+    match committed {
+        Ok(()) => {
+            g.manifests_committed += 1;
+            g.persisted_bytes += total_bytes;
+            g.last_commit_step = Some(step);
+            g.last_commit_version = Some(version);
+            g.last_job_secs = t0.elapsed().as_secs_f64();
+            match gc {
+                Some(Ok(report)) => {
+                    g.gc_manifests_deleted += report.manifests_deleted as u64;
+                    g.gc_blobs_deleted += report.blobs_deleted as u64;
+                }
+                Some(Err(e)) => g.last_error = Some(format!("gc: {e:#}")),
+                None => {}
+            }
+        }
+        Err(e) => {
+            g.jobs_aborted += 1;
+            g.last_error = Some(format!("manifest commit: {e:#}"));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throttle_disabled_never_sleeps() {
+        let t = Throttle::new(0);
+        let t0 = Instant::now();
+        assert_eq!(t.consume(1 << 30), 0.0);
+        assert!(t0.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn throttle_paces_to_the_budget() {
+        // 1 MiB/s budget, 128 KiB transferred -> at least ~125 ms of pacing
+        let t = Throttle::new(1 << 20);
+        let t0 = Instant::now();
+        let mut waited = 0.0;
+        for _ in 0..4 {
+            waited += t.consume(32 * 1024);
+        }
+        assert!(
+            t0.elapsed() >= Duration::from_millis(100),
+            "elapsed {:?}",
+            t0.elapsed()
+        );
+        assert!(waited > 0.05, "waited {waited}");
+    }
+}

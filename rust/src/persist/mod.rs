@@ -1,0 +1,38 @@
+//! Asynchronous tiered persistence: the durable tier below the in-memory
+//! snapshot fabric (paper §6.1, REFT-Ckpt).
+//!
+//! The in-memory tier (SMPs + RAIM5) absorbs the common failures; this
+//! subsystem drains *completed* snapshot rounds to the [`Storage`] tier in
+//! the background so the rare protection-exceeded case has a durable
+//! fallback — without the training thread ever paying for the upload.
+//!
+//! * [`engine`] — the background drain: per-node writer workers pull clean
+//!   shards from the SMPs and stream them under a bytes/sec throttle;
+//!   trainer-side cost is one enqueue.
+//! * [`driver`] — the trainer-side handle (engine + cadence + metric
+//!   sync), shared by both trainers.
+//! * [`manifest`] — the atomic commit unit: a cluster-wide manifest written
+//!   only after every shard landed, so `latest` can never name a torn or
+//!   partial checkpoint.
+//! * [`retention`] — keep-last-K + keep-every-Nth GC of superseded versions
+//!   and orphaned shard blobs.
+//! * [`scheduler`] — the live Appendix-A cadence: measured save overhead
+//!   and the hwsim failure rate pick the persist interval instead of the
+//!   static `persist_every` knob.
+//!
+//! [`Storage`]: crate::checkpoint::Storage
+
+pub mod driver;
+pub mod engine;
+pub mod manifest;
+pub mod retention;
+pub mod scheduler;
+
+pub use driver::PersistDriver;
+pub use engine::{PersistEngine, PersistStats, Throttle};
+pub use manifest::{
+    load_latest, load_manifest_payload, manifest_key, manifest_prefix, persisted_steps,
+    resolve_for_recovery, shard_key, sweep_orphan_shards, PersistManifest, ShardEntry,
+};
+pub use retention::{run_gc, GcReport, RetentionPolicy};
+pub use scheduler::IntervalScheduler;

@@ -1,0 +1,131 @@
+//! Retention policy + garbage collection for the durable tier.
+//!
+//! Two knobs compose (union of the two keep-sets):
+//! * **keep-last-K** — the newest K manifests always survive (K floors at 1:
+//!   the latest durable checkpoint is never collected);
+//! * **keep-every-Nth** — any step divisible by N survives regardless of
+//!   age, giving a sparse long-horizon history (0 disables).
+//!
+//! Deletion order is crash-consistent with the commit protocol: a dropped
+//! version loses its *manifest first* (readers immediately stop resolving
+//! it), then its shard blobs; a crash in between just leaves orphans for the
+//! next sweep. The sweep also collects shard blobs of steps that never
+//! committed a manifest (aborted or crashed persist jobs).
+
+use std::collections::BTreeSet;
+
+use anyhow::Result;
+
+use crate::checkpoint::Storage;
+
+use super::manifest::{self, PersistManifest};
+
+#[derive(Debug, Clone, Copy)]
+pub struct RetentionPolicy {
+    /// always keep the newest K manifests (values below 1 are treated as 1)
+    pub keep_last: usize,
+    /// additionally keep every step divisible by N (0 disables)
+    pub keep_every: u64,
+}
+
+impl RetentionPolicy {
+    /// Which of `steps` (ascending) survive this policy.
+    pub fn retained(&self, steps: &[u64]) -> BTreeSet<u64> {
+        let mut keep: BTreeSet<u64> =
+            steps.iter().rev().take(self.keep_last.max(1)).copied().collect();
+        if self.keep_every > 0 {
+            keep.extend(steps.iter().copied().filter(|s| s % self.keep_every == 0));
+        }
+        keep
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcReport {
+    pub manifests_deleted: usize,
+    pub blobs_deleted: usize,
+}
+
+/// Apply the policy to `model`'s durable checkpoints and sweep orphaned
+/// shard blobs older than the newest committed manifest. One listing
+/// snapshot serves the whole pass — manifest enumeration and the orphan
+/// sweep — so the per-commit GC costs a single full scan, not three.
+pub fn run_gc(
+    storage: &dyn Storage,
+    model: &str,
+    policy: &RetentionPolicy,
+) -> Result<GcReport> {
+    let keys = storage.list();
+    let prefix = manifest::manifest_prefix(model);
+    let mut steps: Vec<u64> = keys
+        .iter()
+        .filter_map(|k| manifest::step_of_key(k, &prefix))
+        .collect();
+    steps.sort_unstable();
+    steps.dedup();
+    let Some(&newest) = steps.last() else {
+        return Ok(GcReport::default());
+    };
+    let keep = policy.retained(&steps);
+    let mut report = GcReport::default();
+    for &step in &steps {
+        if keep.contains(&step) {
+            continue;
+        }
+        let key = manifest::manifest_key(model, step);
+        // read the shard list before unlinking the manifest, so the blobs
+        // can still be found once the version is no longer resolvable
+        let shard_keys: Vec<String> = storage
+            .get(&key)
+            .ok()
+            .and_then(|b| PersistManifest::decode(&b).ok())
+            .map(|m| m.shards.into_iter().map(|s| s.key).collect())
+            .unwrap_or_default();
+        storage.delete(&key)?;
+        report.manifests_deleted += 1;
+        for k in shard_keys {
+            storage.delete(&k)?;
+            report.blobs_deleted += 1;
+        }
+    }
+    // orphans = shard steps that never committed a manifest; steps whose
+    // manifest was just retired above were handled through its shard list
+    let manifested: BTreeSet<u64> = steps.iter().copied().collect();
+    report.blobs_deleted +=
+        manifest::sweep_orphans_in(storage, model, &manifested, newest, &keys);
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keep_last_floors_at_one() {
+        let p = RetentionPolicy { keep_last: 0, keep_every: 0 };
+        let kept = p.retained(&[5, 10, 15]);
+        assert_eq!(kept.into_iter().collect::<Vec<_>>(), vec![15]);
+    }
+
+    #[test]
+    fn keep_last_takes_newest() {
+        let p = RetentionPolicy { keep_last: 2, keep_every: 0 };
+        let kept = p.retained(&[5, 10, 15, 20]);
+        assert_eq!(kept.into_iter().collect::<Vec<_>>(), vec![15, 20]);
+    }
+
+    #[test]
+    fn keep_every_unions_with_keep_last() {
+        let p = RetentionPolicy { keep_last: 2, keep_every: 10 };
+        let kept = p.retained(&[5, 10, 15, 20, 25]);
+        // newest two (20, 25) plus every multiple of 10 (10, 20)
+        assert_eq!(kept.into_iter().collect::<Vec<_>>(), vec![10, 20, 25]);
+    }
+
+    #[test]
+    fn fewer_steps_than_keep_last_keeps_all() {
+        let p = RetentionPolicy { keep_last: 8, keep_every: 0 };
+        let kept = p.retained(&[3, 6]);
+        assert_eq!(kept.into_iter().collect::<Vec<_>>(), vec![3, 6]);
+    }
+}

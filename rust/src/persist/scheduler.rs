@@ -1,0 +1,149 @@
+//! Reliability-driven persist cadence (paper Appendix A, live): instead of
+//! the static `persist_every` knob, feed the *measured* durable-save cost
+//! and per-iteration compute into the Eq. 9–11 interval math and let the
+//! trainer re-derive its cadence as the run's costs drift.
+//!
+//! With an SG of n >= 2 the REFT form applies
+//! ([`reft_ckpt_interval`], Eq. 11): the expensive durable save amortizes
+//! against the *exceedance* rate (>= 2 nodes lost in the SG, Eq. 7), which
+//! is why the cadence stretches by orders of magnitude once in-memory
+//! protection exists. A single-node SG has no RAIM5 peers — any node loss
+//! needs the durable tier — so the plain Young interval
+//! ([`optimal_interval`], Eq. 5) against the raw node rate applies instead.
+
+use crate::reliability::intervals::{optimal_interval, reft_ckpt_interval, save_overhead};
+
+/// Live persist-cadence controller. Owned by the trainer; all methods run
+/// on the training thread and are O(1).
+#[derive(Debug, Clone)]
+pub struct IntervalScheduler {
+    /// per-node failure rate (per second — the hwsim λ_node)
+    lambda_node: f64,
+    /// sharding-group size n (Eq. 7 exceedance input)
+    sg_size: usize,
+    /// clamp bounds on the derived cadence, in steps
+    min_steps: u64,
+    max_steps: u64,
+    interval_steps: u64,
+    last_persist_step: u64,
+}
+
+impl IntervalScheduler {
+    /// `fallback_steps` seeds the cadence until the first measurement
+    /// arrives (the trainers pass the static
+    /// `persist_every * snapshot_interval` product).
+    pub fn new(lambda_node: f64, sg_size: usize, fallback_steps: u64) -> IntervalScheduler {
+        IntervalScheduler {
+            lambda_node,
+            sg_size,
+            min_steps: 1,
+            max_steps: 1_000_000,
+            interval_steps: fallback_steps.max(1),
+            last_persist_step: 0,
+        }
+    }
+
+    /// Current cadence in steps.
+    pub fn interval_steps(&self) -> u64 {
+        self.interval_steps
+    }
+
+    /// Re-derive the cadence from measurements: `t_persist` is the wall
+    /// cost of one durable save (with the background engine this is the
+    /// *job* duration — the Eq. 8 overlap term absorbs everything the
+    /// training thread doesn't see), `t_step` one training iteration.
+    /// Returns the new interval in steps.
+    pub fn observe(&mut self, t_persist: f64, t_step: f64) -> u64 {
+        if t_step > 0.0 && t_persist >= 0.0 && self.lambda_node > 0.0 {
+            let t_secs = if self.sg_size >= 2 {
+                reft_ckpt_interval(t_persist, t_step, self.lambda_node, self.sg_size)
+            } else {
+                // no RAIM5 peers: any node loss already needs the durable
+                // tier, so the raw node rate drives the plain Eq. 5 form
+                optimal_interval(
+                    save_overhead(t_persist, t_step).max(1e-6),
+                    self.lambda_node,
+                )
+            };
+            self.interval_steps = if t_secs.is_finite() {
+                ((t_secs / t_step).ceil() as u64).clamp(self.min_steps, self.max_steps)
+            } else {
+                self.max_steps
+            };
+        }
+        self.interval_steps
+    }
+
+    /// Cadence gate, called at each snapshot boundary on the training
+    /// thread. Marks the step as persisted when it fires.
+    pub fn should_persist(&mut self, step: u64) -> bool {
+        if step.saturating_sub(self.last_persist_step) >= self.interval_steps {
+            self.last_persist_step = step;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_cadence_until_first_measurement() {
+        let mut s = IntervalScheduler::new(1e-4, 6, 20);
+        assert_eq!(s.interval_steps(), 20);
+        assert!(!s.should_persist(10));
+        assert!(s.should_persist(20));
+        assert!(!s.should_persist(25));
+        assert!(s.should_persist(40));
+    }
+
+    #[test]
+    fn costlier_saves_stretch_the_interval() {
+        let mut cheap = IntervalScheduler::new(1e-4, 6, 10);
+        let mut dear = IntervalScheduler::new(1e-4, 6, 10);
+        let a = cheap.observe(2.0, 1.0);
+        let b = dear.observe(20.0, 1.0);
+        assert!(b > a, "amortize expensive saves over longer intervals: {a} vs {b}");
+    }
+
+    #[test]
+    fn reft_exceedance_stretches_vs_single_node_sg() {
+        // same costs, same node rate: the SG-of-6 cadence must be far
+        // sparser than the unprotected single-node one (Eq. 7 quadratic)
+        let mut protected = IntervalScheduler::new(1e-4, 6, 10);
+        let mut bare = IntervalScheduler::new(1e-4, 1, 10);
+        let p = protected.observe(5.0, 1.0);
+        let b = bare.observe(5.0, 1.0);
+        assert!(p > b * 10, "protected {p} vs bare {b}");
+    }
+
+    #[test]
+    fn fully_overlapped_save_caps_at_max() {
+        // background engine: trainer-visible cost ~ 0 -> overhead clamps to
+        // epsilon and the interval hits the ceiling rather than NaN/0
+        let mut s = IntervalScheduler::new(1e-6, 6, 10);
+        let steps = s.observe(0.0, 1.0);
+        assert!(steps >= 10, "{steps}");
+        assert!(steps <= 1_000_000);
+    }
+
+    #[test]
+    fn zero_step_time_keeps_previous_cadence() {
+        let mut s = IntervalScheduler::new(1e-4, 6, 15);
+        assert_eq!(s.observe(1.0, 0.0), 15);
+    }
+
+    #[test]
+    fn cadence_tracks_interval_after_observe() {
+        let mut s = IntervalScheduler::new(1e-1, 2, 100);
+        // high failure rate + expensive save -> short finite interval
+        let steps = s.observe(50.0, 1.0);
+        assert!(steps >= 1);
+        assert!(s.should_persist(steps));
+        assert!(!s.should_persist(steps + 1));
+        assert!(s.should_persist(steps * 2));
+    }
+}

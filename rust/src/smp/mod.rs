@@ -311,11 +311,18 @@ impl Smp {
             .map_err(|_| anyhow::anyhow!("SMP {} is gone", self.node))
     }
 
+    /// Clone of this SMP's inbox handle, for background services that fetch
+    /// clean shards concurrently with training traffic (the persistence
+    /// engine's writer workers). Sends fail once the SMP dies — exactly the
+    /// signal a persist job uses to abort.
+    pub fn sender(&self) -> Sender<SmpMsg> {
+        self.tx.clone()
+    }
+
     /// Synchronous clean-snapshot fetch.
     pub fn get_clean(&self, stage: usize) -> Result<Option<(u64, Vec<u8>)>> {
-        let (tx, rx) = channel();
-        self.send(SmpMsg::GetClean { stage, reply: tx })?;
-        Ok(rx.recv()?)
+        get_clean_via(&self.tx, stage)
+            .map_err(|e| anyhow::anyhow!("SMP {}: {e}", self.node))
     }
 
     /// Synchronous parity fetch.
@@ -353,6 +360,19 @@ impl Drop for Smp {
             let _ = h.join();
         }
     }
+}
+
+/// The clean-fetch wire protocol over a bare inbox handle — the one
+/// implementation both [`Smp::get_clean`] and services that only hold a
+/// cloned [`Smp::sender`] (the persistence engine's writer workers) use.
+pub fn get_clean_via(
+    tx: &Sender<SmpMsg>,
+    stage: usize,
+) -> Result<Option<(u64, Vec<u8>)>> {
+    let (reply, rx) = channel();
+    tx.send(SmpMsg::GetClean { stage, reply })
+        .map_err(|_| anyhow::anyhow!("SMP is gone"))?;
+    rx.recv().map_err(|_| anyhow::anyhow!("SMP died mid-fetch"))
 }
 
 #[cfg(test)]

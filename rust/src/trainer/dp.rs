@@ -7,6 +7,7 @@
 //! Fault tolerance wraps the loop per the configured [`FtMethod`].
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -15,6 +16,7 @@ use crate::config::{FtMethod, RunConfig};
 use crate::elastic::ReftCluster;
 use crate::metrics::Metrics;
 use crate::model::{StageState, SyntheticCorpus};
+use crate::persist::{self, PersistDriver, PersistStats};
 use crate::runtime::{self, Engine, In, Manifest};
 use crate::snapshot::SharedPayload;
 use crate::topology::Topology;
@@ -42,6 +44,9 @@ pub struct DpTrainer {
     pub losses: Vec<f32>,
     fwd_bwd_path: String,
     adam_path: String,
+    /// durable-tier driver: background drain engine + cadence + metric
+    /// sync (REFT-Ckpt with `ft.persist.enabled`)
+    persist: Option<PersistDriver>,
 }
 
 impl DpTrainer {
@@ -81,6 +86,18 @@ impl DpTrainer {
         let corpus = SyntheticCorpus::new(manifest.hyper.vocab, cfg.seed ^ 0xC0FFEE);
         let fwd_bwd_path = full.artifacts.get("fwd_bwd")?.to_string();
         let adam_path = full.artifacts.get("adam")?.to_string();
+        // durable tier: REFT-Ckpt with the engine enabled persists via the
+        // background drain instead of inline trainer-thread puts
+        let persist = match (&reft, cfg.ft.method, cfg.ft.persist.enabled) {
+            (Some(r), FtMethod::ReftCkpt, true) => Some(PersistDriver::start(
+                cfg.model.clone(),
+                Arc::clone(&storage),
+                r.plan.clone(),
+                &cfg.ft,
+                topo.sharding_group(0).len(),
+            )),
+            _ => None,
+        };
         Ok(DpTrainer {
             cfg,
             topo,
@@ -94,6 +111,7 @@ impl DpTrainer {
             losses: Vec::new(),
             fwd_bwd_path,
             adam_path,
+            persist,
         })
     }
 
@@ -103,6 +121,7 @@ impl DpTrainer {
 
     /// One synchronous step across all DP paths. Returns the mean loss.
     pub fn step(&mut self) -> Result<StepReport> {
+        let t_step0 = Instant::now();
         let dp = self.topo.plan.dp;
         let (b, t) = (self.manifest.hyper.batch, self.manifest.hyper.seq);
         let n = self.state.n_params();
@@ -168,11 +187,14 @@ impl DpTrainer {
                     snapshotted = true;
                     let persist = self.cfg.ft.persist_every as u64
                         * self.cfg.ft.snapshot_interval as u64;
-                    if self.cfg.ft.method == FtMethod::ReftCkpt
-                        && self.state.step % persist == 0
-                    {
-                        self.checkpoint()?;
-                        checkpointed = true;
+                    // cadence: the driver's live Appendix-A scheduler when
+                    // enabled, else the static persist_every product
+                    let due = match self.persist.as_mut() {
+                        Some(d) => d.due(self.state.step, persist),
+                        None => self.state.step % persist == 0,
+                    };
+                    if self.cfg.ft.method == FtMethod::ReftCkpt && due {
+                        checkpointed = self.persist_now()?;
                     }
                 }
                 FtMethod::CheckFreq | FtMethod::TorchSnapshot => {
@@ -182,6 +204,13 @@ impl DpTrainer {
                 }
                 FtMethod::None => {}
             }
+        }
+
+        // live cadence re-derivation from this run's measured costs
+        self.metrics.record_secs("step_wall", t_step0.elapsed().as_secs_f64());
+        let metrics = Arc::clone(&self.metrics);
+        if let Some(d) = self.persist.as_mut() {
+            d.observe(&metrics);
         }
         Ok(StepReport { step: self.state.step, loss, snapshotted, checkpointed })
     }
@@ -219,6 +248,12 @@ impl DpTrainer {
         } else {
             self.metrics.time("snapshot", || reft.snapshot_all(&[payload]))?
         };
+        // remember which step this version captured, so a later persist of
+        // the round labels its manifest with the contained state honestly
+        let step = self.state.step;
+        if let Some(d) = self.persist.as_mut() {
+            d.note_snapshot(v, step);
+        }
         self.metrics.inc("snapshots", 1);
         Ok(v)
     }
@@ -252,6 +287,10 @@ impl DpTrainer {
         let v = self
             .metrics
             .time("snapshot_recovery", || reft.snapshot_all_blocking(&[payload]))?;
+        let step = self.state.step;
+        if let Some(d) = self.persist.as_mut() {
+            d.note_snapshot(v, step);
+        }
         self.metrics.inc("snapshots", 1);
         Ok(v)
     }
@@ -265,6 +304,43 @@ impl DpTrainer {
         self.metrics.time("ckpt_put", || self.storage.put(&key, &bytes))?;
         self.metrics.inc("checkpoints", 1);
         Ok(key)
+    }
+
+    /// Durable-tier hand-off at the persist cadence: with the engine
+    /// enabled this is an enqueue — the SMP-driven background drain does
+    /// the I/O and commits the manifest off the training thread — else the
+    /// legacy inline checkpoint. Returns whether a blocking checkpoint ran.
+    fn persist_now(&mut self) -> Result<bool> {
+        if self.persist.is_none() {
+            self.checkpoint()?;
+            return Ok(true);
+        }
+        let sources = self
+            .reft
+            .as_ref()
+            .context("persistence engine requires REFT")?
+            .persist_sources();
+        let step = self.state.step;
+        let metrics = Arc::clone(&self.metrics);
+        self.persist.as_mut().unwrap().enqueue(step, sources, &metrics)?;
+        Ok(false)
+    }
+
+    /// Shutdown barrier for the durable tier: block until every enqueued
+    /// persist job committed (or aborted) and fold the engine counters into
+    /// the run metrics. The only blocking persistence call in the system;
+    /// a no-op when the engine is off.
+    pub fn flush_persist(&mut self) -> Result<()> {
+        let metrics = Arc::clone(&self.metrics);
+        if let Some(d) = self.persist.as_mut() {
+            d.flush(&metrics)?;
+        }
+        Ok(())
+    }
+
+    /// Engine introspection for drivers and tests.
+    pub fn persist_stats(&self) -> Option<PersistStats> {
+        self.persist.as_ref().map(PersistDriver::stats)
     }
 
     // -- failure injection + recovery (live path) ---------------------------
@@ -303,19 +379,38 @@ impl DpTrainer {
                 self.metrics.inc("recoveries_inmemory", 1);
             }
             Err(e) => {
-                // in-memory protection exceeded -> durable checkpoint (of
-                // THIS model — a shared store may hold other models' steps)
-                let key = self
-                    .storage
-                    .latest_for(&self.cfg.model)
-                    .with_context(|| format!("in-memory recovery failed ({e}) and no checkpoint exists"))?;
-                let bytes = self.storage.get(&key)?;
-                let file = CheckpointFile::decode(&bytes)?;
-                let payload = file
-                    .stage_payload(0)
-                    .context("checkpoint missing stage payload")?;
-                self.state = StageState::from_payload(0, n_params, payload)?;
-                self.metrics.inc("recoveries_checkpoint", 1);
+                // in-memory protection exceeded (elastic decision tree
+                // case 3) -> the durable tier. The shared resolver picks
+                // the newest *complete*, shape-compatible persist manifest
+                // (atomic commit: partial uploads are invisible; a
+                // different-layout manifest degrades instead of aborting)
+                // unless the legacy inline checkpoint holds newer state.
+                let legacy_key = self.storage.latest_for(&self.cfg.model);
+                if let Some((man, stages)) = persist::resolve_for_recovery(
+                    self.storage.as_ref(),
+                    &self.cfg.model,
+                    1,
+                    legacy_key.as_deref(),
+                ) {
+                    self.state = StageState::from_payload(0, n_params, &stages[0])?;
+                    self.metrics.inc("recoveries_checkpoint", 1);
+                    self.metrics.inc("recoveries_manifest", 1);
+                    self.metrics
+                        .gauge("recovered_manifest_step", man.snapshot_step as f64);
+                } else {
+                    // legacy checkpoint of THIS model — a shared store may
+                    // hold other models' steps
+                    let key = legacy_key.with_context(|| {
+                        format!("in-memory recovery failed ({e}) and no durable checkpoint exists")
+                    })?;
+                    let bytes = self.storage.get(&key)?;
+                    let file = CheckpointFile::decode(&bytes)?;
+                    let payload = file
+                        .stage_payload(0)
+                        .context("checkpoint missing stage payload")?;
+                    self.state = StageState::from_payload(0, n_params, payload)?;
+                    self.metrics.inc("recoveries_checkpoint", 1);
+                }
             }
         }
         // elastic substitute nodes rejoin, then a fresh snapshot round

@@ -13,6 +13,7 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -21,6 +22,7 @@ use crate::config::{FtMethod, RunConfig};
 use crate::elastic::ReftCluster;
 use crate::metrics::Metrics;
 use crate::model::{StageState, SyntheticCorpus};
+use crate::persist::{self, PersistDriver, PersistStats};
 use crate::pipeline::{self, Op, Schedule};
 use crate::runtime::{self, Engine, In, Manifest};
 use crate::snapshot::SharedPayload;
@@ -39,6 +41,9 @@ pub struct PipelineTrainer {
     pub schedule: Schedule,
     pub metrics: Arc<Metrics>,
     pub losses: Vec<f32>,
+    /// durable-tier driver: background drain engine + cadence + metric
+    /// sync (REFT-Ckpt with `ft.persist.enabled`)
+    persist: Option<PersistDriver>,
 }
 
 impl PipelineTrainer {
@@ -70,6 +75,23 @@ impl PipelineTrainer {
             _ => None,
         };
         let corpus = SyntheticCorpus::new(manifest.hyper.vocab, cfg.seed ^ 0xC0FFEE);
+        // durable tier: REFT-Ckpt with the engine enabled persists via the
+        // background drain instead of inline trainer-thread puts. The
+        // widest SG drives the exceedance rate conservatively.
+        let widest_sg = (0..cfg.plan.pp)
+            .map(|s| topo.sharding_group(s).len())
+            .max()
+            .unwrap_or(1);
+        let persist = match (&reft, cfg.ft.method, cfg.ft.persist.enabled) {
+            (Some(r), FtMethod::ReftCkpt, true) => Some(PersistDriver::start(
+                cfg.model.clone(),
+                Arc::clone(&storage),
+                r.plan.clone(),
+                &cfg.ft,
+                widest_sg,
+            )),
+            _ => None,
+        };
         Ok(PipelineTrainer {
             cfg,
             topo,
@@ -82,6 +104,7 @@ impl PipelineTrainer {
             schedule,
             metrics: Arc::new(Metrics::new()),
             losses: Vec::new(),
+            persist,
         })
     }
 
@@ -92,6 +115,7 @@ impl PipelineTrainer {
     /// One full iteration: `microbatches` through the pipe per DP path,
     /// gradient accumulation + DP all-reduce, per-stage fused Adam.
     pub fn step(&mut self) -> Result<f32> {
+        let t_step0 = Instant::now();
         let pp = self.cfg.plan.pp;
         let dp = self.cfg.plan.dp;
         let n_micro = self.cfg.microbatches;
@@ -195,8 +219,14 @@ impl PipelineTrainer {
                     self.snapshot()?;
                     let persist =
                         self.cfg.ft.persist_every as u64 * self.cfg.ft.snapshot_interval as u64;
-                    if self.cfg.ft.method == FtMethod::ReftCkpt && step % persist == 0 {
-                        self.checkpoint()?;
+                    // cadence: the driver's live Appendix-A scheduler when
+                    // enabled, else the static persist_every product
+                    let due = match self.persist.as_mut() {
+                        Some(d) => d.due(step, persist),
+                        None => step % persist == 0,
+                    };
+                    if self.cfg.ft.method == FtMethod::ReftCkpt && due {
+                        self.persist_now()?;
                     }
                 }
                 FtMethod::CheckFreq | FtMethod::TorchSnapshot => {
@@ -204,6 +234,13 @@ impl PipelineTrainer {
                 }
                 FtMethod::None => {}
             }
+        }
+
+        // live cadence re-derivation from this run's measured costs
+        self.metrics.record_secs("step_wall", t_step0.elapsed().as_secs_f64());
+        let metrics = Arc::clone(&self.metrics);
+        if let Some(d) = self.persist.as_mut() {
+            d.observe(&metrics);
         }
         Ok(loss)
     }
@@ -415,6 +452,12 @@ impl PipelineTrainer {
         } else {
             self.metrics.time("snapshot", || reft.snapshot_all(&payloads))?
         };
+        // remember which step this version captured, so a later persist of
+        // the round labels its manifest with the contained state honestly
+        let step = self.stages[0].step;
+        if let Some(d) = self.persist.as_mut() {
+            d.note_snapshot(v, step);
+        }
         self.metrics.inc("snapshots", 1);
         Ok(v)
     }
@@ -453,6 +496,10 @@ impl PipelineTrainer {
         let v = self
             .metrics
             .time("snapshot_recovery", || reft.snapshot_all_blocking(&payloads))?;
+        let step = self.stages[0].step;
+        if let Some(d) = self.persist.as_mut() {
+            d.note_snapshot(v, step);
+        }
         self.metrics.inc("snapshots", 1);
         Ok(v)
     }
@@ -464,9 +511,47 @@ impl PipelineTrainer {
             file.add_section(SectionKind::StagePayload, s as u32, st.to_payload());
         }
         let key = step_key(&self.cfg.model, step);
-        self.storage.put(&key, &file.encode())?;
+        let bytes = self.metrics.time("ckpt_encode", || file.encode());
+        self.metrics.time("ckpt_put", || self.storage.put(&key, &bytes))?;
         self.metrics.inc("checkpoints", 1);
         Ok(key)
+    }
+
+    /// Durable-tier hand-off at the persist cadence: with the engine
+    /// enabled this is an enqueue — the SMP-driven background drain does
+    /// the I/O and commits the manifest off the training thread — else the
+    /// legacy inline checkpoint. Returns whether a blocking checkpoint ran.
+    fn persist_now(&mut self) -> Result<bool> {
+        if self.persist.is_none() {
+            self.checkpoint()?;
+            return Ok(true);
+        }
+        let sources = self
+            .reft
+            .as_ref()
+            .context("persistence engine requires REFT")?
+            .persist_sources();
+        let step = self.stages[0].step;
+        let metrics = Arc::clone(&self.metrics);
+        self.persist.as_mut().unwrap().enqueue(step, sources, &metrics)?;
+        Ok(false)
+    }
+
+    /// Shutdown barrier for the durable tier: block until every enqueued
+    /// persist job committed (or aborted) and fold the engine counters into
+    /// the run metrics. The only blocking persistence call in the system;
+    /// a no-op when the engine is off.
+    pub fn flush_persist(&mut self) -> Result<()> {
+        let metrics = Arc::clone(&self.metrics);
+        if let Some(d) = self.persist.as_mut() {
+            d.flush(&metrics)?;
+        }
+        Ok(())
+    }
+
+    /// Engine introspection for drivers and tests.
+    pub fn persist_stats(&self) -> Option<PersistStats> {
+        self.persist.as_ref().map(PersistDriver::stats)
     }
 
     // -- failure injection + recovery ---------------------------------------
@@ -503,19 +588,43 @@ impl PipelineTrainer {
                 self.metrics.inc("recoveries_inmemory", 1);
             }
             Err(e) => {
-                // latest checkpoint of THIS model — a shared store may hold
-                // other models' steps with alphabetically-later names
-                let key = self.storage.latest_for(&self.cfg.model).with_context(|| {
-                    format!("in-memory recovery failed ({e}) and no checkpoint exists")
-                })?;
-                let file = CheckpointFile::decode(&self.storage.get(&key)?)?;
-                for s in 0..self.stages.len() {
-                    let payload = file
-                        .stage_payload(s as u32)
-                        .with_context(|| format!("checkpoint missing stage {s}"))?;
-                    self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
+                // in-memory protection exceeded (elastic decision tree
+                // case 3) -> the durable tier. The shared resolver picks
+                // the newest *complete* persist manifest with exactly this
+                // run's stage layout (atomic commit: partial uploads are
+                // invisible; a different-layout manifest degrades instead
+                // of aborting) unless the legacy inline checkpoint holds
+                // newer state.
+                let legacy_key = self.storage.latest_for(&self.cfg.model);
+                if let Some((man, payloads)) = persist::resolve_for_recovery(
+                    self.storage.as_ref(),
+                    &self.cfg.model,
+                    self.stages.len(),
+                    legacy_key.as_deref(),
+                ) {
+                    for (s, payload) in payloads.iter().enumerate() {
+                        self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
+                    }
+                    self.metrics.inc("recoveries_checkpoint", 1);
+                    self.metrics.inc("recoveries_manifest", 1);
+                    self.metrics
+                        .gauge("recovered_manifest_step", man.snapshot_step as f64);
+                } else {
+                    // legacy checkpoint of THIS model — a shared store may
+                    // hold other models' steps with alphabetically-later
+                    // names
+                    let key = legacy_key.with_context(|| {
+                        format!("in-memory recovery failed ({e}) and no durable checkpoint exists")
+                    })?;
+                    let file = CheckpointFile::decode(&self.storage.get(&key)?)?;
+                    for s in 0..self.stages.len() {
+                        let payload = file
+                            .stage_payload(s as u32)
+                            .with_context(|| format!("checkpoint missing stage {s}"))?;
+                        self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
+                    }
+                    self.metrics.inc("recoveries_checkpoint", 1);
                 }
-                self.metrics.inc("recoveries_checkpoint", 1);
             }
         }
         for &n in dead {
