@@ -9,7 +9,7 @@
 //! (No artifacts needed — this exercises the FT fabric directly.)
 
 use reft::config::FtConfig;
-use reft::elastic::{decide, NodeStatus, RecoveryDecision, ReftCluster};
+use reft::elastic::{decide, DurableAvailability, DurableTier, NodeStatus, RecoveryDecision, ReftCluster};
 use reft::snapshot::SharedPayload;
 use reft::topology::{ParallelPlan, Topology};
 use reft::util::human_bytes;
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- scenario 1: software failure on node 2 --");
     let mut status = vec![NodeStatus::Healthy; 6];
     status[2] = NodeStatus::Unhealthy;
-    let d = decide(&topo, &status, true, true);
+    let d = decide(&topo, &status, true, DurableAvailability { manifest: false, legacy: true });
     println!("decision: {d:?}");
     assert_eq!(d, RecoveryDecision::ResumeFromSmp);
     let restored = cluster.restore_all(&[])?;
@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- scenario 2: hardware failure, node 4 offline --");
     let mut status = vec![NodeStatus::Healthy; 6];
     status[4] = NodeStatus::Offline;
-    let d = decide(&topo, &status, true, true);
+    let d = decide(&topo, &status, true, DurableAvailability { manifest: false, legacy: true });
     println!("decision: {d:?}");
     cluster.kill_node(4);
     let restored = cluster.restore_all(&[4])?;
@@ -78,9 +78,9 @@ fn main() -> anyhow::Result<()> {
     let mut status = vec![NodeStatus::Healthy; 6];
     status[0] = NodeStatus::Offline;
     status[3] = NodeStatus::Offline;
-    let d = decide(&topo, &status, true, true);
+    let d = decide(&topo, &status, true, DurableAvailability { manifest: false, legacy: true });
     println!("decision: {d:?}");
-    assert_eq!(d, RecoveryDecision::LoadCheckpoint);
+    assert_eq!(d, RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy });
     cluster.kill_node(0);
     cluster.kill_node(3);
     let err = cluster.restore_all(&[0, 3]).unwrap_err();
@@ -97,10 +97,28 @@ fn main() -> anyhow::Result<()> {
             s
         },
         false,
-        true,
+        DurableAvailability { manifest: false, legacy: true },
     );
     println!("decision: {d:?} (no parity -> must hit storage)");
-    assert_eq!(d, RecoveryDecision::LoadCheckpoint);
+    assert_eq!(d, RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy });
+
+    // scenario 5: same loss pattern, but a persistence-engine manifest has
+    // committed — the decision names the manifest tier (sharded CRC-verified
+    // parallel load) instead of the legacy inline blob
+    println!("\n-- scenario 5: protection exceeded with a committed manifest --");
+    let d = decide(
+        &topo,
+        &{
+            let mut s = vec![NodeStatus::Healthy; 6];
+            s[0] = NodeStatus::Offline;
+            s[3] = NodeStatus::Offline;
+            s
+        },
+        true,
+        DurableAvailability { manifest: true, legacy: true },
+    );
+    println!("decision: {d:?} (manifest tier preferred)");
+    assert_eq!(d, RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest });
 
     println!("\nall scenarios behaved per the paper's recovery tree ✓");
     Ok(())

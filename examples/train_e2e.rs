@@ -77,9 +77,14 @@ fn main() -> anyhow::Result<()> {
     cfg.ft.raim5 = true;
     cfg.ft.async_snapshot = async_on;
     // durable tier via the background persistence engine: persists drain
-    // off the training thread, commit atomic manifests, keep-last-3
+    // off the training thread, commit atomic manifests, keep-last-3. The
+    // engine overlaps up to 2 jobs (fetch/upload pipelined, commits stay
+    // ordered) and lands big shards as resumable multipart parts with
+    // per-part CRCs (256 KiB here so the small e2e payloads exercise it).
     cfg.ft.persist.enabled = persist_on;
     cfg.ft.persist.keep_last = 3;
+    cfg.ft.persist.pipeline_jobs = 2;
+    cfg.ft.persist.multipart_part_bytes = 256 * 1024;
 
     // fresh checkpoint dir per run: a stale checkpoint from an earlier run
     // must never satisfy this run's fallback path
@@ -165,12 +170,15 @@ fn main() -> anyhow::Result<()> {
             let pflush = $tr.metrics.timer("persist_flush");
             println!(
                 "persist stall ({}): {} bytes drained in {} manifests \
-                 ({} aborted); trainer-thread stall max {:.3} ms / mean {:.3} ms \
+                 ({} aborted); {} multipart parts uploaded / {} reused; \
+                 trainer-thread stall max {:.3} ms / mean {:.3} ms \
                  over {} enqueues; shutdown flush {:.1} ms",
                 if persist_on { "background engine" } else { "inline put" },
                 $tr.metrics.counter("persisted_bytes"),
                 $tr.metrics.counter("persist_commits"),
                 $tr.metrics.counter("persist_aborts"),
+                $tr.metrics.counter("persist_parts_uploaded"),
+                $tr.metrics.counter("persist_parts_reused"),
                 pstall.max * 1e3,
                 pstall.mean() * 1e3,
                 pstall.count,

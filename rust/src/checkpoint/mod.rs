@@ -13,4 +13,4 @@ pub mod format;
 pub mod storage;
 
 pub use format::{CheckpointFile, SectionKind};
-pub use storage::{DirStorage, MemStorage, Storage};
+pub use storage::{DirStorage, LatencyStorage, MemStorage, Storage};

@@ -79,8 +79,17 @@ pub struct PersistConfig {
     /// instead of the static `persist_every` knob
     pub auto_interval: bool,
     /// per-node failure rate (per second) fed to the interval scheduler —
-    /// the hwsim λ_node
+    /// the hwsim λ_node (superseded by the rolling empirical rate once
+    /// enough live failure events accrue)
     pub lambda_node: f64,
+    /// engine pipeline depth: how many persist jobs may run their
+    /// fetch/upload phase concurrently (manifest commits stay in enqueue
+    /// order; 1 = the strictly sequential pre-pipeline engine)
+    pub pipeline_jobs: usize,
+    /// multipart threshold *and* part size in bytes: shards larger than
+    /// this land as `part-{k}` objects with per-part CRCs, so a crashed
+    /// upload resumes from the last durable part (0 disables multipart)
+    pub multipart_part_bytes: usize,
 }
 
 impl Default for PersistConfig {
@@ -93,6 +102,8 @@ impl Default for PersistConfig {
             keep_every: 0,
             auto_interval: false,
             lambda_node: 1e-4,
+            pipeline_jobs: 2,
+            multipart_part_bytes: 8 * 1024 * 1024,
         }
     }
 }
@@ -266,6 +277,15 @@ impl RunConfig {
                 if let Some(l) = p.get("lambda_node").and_then(Json::as_f64) {
                     c.ft.persist.lambda_node = l;
                 }
+                if let Some(n) = p.get("pipeline_jobs").and_then(Json::as_usize) {
+                    c.ft.persist.pipeline_jobs = n.max(1);
+                }
+                if let Some(n) = p.get("multipart_part_bytes").and_then(Json::as_usize) {
+                    // 0 disables multipart; non-zero floors at 4 KiB so a
+                    // typo cannot explode a shard into millions of parts
+                    c.ft.persist.multipart_part_bytes =
+                        if n == 0 { 0 } else { n.max(4096) };
+                }
             }
         }
         Ok(c)
@@ -331,7 +351,9 @@ mod tests {
                                "throttle_bytes_per_sec": 1048576,
                                "chunk_bytes": 65536,
                                "keep_last": 3, "keep_every": 100,
-                               "auto_interval": true, "lambda_node": 0.001}}
+                               "auto_interval": true, "lambda_node": 0.001,
+                               "pipeline_jobs": 3,
+                               "multipart_part_bytes": 1048576}}
         }"#;
         let c = RunConfig::from_json_text(text).unwrap();
         assert!(c.ft.persist.enabled);
@@ -341,12 +363,28 @@ mod tests {
         assert_eq!(c.ft.persist.keep_every, 100);
         assert!(c.ft.persist.auto_interval);
         assert!((c.ft.persist.lambda_node - 1e-3).abs() < 1e-12);
+        assert_eq!(c.ft.persist.pipeline_jobs, 3);
+        assert_eq!(c.ft.persist.multipart_part_bytes, 1 << 20);
         // defaults: engine off, retention floors
         let d = RunConfig::default();
         assert!(!d.ft.persist.enabled);
         assert!(d.ft.persist.keep_last >= 1);
+        assert!(d.ft.persist.pipeline_jobs >= 1);
         let z = RunConfig::from_json_text(r#"{"ft": {"persist": {"keep_last": 0}}}"#).unwrap();
         assert_eq!(z.ft.persist.keep_last, 1);
+        // pipeline depth floors at 1 (sequential); multipart 0 = disabled,
+        // non-zero floors at 4 KiB
+        let z = RunConfig::from_json_text(
+            r#"{"ft": {"persist": {"pipeline_jobs": 0, "multipart_part_bytes": 7}}}"#,
+        )
+        .unwrap();
+        assert_eq!(z.ft.persist.pipeline_jobs, 1);
+        assert_eq!(z.ft.persist.multipart_part_bytes, 4096);
+        let z = RunConfig::from_json_text(
+            r#"{"ft": {"persist": {"multipart_part_bytes": 0}}}"#,
+        )
+        .unwrap();
+        assert_eq!(z.ft.persist.multipart_part_bytes, 0);
     }
 
     #[test]

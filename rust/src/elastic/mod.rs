@@ -9,16 +9,19 @@
 //!    joins; its shard is rebuilt by the RAIM5 subtraction decoder from the
 //!    surviving SG members;
 //! 3. **protection exceeded** (>= 2 nodes in one SG, or RAIM5 disabled):
-//!    fall back to the durable tier — the newest *complete* persistence
-//!    manifest when the background engine is on (its atomic commit makes
+//!    fall back to the durable tier — the decision names **which** tier
+//!    serves ([`DurableTier`]): the newest *complete* persistence manifest
+//!    when the background engine has committed one (its atomic commit makes
 //!    partial uploads invisible — see `crate::persist`), else the latest
-//!    inline checkpoint;
+//!    inline legacy checkpoint — so the controller telemetry can report the
+//!    tier recovery actually used instead of one opaque "load checkpoint";
 //! 4. nothing durable either → fatal (restart from scratch).
 
 pub mod controller;
 
 pub use controller::ReftCluster;
 
+use crate::checkpoint::Storage;
 use crate::topology::Topology;
 
 /// Per-node rendezvous status.
@@ -31,6 +34,62 @@ pub enum NodeStatus {
     Offline,
 }
 
+/// Which durable tier serves a checkpoint fallback.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DurableTier {
+    /// a committed persistence-engine manifest (`crate::persist`) — the
+    /// sharded, CRC-verified, parallel-loadable tier
+    Manifest,
+    /// a legacy inline `CheckpointFile` blob
+    Legacy,
+}
+
+/// Which durable fallbacks exist, probed per tier, so the decision tree —
+/// and the telemetry built on it — can say *which* tier a fallback will
+/// use rather than a tier-blind "a checkpoint exists".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DurableAvailability {
+    /// at least one committed persistence manifest exists for the model
+    pub manifest: bool,
+    /// at least one legacy inline checkpoint exists for the model
+    pub legacy: bool,
+}
+
+impl DurableAvailability {
+    pub fn none() -> DurableAvailability {
+        DurableAvailability::default()
+    }
+
+    pub fn any(&self) -> bool {
+        self.manifest || self.legacy
+    }
+
+    /// Probe a storage tier for `model`. Listing-only — neither tier's
+    /// payload is fetched or verified here; the loader still degrades to
+    /// older manifests or across tiers if the newest turns out corrupt.
+    pub fn probe(storage: &dyn Storage, model: &str) -> DurableAvailability {
+        DurableAvailability {
+            manifest: !crate::persist::persisted_steps(storage, model).is_empty(),
+            legacy: storage.latest_for(model).is_some(),
+        }
+    }
+
+    /// The tier a checkpoint fallback would serve from: the manifest tier
+    /// when a committed manifest exists (atomic, shard-verified, parallel
+    /// load), else the legacy tier. The actual loader may still cross
+    /// tiers when the legacy checkpoint holds strictly newer state
+    /// (`persist::resolve_for_recovery`'s tie-break).
+    fn preferred_tier(&self) -> Option<DurableTier> {
+        if self.manifest {
+            Some(DurableTier::Manifest)
+        } else if self.legacy {
+            Some(DurableTier::Legacy)
+        } else {
+            None
+        }
+    }
+}
+
 /// What recovery path to take.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RecoveryDecision {
@@ -40,10 +99,17 @@ pub enum RecoveryDecision {
     ResumeFromSmp,
     /// decode the listed (stage, lost node) shards via RAIM5, then resume
     DecodeRaim5 { lost: Vec<(usize, usize)> },
-    /// in-memory protection exceeded — reload the durable checkpoint
-    LoadCheckpoint,
-    /// no checkpoint available either
+    /// in-memory protection exceeded — reload from the named durable tier
+    LoadCheckpoint { tier: DurableTier },
+    /// no checkpoint available in either durable tier
     Fatal,
+}
+
+fn durable_fallback(durable: DurableAvailability) -> RecoveryDecision {
+    match durable.preferred_tier() {
+        Some(tier) => RecoveryDecision::LoadCheckpoint { tier },
+        None => RecoveryDecision::Fatal,
+    }
 }
 
 /// The pure decision function (property-tested in `rust/tests/proptests.rs`).
@@ -51,7 +117,7 @@ pub fn decide(
     topo: &Topology,
     status: &[NodeStatus],
     raim5: bool,
-    ckpt_available: bool,
+    durable: DurableAvailability,
 ) -> RecoveryDecision {
     assert!(status.len() >= topo.nodes_in_use());
     let any_unhealthy = status.iter().any(|s| *s == NodeStatus::Unhealthy);
@@ -83,11 +149,7 @@ pub fn decide(
         }
         // single-node SGs have no peers to decode from
         if !raim5 || dead.len() > 1 || sg.len() < 2 {
-            return if ckpt_available {
-                RecoveryDecision::LoadCheckpoint
-            } else {
-                RecoveryDecision::Fatal
-            };
+            return durable_fallback(durable);
         }
         lost.push((sg.stage, dead[0]));
     }
@@ -105,17 +167,23 @@ pub fn decide(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::checkpoint::{storage::step_key, MemStorage};
     use crate::topology::ParallelPlan;
 
     fn topo_2x4x3() -> Topology {
         Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap()
     }
 
+    /// Legacy-only durable tier — what every pre-engine run has.
+    fn legacy_only() -> DurableAvailability {
+        DurableAvailability { manifest: false, legacy: true }
+    }
+
     #[test]
     fn all_healthy_is_none() {
         let t = topo_2x4x3();
         let s = vec![NodeStatus::Healthy; 6];
-        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::None);
+        assert_eq!(decide(&t, &s, true, legacy_only()), RecoveryDecision::None);
     }
 
     #[test]
@@ -123,10 +191,10 @@ mod tests {
         let t = topo_2x4x3();
         let mut s = vec![NodeStatus::Healthy; 6];
         s[2] = NodeStatus::Unhealthy;
-        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::ResumeFromSmp);
+        assert_eq!(decide(&t, &s, true, legacy_only()), RecoveryDecision::ResumeFromSmp);
         // multiple software failures still fine
         s[4] = NodeStatus::Unhealthy;
-        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::ResumeFromSmp);
+        assert_eq!(decide(&t, &s, true, legacy_only()), RecoveryDecision::ResumeFromSmp);
     }
 
     #[test]
@@ -134,7 +202,7 @@ mod tests {
         let t = topo_2x4x3();
         let mut s = vec![NodeStatus::Healthy; 6];
         s[0] = NodeStatus::Offline; // node 0 hosts stage 0 of DP path 0
-        match decide(&t, &s, true, true) {
+        match decide(&t, &s, true, legacy_only()) {
             RecoveryDecision::DecodeRaim5 { lost } => {
                 assert_eq!(lost, vec![(0, 0)]);
             }
@@ -149,7 +217,7 @@ mod tests {
         // nodes 0 (SG0, dp0) and 4 (SG1, dp1): different SGs -> decodable
         s[0] = NodeStatus::Offline;
         s[4] = NodeStatus::Offline;
-        match decide(&t, &s, true, true) {
+        match decide(&t, &s, true, legacy_only()) {
             RecoveryDecision::DecodeRaim5 { lost } => {
                 assert_eq!(lost.len(), 2);
             }
@@ -158,14 +226,30 @@ mod tests {
     }
 
     #[test]
-    fn two_losses_same_sg_falls_back() {
+    fn two_losses_same_sg_falls_back_to_named_tier() {
         let t = topo_2x4x3();
         let mut s = vec![NodeStatus::Healthy; 6];
         // SG0 = {node0 (dp0), node3 (dp1)}
         s[0] = NodeStatus::Offline;
         s[3] = NodeStatus::Offline;
-        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::LoadCheckpoint);
-        assert_eq!(decide(&t, &s, true, false), RecoveryDecision::Fatal);
+        // manifest tier preferred whenever a committed manifest exists
+        assert_eq!(
+            decide(&t, &s, true, DurableAvailability { manifest: true, legacy: true }),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
+        );
+        assert_eq!(
+            decide(&t, &s, true, DurableAvailability { manifest: true, legacy: false }),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
+        );
+        // legacy tier only when no manifest committed
+        assert_eq!(
+            decide(&t, &s, true, legacy_only()),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy }
+        );
+        assert_eq!(
+            decide(&t, &s, true, DurableAvailability::none()),
+            RecoveryDecision::Fatal
+        );
     }
 
     #[test]
@@ -173,7 +257,10 @@ mod tests {
         let t = topo_2x4x3();
         let mut s = vec![NodeStatus::Healthy; 6];
         s[1] = NodeStatus::Offline;
-        assert_eq!(decide(&t, &s, false, true), RecoveryDecision::LoadCheckpoint);
+        assert_eq!(
+            decide(&t, &s, false, legacy_only()),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy }
+        );
     }
 
     #[test]
@@ -182,6 +269,27 @@ mod tests {
         let t = Topology::build(ParallelPlan::new(1, 4, 6), 6, 4).unwrap();
         let mut s = vec![NodeStatus::Healthy; 6];
         s[2] = NodeStatus::Offline;
-        assert_eq!(decide(&t, &s, true, true), RecoveryDecision::LoadCheckpoint);
+        assert_eq!(
+            decide(&t, &s, true, legacy_only()),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy }
+        );
+    }
+
+    #[test]
+    fn probe_reports_each_tier_independently() {
+        let s = MemStorage::new();
+        assert_eq!(DurableAvailability::probe(&s, "m"), DurableAvailability::none());
+        assert!(!DurableAvailability::probe(&s, "m").any());
+        // a legacy inline checkpoint lights the legacy tier only
+        s.put(&step_key("m", 7), b"ckpt").unwrap();
+        let d = DurableAvailability::probe(&s, "m");
+        assert_eq!(d, DurableAvailability { manifest: false, legacy: true });
+        // a committed manifest lights the manifest tier (and wins)
+        s.put(&crate::persist::manifest_key("m", 9), b"{}").unwrap();
+        let d = DurableAvailability::probe(&s, "m");
+        assert!(d.manifest && d.legacy);
+        assert_eq!(d.preferred_tier(), Some(DurableTier::Manifest));
+        // other models' artifacts don't bleed over
+        assert_eq!(DurableAvailability::probe(&s, "other"), DurableAvailability::none());
     }
 }

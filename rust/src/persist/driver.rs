@@ -6,6 +6,7 @@
 use std::collections::VecDeque;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -33,12 +34,15 @@ pub struct PersistDriver {
     recent_versions: VecDeque<(u64, u64)>,
     /// commits already fed to the scheduler (skip re-derivation otherwise)
     observed_commits: u64,
+    /// the run clock failure events are stamped against
+    t0: Instant,
 }
 
 impl PersistDriver {
     /// Engine + optional scheduler for a REFT-Ckpt run with
     /// `ft.persist.enabled`. `sg_size` is the sharding-group size driving
-    /// the Eq. 7 exceedance rate (callers pass the widest SG).
+    /// the Eq. 7 exceedance rate (callers pass the widest SG); the cluster
+    /// size the empirical failure rate normalizes over comes from the plan.
     pub fn start(
         model: impl Into<String>,
         storage: Arc<dyn Storage>,
@@ -46,11 +50,13 @@ impl PersistDriver {
         ft: &FtConfig,
         sg_size: usize,
     ) -> PersistDriver {
+        let nodes = plan.nodes();
         let engine = PersistEngine::start(model, storage, plan, ft.persist.clone());
         let sched = ft.persist.auto_interval.then(|| {
             IntervalScheduler::new(
                 ft.persist.lambda_node,
                 sg_size,
+                nodes,
                 (ft.persist_every * ft.snapshot_interval) as u64,
             )
         });
@@ -60,6 +66,7 @@ impl PersistDriver {
             seen: PersistStats::default(),
             recent_versions: VecDeque::new(),
             observed_commits: 0,
+            t0: Instant::now(),
         }
     }
 
@@ -71,6 +78,31 @@ impl PersistDriver {
         while self.recent_versions.len() > RECENT_VERSIONS {
             self.recent_versions.pop_front();
         }
+    }
+
+    /// One observed node failure, stamped on the driver's run clock. Feeds
+    /// the live cadence scheduler's rolling empirical λ (a no-op under the
+    /// static cadence) — the trainers call this from their hardware-failure
+    /// injection point, so the persist interval tracks the failure rate the
+    /// run actually experiences instead of the `lambda_node` guess.
+    ///
+    /// The driver owns exactly ONE clock domain (wall seconds since start),
+    /// which is why there is deliberately no driver-level hwsim-schedule
+    /// ingest: a sim feed stamps events in *sim* time, and mixing the two
+    /// bases in one rolling window would corrupt the rate (a huge phantom
+    /// span → λ underestimated by orders of magnitude). Sim-driven harnesses
+    /// own their `IntervalScheduler` directly and use
+    /// [`IntervalScheduler::ingest_failure_schedule`] on the sim clock.
+    pub fn note_failure(&mut self) {
+        let at = self.t0.elapsed().as_secs_f64();
+        if let Some(s) = self.sched.as_mut() {
+            s.note_failure_event(at);
+        }
+    }
+
+    /// The live cadence scheduler, when enabled (tests + telemetry).
+    pub fn scheduler(&self) -> Option<&IntervalScheduler> {
+        self.sched.as_ref()
     }
 
     /// Cadence gate at a snapshot boundary: the scheduler when enabled,
@@ -118,6 +150,7 @@ impl PersistDriver {
         let t_step = metrics.timer("step_wall").mean();
         let steps = sched.observe(last_job_secs, t_step);
         metrics.gauge("persist_interval_steps", steps as f64);
+        metrics.gauge("persist_lambda_node", sched.lambda_node());
     }
 
     /// Shutdown barrier: block until every enqueued job committed or
@@ -134,7 +167,7 @@ impl PersistDriver {
 
     /// Fold the engine's (monotonic) counters into the run metrics as
     /// deltas, so `persisted_bytes` / `persist_commits` / `persist_aborts`
-    /// read like every other counter.
+    /// / `persist_parts_*` read like every other counter.
     fn sync(&mut self, metrics: &Metrics) {
         let st = self.engine.stats();
         metrics.inc("persisted_bytes", st.persisted_bytes - self.seen.persisted_bytes);
@@ -143,6 +176,14 @@ impl PersistDriver {
             st.manifests_committed - self.seen.manifests_committed,
         );
         metrics.inc("persist_aborts", st.jobs_aborted - self.seen.jobs_aborted);
+        metrics.inc(
+            "persist_parts_uploaded",
+            st.parts_uploaded - self.seen.parts_uploaded,
+        );
+        metrics.inc(
+            "persist_parts_reused",
+            st.parts_reused - self.seen.parts_reused,
+        );
         self.seen = st;
     }
 }

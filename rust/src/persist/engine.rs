@@ -8,25 +8,40 @@
 //! * the trainer's persist cadence point is an [`PersistEngine::enqueue`] —
 //!   O(nodes) channel-handle clones, no payload bytes — mirroring the L1
 //!   philosophy of the snapshot save path;
-//! * one engine thread owns the job queue; for each job it fans out **one
-//!   writer worker per node** (scoped threads) that pulls that node's clean
-//!   shards straight from its SMP (`GetClean` — readers only ever see
-//!   promoted versions, so a torn round is unobservable) and streams them to
-//!   storage under a shared bytes/sec [`Throttle`], the L2 counterpart:
-//!   persist I/O cannot starve training bandwidth;
-//! * commit is all-or-nothing: the cluster-wide manifest is written only
-//!   after **every** shard landed (see [`super::manifest`]); any worker
-//!   failure — dead SMP, snapshot-version skew across nodes, storage error —
-//!   drops the whole job, leaving the previous manifest as `latest` and the
-//!   partial blobs for the GC sweep;
-//! * after each commit the retention policy runs ([`super::retention`]).
+//! * the engine is a **multi-job pipeline**: a dispatcher thread owns the
+//!   queue and keeps up to `pipeline_jobs` jobs in their fetch/upload phase
+//!   concurrently, so job N+1's SMP fetches overlap job N's uploads (the
+//!   lazy-async overlap DataStates-LLM exploits on the save side). Within a
+//!   job, one writer worker per node (scoped threads) pulls that node's
+//!   clean shards from its SMP (`GetClean` — readers only ever see promoted
+//!   versions, so a torn round is unobservable), prefetching the next shard
+//!   while the current one uploads;
+//! * pacing is **per-node**: the cluster bytes/sec budget is split into
+//!   independent local budgets ([`NodeThrottles`], sum preserved), so one
+//!   slow or backlogged node's reservations never stall the other writers'
+//!   clocks — persist I/O still cannot starve training bandwidth, but a
+//!   straggler can no longer serialize the whole cluster behind it;
+//! * large shards upload as **resumable multipart** part-objects with
+//!   per-part CRCs: a crash mid-shard resumes from the last durable part
+//!   instead of re-uploading the whole shard (see [`super::manifest`]);
+//! * commit is all-or-nothing **and in enqueue order**: a commit turnstile
+//!   serializes the manifest writes, so overlapped jobs can never commit
+//!   out of order and `latest` advances monotonically — in *content* too: a
+//!   job whose drained snapshot round is older than an already-committed
+//!   round aborts at its turn instead of publishing stale state under a
+//!   newer step; any worker failure —
+//!   dead SMP, snapshot-version skew across nodes, storage error — drops
+//!   the whole job, leaving the previous manifest as `latest` and the
+//!   partial blobs/parts for the GC sweep;
+//! * after each commit the retention policy runs ([`super::retention`]),
+//!   inside the turnstile so GC passes never race each other.
 //!
 //! [`PersistEngine::flush`] is the only blocking call and exists for
 //! shutdown (and tests): it barriers on the queue, not on any in-band step.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -35,14 +50,15 @@ use anyhow::{Context, Result};
 use crate::checkpoint::Storage;
 use crate::config::PersistConfig;
 use crate::smp::SmpMsg;
+use crate::snapshot::plan::NodeShard;
 use crate::snapshot::SnapshotPlan;
 
-use super::manifest::{manifest_key, shard_key, PersistManifest, ShardEntry};
+use super::manifest::{manifest_key, part_key, shard_key, PartEntry, PersistManifest, ShardEntry};
 use super::retention::{run_gc, RetentionPolicy};
 
-/// Global bytes/sec pacing shared by every writer worker: reserving a
-/// transfer slot advances a single cluster-wide clock, so the sum of all
-/// concurrent uploads never exceeds the configured budget.
+/// Bytes/sec pacing for one writer lane: reserving a transfer slot advances
+/// a single clock, so the sum of concurrent reservations on this lane never
+/// exceeds its budget.
 #[derive(Debug)]
 pub struct Throttle {
     bytes_per_sec: f64,
@@ -78,6 +94,60 @@ impl Throttle {
     }
 }
 
+/// Per-node upload pacing: the cluster bytes/sec budget split into one
+/// independent [`Throttle`] lane per node (sum preserved — the integer
+/// remainder is spread one byte/sec at a time over the first lanes), so a
+/// slow node's backlog only ever delays its own writer. The previous
+/// engine paced every worker off one cluster-wide clock, which let a single
+/// straggling upload push everyone's reservations out.
+#[derive(Debug)]
+pub struct NodeThrottles {
+    lanes: Vec<Throttle>,
+}
+
+impl NodeThrottles {
+    /// `total_bytes_per_sec == 0` disables pacing on every lane.
+    pub fn new(total_bytes_per_sec: u64, nodes: usize) -> NodeThrottles {
+        let n = nodes.max(1);
+        let base = total_bytes_per_sec / n as u64;
+        let rem = (total_bytes_per_sec % n as u64) as usize;
+        NodeThrottles {
+            lanes: (0..n)
+                .map(|i| {
+                    if total_bytes_per_sec == 0 {
+                        Throttle::new(0)
+                    } else {
+                        // floor at 1 B/s: a lane whose split rounds to zero
+                        // must stay *paced*, not flip to unlimited (a rate
+                        // of 0 means "throttling disabled" to `Throttle`)
+                        Throttle::new((base + u64::from(i < rem)).max(1))
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    /// Reserve `bytes` on `node`'s local budget; returns the seconds slept.
+    /// Unknown nodes (beyond the planned lane count) are unpaced rather
+    /// than panicking — the write itself will fail on the plan check.
+    pub fn consume(&self, node: usize, bytes: usize) -> f64 {
+        match self.lanes.get(node) {
+            Some(t) => t.consume(bytes),
+            None => 0.0,
+        }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// The bytes/sec budget of one lane (tests assert the split sums back
+    /// to the cluster budget).
+    pub fn rate_of(&self, node: usize) -> f64 {
+        self.lanes.get(node).map_or(0.0, |t| t.bytes_per_sec)
+    }
+}
+
 /// Counters the trainers fold into their run metrics and the tests assert.
 #[derive(Debug, Clone, Default)]
 pub struct PersistStats {
@@ -88,9 +158,14 @@ pub struct PersistStats {
     pub jobs_aborted: u64,
     /// shard payload bytes landed under a committed manifest
     pub persisted_bytes: u64,
+    /// multipart part-objects uploaded (committed and aborted jobs alike)
+    pub parts_uploaded: u64,
+    /// multipart part-objects found durable with a matching CRC and reused
+    /// instead of re-uploaded (the crash-resume fast path)
+    pub parts_reused: u64,
     pub gc_manifests_deleted: u64,
     pub gc_blobs_deleted: u64,
-    /// cumulative seconds writer workers slept in the throttle
+    /// cumulative seconds writer workers slept in their throttle lanes
     pub throttle_wait_s: f64,
     pub last_commit_step: Option<u64>,
     pub last_commit_version: Option<u64>,
@@ -112,8 +187,55 @@ enum EngineMsg {
     Shutdown,
 }
 
+/// The commit turnstile: jobs run their fetch/upload phase concurrently but
+/// take their manifest-commit (or abort) turn strictly in enqueue order, so
+/// `latest` can never jump backwards and the per-commit GC never races a
+/// sibling job's GC. Both operations are deliberately idempotent/monotonic
+/// (`wait_turn` passes once predecessors are done, `advance` never moves
+/// backwards), so the panic-recovery path in the job wrapper can re-issue
+/// them without knowing where the unwind started.
+struct CommitGate {
+    done: Mutex<u64>,
+    cv: Condvar,
+}
+
+impl CommitGate {
+    fn new() -> CommitGate {
+        CommitGate { done: Mutex::new(0), cv: Condvar::new() }
+    }
+
+    /// Block until every job enqueued before `seq` has taken its turn.
+    fn wait_turn(&self, seq: u64) {
+        let mut g = self.done.lock().unwrap();
+        while *g < seq.saturating_sub(1) {
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    fn advance(&self, seq: u64) {
+        let mut g = self.done.lock().unwrap();
+        if *g < seq {
+            *g = seq;
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+}
+
+/// Everything a pipelined job needs, shared once behind an `Arc` instead of
+/// cloned per job.
+struct EngineShared {
+    model: String,
+    storage: Arc<dyn Storage>,
+    plan: SnapshotPlan,
+    cfg: PersistConfig,
+    throttles: NodeThrottles,
+    stats: Arc<Mutex<PersistStats>>,
+    gate: CommitGate,
+}
+
 /// Handle to the running engine thread. Dropping it drains the queue
-/// (queued jobs still commit) and joins the thread.
+/// (queued jobs still run their turns) and joins the dispatcher.
 pub struct PersistEngine {
     tx: Sender<EngineMsg>,
     handle: Option<JoinHandle<()>>,
@@ -134,26 +256,75 @@ impl PersistEngine {
         let handle = std::thread::Builder::new()
             .name("persist-engine".into())
             .spawn(move || {
-                let throttle = Throttle::new(cfg.throttle_bytes_per_sec);
+                let nodes = plan.nodes();
+                let depth = cfg.pipeline_jobs.max(1);
+                let throttles = NodeThrottles::new(cfg.throttle_bytes_per_sec, nodes);
+                let shared = Arc::new(EngineShared {
+                    model,
+                    storage,
+                    plan,
+                    cfg,
+                    throttles,
+                    stats: thread_stats,
+                    gate: CommitGate::new(),
+                });
+                let mut inflight: VecDeque<JoinHandle<()>> = VecDeque::new();
+                let mut seq = 0u64;
                 while let Ok(msg) = rx.recv() {
                     match msg {
-                        EngineMsg::Job { step, sources, version_steps } => run_job(
-                            &model,
-                            storage.as_ref(),
-                            &plan,
-                            &cfg,
-                            &throttle,
-                            &thread_stats,
-                            step,
-                            sources,
-                            &version_steps,
-                        ),
+                        EngineMsg::Job { step, sources, version_steps } => {
+                            seq += 1;
+                            // bound the pipeline depth: retire the oldest
+                            // job before admitting a new one
+                            while inflight.len() >= depth {
+                                if let Some(h) = inflight.pop_front() {
+                                    let _ = h.join();
+                                }
+                            }
+                            let sh = Arc::clone(&shared);
+                            let my_seq = seq;
+                            let h = std::thread::Builder::new()
+                                .name(format!("persist-job-{step}"))
+                                .spawn(move || {
+                                    let unwound = std::panic::catch_unwind(
+                                        std::panic::AssertUnwindSafe(|| {
+                                            run_job(&sh, my_seq, step, sources, &version_steps)
+                                        }),
+                                    )
+                                    .is_err();
+                                    if unwound {
+                                        // keep the turnstile moving: the gate
+                                        // ops are idempotent, so this is safe
+                                        // wherever the unwind started — a
+                                        // wedged gate would deadlock flush()
+                                        // and Drop for every later job
+                                        sh.gate.wait_turn(my_seq);
+                                        sh.gate.advance(my_seq);
+                                        if let Ok(mut g) = sh.stats.lock() {
+                                            g.jobs_aborted += 1;
+                                            g.last_error = Some(format!(
+                                                "persist job for step {step} panicked"
+                                            ));
+                                        }
+                                    }
+                                })
+                                .expect("spawning persist job thread");
+                            inflight.push_back(h);
+                        }
                         EngineMsg::Flush(ack) => {
-                            // queue order means every earlier job is done
+                            // enqueue order means every earlier job was
+                            // dispatched; joining them barriers on their
+                            // (ordered) commit turns too
+                            while let Some(h) = inflight.pop_front() {
+                                let _ = h.join();
+                            }
                             let _ = ack.send(());
                         }
                         EngineMsg::Shutdown => break,
                     }
+                }
+                while let Some(h) = inflight.pop_front() {
+                    let _ = h.join();
                 }
             })
             .expect("spawning persistence engine thread");
@@ -213,30 +384,146 @@ impl Drop for PersistEngine {
     }
 }
 
+/// Upload accounting one writer worker accumulates — kept separate from
+/// the fallible outcome so a job that aborts mid-shard still reports the
+/// throttle waits and the parts it DID land (a later retry reuses them,
+/// and the counters must add up across the crash).
+#[derive(Default)]
+struct UploadAcc {
+    waited: f64,
+    parts_uploaded: u64,
+    parts_reused: u64,
+}
+
+/// What one writer worker produced: the (fallible) served snapshot version
+/// + manifest entries + bytes moved, plus the always-present accounting.
+struct NodeWrite {
+    outcome: Result<(u64, Vec<ShardEntry>, u64)>,
+    acc: UploadAcc,
+}
+
+/// Land one shard's bytes: a single paced blob below the multipart
+/// threshold, else `part-{k}` objects with per-part CRCs. A part that is
+/// already durable with matching bytes (same CRC) is **reused**, not
+/// re-uploaded — the crash-resume fast path a retried step hits.
+fn upload_shard(
+    shared: &EngineShared,
+    step: u64,
+    shard: &NodeShard,
+    node: usize,
+    bytes: &[u8],
+    acc: &mut UploadAcc,
+) -> Result<ShardEntry> {
+    let cfg = &shared.cfg;
+    let storage = shared.storage.as_ref();
+    let crc = crc32fast::hash(bytes);
+    let key = shard_key(&shared.model, step, shard.stage, node);
+    let part_bytes = cfg.multipart_part_bytes;
+    if part_bytes == 0 || bytes.len() <= part_bytes {
+        // single blob: pace chunk by chunk on this node's lane, then land
+        // the blob in one atomic put (the PR-3 fast path, kept for small
+        // shards where part bookkeeping would cost more than it saves)
+        for piece in bytes.chunks(cfg.chunk_bytes.max(1)) {
+            acc.waited += shared.throttles.consume(node, piece.len());
+        }
+        storage
+            .put(&key, bytes)
+            .with_context(|| format!("uploading `{key}`"))?;
+        return Ok(ShardEntry {
+            key,
+            stage: shard.stage,
+            node,
+            offset: shard.range.start,
+            len: shard.len(),
+            crc32: crc,
+            parts: Vec::new(),
+        });
+    }
+    let mut parts = Vec::with_capacity(bytes.len().div_ceil(part_bytes));
+    for (k, piece) in bytes.chunks(part_bytes).enumerate() {
+        let pkey = part_key(&shared.model, step, shard.stage, node, k);
+        let pcrc = crc32fast::hash(piece);
+        // resume check: `exists` is the cheap common-case miss; only a hit
+        // pays the read-back + hash to prove the durable part matches
+        let reusable = storage.exists(&pkey)
+            && storage
+                .get(&pkey)
+                .map(|old| old.len() == piece.len() && crc32fast::hash(&old) == pcrc)
+                .unwrap_or(false);
+        if reusable {
+            acc.parts_reused += 1;
+        } else {
+            for sub in piece.chunks(cfg.chunk_bytes.max(1)) {
+                acc.waited += shared.throttles.consume(node, sub.len());
+            }
+            storage
+                .put(&pkey, piece)
+                .with_context(|| format!("uploading part `{pkey}`"))?;
+            acc.parts_uploaded += 1;
+        }
+        parts.push(PartEntry { key: pkey, len: piece.len() as u64, crc32: pcrc });
+    }
+    Ok(ShardEntry {
+        key,
+        stage: shard.stage,
+        node,
+        offset: shard.range.start,
+        len: shard.len(),
+        crc32: crc,
+        parts,
+    })
+}
+
 /// One writer worker: pull every clean shard this node owns from its SMP
-/// and stream it to storage under the shared throttle. Returns the snapshot
-/// version served, the manifest entries, bytes moved, and throttle wait.
+/// and land it under the node's throttle lane. The next shard's fetch is
+/// issued **before** the current one uploads, so the SMP's serialize+ship
+/// overlaps this worker's storage I/O.
 fn write_node(
-    model: &str,
-    storage: &dyn Storage,
-    plan: &SnapshotPlan,
-    cfg: &PersistConfig,
-    throttle: &Throttle,
+    shared: &EngineShared,
     step: u64,
     node: usize,
     source: Option<Sender<SmpMsg>>,
-) -> Result<(u64, Vec<ShardEntry>, u64, f64)> {
+) -> NodeWrite {
+    let mut acc = UploadAcc::default();
+    let outcome = write_node_inner(shared, step, node, source, &mut acc);
+    NodeWrite { outcome, acc }
+}
+
+fn write_node_inner(
+    shared: &EngineShared,
+    step: u64,
+    node: usize,
+    source: Option<Sender<SmpMsg>>,
+    acc: &mut UploadAcc,
+) -> Result<(u64, Vec<ShardEntry>, u64)> {
     let source =
         source.with_context(|| format!("node {node} is offline — cannot persist"))?;
-    let mut version: Option<u64> = None;
-    let mut entries = Vec::new();
+    let shards: Vec<&NodeShard> = shared.plan.shards_for_node(node).collect();
+    let mut entries: Vec<ShardEntry> = Vec::with_capacity(shards.len());
     let mut total = 0u64;
-    let mut waited = 0f64;
-    for shard in plan.shards_for_node(node) {
+    let mut version: Option<u64> = None;
+    let mut pending = match shards.first() {
+        Some(sh) => Some(
+            crate::smp::request_clean_via(&source, sh.stage)
+                .map_err(|e| anyhow::anyhow!("node {node}: {e}"))?,
+        ),
+        None => None,
+    };
+    for (i, &shard) in shards.iter().enumerate() {
+        let rx = pending.take().expect("prefetch invariant: one request per shard");
+        // prefetch: issue the next shard's GetClean before draining this
+        // reply, so the SMP works while we upload
+        if let Some(next) = shards.get(i + 1) {
+            pending = Some(
+                crate::smp::request_clean_via(&source, next.stage)
+                    .map_err(|e| anyhow::anyhow!("node {node}: {e}"))?,
+            );
+        }
         // Fig. 6 consistency: GetClean only ever serves promoted rounds, so
         // the durable copy can never observe a torn snapshot
-        let (v, bytes) = crate::smp::get_clean_via(&source, shard.stage)
-            .map_err(|e| anyhow::anyhow!("node {node}: {e}"))?
+        let (v, bytes) = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("node {node}: SMP died mid-fetch"))?
             .with_context(|| {
                 format!("no clean snapshot for stage {} on node {node} yet", shard.stage)
             })?;
@@ -253,77 +540,60 @@ fn write_node(
             ),
             None => version = Some(v),
         }
-        // throttled streaming upload: pace chunk by chunk so persist I/O
-        // stays inside its bandwidth budget, then land the blob in one
-        // atomic put
-        for piece in bytes.chunks(cfg.chunk_bytes.max(1)) {
-            waited += throttle.consume(piece.len());
-        }
-        let key = shard_key(model, step, shard.stage, node);
-        let crc = crc32fast::hash(&bytes);
-        storage
-            .put(&key, &bytes)
-            .with_context(|| format!("uploading `{key}`"))?;
+        let entry = upload_shard(shared, step, shard, node, &bytes, acc)?;
         total += bytes.len() as u64;
-        entries.push(ShardEntry {
-            key,
-            stage: shard.stage,
-            node,
-            offset: shard.range.start,
-            len: shard.len(),
-            crc32: crc,
-        });
+        entries.push(entry);
     }
     let version =
         version.with_context(|| format!("node {node} holds no planned shards"))?;
-    Ok((version, entries, total, waited))
+    Ok((version, entries, total))
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_job(
-    model: &str,
-    storage: &dyn Storage,
-    plan: &SnapshotPlan,
-    cfg: &PersistConfig,
-    throttle: &Throttle,
-    stats: &Mutex<PersistStats>,
+    shared: &EngineShared,
+    seq: u64,
     step: u64,
     mut sources: Vec<Option<Sender<SmpMsg>>>,
     version_steps: &[(u64, u64)],
 ) {
     let t0 = Instant::now();
-    let nodes: BTreeSet<usize> = plan.shards.iter().map(|s| s.node).collect();
-    let mut results: Vec<Result<(u64, Vec<ShardEntry>, u64, f64)>> = Vec::new();
+    // -- phase A: fetch + upload, concurrent with sibling jobs -------------
+    let nodes: BTreeSet<usize> = shared.plan.shards.iter().map(|s| s.node).collect();
+    let mut results: Vec<NodeWrite> = Vec::new();
     std::thread::scope(|scope| {
         let mut handles = Vec::new();
         for &node in &nodes {
             let source = sources.get_mut(node).and_then(|s| s.take());
-            handles.push(scope.spawn(move || {
-                write_node(model, storage, plan, cfg, throttle, step, node, source)
-            }));
+            handles.push(scope.spawn(move || write_node(shared, step, node, source)));
         }
         for h in handles {
-            results.push(
-                h.join()
-                    .unwrap_or_else(|_| Err(anyhow::anyhow!("writer worker panicked"))),
-            );
+            results.push(h.join().unwrap_or_else(|_| NodeWrite {
+                outcome: Err(anyhow::anyhow!("writer worker panicked")),
+                acc: UploadAcc::default(),
+            }));
         }
     });
 
     // all-or-nothing: any worker failure or cross-node version skew drops
     // the job without a manifest — the previous manifest stays `latest` and
-    // the partial blobs wait for the GC sweep
+    // the partial blobs/parts wait for the GC sweep (or for a retried step
+    // to reuse the durable parts). Accounting (waits, parts landed) is kept
+    // from failed workers too: the bytes really moved.
     let mut entries = Vec::new();
     let mut versions: BTreeSet<u64> = BTreeSet::new();
     let mut total_bytes = 0u64;
     let mut wait_s = 0f64;
+    let mut parts_uploaded = 0u64;
+    let mut parts_reused = 0u64;
     let mut error: Option<String> = None;
-    for r in results {
-        match r {
-            Ok((v, es, bytes, wait)) => {
+    for w in results {
+        wait_s += w.acc.waited;
+        parts_uploaded += w.acc.parts_uploaded;
+        parts_reused += w.acc.parts_reused;
+        match w.outcome {
+            Ok((v, es, bytes)) => {
                 versions.insert(v);
                 total_bytes += bytes;
-                wait_s += wait;
                 entries.extend(es);
             }
             Err(e) => error = Some(format!("{e:#}")),
@@ -332,11 +602,42 @@ fn run_job(
     if error.is_none() && versions.len() != 1 {
         error = Some(format!("snapshot version skew across nodes: {versions:?}"));
     }
+
+    // -- phase B: the ordered commit turn ----------------------------------
+    // time spent queued at the turnstile is pipeline scheduling, not save
+    // cost: it must not inflate `last_job_secs`, which the cadence
+    // scheduler treats as the per-job durable-save cost (t_persist)
+    let t_gate = Instant::now();
+    shared.gate.wait_turn(seq);
+    let gate_wait = t_gate.elapsed();
+    // cross-job monotonicity: overlapped jobs fetch in no particular order,
+    // so a descheduled writer can hand an EARLIER step a NEWER promoted
+    // round than the round a later step drained. Committing the later
+    // step's older round would make `latest` resolve staler state than
+    // what is already durable (and retention could then GC the newer
+    // round's manifest). Checked inside the turn, where the predecessor's
+    // `last_commit_version` is final.
+    if error.is_none() {
+        let v = versions.iter().next().copied().expect("exactly one version");
+        let prev = shared.stats.lock().unwrap().last_commit_version;
+        if let Some(p) = prev {
+            if v < p {
+                error = Some(format!(
+                    "snapshot round regressed: job for step {step} drained round {v} \
+                     but round {p} is already durable — dropping the job"
+                ));
+            }
+        }
+    }
     if let Some(e) = error {
-        let mut g = stats.lock().unwrap();
+        let mut g = shared.stats.lock().unwrap();
         g.throttle_wait_s += wait_s;
+        g.parts_uploaded += parts_uploaded;
+        g.parts_reused += parts_reused;
         g.jobs_aborted += 1;
         g.last_error = Some(e);
+        drop(g);
+        shared.gate.advance(seq);
         return;
     }
 
@@ -352,30 +653,39 @@ fn run_job(
         .map(|&(_, s)| s)
         .unwrap_or(step);
     let manifest = PersistManifest {
-        model: model.to_string(),
+        model: shared.model.clone(),
         step,
         version,
         snapshot_step,
-        stage_bytes: plan.stage_bytes.clone(),
+        stage_bytes: shared.plan.stage_bytes.clone(),
         shards: entries,
     };
-    let committed = storage.put(&manifest_key(model, step), &manifest.encode());
+    let storage = shared.storage.as_ref();
+    let committed = storage.put(&manifest_key(&shared.model, step), &manifest.encode());
     let gc = if committed.is_ok() {
-        let policy = RetentionPolicy { keep_last: cfg.keep_last, keep_every: cfg.keep_every };
-        Some(run_gc(storage, model, &policy))
+        let policy = RetentionPolicy {
+            keep_last: shared.cfg.keep_last,
+            keep_every: shared.cfg.keep_every,
+        };
+        // `Some(step)`: sweep crashed-attempt part debris under the step we
+        // just committed — the only step this engine can have resumed
+        Some(run_gc(storage, &shared.model, &policy, Some(step)))
     } else {
         None
     };
 
-    let mut g = stats.lock().unwrap();
+    let mut g = shared.stats.lock().unwrap();
     g.throttle_wait_s += wait_s;
+    g.parts_uploaded += parts_uploaded;
+    g.parts_reused += parts_reused;
     match committed {
         Ok(()) => {
             g.manifests_committed += 1;
             g.persisted_bytes += total_bytes;
             g.last_commit_step = Some(step);
             g.last_commit_version = Some(version);
-            g.last_job_secs = t0.elapsed().as_secs_f64();
+            g.last_job_secs =
+                t0.elapsed().saturating_sub(gate_wait).as_secs_f64();
             match gc {
                 Some(Ok(report)) => {
                     g.gc_manifests_deleted += report.manifests_deleted as u64;
@@ -390,6 +700,8 @@ fn run_job(
             g.last_error = Some(format!("manifest commit: {e:#}"));
         }
     }
+    drop(g);
+    shared.gate.advance(seq);
 }
 
 #[cfg(test)]
@@ -419,5 +731,28 @@ mod tests {
             t0.elapsed()
         );
         assert!(waited > 0.05, "waited {waited}");
+    }
+
+    #[test]
+    fn node_throttles_preserve_the_cluster_budget() {
+        // odd total: the remainder spreads over the first lanes
+        let t = NodeThrottles::new(10, 3);
+        assert_eq!(t.lanes(), 3);
+        let sum: f64 = (0..3).map(|n| t.rate_of(n)).sum();
+        assert!((sum - 10.0).abs() < 1e-9, "sum {sum}");
+        // even split
+        let t = NodeThrottles::new(6 << 20, 6);
+        for n in 0..6 {
+            assert!((t.rate_of(n) - (1 << 20) as f64).abs() < 1.0);
+        }
+        // disabled budget disables every lane
+        let t = NodeThrottles::new(0, 4);
+        assert_eq!(t.consume(2, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn node_throttles_unknown_lane_is_unpaced() {
+        let t = NodeThrottles::new(1 << 20, 2);
+        assert_eq!(t.consume(99, 1 << 30), 0.0);
     }
 }

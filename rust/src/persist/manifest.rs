@@ -4,26 +4,38 @@
 //! Layout in the [`Storage`] key namespace (one sub-namespace per model):
 //!
 //! ```text
-//! {model}/persist/step-{step:012}/shard-{stage:03}-{node:03}   shard blobs
-//! {model}/manifest/step-{step:012}                             the manifest
+//! {model}/persist/step-{step:012}/shard-{stage:03}-{node:03}             shard blobs
+//! {model}/persist/step-{step:012}/shard-{stage:03}-{node:03}/part-{k:05} multipart part-objects
+//! {model}/manifest/step-{step:012}                                       the manifest
 //! ```
 //!
 //! Commit protocol (crash-consistent by construction):
 //!
-//! 1. the writer workers upload every shard blob of the round;
+//! 1. the writer workers upload every shard blob of the round — a large
+//!    shard lands as `part-{k}` objects with per-part CRCs, so a crashed
+//!    upload resumes from the last durable part instead of starting over;
 //! 2. only after **all** shards have landed is the manifest written — a
 //!    single `put` of a small JSON document (`DirStorage` makes the put
 //!    itself atomic via write-then-rename);
 //! 3. readers resolve "latest" over *manifest* keys only, so a crash
 //!    anywhere before step 2 leaves the previous manifest as latest and the
-//!    orphaned shard blobs invisible (the retention GC sweeps them later).
+//!    orphaned shard blobs/parts invisible (the retention GC sweeps them).
 //!
-//! The manifest records every shard's key, byte range, and CRC32, so a
-//! restore can verify the durable copy end to end before trusting it.
+//! The manifest records every shard's key, byte range, and CRC32 — plus the
+//! per-part keys/CRCs for multipart shards — so a restore can verify the
+//! durable copy end to end before trusting it.
+//!
+//! Loading is a **parallel sharded gather** ([`load_manifest_payload`]):
+//! scoped threads fetch + CRC-verify shards concurrently and stitch them
+//! directly into the pre-allocated stage buffers (`Storage::get_into`, no
+//! intermediate allocation), mirroring the in-memory parallel restore. The
+//! pre-parallel serial loop is kept as
+//! [`load_manifest_payload_serial`] — the measured baseline for
+//! `benches/hotpath.rs` and the byte-identity oracle in the tests.
 
 use std::collections::BTreeSet;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::checkpoint::Storage;
 use crate::util::json::Json;
@@ -33,7 +45,13 @@ pub fn shard_key(model: &str, step: u64, stage: usize, node: usize) -> String {
     format!("{model}/persist/step-{step:012}/shard-{stage:03}-{node:03}")
 }
 
-/// Prefix of every shard blob of `model` (the step digits follow).
+/// Key of one durable part-object of a multipart shard upload.
+pub fn part_key(model: &str, step: u64, stage: usize, node: usize, part: usize) -> String {
+    format!("{model}/persist/step-{step:012}/shard-{stage:03}-{node:03}/part-{part:05}")
+}
+
+/// Prefix of every shard blob **and** part-object of `model` (the step
+/// digits follow).
 pub fn shard_prefix(model: &str) -> String {
     format!("{model}/persist/step-")
 }
@@ -49,7 +67,7 @@ pub fn manifest_prefix(model: &str) -> String {
 }
 
 /// Parse the step number out of a key under `prefix` (manifest keys end in
-/// the digits; shard keys continue with `/shard-...` after them).
+/// the digits; shard and part keys continue with `/shard-...` after them).
 pub fn step_of_key(key: &str, prefix: &str) -> Option<u64> {
     let rest = key.strip_prefix(prefix)?;
     let digits: &str = &rest[..rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len())];
@@ -59,17 +77,45 @@ pub fn step_of_key(key: &str, prefix: &str) -> Option<u64> {
     digits.parse().ok()
 }
 
+/// One durable part-object of a multipart shard: its key, length, and CRC.
+/// The per-part CRC is what makes a crashed upload resumable — a retry can
+/// verify a part that already landed and skip re-uploading it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartEntry {
+    pub key: String,
+    pub len: u64,
+    pub crc32: u32,
+}
+
 /// One shard's entry in a manifest: where its bytes live and how to verify
 /// them.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardEntry {
+    /// the single-blob key (no blob exists under it when `parts` is
+    /// non-empty — the bytes live in the part-objects instead)
     pub key: String,
     pub stage: usize,
     pub node: usize,
     /// byte offset into the stage's FT payload
     pub offset: u64,
     pub len: u64,
+    /// CRC of the whole shard payload (also covered part-by-part for
+    /// multipart shards)
     pub crc32: u32,
+    /// multipart layout; empty = the shard is one blob at `key`
+    pub parts: Vec<PartEntry>,
+}
+
+impl ShardEntry {
+    /// Every storage key that may hold this shard's bytes. The single-blob
+    /// key is always included — deletes are idempotent, and an earlier
+    /// crashed attempt at the same step may have left a whole-blob upload
+    /// behind even when the committed layout is multipart (or vice versa).
+    pub fn storage_keys(&self) -> Vec<String> {
+        let mut keys = vec![self.key.clone()];
+        keys.extend(self.parts.iter().map(|p| p.key.clone()));
+        keys
+    }
 }
 
 /// A committed durable checkpoint: the cluster-wide record that every shard
@@ -97,14 +143,34 @@ impl PersistManifest {
             self.shards
                 .iter()
                 .map(|s| {
-                    Json::obj(vec![
+                    let mut fields = vec![
                         ("key", Json::str(s.key.clone())),
                         ("stage", Json::from(s.stage)),
                         ("node", Json::from(s.node)),
                         ("offset", Json::num(s.offset as f64)),
                         ("len", Json::num(s.len as f64)),
                         ("crc32", Json::num(s.crc32 as f64)),
-                    ])
+                    ];
+                    // single-blob shards keep the PR-3 wire format exactly;
+                    // only multipart shards carry the extra field
+                    if !s.parts.is_empty() {
+                        fields.push((
+                            "parts",
+                            Json::Arr(
+                                s.parts
+                                    .iter()
+                                    .map(|p| {
+                                        Json::obj(vec![
+                                            ("key", Json::str(p.key.clone())),
+                                            ("len", Json::num(p.len as f64)),
+                                            ("crc32", Json::num(p.crc32 as f64)),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ));
+                    }
+                    Json::obj(fields)
                 })
                 .collect(),
         );
@@ -140,6 +206,16 @@ impl PersistManifest {
             .collect::<Result<Vec<u64>>>()?;
         let mut shards = Vec::new();
         for s in j.req_arr("shards")? {
+            let mut parts = Vec::new();
+            if let Some(arr) = s.get("parts").and_then(Json::as_arr) {
+                for p in arr {
+                    parts.push(PartEntry {
+                        key: p.req_str("key")?.to_string(),
+                        len: p.req_f64("len")? as u64,
+                        crc32: p.req_f64("crc32")? as u32,
+                    });
+                }
+            }
             shards.push(ShardEntry {
                 key: s.req_str("key")?.to_string(),
                 stage: s.req_usize("stage")?,
@@ -147,6 +223,7 @@ impl PersistManifest {
                 offset: s.req_f64("offset")? as u64,
                 len: s.req_f64("len")? as u64,
                 crc32: s.req_f64("crc32")? as u32,
+                parts,
             });
         }
         Ok(PersistManifest { model, step, version, snapshot_step, stage_bytes, shards })
@@ -166,42 +243,163 @@ pub fn persisted_steps(storage: &dyn Storage, model: &str) -> Vec<u64> {
     steps
 }
 
-/// Fetch and verify one manifest's full payload: every shard present,
-/// length- and CRC-clean, and tiling each stage payload exactly.
-pub fn load_manifest_payload(
-    storage: &dyn Storage,
-    man: &PersistManifest,
-) -> Result<Vec<Vec<u8>>> {
-    let mut out: Vec<Vec<u8>> =
-        man.stage_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
-    let mut covered: Vec<u64> = vec![0; man.stage_bytes.len()];
-    for s in &man.shards {
-        anyhow::ensure!(s.stage < out.len(), "shard `{}` names stage {} out of range", s.key, s.stage);
-        let bytes = storage
-            .get(&s.key)
-            .with_context(|| format!("shard `{}` missing", s.key))?;
+/// Fetch one manifest shard directly into `out` (pre-carved to `entry.len`
+/// bytes), verifying the per-part CRCs (multipart) or the whole-shard CRC
+/// (single blob). The shared leaf of both the serial and the parallel
+/// loader, so byte-for-byte semantics cannot diverge between them.
+fn fetch_shard_into(storage: &dyn Storage, s: &ShardEntry, out: &mut [u8]) -> Result<()> {
+    anyhow::ensure!(
+        out.len() as u64 == s.len,
+        "shard `{}` buffer is {} bytes, manifest says {}",
+        s.key,
+        out.len(),
+        s.len
+    );
+    if s.parts.is_empty() {
+        storage
+            .get_into(&s.key, out)
+            .with_context(|| format!("shard `{}` missing or mis-sized", s.key))?;
         anyhow::ensure!(
-            bytes.len() as u64 == s.len,
-            "shard `{}` is {} bytes, manifest says {}",
-            s.key,
-            bytes.len(),
-            s.len
-        );
-        anyhow::ensure!(
-            crc32fast::hash(&bytes) == s.crc32,
+            crc32fast::hash(out) == s.crc32,
             "shard `{}` CRC mismatch — durable copy corrupt",
             s.key
         );
-        let (a, b) = (s.offset as usize, (s.offset + s.len) as usize);
-        anyhow::ensure!(b <= out[s.stage].len(), "shard `{}` overruns its stage", s.key);
-        out[s.stage][a..b].copy_from_slice(&bytes);
-        covered[s.stage] += s.len;
+        return Ok(());
     }
-    for (stage, (&need, &got)) in man.stage_bytes.iter().zip(&covered).enumerate() {
+    let covered: u64 = s.parts.iter().map(|p| p.len).sum();
+    anyhow::ensure!(
+        covered == s.len,
+        "shard `{}` parts cover {covered} of {} bytes",
+        s.key,
+        s.len
+    );
+    let mut off = 0usize;
+    for p in &s.parts {
+        let end = off + p.len as usize;
+        let slice = &mut out[off..end];
+        storage
+            .get_into(&p.key, slice)
+            .with_context(|| format!("part `{}` missing or mis-sized", p.key))?;
+        anyhow::ensure!(
+            crc32fast::hash(slice) == p.crc32,
+            "part `{}` CRC mismatch — durable copy corrupt",
+            p.key
+        );
+        off = end;
+    }
+    Ok(())
+}
+
+/// Validate that `man`'s shards tile every stage payload exactly (no gap,
+/// no overlap, no overrun) and return the shard indices in (stage, offset)
+/// order — the order both loaders carve the output buffers in.
+fn tiling_order(man: &PersistManifest) -> Result<Vec<usize>> {
+    let mut order: Vec<usize> = (0..man.shards.len()).collect();
+    order.sort_by_key(|&i| (man.shards[i].stage, man.shards[i].offset));
+    let mut cursor: Vec<u64> = vec![0; man.stage_bytes.len()];
+    for &i in &order {
+        let s = &man.shards[i];
+        anyhow::ensure!(
+            s.stage < man.stage_bytes.len(),
+            "shard `{}` names stage {} out of range",
+            s.key,
+            s.stage
+        );
+        anyhow::ensure!(
+            s.offset == cursor[s.stage],
+            "stage {} is not tiled contiguously at byte {} (shard `{}`)",
+            s.stage,
+            cursor[s.stage],
+            s.key
+        );
+        cursor[s.stage] = s.offset + s.len;
+        anyhow::ensure!(
+            cursor[s.stage] <= man.stage_bytes[s.stage],
+            "shard `{}` overruns its stage",
+            s.key
+        );
+    }
+    for (stage, (&need, &got)) in man.stage_bytes.iter().zip(&cursor).enumerate() {
         anyhow::ensure!(
             got == need,
             "stage {stage} under-covered: {got} of {need} bytes in the manifest"
         );
+    }
+    Ok(order)
+}
+
+/// Gather threads per manifest load. The gather is latency-bound (remote
+/// gets), not compute-bound, so the cap is independent of the core count.
+const LOAD_WORKERS: usize = 8;
+
+/// Fetch and verify one manifest's full payload — every shard present,
+/// length- and CRC-clean, tiling each stage payload exactly — as a
+/// **parallel sharded gather**: the stage buffers are pre-allocated and
+/// carved into disjoint per-shard slices, then scoped worker threads fetch
+/// and CRC-verify shards concurrently, stitching each directly into place
+/// (mirroring the parallel in-memory restore; this is the checkpoint-
+/// fallback restart path, where the serial NFS-shaped read loop dominated).
+pub fn load_manifest_payload(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+) -> Result<Vec<Vec<u8>>> {
+    let order = tiling_order(man)?;
+    let mut out: Vec<Vec<u8>> =
+        man.stage_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
+    // carve every stage buffer into disjoint per-shard &mut slices; the
+    // tiling order walks each stage front to back so split_at_mut suffices
+    let mut work: Vec<(usize, &mut [u8])> = Vec::with_capacity(order.len());
+    {
+        let mut rests: Vec<&mut [u8]> = out.iter_mut().map(Vec::as_mut_slice).collect();
+        for &i in &order {
+            let s = &man.shards[i];
+            let rest = std::mem::take(&mut rests[s.stage]);
+            let (head, tail) = rest.split_at_mut(s.len as usize);
+            work.push((i, head));
+            rests[s.stage] = tail;
+        }
+    }
+    let workers = work.len().clamp(1, LOAD_WORKERS);
+    let chunk = work.len().div_ceil(workers).max(1);
+    let mut results: Vec<Result<()>> = Vec::with_capacity(workers);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(workers);
+        for batch in work.chunks_mut(chunk) {
+            handles.push(scope.spawn(move || -> Result<()> {
+                for (i, slice) in batch.iter_mut() {
+                    fetch_shard_into(storage, &man.shards[*i], slice)?;
+                }
+                Ok(())
+            }));
+        }
+        for h in handles {
+            results.push(
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow!("manifest gather thread panicked"))),
+            );
+        }
+    });
+    for r in results {
+        r?;
+    }
+    Ok(out)
+}
+
+/// The pre-parallel serial loader: one shard (and one part) at a time.
+/// Kept as the measured baseline for the `manifest_load_parallel_vs_serial`
+/// section of `benches/hotpath.rs` and as the byte-identity oracle the
+/// parallel-path tests compare against.
+pub fn load_manifest_payload_serial(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+) -> Result<Vec<Vec<u8>>> {
+    let order = tiling_order(man)?;
+    let mut out: Vec<Vec<u8>> =
+        man.stage_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
+    for &i in &order {
+        let s = &man.shards[i];
+        let (a, b) = (s.offset as usize, (s.offset + s.len) as usize);
+        fetch_shard_into(storage, s, &mut out[s.stage][a..b])?;
     }
     Ok(out)
 }
@@ -266,10 +464,10 @@ pub fn resolve_for_recovery(
     Some(hit)
 }
 
-/// Delete shard blobs whose step has no committed manifest and is older
-/// than `before_step` — the debris of crashed or aborted persist jobs.
-/// Blobs at or past `before_step` may belong to an in-flight upload and are
-/// left alone. Returns the number of blobs deleted.
+/// Delete shard blobs and part-objects whose step has no committed manifest
+/// and is older than `before_step` — the debris of crashed or aborted
+/// persist jobs. Blobs at or past `before_step` may belong to an in-flight
+/// upload and are left alone. Returns the number of blobs deleted.
 pub fn sweep_orphan_shards(storage: &dyn Storage, model: &str, before_step: u64) -> usize {
     let manifested: BTreeSet<u64> = persisted_steps(storage, model).into_iter().collect();
     let keys = storage.list();
@@ -322,6 +520,7 @@ mod tests {
                     offset: 0,
                     len: 6,
                     crc32: crc32fast::hash(&[1; 6]),
+                    parts: vec![],
                 },
                 ShardEntry {
                     key: shard_key("m", 40, 0, 1),
@@ -330,6 +529,7 @@ mod tests {
                     offset: 6,
                     len: 4,
                     crc32: crc32fast::hash(&[2; 4]),
+                    parts: vec![],
                 },
                 ShardEntry {
                     key: shard_key("m", 40, 1, 0),
@@ -338,6 +538,7 @@ mod tests {
                     offset: 0,
                     len: 6,
                     crc32: crc32fast::hash(&[3; 6]),
+                    parts: vec![],
                 },
             ],
         }
@@ -349,11 +550,75 @@ mod tests {
         s.put(&man.shards[2].key, &[3; 6]).unwrap();
     }
 
+    /// A manifest whose second shard is multipart (two parts), with the
+    /// part blobs landed in `s`.
+    fn multipart_sample(s: &MemStorage) -> PersistManifest {
+        let mut man = sample();
+        let body: Vec<u8> = (0..4u8).collect();
+        man.shards[1].crc32 = crc32fast::hash(&body);
+        man.shards[1].parts = vec![
+            PartEntry {
+                key: part_key("m", 40, 0, 1, 0),
+                len: 3,
+                crc32: crc32fast::hash(&body[..3]),
+            },
+            PartEntry {
+                key: part_key("m", 40, 0, 1, 1),
+                len: 1,
+                crc32: crc32fast::hash(&body[3..]),
+            },
+        ];
+        s.put(&man.shards[0].key, &[1; 6]).unwrap();
+        s.put(&man.shards[1].parts[0].key, &body[..3]).unwrap();
+        s.put(&man.shards[1].parts[1].key, &body[3..]).unwrap();
+        s.put(&man.shards[2].key, &[3; 6]).unwrap();
+        man
+    }
+
     #[test]
     fn manifest_roundtrip() {
         let m = sample();
         let back = PersistManifest::decode(&m.encode()).unwrap();
         assert_eq!(back, m);
+    }
+
+    #[test]
+    fn multipart_manifest_roundtrip_and_load() {
+        let s = MemStorage::new();
+        let man = multipart_sample(&s);
+        let back = PersistManifest::decode(&man.encode()).unwrap();
+        assert_eq!(back, man, "parts survive the wire format");
+        s.put(&manifest_key("m", 40), &man.encode()).unwrap();
+        let (_, stages) = load_latest(&s, "m").unwrap().unwrap();
+        let mut expect0 = vec![1u8; 6];
+        expect0.extend(0..4u8);
+        assert_eq!(stages[0], expect0, "parts stitched in order");
+        assert_eq!(stages[1], vec![3u8; 6]);
+        // serial oracle agrees byte for byte
+        assert_eq!(load_manifest_payload_serial(&s, &man).unwrap(), stages);
+    }
+
+    #[test]
+    fn multipart_load_verifies_per_part_crc() {
+        let s = MemStorage::new();
+        let man = multipart_sample(&s);
+        s.put(&manifest_key("m", 40), &man.encode()).unwrap();
+        // corrupt the second part in place (same length, different bytes)
+        s.put(&man.shards[1].parts[1].key, &[0xEE]).unwrap();
+        assert!(load_manifest_payload(&s, &man).is_err());
+        assert!(load_manifest_payload_serial(&s, &man).is_err());
+        assert!(load_latest(&s, "m").unwrap().is_none());
+    }
+
+    #[test]
+    fn storage_keys_cover_blob_and_parts() {
+        let s = MemStorage::new();
+        let man = multipart_sample(&s);
+        assert_eq!(man.shards[0].storage_keys(), vec![man.shards[0].key.clone()]);
+        let keys = man.shards[1].storage_keys();
+        assert_eq!(keys.len(), 3);
+        assert!(keys.contains(&man.shards[1].key));
+        assert!(keys.contains(&man.shards[1].parts[0].key));
     }
 
     #[test]
@@ -371,6 +636,11 @@ mod tests {
         );
         assert_eq!(
             step_of_key(&shard_key("m", 55, 2, 3), &shard_prefix("m")),
+            Some(55)
+        );
+        // part-objects parse to the same step as their shard
+        assert_eq!(
+            step_of_key(&part_key("m", 55, 2, 3, 7), &shard_prefix("m")),
             Some(55)
         );
         // other models / legacy checkpoint keys don't parse
@@ -409,6 +679,29 @@ mod tests {
         // corrupt one shard in place
         s.put(&man.shards[2].key, &[9; 6]).unwrap();
         assert!(load_latest(&s, "m").unwrap().is_none());
+    }
+
+    #[test]
+    fn parallel_load_matches_serial_oracle() {
+        let s = MemStorage::new();
+        let man = sample();
+        s.put(&manifest_key("m", 40), &man.encode()).unwrap();
+        put_shards(&s, &man);
+        assert_eq!(
+            load_manifest_payload(&s, &man).unwrap(),
+            load_manifest_payload_serial(&s, &man).unwrap()
+        );
+    }
+
+    #[test]
+    fn loaders_reject_non_tiling_manifests() {
+        let s = MemStorage::new();
+        let mut man = sample();
+        put_shards(&s, &man);
+        // overlap: shard 1 claims offset 4 instead of 6 (gap at the tail)
+        man.shards[1].offset = 4;
+        assert!(load_manifest_payload(&s, &man).is_err());
+        assert!(load_manifest_payload_serial(&s, &man).is_err());
     }
 
     #[test]
@@ -458,13 +751,15 @@ mod tests {
         let man = sample();
         s.put(&manifest_key("m", 40), &man.encode()).unwrap();
         put_shards(&s, &man);
-        // orphans from a crashed persist at step 20, and an in-flight upload
-        // at step 50
+        // orphans from a crashed persist at step 20 (a blob and a part), and
+        // an in-flight upload at step 50
         s.put(&shard_key("m", 20, 0, 0), &[0; 4]).unwrap();
+        s.put(&part_key("m", 20, 0, 1, 0), &[0; 4]).unwrap();
         s.put(&shard_key("m", 50, 0, 0), &[0; 4]).unwrap();
         let deleted = sweep_orphan_shards(&s, "m", 45);
-        assert_eq!(deleted, 1);
-        assert!(!s.exists(&shard_key("m", 20, 0, 0)), "orphan swept");
+        assert_eq!(deleted, 2);
+        assert!(!s.exists(&shard_key("m", 20, 0, 0)), "orphan blob swept");
+        assert!(!s.exists(&part_key("m", 20, 0, 1, 0)), "orphan part swept");
         assert!(s.exists(&shard_key("m", 50, 0, 0)), "in-flight kept");
         assert!(s.exists(&man.shards[0].key), "manifested kept");
     }

@@ -6,19 +6,25 @@
 //! the background so the rare protection-exceeded case has a durable
 //! fallback — without the training thread ever paying for the upload.
 //!
-//! * [`engine`] — the background drain: per-node writer workers pull clean
-//!   shards from the SMPs and stream them under a bytes/sec throttle;
-//!   trainer-side cost is one enqueue.
+//! * [`engine`] — the background drain, a **multi-job pipeline**: up to
+//!   `pipeline_jobs` jobs overlap their SMP fetches and uploads while a
+//!   commit turnstile keeps manifests landing in enqueue order; per-node
+//!   writer workers pull clean shards from the SMPs and stream them under
+//!   **per-node** bytes/sec throttle lanes (cluster budget split, sum
+//!   preserved); large shards land as **resumable multipart** part-objects
+//!   with per-part CRCs. Trainer-side cost is one enqueue.
 //! * [`driver`] — the trainer-side handle (engine + cadence + metric
-//!   sync), shared by both trainers.
+//!   sync + live failure-event feed), shared by both trainers.
 //! * [`manifest`] — the atomic commit unit: a cluster-wide manifest written
 //!   only after every shard landed, so `latest` can never name a torn or
-//!   partial checkpoint.
+//!   partial checkpoint; loading is a parallel sharded gather (the serial
+//!   loop is kept as the measured baseline/oracle).
 //! * [`retention`] — keep-last-K + keep-every-Nth GC of superseded versions
-//!   and orphaned shard blobs.
+//!   and orphaned shard blobs/part-objects.
 //! * [`scheduler`] — the live Appendix-A cadence: measured save overhead
-//!   and the hwsim failure rate pick the persist interval instead of the
-//!   static `persist_every` knob.
+//!   and the failure rate — the static knob until enough *observed* hwsim
+//!   Weibull events accrue for a rolling empirical λ — pick the persist
+//!   interval instead of the static `persist_every` knob.
 //!
 //! [`Storage`]: crate::checkpoint::Storage
 
@@ -29,10 +35,11 @@ pub mod retention;
 pub mod scheduler;
 
 pub use driver::PersistDriver;
-pub use engine::{PersistEngine, PersistStats, Throttle};
+pub use engine::{NodeThrottles, PersistEngine, PersistStats, Throttle};
 pub use manifest::{
-    load_latest, load_manifest_payload, manifest_key, manifest_prefix, persisted_steps,
-    resolve_for_recovery, shard_key, sweep_orphan_shards, PersistManifest, ShardEntry,
+    load_latest, load_manifest_payload, load_manifest_payload_serial, manifest_key,
+    manifest_prefix, part_key, persisted_steps, resolve_for_recovery, shard_key,
+    sweep_orphan_shards, PartEntry, PersistManifest, ShardEntry,
 };
 pub use retention::{run_gc, GcReport, RetentionPolicy};
 pub use scheduler::IntervalScheduler;

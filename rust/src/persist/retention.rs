@@ -8,9 +8,13 @@
 //!
 //! Deletion order is crash-consistent with the commit protocol: a dropped
 //! version loses its *manifest first* (readers immediately stop resolving
-//! it), then its shard blobs; a crash in between just leaves orphans for the
-//! next sweep. The sweep also collects shard blobs of steps that never
-//! committed a manifest (aborted or crashed persist jobs).
+//! it), then its shard blobs **and multipart part-objects**; a crash in
+//! between just leaves orphans for the next sweep. The sweep also collects:
+//! * shard-namespace keys of steps that never committed a manifest
+//!   (aborted or crashed persist jobs), and
+//! * keys under a *retained* step that its committed manifest does not
+//!   reference — part debris of an earlier crashed attempt whose chunking
+//!   differed from the attempt that finally committed.
 
 use std::collections::BTreeSet;
 
@@ -47,13 +51,22 @@ pub struct GcReport {
 }
 
 /// Apply the policy to `model`'s durable checkpoints and sweep orphaned
-/// shard blobs older than the newest committed manifest. One listing
-/// snapshot serves the whole pass — manifest enumeration and the orphan
-/// sweep — so the per-commit GC costs a single full scan, not three.
+/// shard blobs/parts older than the newest committed manifest, plus
+/// unreferenced part debris under `debris_step` (the engine passes the step
+/// it just committed — the only step THIS engine instance can have resumed
+/// with a different multipart chunking, so one manifest decode covers the
+/// case without re-decoding every retained manifest on every pass; earlier
+/// steps' debris was swept at their own commit). One listing snapshot
+/// serves the whole pass — manifest enumeration, both sweeps — so the
+/// per-commit GC costs a single full scan, not three. The pipelined engine
+/// runs this inside the commit turnstile, so concurrent GC passes cannot
+/// race each other, and any in-flight job's step is strictly newer than
+/// `before_step` (commits are in enqueue order).
 pub fn run_gc(
     storage: &dyn Storage,
     model: &str,
     policy: &RetentionPolicy,
+    debris_step: Option<u64>,
 ) -> Result<GcReport> {
     let keys = storage.list();
     let prefix = manifest::manifest_prefix(model);
@@ -68,24 +81,45 @@ pub fn run_gc(
     };
     let keep = policy.retained(&steps);
     let mut report = GcReport::default();
+    // shard-namespace keys the debris-swept manifest references, and the
+    // steps whose manifest decoded cleanly (only those are safe to sweep
+    // for unreferenced debris)
+    let mut referenced: BTreeSet<String> = BTreeSet::new();
+    let mut swept_steps: BTreeSet<u64> = BTreeSet::new();
     for &step in &steps {
+        let key = manifest::manifest_key(model, step);
         if keep.contains(&step) {
+            if debris_step == Some(step) {
+                if let Some(m) = storage
+                    .get(&key)
+                    .ok()
+                    .and_then(|b| PersistManifest::decode(&b).ok())
+                {
+                    for s in &m.shards {
+                        referenced.extend(s.storage_keys());
+                    }
+                    swept_steps.insert(step);
+                }
+            }
             continue;
         }
-        let key = manifest::manifest_key(model, step);
         // read the shard list before unlinking the manifest, so the blobs
-        // can still be found once the version is no longer resolvable
+        // and parts can still be found once the version stops resolving
         let shard_keys: Vec<String> = storage
             .get(&key)
             .ok()
             .and_then(|b| PersistManifest::decode(&b).ok())
-            .map(|m| m.shards.into_iter().map(|s| s.key).collect())
+            .map(|m| m.shards.iter().flat_map(|s| s.storage_keys()).collect())
             .unwrap_or_default();
         storage.delete(&key)?;
         report.manifests_deleted += 1;
         for k in shard_keys {
-            storage.delete(&k)?;
-            report.blobs_deleted += 1;
+            // deletes are idempotent: a multipart shard has no blob under
+            // its single-blob key and vice versa
+            if storage.exists(&k) {
+                storage.delete(&k)?;
+                report.blobs_deleted += 1;
+            }
         }
     }
     // orphans = shard steps that never committed a manifest; steps whose
@@ -93,12 +127,31 @@ pub fn run_gc(
     let manifested: BTreeSet<u64> = steps.iter().copied().collect();
     report.blobs_deleted +=
         manifest::sweep_orphans_in(storage, model, &manifested, newest, &keys);
+    // multipart debris under the just-committed step: a crashed earlier
+    // attempt may have left parts the committed manifest doesn't reference
+    // (different chunking, or a whole-blob upload superseded by parts)
+    let shard_prefix = manifest::shard_prefix(model);
+    for key in &keys {
+        if let Some(step) = manifest::step_of_key(key, &shard_prefix) {
+            if swept_steps.contains(&step)
+                && !referenced.contains(key)
+                && storage.exists(key)
+                && storage.delete(key).is_ok()
+            {
+                report.blobs_deleted += 1;
+            }
+        }
+    }
     Ok(report)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::checkpoint::MemStorage;
+    use crate::persist::manifest::{
+        manifest_key, part_key, shard_key, PartEntry, PersistManifest, ShardEntry,
+    };
 
     #[test]
     fn keep_last_floors_at_one() {
@@ -127,5 +180,75 @@ mod tests {
         let p = RetentionPolicy { keep_last: 8, keep_every: 0 };
         let kept = p.retained(&[3, 6]);
         assert_eq!(kept.into_iter().collect::<Vec<_>>(), vec![3, 6]);
+    }
+
+    /// A retired multipart version loses its part-objects, and part debris
+    /// of a crashed earlier attempt under the *retained* step is swept
+    /// while every referenced key survives.
+    #[test]
+    fn gc_sweeps_parts_of_dropped_versions_and_unreferenced_debris() {
+        let s = MemStorage::new();
+        let mk_manifest = |step: u64, parts: usize| -> PersistManifest {
+            let body = vec![step as u8; 8];
+            let part_len = 8 / parts;
+            let entries: Vec<PartEntry> = (0..parts)
+                .map(|k| {
+                    let chunk = &body[k * part_len..(k + 1) * part_len];
+                    PartEntry {
+                        key: part_key("m", step, 0, 0, k),
+                        len: part_len as u64,
+                        crc32: crc32fast::hash(chunk),
+                    }
+                })
+                .collect();
+            for (k, p) in entries.iter().enumerate() {
+                s.put(&p.key, &body[k * part_len..(k + 1) * part_len]).unwrap();
+            }
+            PersistManifest {
+                model: "m".into(),
+                step,
+                version: step,
+                snapshot_step: step,
+                stage_bytes: vec![8],
+                shards: vec![ShardEntry {
+                    key: shard_key("m", step, 0, 0),
+                    stage: 0,
+                    node: 0,
+                    offset: 0,
+                    len: 8,
+                    crc32: crc32fast::hash(&body),
+                    parts: entries,
+                }],
+            }
+        };
+        let old = mk_manifest(10, 2);
+        s.put(&manifest_key("m", 10), &old.encode()).unwrap();
+        let new = mk_manifest(20, 2);
+        s.put(&manifest_key("m", 20), &new.encode()).unwrap();
+        // debris under the retained step 20: parts 2..4 of a crashed
+        // earlier attempt with a finer chunking
+        s.put(&part_key("m", 20, 0, 0, 2), &[9; 2]).unwrap();
+        s.put(&part_key("m", 20, 0, 0, 3), &[9; 2]).unwrap();
+
+        let policy = RetentionPolicy { keep_last: 1, keep_every: 0 };
+        // the engine passes the step it just committed (20): only that
+        // step's debris is swept — a pass for an unrelated step must leave
+        // the stray parts alone (they are under a manifested step, so the
+        // orphan sweep ignores them too)
+        let report = run_gc(&s, "m", &policy, None).unwrap();
+        assert_eq!(report.manifests_deleted, 1);
+        assert_eq!(report.blobs_deleted, 2, "only step 10's dropped parts");
+        assert!(s.exists(&part_key("m", 20, 0, 0, 2)), "debris untouched without debris_step");
+        let report = run_gc(&s, "m", &policy, Some(20)).unwrap();
+        // dropped manifests already gone; now the 2 stray parts of step 20
+        assert_eq!(report.manifests_deleted, 0);
+        assert_eq!(report.blobs_deleted, 2);
+        assert!(!s.exists(&old.shards[0].parts[0].key), "dropped parts gone");
+        assert!(!s.exists(&part_key("m", 20, 0, 0, 2)), "debris swept");
+        assert!(s.exists(&new.shards[0].parts[0].key), "referenced parts kept");
+        // the retained version still loads end to end
+        let (man, stages) = crate::persist::load_latest(&s, "m").unwrap().unwrap();
+        assert_eq!(man.step, 20);
+        assert_eq!(stages[0], vec![20u8; 8]);
     }
 }

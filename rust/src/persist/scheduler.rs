@@ -10,17 +10,44 @@
 //! protection exists. A single-node SG has no RAIM5 peers — any node loss
 //! needs the durable tier — so the plain Young interval
 //! ([`optimal_interval`], Eq. 5) against the raw node rate applies instead.
+//!
+//! **Live failure rate.** The per-node rate λ_node starts as the static
+//! `lambda_node` knob, but the scheduler also ingests *observed* failure
+//! events — from the trainers' failure injection or straight from a
+//! pre-drawn hwsim Weibull schedule
+//! ([`IntervalScheduler::ingest_failure_schedule`]; feed ONE clock domain
+//! per scheduler — wall or sim, never both). Once enough events accrue, the rolling
+//! empirical rate (exponential-interarrival MLE over the event window,
+//! normalized per node) replaces the knob, so the cadence tracks the
+//! cluster the run actually sees rather than the rate the operator guessed.
 
+use std::collections::VecDeque;
+
+use crate::hwsim::failure::FailureSchedule;
 use crate::reliability::intervals::{optimal_interval, reft_ckpt_interval, save_overhead};
 
+/// Minimum observed failure events before the rolling empirical rate
+/// replaces the static `lambda_node` knob.
+pub const MIN_EMPIRICAL_EVENTS: usize = 4;
+
+/// Rolling window of remembered event times (cluster-wide). Old events age
+/// out, so a burst years of sim-time ago cannot dominate the rate forever.
+const EMPIRICAL_WINDOW: usize = 64;
+
 /// Live persist-cadence controller. Owned by the trainer; all methods run
-/// on the training thread and are O(1).
+/// on the training thread and are O(1) (event ingestion amortized).
 #[derive(Debug, Clone)]
 pub struct IntervalScheduler {
-    /// per-node failure rate (per second — the hwsim λ_node)
-    lambda_node: f64,
+    /// static per-node failure rate (per second) — the operator's knob,
+    /// used until enough live events accrue
+    lambda_knob: f64,
     /// sharding-group size n (Eq. 7 exceedance input)
     sg_size: usize,
+    /// cluster size the empirical rate normalizes over
+    nodes: usize,
+    /// observed failure-event times (seconds on the feeding clock),
+    /// ascending, capped at [`EMPIRICAL_WINDOW`]
+    events: VecDeque<f64>,
     /// clamp bounds on the derived cadence, in steps
     min_steps: u64,
     max_steps: u64,
@@ -31,11 +58,19 @@ pub struct IntervalScheduler {
 impl IntervalScheduler {
     /// `fallback_steps` seeds the cadence until the first measurement
     /// arrives (the trainers pass the static
-    /// `persist_every * snapshot_interval` product).
-    pub fn new(lambda_node: f64, sg_size: usize, fallback_steps: u64) -> IntervalScheduler {
+    /// `persist_every * snapshot_interval` product). `nodes` is the
+    /// cluster size the empirical failure rate normalizes over.
+    pub fn new(
+        lambda_node: f64,
+        sg_size: usize,
+        nodes: usize,
+        fallback_steps: u64,
+    ) -> IntervalScheduler {
         IntervalScheduler {
-            lambda_node,
+            lambda_knob: lambda_node,
             sg_size,
+            nodes: nodes.max(1),
+            events: VecDeque::new(),
             min_steps: 1,
             max_steps: 1_000_000,
             interval_steps: fallback_steps.max(1),
@@ -48,21 +83,78 @@ impl IntervalScheduler {
         self.interval_steps
     }
 
+    /// One observed failure event at `at_secs` on the feeding clock (any
+    /// node; the rate is normalized by the cluster size). Slightly
+    /// out-of-order deliveries are tolerated — the window is re-sorted so
+    /// the span math stays honest.
+    pub fn note_failure_event(&mut self, at_secs: f64) {
+        if !at_secs.is_finite() {
+            return;
+        }
+        let out_of_order =
+            self.events.back().is_some_and(|&last| last > at_secs);
+        self.events.push_back(at_secs);
+        if out_of_order {
+            let mut v: Vec<f64> = self.events.drain(..).collect();
+            v.sort_by(f64::total_cmp);
+            self.events = v.into();
+        }
+        while self.events.len() > EMPIRICAL_WINDOW {
+            self.events.pop_front();
+        }
+    }
+
+    /// Bulk-feed a pre-drawn hwsim Weibull schedule: every event in
+    /// `(since, upto]` is ingested. Callers advancing a sim clock pass the
+    /// previous and current time so each event is fed exactly once.
+    pub fn ingest_failure_schedule(
+        &mut self,
+        schedule: &FailureSchedule,
+        since: f64,
+        upto: f64,
+    ) {
+        for e in schedule.in_window(since, upto) {
+            self.note_failure_event(e.at);
+        }
+    }
+
+    /// How many live failure events the rolling window currently holds.
+    pub fn empirical_events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The per-node failure rate driving the interval math: the rolling
+    /// empirical rate once [`MIN_EMPIRICAL_EVENTS`] events accrued
+    /// (k events spanning `t` seconds across `nodes` nodes → the
+    /// exponential-interarrival MLE `(k-1) / (t * nodes)`), else the
+    /// static knob.
+    pub fn lambda_node(&self) -> f64 {
+        let k = self.events.len();
+        if k >= MIN_EMPIRICAL_EVENTS {
+            let span = self.events.back().unwrap() - self.events.front().unwrap();
+            if span > 0.0 {
+                return (k - 1) as f64 / (span * self.nodes as f64);
+            }
+        }
+        self.lambda_knob
+    }
+
     /// Re-derive the cadence from measurements: `t_persist` is the wall
     /// cost of one durable save (with the background engine this is the
     /// *job* duration — the Eq. 8 overlap term absorbs everything the
     /// training thread doesn't see), `t_step` one training iteration.
     /// Returns the new interval in steps.
     pub fn observe(&mut self, t_persist: f64, t_step: f64) -> u64 {
-        if t_step > 0.0 && t_persist >= 0.0 && self.lambda_node > 0.0 {
+        let lambda = self.lambda_node();
+        if t_step > 0.0 && t_persist >= 0.0 && lambda > 0.0 {
             let t_secs = if self.sg_size >= 2 {
-                reft_ckpt_interval(t_persist, t_step, self.lambda_node, self.sg_size)
+                reft_ckpt_interval(t_persist, t_step, lambda, self.sg_size)
             } else {
                 // no RAIM5 peers: any node loss already needs the durable
                 // tier, so the raw node rate drives the plain Eq. 5 form
                 optimal_interval(
                     save_overhead(t_persist, t_step).max(1e-6),
-                    self.lambda_node,
+                    lambda,
                 )
             };
             self.interval_steps = if t_secs.is_finite() {
@@ -89,10 +181,12 @@ impl IntervalScheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::hwsim::failure::{FailureKind, FailureModel};
+    use crate::util::rng::Rng;
 
     #[test]
     fn fallback_cadence_until_first_measurement() {
-        let mut s = IntervalScheduler::new(1e-4, 6, 20);
+        let mut s = IntervalScheduler::new(1e-4, 6, 6, 20);
         assert_eq!(s.interval_steps(), 20);
         assert!(!s.should_persist(10));
         assert!(s.should_persist(20));
@@ -102,8 +196,8 @@ mod tests {
 
     #[test]
     fn costlier_saves_stretch_the_interval() {
-        let mut cheap = IntervalScheduler::new(1e-4, 6, 10);
-        let mut dear = IntervalScheduler::new(1e-4, 6, 10);
+        let mut cheap = IntervalScheduler::new(1e-4, 6, 6, 10);
+        let mut dear = IntervalScheduler::new(1e-4, 6, 6, 10);
         let a = cheap.observe(2.0, 1.0);
         let b = dear.observe(20.0, 1.0);
         assert!(b > a, "amortize expensive saves over longer intervals: {a} vs {b}");
@@ -113,8 +207,8 @@ mod tests {
     fn reft_exceedance_stretches_vs_single_node_sg() {
         // same costs, same node rate: the SG-of-6 cadence must be far
         // sparser than the unprotected single-node one (Eq. 7 quadratic)
-        let mut protected = IntervalScheduler::new(1e-4, 6, 10);
-        let mut bare = IntervalScheduler::new(1e-4, 1, 10);
+        let mut protected = IntervalScheduler::new(1e-4, 6, 6, 10);
+        let mut bare = IntervalScheduler::new(1e-4, 1, 6, 10);
         let p = protected.observe(5.0, 1.0);
         let b = bare.observe(5.0, 1.0);
         assert!(p > b * 10, "protected {p} vs bare {b}");
@@ -124,7 +218,7 @@ mod tests {
     fn fully_overlapped_save_caps_at_max() {
         // background engine: trainer-visible cost ~ 0 -> overhead clamps to
         // epsilon and the interval hits the ceiling rather than NaN/0
-        let mut s = IntervalScheduler::new(1e-6, 6, 10);
+        let mut s = IntervalScheduler::new(1e-6, 6, 6, 10);
         let steps = s.observe(0.0, 1.0);
         assert!(steps >= 10, "{steps}");
         assert!(steps <= 1_000_000);
@@ -132,18 +226,86 @@ mod tests {
 
     #[test]
     fn zero_step_time_keeps_previous_cadence() {
-        let mut s = IntervalScheduler::new(1e-4, 6, 15);
+        let mut s = IntervalScheduler::new(1e-4, 6, 6, 15);
         assert_eq!(s.observe(1.0, 0.0), 15);
     }
 
     #[test]
     fn cadence_tracks_interval_after_observe() {
-        let mut s = IntervalScheduler::new(1e-1, 2, 100);
+        let mut s = IntervalScheduler::new(1e-1, 2, 6, 100);
         // high failure rate + expensive save -> short finite interval
         let steps = s.observe(50.0, 1.0);
         assert!(steps >= 1);
         assert!(s.should_persist(steps));
         assert!(!s.should_persist(steps + 1));
         assert!(s.should_persist(steps * 2));
+    }
+
+    #[test]
+    fn knob_rate_until_enough_events_accrue() {
+        let mut s = IntervalScheduler::new(1e-4, 6, 6, 10);
+        assert_eq!(s.lambda_node(), 1e-4);
+        // three events: still below MIN_EMPIRICAL_EVENTS
+        for t in [100.0, 200.0, 300.0] {
+            s.note_failure_event(t);
+        }
+        assert_eq!(s.empirical_events(), 3);
+        assert_eq!(s.lambda_node(), 1e-4, "knob holds below the event floor");
+        // the fourth event flips to the empirical rate:
+        // 3 renewals over 300 s across 6 nodes = 3 / 1800
+        s.note_failure_event(400.0);
+        let lam = s.lambda_node();
+        assert!((lam - 3.0 / (300.0 * 6.0)).abs() < 1e-12, "{lam}");
+    }
+
+    #[test]
+    fn hotter_observed_cluster_shortens_the_cadence() {
+        // identical knobs; one scheduler observes a failure storm the knob
+        // never predicted -> its derived interval must come in shorter
+        let mut calm = IntervalScheduler::new(1e-6, 6, 6, 10);
+        let mut hot = IntervalScheduler::new(1e-6, 6, 6, 10);
+        for k in 0..16 {
+            hot.note_failure_event(10.0 * k as f64); // one failure / 10 s
+        }
+        let calm_steps = calm.observe(5.0, 1.0);
+        let hot_steps = hot.observe(5.0, 1.0);
+        assert!(
+            hot_steps < calm_steps,
+            "live rate must shorten the cadence: {hot_steps} vs {calm_steps}"
+        );
+    }
+
+    #[test]
+    fn out_of_order_events_are_resorted() {
+        let mut s = IntervalScheduler::new(1e-4, 6, 2, 10);
+        for t in [50.0, 10.0, 30.0, 20.0] {
+            s.note_failure_event(t);
+        }
+        // 3 renewals over the [10, 50] span across 2 nodes
+        assert!((s.lambda_node() - 3.0 / (40.0 * 2.0)).abs() < 1e-12);
+        // non-finite feeds are dropped, not poisoning the window
+        s.note_failure_event(f64::NAN);
+        assert_eq!(s.empirical_events(), 4);
+    }
+
+    #[test]
+    fn ingests_hwsim_weibull_schedule_incrementally() {
+        let model = FailureModel::new(0.01, 0.0, 1.0);
+        let mut rng = Rng::seed_from(7);
+        let sched = model.schedule(&mut rng, 8, 2000.0);
+        assert!(sched.events.iter().all(|e| e.kind == FailureKind::Hardware));
+        let mut s = IntervalScheduler::new(1e-9, 6, 8, 10);
+        // two half-open windows feed each event exactly once
+        s.ingest_failure_schedule(&sched, f64::NEG_INFINITY, 1000.0);
+        let first = s.empirical_events();
+        s.ingest_failure_schedule(&sched, 1000.0, 2000.0);
+        let total = s.empirical_events();
+        assert!(total >= first);
+        let in_horizon = sched.events.len().min(64);
+        assert_eq!(total, in_horizon, "window cap or exact count");
+        // with ~0.01/node/unit observed, the empirical rate is near the
+        // generating rate and far above the 1e-9 knob
+        let lam = s.lambda_node();
+        assert!(lam > 1e-3 && lam < 1e-1, "{lam}");
     }
 }

@@ -362,6 +362,21 @@ impl Drop for Smp {
     }
 }
 
+/// Issue a clean-shard fetch without blocking on the reply: the request is
+/// posted to the SMP's inbox and the reply channel returned, so the caller
+/// can overlap the SMP's clone+ship with its own work. The persistence
+/// engine's writer workers use this to prefetch the next shard while the
+/// current one uploads (fetch/upload pipelining within one node).
+pub fn request_clean_via(
+    tx: &Sender<SmpMsg>,
+    stage: usize,
+) -> Result<Receiver<Option<(u64, Vec<u8>)>>> {
+    let (reply, rx) = channel();
+    tx.send(SmpMsg::GetClean { stage, reply })
+        .map_err(|_| anyhow::anyhow!("SMP is gone"))?;
+    Ok(rx)
+}
+
 /// The clean-fetch wire protocol over a bare inbox handle — the one
 /// implementation both [`Smp::get_clean`] and services that only hold a
 /// cloned [`Smp::sender`] (the persistence engine's writer workers) use.
@@ -369,10 +384,9 @@ pub fn get_clean_via(
     tx: &Sender<SmpMsg>,
     stage: usize,
 ) -> Result<Option<(u64, Vec<u8>)>> {
-    let (reply, rx) = channel();
-    tx.send(SmpMsg::GetClean { stage, reply })
-        .map_err(|_| anyhow::anyhow!("SMP is gone"))?;
-    rx.recv().map_err(|_| anyhow::anyhow!("SMP died mid-fetch"))
+    request_clean_via(tx, stage)?
+        .recv()
+        .map_err(|_| anyhow::anyhow!("SMP died mid-fetch"))
 }
 
 #[cfg(test)]
@@ -513,6 +527,22 @@ mod tests {
         let stats = smp.stats().unwrap();
         assert_eq!(stats.stale_end_snapshots, 1);
         assert_eq!(stats.clean_versions[&0], 1);
+    }
+
+    #[test]
+    fn outstanding_clean_requests_resolve_independently() {
+        // the persist writer's prefetch pattern: several GetClean requests
+        // posted before any reply is drained; each reply channel resolves
+        // with its own stage's bytes regardless of drain order
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        snapshot_roundtrip(&smp, 0, 1, &[1u8; 16], 8);
+        snapshot_roundtrip(&smp, 1, 1, &[2u8; 16], 8);
+        let tx = smp.sender();
+        let rx0 = request_clean_via(&tx, 0).unwrap();
+        let rx1 = request_clean_via(&tx, 1).unwrap();
+        assert_eq!(rx1.recv().unwrap().unwrap().1, vec![2u8; 16]);
+        assert_eq!(rx0.recv().unwrap().unwrap().1, vec![1u8; 16]);
     }
 
     #[test]

@@ -74,6 +74,14 @@ impl SnapshotPlan {
         SnapshotPlan { shards, stage_bytes: stage_bytes.to_vec() }
     }
 
+    /// Cluster size this plan spans (max node id + 1) — the one place the
+    /// node-count semantics live for consumers sizing per-node state
+    /// (throttle lanes, the scheduler's per-node failure-rate
+    /// normalization).
+    pub fn nodes(&self) -> usize {
+        self.shards.iter().map(|s| s.node).max().map_or(1, |n| n + 1)
+    }
+
     pub fn shards_for_node(&self, node: usize) -> impl Iterator<Item = &NodeShard> {
         self.shards.iter().filter(move |s| s.node == node)
     }

@@ -354,12 +354,19 @@ impl DpTrainer {
         self.metrics.inc("failures_software", 1);
     }
 
-    /// Hardware failure: a node goes away entirely.
+    /// Hardware failure: a node goes away entirely. The event also feeds
+    /// the live persist-cadence scheduler's rolling empirical λ — the
+    /// observed node failure rate gradually replaces the static
+    /// `lambda_node` knob (hwsim-driven runs inject their Weibull schedule
+    /// through here, so the Weibull stream reaches the scheduler live).
     pub fn inject_node_failure(&mut self, node: usize) {
         if let Some(reft) = self.reft.as_mut() {
             reft.kill_node(node);
         }
         self.inject_software_failure(); // training collapses cluster-wide
+        if let Some(d) = self.persist.as_mut() {
+            d.note_failure();
+        }
         self.metrics.inc("failures_hardware", 1);
     }
 
@@ -393,6 +400,8 @@ impl DpTrainer {
                     legacy_key.as_deref(),
                 ) {
                     self.state = StageState::from_payload(0, n_params, &stages[0])?;
+                    // durable-tier telemetry: the decision tree's
+                    // `LoadCheckpoint { tier: Manifest }` case, live
                     self.metrics.inc("recoveries_checkpoint", 1);
                     self.metrics.inc("recoveries_manifest", 1);
                     self.metrics
@@ -409,7 +418,9 @@ impl DpTrainer {
                         .stage_payload(0)
                         .context("checkpoint missing stage payload")?;
                     self.state = StageState::from_payload(0, n_params, payload)?;
+                    // `LoadCheckpoint { tier: Legacy }`: no manifest served
                     self.metrics.inc("recoveries_checkpoint", 1);
+                    self.metrics.inc("recoveries_legacy", 1);
                 }
             }
         }

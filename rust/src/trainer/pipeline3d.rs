@@ -565,11 +565,17 @@ impl PipelineTrainer {
         self.metrics.inc("failures_software", 1);
     }
 
+    /// Hardware failure: a node goes away entirely. The event also feeds
+    /// the live persist-cadence scheduler's rolling empirical λ (see
+    /// `DpTrainer::inject_node_failure`).
     pub fn inject_node_failure(&mut self, node: usize) {
         if let Some(reft) = self.reft.as_mut() {
             reft.kill_node(node);
         }
         self.inject_software_failure();
+        if let Some(d) = self.persist.as_mut() {
+            d.note_failure();
+        }
         self.metrics.inc("failures_hardware", 1);
     }
 
@@ -605,6 +611,8 @@ impl PipelineTrainer {
                     for (s, payload) in payloads.iter().enumerate() {
                         self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
                     }
+                    // durable-tier telemetry: the decision tree's
+                    // `LoadCheckpoint { tier: Manifest }` case, live
                     self.metrics.inc("recoveries_checkpoint", 1);
                     self.metrics.inc("recoveries_manifest", 1);
                     self.metrics
@@ -623,7 +631,9 @@ impl PipelineTrainer {
                             .with_context(|| format!("checkpoint missing stage {s}"))?;
                         self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
                     }
+                    // `LoadCheckpoint { tier: Legacy }`: no manifest served
                     self.metrics.inc("recoveries_checkpoint", 1);
+                    self.metrics.inc("recoveries_legacy", 1);
                 }
             }
         }

@@ -3,13 +3,16 @@
 //! topologies, consistency under interrupted snapshot rounds, and the full
 //! checkpoint-fallback flow against real storage.
 
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
 
 use reft::checkpoint::{storage::step_key, CheckpointFile, MemStorage, SectionKind, Storage};
 use reft::config::{FtConfig, PersistConfig};
 use reft::elastic::ReftCluster;
-use reft::persist::{self, PersistEngine};
+use reft::persist::{self, NodeThrottles, PersistEngine, PersistManifest, Throttle};
 use reft::smp::{Signal, Smp, SmpMsg};
 use reft::snapshot::payload::copy_audit;
 use reft::snapshot::SharedPayload;
@@ -665,6 +668,347 @@ fn persist_drains_promoted_round_never_inflight_one() {
     assert_eq!(man.version, 2);
     assert_eq!(man.snapshot_step, 100);
     assert_eq!(stages[0], v2[0].as_slice());
+}
+
+/// A storage decorator over a shared inner store whose puts start failing
+/// after the first `remaining` — the crash injection for multipart-resume
+/// and atomicity tests.
+struct FailAfter {
+    inner: Arc<MemStorage>,
+    remaining: AtomicI64,
+}
+
+impl Storage for FailAfter {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            self.remaining.fetch_sub(1, Ordering::SeqCst) > 0,
+            "injected storage failure at `{key}`"
+        );
+        self.inner.put(key, bytes)
+    }
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.inner.get(key)
+    }
+    fn exists(&self, key: &str) -> bool {
+        self.inner.exists(key)
+    }
+    fn list(&self) -> Vec<String> {
+        self.inner.list()
+    }
+    fn delete(&self, key: &str) -> Result<()> {
+        self.inner.delete(key)
+    }
+}
+
+/// A storage decorator recording every put key (in arrival order) over a
+/// shared inner store, optionally slowing or failing puts whose key
+/// contains a marker substring — the observability the pipelined-engine
+/// ordering and multipart-resume tests need.
+#[derive(Default)]
+struct InstrumentedStorage {
+    inner: Arc<MemStorage>,
+    puts: Mutex<Vec<String>>,
+    slow_substr: Option<String>,
+    slow_by: Duration,
+    fail_substr: Option<String>,
+}
+
+impl Storage for InstrumentedStorage {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        if let Some(s) = &self.slow_substr {
+            if key.contains(s.as_str()) {
+                std::thread::sleep(self.slow_by);
+            }
+        }
+        if let Some(f) = &self.fail_substr {
+            anyhow::ensure!(
+                !key.contains(f.as_str()),
+                "injected storage failure at `{key}`"
+            );
+        }
+        self.puts.lock().unwrap().push(key.to_string());
+        self.inner.put(key, bytes)
+    }
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.inner.get(key)
+    }
+    fn exists(&self, key: &str) -> bool {
+        self.inner.exists(key)
+    }
+    fn list(&self) -> Vec<String> {
+        self.inner.list()
+    }
+    fn delete(&self, key: &str) -> Result<()> {
+        self.inner.delete(key)
+    }
+}
+
+/// Tentpole: overlapped pipeline jobs must still commit their manifests in
+/// enqueue order (a slow straggler job cannot be overtaken), and a failing
+/// job aborts whole — its siblings commit, its partial blobs are swept by
+/// the next commit's GC.
+#[test]
+fn pipelined_engine_preserves_commit_order_and_atomicity() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![24_000u64];
+    let ft = FtConfig { bucket_bytes: 4096, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    let data = payloads(&stage_bytes, 0x91);
+    cluster.snapshot_all(&data).unwrap();
+    let deep = PersistConfig { pipeline_jobs: 3, keep_last: 8, ..unthrottled_persist() };
+
+    // (a) job 10's shard uploads are artificially slow: jobs 20 and 30
+    // finish their upload phase first, yet the manifests land 10, 20, 30
+    let store = Arc::new(InstrumentedStorage {
+        slow_substr: Some("persist/step-000000000010/".into()),
+        slow_by: Duration::from_millis(10),
+        ..InstrumentedStorage::default()
+    });
+    {
+        let engine = PersistEngine::start(
+            "pm",
+            Arc::clone(&store) as Arc<dyn Storage>,
+            cluster.plan.clone(),
+            deep.clone(),
+        );
+        for step in [10u64, 20, 30] {
+            engine.enqueue(step, cluster.persist_sources(), vec![]).unwrap();
+        }
+        engine.flush().unwrap();
+        let stats = engine.stats();
+        assert_eq!(stats.manifests_committed, 3, "{:?}", stats.last_error);
+        assert_eq!(stats.jobs_aborted, 0);
+    }
+    let manifest_puts: Vec<String> = store
+        .puts
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|k| k.contains("/manifest/"))
+        .cloned()
+        .collect();
+    assert_eq!(
+        manifest_puts,
+        vec![
+            persist::manifest_key("pm", 10),
+            persist::manifest_key("pm", 20),
+            persist::manifest_key("pm", 30),
+        ],
+        "a slow straggler must not be overtaken at commit"
+    );
+    let (man, stages) = persist::load_latest(store.inner.as_ref(), "pm").unwrap().unwrap();
+    assert_eq!(man.step, 30);
+    assert_eq!(stages[0], data[0].as_slice());
+
+    // (b) atomicity under overlap: one shard put of job 20 fails. Jobs 10
+    // and 30 commit (in order), job 20 aborts manifest-less, and job 30's
+    // GC sweeps the step-20 partial blobs.
+    let store2 = Arc::new(InstrumentedStorage {
+        fail_substr: Some("step-000000000020/shard-000-003".into()),
+        ..InstrumentedStorage::default()
+    });
+    {
+        let engine = PersistEngine::start(
+            "pm",
+            Arc::clone(&store2) as Arc<dyn Storage>,
+            cluster.plan.clone(),
+            deep,
+        );
+        for step in [10u64, 20, 30] {
+            engine.enqueue(step, cluster.persist_sources(), vec![]).unwrap();
+        }
+        engine.flush().unwrap();
+        let stats = engine.stats();
+        assert_eq!(stats.manifests_committed, 2, "{:?}", stats.last_error);
+        assert_eq!(stats.jobs_aborted, 1);
+    }
+    assert_eq!(persist::persisted_steps(store2.inner.as_ref(), "pm"), vec![10, 30]);
+    let manifest_puts: Vec<String> = store2
+        .puts
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|k| k.contains("/manifest/"))
+        .cloned()
+        .collect();
+    assert_eq!(
+        manifest_puts,
+        vec![persist::manifest_key("pm", 10), persist::manifest_key("pm", 30)]
+    );
+    assert!(
+        !store2
+            .inner
+            .list()
+            .iter()
+            .any(|k| k.contains("persist/step-000000000020")),
+        "aborted job's partial upload must be swept by the next commit's GC"
+    );
+    let (man, stages) = persist::load_latest(store2.inner.as_ref(), "pm").unwrap().unwrap();
+    assert_eq!(man.step, 30);
+    assert_eq!(stages[0], data[0].as_slice());
+}
+
+/// Tentpole: a crash between multipart parts provably resumes without
+/// re-uploading completed parts — the retried step verifies the durable
+/// parts' CRCs, reuses them, and uploads only the remainder.
+#[test]
+fn crash_mid_multipart_resume_reuses_durable_parts() {
+    // single-node topology: one writer worker, so the crash point is
+    // deterministic (parts upload strictly in order)
+    let topo = Topology::build(ParallelPlan::dp_only(4), 1, 4).unwrap();
+    let stage_bytes = vec![64_000u64];
+    let ft = FtConfig { raim5: false, bucket_bytes: 4096, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    let data = payloads(&stage_bytes, 0xAB);
+    cluster.snapshot_all(&data).unwrap();
+
+    let shared = Arc::new(MemStorage::new());
+    // 64 000 B / 4 096 B parts -> 16 parts (15 full + remainder)
+    let part_cfg = PersistConfig { multipart_part_bytes: 4096, ..unthrottled_persist() };
+
+    // attempt 1 "crashes" after 5 part uploads: job aborts, no manifest,
+    // the 5 durable parts stay behind
+    {
+        let failing: Arc<dyn Storage> = Arc::new(FailAfter {
+            inner: Arc::clone(&shared),
+            remaining: AtomicI64::new(5),
+        });
+        let engine =
+            PersistEngine::start("pm", failing, cluster.plan.clone(), part_cfg.clone());
+        engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+        engine.flush().unwrap();
+        let stats = engine.stats();
+        assert_eq!(stats.jobs_aborted, 1);
+        assert_eq!(stats.manifests_committed, 0);
+        assert_eq!(stats.parts_uploaded, 5);
+        assert_eq!(stats.parts_reused, 0);
+    }
+    let landed: Vec<String> = shared
+        .list()
+        .into_iter()
+        .filter(|k| k.contains("/part-"))
+        .collect();
+    assert_eq!(landed.len(), 5, "exactly the parts before the crash are durable");
+    assert!(
+        persist::load_latest(shared.as_ref(), "pm").unwrap().is_none(),
+        "no manifest -> the partial upload is invisible to recovery"
+    );
+
+    // attempt 2 (the restarted engine retries the same step): the durable
+    // parts are CRC-verified and reused, never re-put; only the remaining
+    // 11 parts + the manifest upload
+    let counting = Arc::new(InstrumentedStorage {
+        inner: Arc::clone(&shared),
+        ..InstrumentedStorage::default()
+    });
+    let engine = PersistEngine::start(
+        "pm",
+        Arc::clone(&counting) as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        part_cfg,
+    );
+    engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+    engine.flush().unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.manifests_committed, 1, "{:?}", stats.last_error);
+    assert_eq!(stats.parts_reused, 5, "every durable part reused");
+    assert_eq!(stats.parts_uploaded, 11, "only the missing parts uploaded");
+    let puts = counting.puts.lock().unwrap().clone();
+    for k in &landed {
+        assert!(!puts.contains(k), "durable part `{k}` was re-uploaded");
+    }
+    // the committed manifest records all 16 parts and restores the round
+    // byte-identically
+    let (man, stages) = persist::load_latest(shared.as_ref(), "pm").unwrap().unwrap();
+    assert_eq!(man.step, 10);
+    assert_eq!(man.shards.len(), 1);
+    assert_eq!(man.shards[0].parts.len(), 16);
+    assert_eq!(stages[0], data[0].as_slice());
+}
+
+/// Per-node throttle isolation: one node with a huge backlogged reservation
+/// must not delay another node's lane, while the old cluster-wide clock
+/// (kept as the per-lane primitive) provably would.
+#[test]
+fn per_node_throttle_isolation_under_one_slow_node() {
+    // 2 MiB/s cluster budget split into two independent 1 MiB/s lanes
+    let lanes = Arc::new(NodeThrottles::new(2 << 20, 2));
+    assert_eq!(lanes.lanes(), 2);
+    let slow = Arc::clone(&lanes);
+    let h = std::thread::spawn(move || slow.consume(0, 600 * 1024)); // ~0.59 s on lane 0
+    std::thread::sleep(Duration::from_millis(100)); // lane 0's reservation is in
+    let waited = lanes.consume(1, 16 * 1024); // ~16 ms at lane 1's own 1 MiB/s
+    assert!(
+        waited < 0.15,
+        "slow node 0 stalled node 1's independent lane: waited {waited}s"
+    );
+    let slow_waited = h.join().unwrap();
+    assert!(slow_waited > 0.3, "the slow node itself still paces: {slow_waited}s");
+
+    // contrast — the single cluster-wide clock the engine used before: the
+    // same backlog pushes everyone's reservation out
+    let shared = Arc::new(Throttle::new(2 << 20));
+    let s2 = Arc::clone(&shared);
+    let h = std::thread::spawn(move || s2.consume(600 * 1024)); // ~0.29 s on the shared clock
+    std::thread::sleep(Duration::from_millis(100));
+    let waited = shared.consume(16 * 1024);
+    assert!(
+        waited > 0.1,
+        "the shared clock must have queued behind the backlog: waited {waited}s"
+    );
+    h.join().unwrap();
+}
+
+/// Parallel-vs-serial manifest load byte identity on an engine-committed
+/// multipart manifest, clean and with a corrupted part: both loaders agree
+/// byte for byte, both refuse the corruption, and latest-resolution
+/// degrades instead of serving bad bytes.
+#[test]
+fn manifest_parallel_load_matches_serial_and_rejects_corruption() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![96_000u64];
+    let ft = FtConfig { bucket_bytes: 4096, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    let data = payloads(&stage_bytes, 0xC4);
+    cluster.snapshot_all(&data).unwrap();
+
+    let storage = Arc::new(MemStorage::new());
+    let engine = PersistEngine::start(
+        "pm",
+        Arc::clone(&storage) as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        PersistConfig { multipart_part_bytes: 4096, ..unthrottled_persist() },
+    );
+    engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+    engine.flush().unwrap();
+    assert_eq!(engine.stats().manifests_committed, 1, "{:?}", engine.stats().last_error);
+
+    let man = PersistManifest::decode(
+        &storage.get(&persist::manifest_key("pm", 10)).unwrap(),
+    )
+    .unwrap();
+    // 96 000 B / 6 nodes = 16 000 B shards -> 4 parts each at 4 096 B
+    assert_eq!(man.shards.len(), 6);
+    assert!(man.shards.iter().all(|s| s.parts.len() == 4));
+
+    // clean case: byte identity, and both match the snapshotted payload
+    let par = persist::load_manifest_payload(storage.as_ref(), &man).unwrap();
+    let ser = persist::load_manifest_payload_serial(storage.as_ref(), &man).unwrap();
+    assert_eq!(par, ser, "parallel gather diverged from the serial oracle");
+    assert_eq!(par[0], data[0].as_slice());
+
+    // corrupt-shard case: flip one part in place (same length) — per-part
+    // CRC catches it on both paths, and `load_latest` degrades to None
+    let victim = man.shards[3].parts[1].key.clone();
+    let good = storage.get(&victim).unwrap();
+    storage.put(&victim, &vec![0xEE; good.len()]).unwrap();
+    assert!(persist::load_manifest_payload(storage.as_ref(), &man).is_err());
+    assert!(persist::load_manifest_payload_serial(storage.as_ref(), &man).is_err());
+    assert!(persist::load_latest(storage.as_ref(), "pm").unwrap().is_none());
+
+    // with the part restored, both load again
+    storage.put(&victim, &good).unwrap();
+    assert_eq!(persist::load_manifest_payload(storage.as_ref(), &man).unwrap(), ser);
 }
 
 /// Direct SMP protocol edge cases under concurrency: two stages snapshotting

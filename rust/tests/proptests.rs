@@ -5,7 +5,7 @@
 
 use reft::checkpoint::{CheckpointFile, SectionKind};
 use reft::ec::Raim5Group;
-use reft::elastic::{decide, NodeStatus, RecoveryDecision};
+use reft::elastic::{decide, DurableAvailability, DurableTier, NodeStatus, RecoveryDecision};
 use reft::pipeline::{self, Schedule};
 use reft::snapshot::{BucketPipe, SnapshotPlan};
 use reft::topology::{ParallelPlan, Topology};
@@ -109,8 +109,11 @@ fn prop_recovery_decisions() {
                 _ => NodeStatus::Healthy,
             };
         }
-        let ckpt = rng.below(2) == 0;
-        let d = decide(&topo, &status, true, ckpt);
+        let durable = DurableAvailability {
+            manifest: rng.below(2) == 0,
+            legacy: rng.below(2) == 0,
+        };
+        let d = decide(&topo, &status, true, durable);
 
         let offline: Vec<usize> = (0..6)
             .filter(|&i| status[i] == NodeStatus::Offline)
@@ -134,15 +137,22 @@ fn prop_recovery_decisions() {
                 assert!(min_hit_sg_size.unwrap() >= 2, "case {case}");
                 assert!(!lost.is_empty());
             }
-            RecoveryDecision::LoadCheckpoint => {
-                assert!(ckpt, "case {case}: checkpoint chosen but unavailable");
+            RecoveryDecision::LoadCheckpoint { tier } => {
+                assert!(durable.any(), "case {case}: checkpoint chosen but unavailable");
+                // the manifest tier is always preferred when it exists
+                match tier {
+                    DurableTier::Manifest => assert!(durable.manifest, "case {case}"),
+                    DurableTier::Legacy => {
+                        assert!(durable.legacy && !durable.manifest, "case {case}")
+                    }
+                }
                 assert!(
                     max_loss_per_sg > 1 || min_hit_sg_size == Some(1),
                     "case {case}: fell back although decodable: {status:?}"
                 );
             }
             RecoveryDecision::Fatal => {
-                assert!(!ckpt, "case {case}");
+                assert!(!durable.any(), "case {case}");
             }
             RecoveryDecision::ResumeFromSmp => {
                 // only reachable without SG-relevant node losses
