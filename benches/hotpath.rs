@@ -27,8 +27,9 @@ use reft::checkpoint::{
     storage::step_key, CheckpointFile, LatencyStorage, MemStorage, SectionKind, Storage,
 };
 use reft::config::{FtConfig, PersistConfig};
-use reft::elastic::ReftCluster;
+use reft::elastic::{DurableTier, RecoveryPath, RecoveryPlan, ReftCluster};
 use reft::ec::{xor_into, xor_into_parallel, xor_into_scalar};
+use reft::metrics::Metrics;
 use reft::persist::{self, PersistEngine};
 use reft::snapshot::bucket::copy_bucketed;
 use reft::snapshot::SharedPayload;
@@ -464,6 +465,102 @@ fn main() {
         ));
     }
 
+    // Adaptive pipeline depth vs the static depths it chooses between: the
+    // same latency-injected queue drained at static depth 1, static depth
+    // 3, and with the EWMA controller picking the depth live (starting at
+    // the max, shrinking only when uploads are too cheap to overlap). With
+    // RTT-dominated puts the controller must keep the pipeline deep —
+    // asserted no slower than the best static depth (with slack for the
+    // first job's learning observation) and strictly faster than the
+    // sequential engine.
+    println!(
+        "adaptive pipeline depth vs static ({pipe_jobs} jobs, {} MiB over 6 nodes, \
+         {put_ms} ms/put modeled RTT):",
+        plen / mib
+    );
+    let drain_cfg = |depth: usize, adaptive: bool| -> (f64, usize) {
+        let store: Arc<dyn Storage> = Arc::new(LatencyStorage::new(
+            MemStorage::new(),
+            Duration::from_millis(put_ms),
+            Duration::ZERO,
+        ));
+        let engine = PersistEngine::start(
+            "bench-adaptive",
+            Arc::clone(&store),
+            cluster_p.plan.clone(),
+            PersistConfig {
+                enabled: true,
+                throttle_bytes_per_sec: 0,
+                chunk_bytes: 1 << 20,
+                keep_last: 8,
+                pipeline_jobs: depth,
+                multipart_part_bytes: 0,
+                adaptive_depth: adaptive,
+                ..PersistConfig::default()
+            },
+        );
+        let t0 = Instant::now();
+        for j in 0..pipe_jobs {
+            engine
+                .enqueue((j + 1) * 10, cluster_p.persist_sources(), vec![])
+                .unwrap();
+        }
+        engine.flush().unwrap();
+        let dt = t0.elapsed().as_secs_f64();
+        let st = engine.stats();
+        assert_eq!(
+            st.manifests_committed, pipe_jobs,
+            "every job must commit: {:?}",
+            st.last_error
+        );
+        (dt, engine.pipeline_depth())
+    };
+    let static1_s = drain_cfg(1, false).0.min(drain_cfg(1, false).0);
+    let static3_s = drain_cfg(3, false).0.min(drain_cfg(3, false).0);
+    let (a1, depth1) = drain_cfg(3, true);
+    let (a2, depth2) = drain_cfg(3, true);
+    let adaptive_s = a1.min(a2);
+    let final_depth = if a1 <= a2 { depth1 } else { depth2 };
+    let best_static = static1_s.min(static3_s);
+    println!(
+        "  static depth 1                         {:>8.1} ms queue drain",
+        static1_s * 1e3
+    );
+    println!(
+        "  static depth 3                         {:>8.1} ms queue drain",
+        static3_s * 1e3
+    );
+    println!(
+        "  adaptive (max 3)                       {:>8.1} ms queue drain, settled depth {final_depth}",
+        adaptive_s * 1e3
+    );
+    rec(&mut report, "persist_adaptive_depth", vec![
+        ("static1_s", static1_s),
+        ("static3_s", static3_s),
+        ("adaptive_s", adaptive_s),
+        ("best_static_s", best_static),
+        ("final_depth", final_depth as f64),
+        ("put_latency_ms", put_ms as f64),
+    ]);
+    if adaptive_s >= static1_s {
+        failures.push(format!(
+            "adaptive depth drain ({adaptive_s:.4}s) must beat the sequential \
+             engine ({static1_s:.4}s) under RTT-dominated uploads"
+        ));
+    }
+    if adaptive_s > best_static * 1.30 {
+        failures.push(format!(
+            "adaptive depth drain ({adaptive_s:.4}s) must be no slower than the best \
+             static depth ({best_static:.4}s, +30% learning slack)"
+        ));
+    }
+    if final_depth < 2 {
+        failures.push(format!(
+            "with {put_ms} ms/put RTT the controller must converge to a deep \
+             pipeline, not depth {final_depth}"
+        ));
+    }
+
     // Parallel sharded manifest load vs the serial baseline: the
     // checkpoint-fallback restart path. One multipart manifest (4 parts
     // per shard) against a latency-injected remote store; the parallel
@@ -540,6 +637,101 @@ fn main() {
              the serial baseline ({load_ser:.2} GB/s)"
         ));
     }
+
+    // Recovery control plane: the decision tree's predicted tier vs the
+    // tier recovery actually uses, across the three leaf classes — with
+    // one deliberately stale probe so the misprediction counter is
+    // provably wired. The counters land in the JSON report; CI publishes
+    // them as the advisory misprediction artifact.
+    println!("recovery control plane, predicted vs actual tier:");
+    let rp_topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let rp_metrics = Metrics::new();
+    // a stale legacy checkpoint behind the committed manifests, so the
+    // legacy leaf is reachable when the manifest tier refuses
+    {
+        let mut f = CheckpointFile::new("bench-engine", 1);
+        f.add_section(SectionKind::StagePayload, 0, payloads[0].as_slice().to_vec());
+        engine_store
+            .put(&step_key("bench-engine", 1), &f.encode())
+            .unwrap();
+    }
+    // (a) software failure: the tree predicts the in-memory fabric, and
+    // the fabric serves
+    let plan = RecoveryPlan::probe(&rp_topo, &[], true, engine_store.as_ref(), "bench-engine");
+    plan.record_predicted(&rp_metrics);
+    assert_eq!(plan.predicted(), Some(RecoveryPath::InMemory));
+    assert!(cluster_p.restore_all(&[]).is_ok());
+    plan.record_actual(&rp_metrics, RecoveryPath::InMemory);
+    // (b) protection exceeded: the manifest tier predicted up front — and
+    // the resolver serves exactly that tier
+    cluster_p.kill_node(1);
+    cluster_p.kill_node(2);
+    let plan =
+        RecoveryPlan::probe(&rp_topo, &[1, 2], true, engine_store.as_ref(), "bench-engine");
+    plan.record_predicted(&rp_metrics);
+    assert_eq!(plan.predicted(), Some(RecoveryPath::Durable(DurableTier::Manifest)));
+    let legacy_key = engine_store.latest_for("bench-engine");
+    assert!(
+        persist::resolve_for_recovery(
+            engine_store.as_ref(),
+            "bench-engine",
+            1,
+            legacy_key.as_deref()
+        )
+        .is_some(),
+        "committed manifests must serve the predicted tier"
+    );
+    plan.record_actual(&rp_metrics, RecoveryPath::Durable(DurableTier::Manifest));
+    // (c) stale probe: the shards rot AFTER the plan is made; the loader
+    // refuses every manifest, crosses to legacy, and the counter says why
+    let plan =
+        RecoveryPlan::probe(&rp_topo, &[1, 2], true, engine_store.as_ref(), "bench-engine");
+    plan.record_predicted(&rp_metrics);
+    for step in persist::persisted_steps(engine_store.as_ref(), "bench-engine") {
+        let man = persist::PersistManifest::decode(
+            &engine_store
+                .get(&persist::manifest_key("bench-engine", step))
+                .unwrap(),
+        )
+        .unwrap();
+        for sh in &man.shards {
+            if sh.parts.is_empty() {
+                engine_store.put(&sh.key, &vec![0xEE; sh.len as usize]).unwrap();
+            } else {
+                for p in &sh.parts {
+                    engine_store.put(&p.key, &vec![0xEE; p.len as usize]).unwrap();
+                }
+            }
+        }
+    }
+    let legacy_key = engine_store.latest_for("bench-engine");
+    assert!(
+        persist::resolve_for_recovery(
+            engine_store.as_ref(),
+            "bench-engine",
+            1,
+            legacy_key.as_deref()
+        )
+        .is_none(),
+        "rotted shards must refuse the manifest tier"
+    );
+    plan.record_actual(&rp_metrics, RecoveryPath::Durable(DurableTier::Legacy));
+    let plans = rp_metrics.counter("recovery_plans");
+    let mispredicted = rp_metrics.counter("recovery_mispredictions");
+    assert_eq!((plans, mispredicted), (3, 1), "exactly the stale probe mispredicts");
+    println!(
+        "  {plans} plans: inmemory {} / manifest {} / legacy {}  -> mispredictions {mispredicted}\n",
+        rp_metrics.counter("recovery_predicted_inmemory"),
+        rp_metrics.counter("recovery_predicted_manifest"),
+        rp_metrics.counter("recovery_predicted_legacy"),
+    );
+    rec(&mut report, "recovery_plan", vec![
+        ("plans", plans as f64),
+        ("predicted_inmemory", rp_metrics.counter("recovery_predicted_inmemory") as f64),
+        ("predicted_manifest", rp_metrics.counter("recovery_predicted_manifest") as f64),
+        ("predicted_legacy", rp_metrics.counter("recovery_predicted_legacy") as f64),
+        ("mispredictions", mispredicted as f64),
+    ]);
 
     // PJRT dispatch overhead (needs artifacts)
     if std::path::Path::new("artifacts/tiny/manifest.json").exists() {

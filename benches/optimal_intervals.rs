@@ -3,7 +3,11 @@
 //! comparison (Eq. 4) showing why high-frequency cheap snapshots beat
 //! low-frequency expensive checkpoints.
 
+use reft::config::{FtConfig, FtMethod};
+use reft::persist::{IntervalScheduler, SnapshotScheduler};
 use reft::reliability::intervals::{self, reft_fail_rate, save_overhead};
+use reft::snapshot::{cost, SnapshotPlan};
+use reft::topology::{ParallelPlan, Topology};
 use reft::util::human_secs;
 
 fn main() {
@@ -77,4 +81,43 @@ fn main() {
         let r = reft_fail_rate(1e-4, n);
         println!("{n:<6} {r:>14.3e} {:>11.0}x", 1e-4 / r);
     }
+
+    // the live control plane: both cadence schedulers, seeded with the
+    // cost MODEL (no measurements yet) and an observed failure storm —
+    // what the trainers run per step, in one table
+    println!("\n--- live schedulers (Eq. 9 + Eq. 11) under an observed failure storm ---");
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let plan = SnapshotPlan::build(&topo, &[6_000_000_000]);
+    let ft = FtConfig { method: FtMethod::ReftCkpt, raim5: true, ..FtConfig::default() };
+    let t_sn_model = cost::modeled_snapshot_secs(&topo, &plan, &ft, t_comp);
+    println!("modeled snapshot cost (Eq. 9 input): {}", human_secs(t_sn_model));
+    let mut sn = SnapshotScheduler::new(1e-4, 6, 5);
+    let mut ck = IntervalScheduler::new(1e-4, 6, 6, 100);
+    println!(
+        "below the event floor: snapshot holds static {} steps, persist derives from the knob",
+        sn.interval_steps()
+    );
+    for k in 0..12 {
+        // one node failure every 5 minutes of run time: the observed MLE is
+        // 11 / (3300 s x 6 nodes) ~ 5.6e-4 per node-second — several times
+        // hotter than the 1e-4 knob, so the empirical takeover visibly
+        // shortens both cadences
+        sn.note_failure_event(300.0 * k as f64);
+        ck.note_failure_event(300.0 * k as f64);
+    }
+    let sn_steps = sn.observe(t_sn_model, t_comp);
+    let ck_steps = ck.observe(t_ck, t_comp);
+    println!(
+        "observed λ/node {:.3e}: snapshot every {sn_steps} steps, persist every {ck_steps} steps",
+        sn.lambda_node()
+    );
+    assert!(sn.empirical_events() == 12 && sn_steps >= 1 && ck_steps >= 1);
+    assert!(
+        sn.lambda_node() > 1e-4,
+        "the storm must read hotter than the knob: {:.3e}",
+        sn.lambda_node()
+    );
+    // the derived snapshot cadence must be at least as eager as the
+    // persist cadence — the whole point of the two-tier split
+    assert!(sn_steps <= ck_steps, "snapshots must outpace persists: {sn_steps} vs {ck_steps}");
 }

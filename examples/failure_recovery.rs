@@ -9,7 +9,10 @@
 //! (No artifacts needed — this exercises the FT fabric directly.)
 
 use reft::config::FtConfig;
-use reft::elastic::{decide, DurableAvailability, DurableTier, NodeStatus, RecoveryDecision, ReftCluster};
+use reft::elastic::{
+    decide, DurableAvailability, DurableTier, NodeStatus, RecoveryDecision, RecoveryPath,
+    RecoveryPlan, ReftCluster,
+};
 use reft::snapshot::SharedPayload;
 use reft::topology::{ParallelPlan, Topology};
 use reft::util::human_bytes;
@@ -52,7 +55,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- scenario 1: software failure on node 2 --");
     let mut status = vec![NodeStatus::Healthy; 6];
     status[2] = NodeStatus::Unhealthy;
-    let d = decide(&topo, &status, true, DurableAvailability { manifest: false, legacy: true });
+    let d = decide(&topo, &status, true, DurableAvailability { legacy: true, legacy_step: Some(40), ..Default::default() });
     println!("decision: {d:?}");
     assert_eq!(d, RecoveryDecision::ResumeFromSmp);
     let restored = cluster.restore_all(&[])?;
@@ -63,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     println!("\n-- scenario 2: hardware failure, node 4 offline --");
     let mut status = vec![NodeStatus::Healthy; 6];
     status[4] = NodeStatus::Offline;
-    let d = decide(&topo, &status, true, DurableAvailability { manifest: false, legacy: true });
+    let d = decide(&topo, &status, true, DurableAvailability { legacy: true, legacy_step: Some(40), ..Default::default() });
     println!("decision: {d:?}");
     cluster.kill_node(4);
     let restored = cluster.restore_all(&[4])?;
@@ -78,7 +81,7 @@ fn main() -> anyhow::Result<()> {
     let mut status = vec![NodeStatus::Healthy; 6];
     status[0] = NodeStatus::Offline;
     status[3] = NodeStatus::Offline;
-    let d = decide(&topo, &status, true, DurableAvailability { manifest: false, legacy: true });
+    let d = decide(&topo, &status, true, DurableAvailability { legacy: true, legacy_step: Some(40), ..Default::default() });
     println!("decision: {d:?}");
     assert_eq!(d, RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy });
     cluster.kill_node(0);
@@ -97,7 +100,7 @@ fn main() -> anyhow::Result<()> {
             s
         },
         false,
-        DurableAvailability { manifest: false, legacy: true },
+        DurableAvailability { legacy: true, legacy_step: Some(40), ..Default::default() },
     );
     println!("decision: {d:?} (no parity -> must hit storage)");
     assert_eq!(d, RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy });
@@ -115,11 +118,51 @@ fn main() -> anyhow::Result<()> {
             s
         },
         true,
-        DurableAvailability { manifest: true, legacy: true },
+        DurableAvailability {
+            manifest: true,
+            legacy: true,
+            manifest_step: Some(60),
+            legacy_step: Some(40),
+        },
     );
     println!("decision: {d:?} (manifest tier preferred)");
     assert_eq!(d, RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest });
 
+    // scenario 6: the full control-plane flow the trainers run — probe the
+    // durable tiers, plan BEFORE any restore attempt, execute, and account
+    // predicted vs actual (the misprediction counter)
+    println!("\n-- scenario 6: RecoveryPlan — probe first, restore second --");
+    let storage = reft::checkpoint::MemStorage::new();
+    let metrics = reft::metrics::Metrics::new();
+    let plan = RecoveryPlan::probe(&topo, &[], true, &storage, "walkthrough");
+    plan.record_predicted(&metrics);
+    println!(
+        "software failure, empty store: decision {:?} -> predicted {:?}",
+        plan.decision,
+        plan.predicted()
+    );
+    assert_eq!(plan.predicted(), Some(RecoveryPath::InMemory));
+    let restored = cluster2_restore(&topo, &stage_bytes)?;
+    plan.record_actual(&metrics, RecoveryPath::InMemory);
+    println!(
+        "restored {} bytes from a fresh fabric; plans {} mispredictions {}",
+        restored,
+        metrics.counter("recovery_plans"),
+        metrics.counter("recovery_mispredictions"),
+    );
+    assert_eq!(metrics.counter("recovery_mispredictions"), 0);
+
     println!("\nall scenarios behaved per the paper's recovery tree ✓");
     Ok(())
+}
+
+/// A fresh protected fabric restored end to end — scenario 6's "actual"
+/// leg (the walkthrough cluster above has two nodes down by now).
+fn cluster2_restore(topo: &Topology, stage_bytes: &[u64]) -> anyhow::Result<usize> {
+    let mut cluster = ReftCluster::start(topo.clone(), stage_bytes, FtConfig::default())?;
+    let data = payloads(stage_bytes, 7);
+    cluster.snapshot_all(&data)?;
+    let restored = cluster.restore_all(&[])?;
+    anyhow::ensure!(restored == data, "scenario 6 restore diverged");
+    Ok(restored.iter().map(Vec::len).sum())
 }

@@ -61,6 +61,13 @@ fn main() -> anyhow::Result<()> {
         .get("persist")
         .map(|s| s == "true" || s == "1")
         .unwrap_or(true);
+    // `--auto-cadence true` turns the whole adaptive control plane on:
+    // Eq. 9 snapshot cadence, Eq. 11 persist cadence, adaptive pipeline
+    // depth. Off by default so the static knobs stay the baseline run.
+    let auto_cadence = flags
+        .get("auto-cadence")
+        .map(|s| s == "true" || s == "1")
+        .unwrap_or(false);
 
     let mut cfg = RunConfig::default();
     cfg.model = model.clone();
@@ -85,6 +92,10 @@ fn main() -> anyhow::Result<()> {
     cfg.ft.persist.keep_last = 3;
     cfg.ft.persist.pipeline_jobs = 2;
     cfg.ft.persist.multipart_part_bytes = 256 * 1024;
+    // the adaptive control plane (all three decision layers)
+    cfg.ft.auto_snapshot_interval = auto_cadence;
+    cfg.ft.persist.auto_interval = auto_cadence;
+    cfg.ft.persist.adaptive_depth = auto_cadence;
 
     // fresh checkpoint dir per run: a stale checkpoint from an earlier run
     // must never satisfy this run's fallback path
@@ -96,7 +107,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "model={model} steps={steps} plan=dp{dp}/pp{pp} ft=reft-ckpt \
          snapshot_every=5 persist_every=20 async_snapshot={async_on} \
-         persist_engine={persist_on}"
+         persist_engine={persist_on} auto_cadence={auto_cadence}"
     );
 
     // inject only after at least one snapshot round exists (interval 5)
@@ -194,6 +205,28 @@ fn main() -> anyhow::Result<()> {
                     put.mean() * 1e3
                 );
             }
+            // the adaptive control plane's run report: where each decision
+            // layer landed, and whether the recovery predictions held
+            println!(
+                "control plane: snapshot cadence {} steps (λ {:.2e}), persist cadence {} \
+                 steps, pipeline depth {}; recovery plans {} \
+                 (inmem {} / manifest {} / legacy {}) mispredictions {}",
+                $tr.metrics
+                    .gauge_value("snapshot_interval_steps")
+                    .unwrap_or(cfg.ft.snapshot_interval as f64),
+                $tr.metrics.gauge_value("snapshot_lambda_node").unwrap_or(0.0),
+                $tr.metrics
+                    .gauge_value("persist_interval_steps")
+                    .unwrap_or((cfg.ft.persist_every * cfg.ft.snapshot_interval) as f64),
+                $tr.metrics
+                    .gauge_value("persist_pipeline_depth")
+                    .unwrap_or(cfg.ft.persist.pipeline_jobs as f64),
+                $tr.metrics.counter("recovery_plans"),
+                $tr.metrics.counter("recovery_predicted_inmemory"),
+                $tr.metrics.counter("recovery_predicted_manifest"),
+                $tr.metrics.counter("recovery_predicted_legacy"),
+                $tr.metrics.counter("recovery_mispredictions"),
+            );
             format!("{}", $tr.metrics.to_json())
         }};
     }

@@ -90,6 +90,10 @@ pub struct PersistConfig {
     /// this land as `part-{k}` objects with per-part CRCs, so a crashed
     /// upload resumes from the last durable part (0 disables multipart)
     pub multipart_part_bytes: usize,
+    /// let the engine tune its own pipeline depth between 1 and
+    /// `pipeline_jobs` from the EWMA of observed storage RTT vs SMP fetch
+    /// time (off = the static `pipeline_jobs` depth, the baseline)
+    pub adaptive_depth: bool,
 }
 
 impl Default for PersistConfig {
@@ -104,6 +108,7 @@ impl Default for PersistConfig {
             lambda_node: 1e-4,
             pipeline_jobs: 2,
             multipart_part_bytes: 8 * 1024 * 1024,
+            adaptive_depth: false,
         }
     }
 }
@@ -132,6 +137,11 @@ pub struct FtConfig {
     /// `drain_buckets_per_tick * bucket_bytes` is the per-node PCIe budget
     /// one training iteration donates to snapshot traffic.
     pub drain_buckets_per_tick: usize,
+    /// derive the in-memory snapshot cadence live from Eq. 9 (measured
+    /// snapshot cost x rolling empirical λ) instead of the static
+    /// `snapshot_interval` knob; below the empirical event floor the
+    /// static interval still holds
+    pub auto_snapshot_interval: bool,
     /// durable-tier persistence engine (REFT-Ckpt background drain)
     pub persist: PersistConfig,
 }
@@ -147,6 +157,7 @@ impl Default for FtConfig {
             clean_copies: 1,
             async_snapshot: false,
             drain_buckets_per_tick: 8,
+            auto_snapshot_interval: false,
             persist: PersistConfig::default(),
         }
     }
@@ -255,6 +266,9 @@ impl RunConfig {
             if let Some(n) = ft.get("drain_buckets_per_tick").and_then(Json::as_usize) {
                 c.ft.drain_buckets_per_tick = n.max(1);
             }
+            if let Some(b) = ft.get("auto_snapshot_interval").and_then(Json::as_bool) {
+                c.ft.auto_snapshot_interval = b;
+            }
             if let Some(p) = ft.get("persist") {
                 if let Some(b) = p.get("enabled").and_then(Json::as_bool) {
                     c.ft.persist.enabled = b;
@@ -285,6 +299,9 @@ impl RunConfig {
                     // typo cannot explode a shard into millions of parts
                     c.ft.persist.multipart_part_bytes =
                         if n == 0 { 0 } else { n.max(4096) };
+                }
+                if let Some(b) = p.get("adaptive_depth").and_then(Json::as_bool) {
+                    c.ft.persist.adaptive_depth = b;
                 }
             }
         }
@@ -353,10 +370,14 @@ mod tests {
                                "keep_last": 3, "keep_every": 100,
                                "auto_interval": true, "lambda_node": 0.001,
                                "pipeline_jobs": 3,
-                               "multipart_part_bytes": 1048576}}
+                               "multipart_part_bytes": 1048576,
+                               "adaptive_depth": true},
+                   "auto_snapshot_interval": true}
         }"#;
         let c = RunConfig::from_json_text(text).unwrap();
         assert!(c.ft.persist.enabled);
+        assert!(c.ft.persist.adaptive_depth);
+        assert!(c.ft.auto_snapshot_interval);
         assert_eq!(c.ft.persist.throttle_bytes_per_sec, 1 << 20);
         assert_eq!(c.ft.persist.chunk_bytes, 64 * 1024);
         assert_eq!(c.ft.persist.keep_last, 3);
@@ -365,11 +386,13 @@ mod tests {
         assert!((c.ft.persist.lambda_node - 1e-3).abs() < 1e-12);
         assert_eq!(c.ft.persist.pipeline_jobs, 3);
         assert_eq!(c.ft.persist.multipart_part_bytes, 1 << 20);
-        // defaults: engine off, retention floors
+        // defaults: engine off, retention floors, control plane static
         let d = RunConfig::default();
         assert!(!d.ft.persist.enabled);
         assert!(d.ft.persist.keep_last >= 1);
         assert!(d.ft.persist.pipeline_jobs >= 1);
+        assert!(!d.ft.persist.adaptive_depth);
+        assert!(!d.ft.auto_snapshot_interval);
         let z = RunConfig::from_json_text(r#"{"ft": {"persist": {"keep_last": 0}}}"#).unwrap();
         assert_eq!(z.ft.persist.keep_last, 1);
         // pipeline depth floors at 1 (sequential); multipart 0 = disabled,

@@ -22,6 +22,7 @@ pub mod controller;
 pub use controller::ReftCluster;
 
 use crate::checkpoint::Storage;
+use crate::metrics::Metrics;
 use crate::topology::Topology;
 
 /// Per-node rendezvous status.
@@ -49,10 +50,17 @@ pub enum DurableTier {
 /// use rather than a tier-blind "a checkpoint exists".
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct DurableAvailability {
-    /// at least one committed persistence manifest exists for the model
+    /// at least one committed, *decodable* persistence manifest exists for
+    /// the model (a torn or garbage manifest blob does not count — it could
+    /// never serve a recovery)
     pub manifest: bool,
     /// at least one legacy inline checkpoint exists for the model
     pub legacy: bool,
+    /// the step whose state the newest decodable manifest actually
+    /// contains (`snapshot_step`) — the cross-tier tie-break input
+    pub manifest_step: Option<u64>,
+    /// the step of the newest legacy inline checkpoint
+    pub legacy_step: Option<u64>,
 }
 
 impl DurableAvailability {
@@ -64,28 +72,51 @@ impl DurableAvailability {
         self.manifest || self.legacy
     }
 
-    /// Probe a storage tier for `model`. Listing-only — neither tier's
-    /// payload is fetched or verified here; the loader still degrades to
-    /// older manifests or across tiers if the newest turns out corrupt.
+    /// Probe the durable tiers for `model`. Metadata-only on the payload
+    /// side — no shard bytes are fetched or CRC-verified — but the newest
+    /// manifests ARE decoded (small JSON documents) so a torn manifest
+    /// cannot masquerade as an available tier, and so the tie-break can
+    /// compare the *contained* steps the way the loader will. The loader
+    /// still degrades to older manifests or across tiers if shards turn
+    /// out corrupt.
     pub fn probe(storage: &dyn Storage, model: &str) -> DurableAvailability {
+        let mut manifest_step = None;
+        for step in crate::persist::persisted_steps(storage, model).into_iter().rev() {
+            let decoded = storage
+                .get(&crate::persist::manifest_key(model, step))
+                .ok()
+                .and_then(|b| crate::persist::PersistManifest::decode(&b).ok());
+            if let Some(man) = decoded {
+                manifest_step = Some(man.snapshot_step);
+                break;
+            }
+        }
+        let legacy_key = storage.latest_for(model);
+        let legacy_step = legacy_key
+            .as_deref()
+            .and_then(|k| crate::persist::step_of_key(k, &format!("{model}/step-")));
         DurableAvailability {
-            manifest: !crate::persist::persisted_steps(storage, model).is_empty(),
-            legacy: storage.latest_for(model).is_some(),
+            manifest: manifest_step.is_some(),
+            legacy: legacy_key.is_some(),
+            manifest_step,
+            legacy_step,
         }
     }
 
-    /// The tier a checkpoint fallback would serve from: the manifest tier
-    /// when a committed manifest exists (atomic, shard-verified, parallel
-    /// load), else the legacy tier. The actual loader may still cross
-    /// tiers when the legacy checkpoint holds strictly newer state
-    /// (`persist::resolve_for_recovery`'s tie-break).
-    fn preferred_tier(&self) -> Option<DurableTier> {
-        if self.manifest {
-            Some(DurableTier::Manifest)
-        } else if self.legacy {
-            Some(DurableTier::Legacy)
-        } else {
-            None
+    /// The tier a checkpoint fallback would serve from, mirroring
+    /// `persist::resolve_for_recovery`'s cross-tier tie-break: the manifest
+    /// tier (atomic, shard-verified, parallel load) unless the legacy
+    /// inline checkpoint holds strictly newer state than the manifest's
+    /// contained `snapshot_step`.
+    pub fn preferred_tier(&self) -> Option<DurableTier> {
+        match (self.manifest, self.legacy) {
+            (true, true) => match (self.manifest_step, self.legacy_step) {
+                (Some(m), Some(l)) if l > m => Some(DurableTier::Legacy),
+                _ => Some(DurableTier::Manifest),
+            },
+            (true, false) => Some(DurableTier::Manifest),
+            (false, true) => Some(DurableTier::Legacy),
+            (false, false) => None,
         }
     }
 }
@@ -164,6 +195,92 @@ pub fn decide(
     RecoveryDecision::DecodeRaim5 { lost }
 }
 
+/// Where a recovery actually got its bytes from — the "actual" side of the
+/// control plane's predicted-vs-actual telemetry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPath {
+    /// SMP restore / RAIM5 decode — no storage touched
+    InMemory,
+    /// the durable tier, naming which one served
+    Durable(DurableTier),
+}
+
+/// The decision-tree output the trainers compute **before** any restore
+/// attempt (ROADMAP: recovery used to try-restore then fall back): the
+/// probed durable availability plus the pure [`decide`] verdict, with
+/// telemetry hooks recording the predicted tier and counting mispredictions
+/// against the tier recovery actually used.
+#[derive(Debug, Clone)]
+pub struct RecoveryPlan {
+    pub decision: RecoveryDecision,
+    pub durable: DurableAvailability,
+}
+
+impl RecoveryPlan {
+    /// Probe the durable tiers and run the decision tree for a trainer
+    /// recovery: `dead` nodes are OFFLINE, every survivor is UNHEALTHY
+    /// (failure injection collapses training cluster-wide — recovery is
+    /// only ever called with training down).
+    pub fn probe(
+        topo: &Topology,
+        dead: &[usize],
+        raim5: bool,
+        storage: &dyn Storage,
+        model: &str,
+    ) -> RecoveryPlan {
+        let durable = DurableAvailability::probe(storage, model);
+        let mut status = vec![NodeStatus::Unhealthy; topo.nodes];
+        for &n in dead {
+            if n < status.len() {
+                status[n] = NodeStatus::Offline;
+            }
+        }
+        RecoveryPlan { decision: decide(topo, &status, raim5, durable), durable }
+    }
+
+    /// A plan for a run with no in-memory fabric at all (non-REFT methods):
+    /// the durable tier is the only option, so the tree degenerates to the
+    /// fallback leaf.
+    pub fn durable_only(storage: &dyn Storage, model: &str) -> RecoveryPlan {
+        let durable = DurableAvailability::probe(storage, model);
+        RecoveryPlan { decision: durable_fallback(durable), durable }
+    }
+
+    /// The path this plan predicts recovery will take; `None` means the
+    /// tree bottomed out (nothing in memory, nothing durable).
+    pub fn predicted(&self) -> Option<RecoveryPath> {
+        match &self.decision {
+            RecoveryDecision::None
+            | RecoveryDecision::ResumeFromSmp
+            | RecoveryDecision::DecodeRaim5 { .. } => Some(RecoveryPath::InMemory),
+            RecoveryDecision::LoadCheckpoint { tier } => Some(RecoveryPath::Durable(*tier)),
+            RecoveryDecision::Fatal => None,
+        }
+    }
+
+    /// Record the prediction (`recovery_predicted_*` counters).
+    pub fn record_predicted(&self, metrics: &Metrics) {
+        metrics.inc("recovery_plans", 1);
+        let name = match self.predicted() {
+            Some(RecoveryPath::InMemory) => "recovery_predicted_inmemory",
+            Some(RecoveryPath::Durable(DurableTier::Manifest)) => "recovery_predicted_manifest",
+            Some(RecoveryPath::Durable(DurableTier::Legacy)) => "recovery_predicted_legacy",
+            None => "recovery_predicted_fatal",
+        };
+        metrics.inc(name, 1);
+    }
+
+    /// Record the path recovery actually took; a mismatch with the
+    /// prediction bumps `recovery_mispredictions` — the counter that says
+    /// the probe and the loader disagreed (stale probe, shard corruption
+    /// found at load time, shape-filtered manifest, ...).
+    pub fn record_actual(&self, metrics: &Metrics, actual: RecoveryPath) {
+        if self.predicted() != Some(actual) {
+            metrics.inc("recovery_mispredictions", 1);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,7 +293,37 @@ mod tests {
 
     /// Legacy-only durable tier — what every pre-engine run has.
     fn legacy_only() -> DurableAvailability {
-        DurableAvailability { manifest: false, legacy: true }
+        DurableAvailability { legacy: true, legacy_step: Some(1), ..Default::default() }
+    }
+
+    /// Both tiers present, manifest containing the newer state.
+    fn both_tiers() -> DurableAvailability {
+        DurableAvailability {
+            manifest: true,
+            legacy: true,
+            manifest_step: Some(10),
+            legacy_step: Some(5),
+        }
+    }
+
+    /// A minimal valid one-shard manifest whose blob decodes cleanly.
+    fn tiny_manifest(step: u64, snapshot_step: u64) -> crate::persist::PersistManifest {
+        crate::persist::PersistManifest {
+            model: "m".into(),
+            step,
+            version: 1,
+            snapshot_step,
+            stage_bytes: vec![4],
+            shards: vec![crate::persist::ShardEntry {
+                key: crate::persist::shard_key("m", step, 0, 0),
+                stage: 0,
+                node: 0,
+                offset: 0,
+                len: 4,
+                crc32: crc32fast::hash(&[7; 4]),
+                parts: vec![],
+            }],
+        }
     }
 
     #[test]
@@ -234,12 +381,33 @@ mod tests {
         s[3] = NodeStatus::Offline;
         // manifest tier preferred whenever a committed manifest exists
         assert_eq!(
-            decide(&t, &s, true, DurableAvailability { manifest: true, legacy: true }),
+            decide(&t, &s, true, both_tiers()),
             RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
         );
         assert_eq!(
-            decide(&t, &s, true, DurableAvailability { manifest: true, legacy: false }),
+            decide(
+                &t,
+                &s,
+                true,
+                DurableAvailability { manifest: true, manifest_step: Some(10), ..Default::default() }
+            ),
             RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
+        );
+        // ...unless the legacy inline checkpoint holds strictly newer state
+        // (the loader's cross-tier tie-break, mirrored in the prediction)
+        assert_eq!(
+            decide(
+                &t,
+                &s,
+                true,
+                DurableAvailability {
+                    manifest: true,
+                    legacy: true,
+                    manifest_step: Some(10),
+                    legacy_step: Some(11),
+                }
+            ),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy }
         );
         // legacy tier only when no manifest committed
         assert_eq!(
@@ -278,18 +446,96 @@ mod tests {
     #[test]
     fn probe_reports_each_tier_independently() {
         let s = MemStorage::new();
+        // empty store: nothing available, preferred tier is None
         assert_eq!(DurableAvailability::probe(&s, "m"), DurableAvailability::none());
         assert!(!DurableAvailability::probe(&s, "m").any());
+        assert_eq!(DurableAvailability::probe(&s, "m").preferred_tier(), None);
         // a legacy inline checkpoint lights the legacy tier only
         s.put(&step_key("m", 7), b"ckpt").unwrap();
         let d = DurableAvailability::probe(&s, "m");
-        assert_eq!(d, DurableAvailability { manifest: false, legacy: true });
-        // a committed manifest lights the manifest tier (and wins)
-        s.put(&crate::persist::manifest_key("m", 9), b"{}").unwrap();
+        assert_eq!((d.manifest, d.legacy, d.legacy_step), (false, true, Some(7)));
+        assert_eq!(d.preferred_tier(), Some(DurableTier::Legacy));
+        // a committed manifest lights the manifest tier (and wins while its
+        // contained state is at least as new)
+        s.put(&crate::persist::manifest_key("m", 9), &tiny_manifest(9, 9).encode())
+            .unwrap();
         let d = DurableAvailability::probe(&s, "m");
         assert!(d.manifest && d.legacy);
+        assert_eq!(d.manifest_step, Some(9));
         assert_eq!(d.preferred_tier(), Some(DurableTier::Manifest));
         // other models' artifacts don't bleed over
         assert_eq!(DurableAvailability::probe(&s, "other"), DurableAvailability::none());
+    }
+
+    #[test]
+    fn probe_skips_torn_manifests() {
+        let s = MemStorage::new();
+        // a torn/partial manifest blob (crash mid-put on a non-atomic
+        // backend, or bit rot) must not light the manifest tier...
+        s.put(&crate::persist::manifest_key("m", 9), b"{\"model\": \"m\"").unwrap();
+        let d = DurableAvailability::probe(&s, "m");
+        assert!(!d.manifest, "torn manifest counted as available");
+        assert_eq!(d.preferred_tier(), None);
+        // ...and with an older DECODABLE manifest behind it, the probe
+        // degrades to that one, exactly like the loader will
+        s.put(&crate::persist::manifest_key("m", 5), &tiny_manifest(5, 4).encode())
+            .unwrap();
+        let d = DurableAvailability::probe(&s, "m");
+        assert!(d.manifest);
+        assert_eq!(d.manifest_step, Some(4));
+    }
+
+    #[test]
+    fn probe_tie_break_tracks_contained_state_not_key_order() {
+        let s = MemStorage::new();
+        // manifest requested at step 40 but containing step-38 state
+        // (async drain lag); legacy checkpoint at 39 is strictly newer
+        s.put(&crate::persist::manifest_key("m", 40), &tiny_manifest(40, 38).encode())
+            .unwrap();
+        s.put(&step_key("m", 39), b"ckpt").unwrap();
+        let d = DurableAvailability::probe(&s, "m");
+        assert_eq!((d.manifest_step, d.legacy_step), (Some(38), Some(39)));
+        assert_eq!(d.preferred_tier(), Some(DurableTier::Legacy), "legacy holds newer state");
+        // vice versa: legacy at 37 -> the manifest tier serves
+        s.delete(&step_key("m", 39)).unwrap();
+        s.put(&step_key("m", 37), b"ckpt").unwrap();
+        let d = DurableAvailability::probe(&s, "m");
+        assert_eq!(d.preferred_tier(), Some(DurableTier::Manifest));
+    }
+
+    #[test]
+    fn recovery_plan_predicts_and_counts_mispredictions() {
+        let t = topo_2x4x3();
+        let s = MemStorage::new();
+        s.put(&crate::persist::manifest_key("m", 9), &tiny_manifest(9, 9).encode())
+            .unwrap();
+        // software failure (no dead nodes): in-memory predicted
+        let plan = RecoveryPlan::probe(&t, &[], true, &s, "m");
+        assert_eq!(plan.decision, RecoveryDecision::ResumeFromSmp);
+        assert_eq!(plan.predicted(), Some(RecoveryPath::InMemory));
+        // both nodes of SG0 dead: the manifest tier predicted up front
+        let plan = RecoveryPlan::probe(&t, &[0, 3], true, &s, "m");
+        assert_eq!(plan.predicted(), Some(RecoveryPath::Durable(DurableTier::Manifest)));
+        let m = Metrics::new();
+        plan.record_predicted(&m);
+        assert_eq!(m.counter("recovery_plans"), 1);
+        assert_eq!(m.counter("recovery_predicted_manifest"), 1);
+        // actual == predicted: no misprediction
+        plan.record_actual(&m, RecoveryPath::Durable(DurableTier::Manifest));
+        assert_eq!(m.counter("recovery_mispredictions"), 0);
+        // the loader crossed tiers (e.g. shards corrupt): counted
+        plan.record_actual(&m, RecoveryPath::Durable(DurableTier::Legacy));
+        assert_eq!(m.counter("recovery_mispredictions"), 1);
+        // no REFT fabric: the plan degenerates to the durable leaf
+        let plan = RecoveryPlan::durable_only(&s, "m");
+        assert_eq!(
+            plan.decision,
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
+        );
+        // nothing durable, protection exceeded: fatal predicted
+        let empty = MemStorage::new();
+        let plan = RecoveryPlan::probe(&t, &[0, 3], true, &empty, "m");
+        assert_eq!(plan.decision, RecoveryDecision::Fatal);
+        assert_eq!(plan.predicted(), None);
     }
 }

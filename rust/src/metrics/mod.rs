@@ -32,6 +32,9 @@ pub struct TimerStat {
     pub total: f64,
     pub min: f64,
     pub max: f64,
+    /// most recent sample — what live controllers (cadence schedulers)
+    /// read when they want the current cost rather than the run-long mean
+    pub last: f64,
 }
 
 impl TimerStat {
@@ -45,6 +48,7 @@ impl TimerStat {
         }
         self.count += 1;
         self.total += secs;
+        self.last = secs;
     }
 
     pub fn mean(&self) -> f64 {
@@ -199,6 +203,9 @@ mod tests {
         assert_eq!(t.mean(), 2.0);
         assert_eq!(t.min, 1.0);
         assert_eq!(t.max, 3.0);
+        assert_eq!(t.last, 3.0);
+        m.record_secs("op", 2.0);
+        assert_eq!(m.timer("op").last, 2.0, "last tracks the newest sample");
     }
 
     #[test]

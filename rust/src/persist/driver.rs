@@ -139,18 +139,27 @@ impl PersistDriver {
     /// measurement only changes when a new job lands. The steady-state
     /// per-step cost is one two-scalar mutex read.
     pub fn observe(&mut self, metrics: &Metrics) {
-        let Some(sched) = self.sched.as_mut() else {
-            return;
-        };
         let (commits, last_job_secs) = self.engine.commit_meta();
         if commits == 0 || commits == self.observed_commits {
             return;
         }
         self.observed_commits = commits;
+        // depth telemetry moves only when jobs report, so the per-commit
+        // cadence is exactly right for it — adaptive or not
+        metrics.gauge("persist_pipeline_depth", self.engine.pipeline_depth() as f64);
+        let Some(sched) = self.sched.as_mut() else {
+            return;
+        };
         let t_step = metrics.timer("step_wall").mean();
         let steps = sched.observe(last_job_secs, t_step);
         metrics.gauge("persist_interval_steps", steps as f64);
         metrics.gauge("persist_lambda_node", sched.lambda_node());
+    }
+
+    /// The engine's current pipeline depth (static unless
+    /// `persist.adaptive_depth` is on).
+    pub fn pipeline_depth(&self) -> usize {
+        self.engine.pipeline_depth()
     }
 
     /// Shutdown barrier: block until every enqueued job committed or

@@ -40,6 +40,7 @@
 //! shutdown (and tests): it barriers on the queue, not on any in-band step.
 
 use std::collections::{BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -53,7 +54,10 @@ use crate::smp::SmpMsg;
 use crate::snapshot::plan::NodeShard;
 use crate::snapshot::SnapshotPlan;
 
-use super::manifest::{manifest_key, part_key, shard_key, PartEntry, PersistManifest, ShardEntry};
+use super::manifest::{
+    manifest_key, part_key, part_meta_key, shard_key, PartEntry, PartProgress,
+    PersistManifest, ShardEntry,
+};
 use super::retention::{run_gc, RetentionPolicy};
 
 /// Bytes/sec pacing for one writer lane: reserving a transfer slot advances
@@ -148,6 +152,75 @@ impl NodeThrottles {
     }
 }
 
+/// EWMA smoothing for the depth controller's per-job observations.
+const DEPTH_EWMA_ALPHA: f64 = 0.4;
+
+/// Live pipeline-depth controller: each committed-or-aborted job reports
+/// how long its writers spent *waiting on SMP fetches* vs *uploading to
+/// storage*, and EWMAs of the two pick how many jobs may overlap their
+/// fetch/upload phase (1..=`persist.pipeline_jobs`).
+///
+/// The overlap a deeper pipeline buys is exactly "job N+1 fetches while job
+/// N's uploads sit in storage RTT", so the classic latency/throughput
+/// product applies: the ideal depth is `1 + round(upload / fetch)` — enough
+/// jobs in flight that fetch work fills the upload window. Depth starts at
+/// the configured maximum (optimistic: the static behaviour) and *shrinks*
+/// when uploads turn out too cheap for the extra concurrency to pay, so the
+/// adaptive engine is never slower than the static one while it learns.
+/// With `adaptive` off the controller pins the static depth — the baseline.
+#[derive(Debug)]
+pub struct DepthController {
+    adaptive: bool,
+    max: usize,
+    depth: AtomicUsize,
+    /// (fetch_s, upload_s) EWMAs; None until the first observation
+    ewma: Mutex<Option<(f64, f64)>>,
+}
+
+impl DepthController {
+    pub fn new(adaptive: bool, max: usize) -> DepthController {
+        let max = max.max(1);
+        DepthController {
+            adaptive,
+            max,
+            depth: AtomicUsize::new(max),
+            ewma: Mutex::new(None),
+        }
+    }
+
+    /// The number of jobs the dispatcher may currently keep in flight.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// One job's accumulated writer-side timings.
+    pub fn observe(&self, fetch_s: f64, upload_s: f64) {
+        if !self.adaptive || !(fetch_s.is_finite() && upload_s.is_finite()) {
+            return;
+        }
+        let mut g = self.ewma.lock().unwrap();
+        let (f, u) = match *g {
+            Some((pf, pu)) => (
+                DEPTH_EWMA_ALPHA * fetch_s + (1.0 - DEPTH_EWMA_ALPHA) * pf,
+                DEPTH_EWMA_ALPHA * upload_s + (1.0 - DEPTH_EWMA_ALPHA) * pu,
+            ),
+            None => (fetch_s, upload_s),
+        };
+        *g = Some((f, u));
+        let ideal = if f <= 0.0 {
+            // instantaneous fetches: uploads are all there is, overlap away
+            self.max
+        } else {
+            // rounded, not ceiled: an upload a fraction of the fetch time
+            // collapses to depth 1, one several times the fetch asks for
+            // that many extra jobs in flight
+            1 + (u / f).round() as usize
+        };
+        self.depth.store(ideal.clamp(1, self.max), Ordering::Relaxed);
+        drop(g);
+    }
+}
+
 /// Counters the trainers fold into their run metrics and the tests assert.
 #[derive(Debug, Clone, Default)]
 pub struct PersistStats {
@@ -232,6 +305,7 @@ struct EngineShared {
     throttles: NodeThrottles,
     stats: Arc<Mutex<PersistStats>>,
     gate: CommitGate,
+    depth: Arc<DepthController>,
 }
 
 /// Handle to the running engine thread. Dropping it drains the queue
@@ -240,6 +314,7 @@ pub struct PersistEngine {
     tx: Sender<EngineMsg>,
     handle: Option<JoinHandle<()>>,
     stats: Arc<Mutex<PersistStats>>,
+    depth: Arc<DepthController>,
 }
 
 impl PersistEngine {
@@ -251,13 +326,17 @@ impl PersistEngine {
     ) -> PersistEngine {
         let model = model.into();
         let stats = Arc::new(Mutex::new(PersistStats::default()));
+        let depth = Arc::new(DepthController::new(
+            cfg.adaptive_depth,
+            cfg.pipeline_jobs.max(1),
+        ));
         let (tx, rx): (Sender<EngineMsg>, Receiver<EngineMsg>) = channel();
         let thread_stats = Arc::clone(&stats);
+        let thread_depth = Arc::clone(&depth);
         let handle = std::thread::Builder::new()
             .name("persist-engine".into())
             .spawn(move || {
                 let nodes = plan.nodes();
-                let depth = cfg.pipeline_jobs.max(1);
                 let throttles = NodeThrottles::new(cfg.throttle_bytes_per_sec, nodes);
                 let shared = Arc::new(EngineShared {
                     model,
@@ -267,6 +346,7 @@ impl PersistEngine {
                     throttles,
                     stats: thread_stats,
                     gate: CommitGate::new(),
+                    depth: thread_depth,
                 });
                 let mut inflight: VecDeque<JoinHandle<()>> = VecDeque::new();
                 let mut seq = 0u64;
@@ -275,8 +355,10 @@ impl PersistEngine {
                         EngineMsg::Job { step, sources, version_steps } => {
                             seq += 1;
                             // bound the pipeline depth: retire the oldest
-                            // job before admitting a new one
-                            while inflight.len() >= depth {
+                            // job before admitting a new one. Re-read per
+                            // admission — the adaptive controller moves it
+                            // between jobs.
+                            while inflight.len() >= shared.depth.depth() {
                                 if let Some(h) = inflight.pop_front() {
                                     let _ = h.join();
                                 }
@@ -328,7 +410,13 @@ impl PersistEngine {
                 }
             })
             .expect("spawning persistence engine thread");
-        PersistEngine { tx, handle: Some(handle), stats }
+        PersistEngine { tx, handle: Some(handle), stats, depth }
+    }
+
+    /// The pipeline depth the dispatcher currently admits (static depth
+    /// unless `persist.adaptive_depth` is on).
+    pub fn pipeline_depth(&self) -> usize {
+        self.depth.depth()
     }
 
     /// Hand the engine a persist request and return immediately. The job
@@ -393,6 +481,11 @@ struct UploadAcc {
     waited: f64,
     parts_uploaded: u64,
     parts_reused: u64,
+    /// seconds this worker spent blocked on SMP fetches (GetClean recv)
+    fetch_s: f64,
+    /// seconds this worker spent in storage puts (throttle sleeps excluded
+    /// via `waited` — pacing is policy, not storage RTT)
+    upload_s: f64,
 }
 
 /// What one writer worker produced: the (fallible) served snapshot version
@@ -439,17 +532,21 @@ fn upload_shard(
             parts: Vec::new(),
         });
     }
+    // O(parts)-metadata resume: ONE sidecar read recovers the (len, crc)
+    // record of every part a crashed earlier attempt durably landed — no
+    // per-part byte read-back (the pre-sidecar engine re-fetched and
+    // re-hashed whole parts to prove them reusable)
+    let meta_key = part_meta_key(&shared.model, step, shard.stage, node);
+    let mut progress = PartProgress::load(storage, &meta_key);
     let mut parts = Vec::with_capacity(bytes.len().div_ceil(part_bytes));
     for (k, piece) in bytes.chunks(part_bytes).enumerate() {
         let pkey = part_key(&shared.model, step, shard.stage, node, k);
         let pcrc = crc32fast::hash(piece);
-        // resume check: `exists` is the cheap common-case miss; only a hit
-        // pays the read-back + hash to prove the durable part matches
-        let reusable = storage.exists(&pkey)
-            && storage
-                .get(&pkey)
-                .map(|old| old.len() == piece.len() && crc32fast::hash(&old) == pcrc)
-                .unwrap_or(false);
+        // reuse iff the sidecar proves a part with exactly these bytes was
+        // put (the record is written only AFTER the part put succeeds) and
+        // the object still exists — both metadata operations
+        let reusable =
+            progress.matches(k, piece.len() as u64, pcrc) && storage.exists(&pkey);
         if reusable {
             acc.parts_reused += 1;
         } else {
@@ -460,6 +557,12 @@ fn upload_shard(
                 .put(&pkey, piece)
                 .with_context(|| format!("uploading part `{pkey}`"))?;
             acc.parts_uploaded += 1;
+            // record the landed part before moving on: a crash between the
+            // part put and this sidecar put just re-uploads that one part
+            // on resume (conservative). Best-effort — the sidecar is an
+            // optimization, a failed metadata put must not abort the job.
+            progress.record(k, piece.len() as u64, pcrc);
+            let _ = storage.put(&meta_key, &progress.encode());
         }
         parts.push(PartEntry { key: pkey, len: piece.len() as u64, crc32: pcrc });
     }
@@ -520,13 +623,16 @@ fn write_node_inner(
             );
         }
         // Fig. 6 consistency: GetClean only ever serves promoted rounds, so
-        // the durable copy can never observe a torn snapshot
+        // the durable copy can never observe a torn snapshot. The blocked
+        // time feeds the adaptive depth controller's fetch-side EWMA.
+        let t_fetch = Instant::now();
         let (v, bytes) = rx
             .recv()
             .map_err(|_| anyhow::anyhow!("node {node}: SMP died mid-fetch"))?
             .with_context(|| {
                 format!("no clean snapshot for stage {} on node {node} yet", shard.stage)
             })?;
+        acc.fetch_s += t_fetch.elapsed().as_secs_f64();
         anyhow::ensure!(
             bytes.len() as u64 == shard.len(),
             "clean shard on node {node} is {} bytes, plan says {}",
@@ -540,7 +646,14 @@ fn write_node_inner(
             ),
             None => version = Some(v),
         }
+        let waited_before = acc.waited;
+        let t_upload = Instant::now();
         let entry = upload_shard(shared, step, shard, node, &bytes, acc)?;
+        // storage time net of this shard's throttle sleeps: pacing is
+        // policy, not RTT, and counting it would teach the controller to
+        // out-deepen its own bandwidth budget
+        acc.upload_s += (t_upload.elapsed().as_secs_f64() - (acc.waited - waited_before))
+            .max(0.0);
         total += bytes.len() as u64;
         entries.push(entry);
     }
@@ -585,11 +698,15 @@ fn run_job(
     let mut wait_s = 0f64;
     let mut parts_uploaded = 0u64;
     let mut parts_reused = 0u64;
+    let mut fetch_s = 0f64;
+    let mut upload_s = 0f64;
     let mut error: Option<String> = None;
     for w in results {
         wait_s += w.acc.waited;
         parts_uploaded += w.acc.parts_uploaded;
         parts_reused += w.acc.parts_reused;
+        fetch_s += w.acc.fetch_s;
+        upload_s += w.acc.upload_s;
         match w.outcome {
             Ok((v, es, bytes)) => {
                 versions.insert(v);
@@ -601,6 +718,12 @@ fn run_job(
     }
     if error.is_none() && versions.len() != 1 {
         error = Some(format!("snapshot version skew across nodes: {versions:?}"));
+    }
+    // feed the adaptive depth controller even from failing jobs: the bytes
+    // and the RTTs were real, and a storage brown-out is exactly when the
+    // upload EWMA should be learning
+    if fetch_s > 0.0 || upload_s > 0.0 {
+        shared.depth.observe(fetch_s, upload_s);
     }
 
     // -- phase B: the ordered commit turn ----------------------------------
@@ -754,5 +877,40 @@ mod tests {
     fn node_throttles_unknown_lane_is_unpaced() {
         let t = NodeThrottles::new(1 << 20, 2);
         assert_eq!(t.consume(99, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn depth_controller_pins_static_depth_when_disabled() {
+        let c = DepthController::new(false, 3);
+        assert_eq!(c.depth(), 3);
+        c.observe(10.0, 0.001); // would shrink to 1 if adaptive
+        assert_eq!(c.depth(), 3, "baseline behaviour must not move");
+        // the configured depth floors at 1
+        assert_eq!(DepthController::new(false, 0).depth(), 1);
+    }
+
+    #[test]
+    fn depth_controller_adapts_in_both_directions() {
+        let c = DepthController::new(true, 4);
+        // optimistic start: the static maximum
+        assert_eq!(c.depth(), 4);
+        // uploads dwarfed by fetches: no overlap to win -> shrink to the
+        // sequential engine as the EWMA settles
+        for _ in 0..8 {
+            c.observe(1.0, 0.001);
+        }
+        assert_eq!(c.depth(), 1, "cheap uploads need no deep pipeline");
+        // storage RTT dominates: grow back toward the max (clamped)
+        for _ in 0..8 {
+            c.observe(0.01, 5.0);
+        }
+        assert_eq!(c.depth(), 4, "RTT-bound uploads refill the pipeline");
+        // instantaneous fetches: the ratio degenerates -> max, not a panic
+        let c = DepthController::new(true, 3);
+        c.observe(0.0, 1.0);
+        assert_eq!(c.depth(), 3);
+        // non-finite observations are dropped
+        c.observe(f64::NAN, 1.0);
+        assert_eq!(c.depth(), 3);
     }
 }

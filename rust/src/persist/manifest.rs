@@ -50,6 +50,14 @@ pub fn part_key(model: &str, step: u64, stage: usize, node: usize, part: usize) 
     format!("{model}/persist/step-{step:012}/shard-{stage:03}-{node:03}/part-{part:05}")
 }
 
+/// Key of the multipart-progress sidecar of one shard: the `(len, crc)` of
+/// every part that has actually landed, maintained by the writer as parts
+/// upload, so a resumed attempt can verify durable parts with **O(parts)
+/// metadata reads** instead of reading every part's bytes back.
+pub fn part_meta_key(model: &str, step: u64, stage: usize, node: usize) -> String {
+    format!("{}/meta", shard_key(model, step, stage, node))
+}
+
 /// Prefix of every shard blob **and** part-object of `model` (the step
 /// digits follow).
 pub fn shard_prefix(model: &str) -> String {
@@ -107,14 +115,77 @@ pub struct ShardEntry {
 }
 
 impl ShardEntry {
-    /// Every storage key that may hold this shard's bytes. The single-blob
-    /// key is always included — deletes are idempotent, and an earlier
-    /// crashed attempt at the same step may have left a whole-blob upload
-    /// behind even when the committed layout is multipart (or vice versa).
+    /// Every storage key that may hold this shard's bytes or bookkeeping.
+    /// The single-blob key is always included — deletes are idempotent, and
+    /// an earlier crashed attempt at the same step may have left a
+    /// whole-blob upload behind even when the committed layout is multipart
+    /// (or vice versa) — as is the multipart-progress sidecar, so a retired
+    /// version takes its resume metadata with it.
     pub fn storage_keys(&self) -> Vec<String> {
-        let mut keys = vec![self.key.clone()];
+        let mut keys = vec![self.key.clone(), format!("{}/meta", self.key)];
         keys.extend(self.parts.iter().map(|p| p.key.clone()));
         keys
+    }
+}
+
+/// The multipart-progress sidecar body: part index → `(len, crc32)` of the
+/// parts that have durably landed for one shard upload. Written after each
+/// part put (a tiny JSON document), read once at the start of a resumed
+/// attempt. A part recorded here was put *before* the record — so a
+/// matching `(len, crc)` plus `exists()` proves the durable part holds
+/// exactly these bytes, with no read-back. Absent or torn sidecars degrade
+/// to "nothing reusable" (conservative re-upload), never to corruption.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PartProgress {
+    pub parts: std::collections::BTreeMap<usize, (u64, u32)>,
+}
+
+impl PartProgress {
+    pub fn encode(&self) -> Vec<u8> {
+        let parts = Json::Arr(
+            self.parts
+                .iter()
+                .map(|(&k, &(len, crc))| {
+                    Json::obj(vec![
+                        ("k", Json::from(k)),
+                        ("len", Json::num(len as f64)),
+                        ("crc32", Json::num(crc as f64)),
+                    ])
+                })
+                .collect(),
+        );
+        format!("{}\n", Json::obj(vec![("parts", parts)])).into_bytes()
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<PartProgress> {
+        let text = std::str::from_utf8(bytes).context("part sidecar is not utf-8")?;
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("part sidecar: {e}"))?;
+        let mut parts = std::collections::BTreeMap::new();
+        for p in j.req_arr("parts")? {
+            parts.insert(
+                p.req_usize("k")?,
+                (p.req_f64("len")? as u64, p.req_f64("crc32")? as u32),
+            );
+        }
+        Ok(PartProgress { parts })
+    }
+
+    /// Load the sidecar at `key`; absent or undecodable → empty progress.
+    pub fn load(storage: &dyn Storage, key: &str) -> PartProgress {
+        storage
+            .get(key)
+            .ok()
+            .and_then(|b| PartProgress::decode(&b).ok())
+            .unwrap_or_default()
+    }
+
+    /// Is part `k` durably landed with exactly these bytes?
+    pub fn matches(&self, k: usize, len: u64, crc: u32) -> bool {
+        self.parts.get(&k) == Some(&(len, crc))
+    }
+
+    pub fn record(&mut self, k: usize, len: u64, crc: u32) {
+        self.parts.insert(k, (len, crc));
     }
 }
 
@@ -611,14 +682,36 @@ mod tests {
     }
 
     #[test]
-    fn storage_keys_cover_blob_and_parts() {
+    fn storage_keys_cover_blob_parts_and_sidecar() {
         let s = MemStorage::new();
         let man = multipart_sample(&s);
-        assert_eq!(man.shards[0].storage_keys(), vec![man.shards[0].key.clone()]);
+        let keys = man.shards[0].storage_keys();
+        assert_eq!(keys, vec![
+            man.shards[0].key.clone(),
+            format!("{}/meta", man.shards[0].key),
+        ]);
         let keys = man.shards[1].storage_keys();
-        assert_eq!(keys.len(), 3);
+        assert_eq!(keys.len(), 4);
         assert!(keys.contains(&man.shards[1].key));
         assert!(keys.contains(&man.shards[1].parts[0].key));
+        assert!(keys.contains(&part_meta_key("m", 40, 0, 1)), "sidecar swept with its version");
+    }
+
+    #[test]
+    fn part_progress_roundtrip_and_conservative_load() {
+        let mut p = PartProgress::default();
+        p.record(0, 4096, 0xDEAD_BEEF);
+        p.record(3, 128, 7);
+        let back = PartProgress::decode(&p.encode()).unwrap();
+        assert_eq!(back, p);
+        assert!(back.matches(0, 4096, 0xDEAD_BEEF));
+        assert!(!back.matches(0, 4096, 1), "crc mismatch rejected");
+        assert!(!back.matches(1, 4096, 7), "unrecorded part rejected");
+        // absent or torn sidecars degrade to empty, never error
+        let s = MemStorage::new();
+        assert_eq!(PartProgress::load(&s, "missing"), PartProgress::default());
+        s.put("torn", b"{nope").unwrap();
+        assert_eq!(PartProgress::load(&s, "torn"), PartProgress::default());
     }
 
     #[test]

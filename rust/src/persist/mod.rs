@@ -21,10 +21,14 @@
 //!   loop is kept as the measured baseline/oracle).
 //! * [`retention`] — keep-last-K + keep-every-Nth GC of superseded versions
 //!   and orphaned shard blobs/part-objects.
-//! * [`scheduler`] — the live Appendix-A cadence: measured save overhead
-//!   and the failure rate — the static knob until enough *observed* hwsim
-//!   Weibull events accrue for a rolling empirical λ — pick the persist
-//!   interval instead of the static `persist_every` knob.
+//! * [`scheduler`] — the live Appendix-A cadences: measured save overhead
+//!   and the failure rate — the shared [`LambdaTracker`]'s static knob
+//!   until enough *observed* events accrue for a rolling empirical λ —
+//!   pick the persist interval (Eq. 11, [`IntervalScheduler`]) and the
+//!   in-memory snapshot interval (Eq. 9, [`SnapshotScheduler`], which
+//!   holds the static interval below the event floor) instead of the
+//!   static knobs. The engine's [`engine::DepthController`] closes the
+//!   third loop: pipeline depth from the fetch-vs-upload EWMA.
 //!
 //! [`Storage`]: crate::checkpoint::Storage
 
@@ -38,8 +42,9 @@ pub use driver::PersistDriver;
 pub use engine::{NodeThrottles, PersistEngine, PersistStats, Throttle};
 pub use manifest::{
     load_latest, load_manifest_payload, load_manifest_payload_serial, manifest_key,
-    manifest_prefix, part_key, persisted_steps, resolve_for_recovery, shard_key,
-    sweep_orphan_shards, PartEntry, PersistManifest, ShardEntry,
+    manifest_prefix, part_key, part_meta_key, persisted_steps, resolve_for_recovery,
+    shard_key, step_of_key, sweep_orphan_shards, PartEntry, PartProgress, PersistManifest,
+    ShardEntry,
 };
 pub use retention::{run_gc, GcReport, RetentionPolicy};
-pub use scheduler::IntervalScheduler;
+pub use scheduler::{IntervalScheduler, LambdaTracker, SnapshotScheduler, MIN_EMPIRICAL_EVENTS};

@@ -22,9 +22,12 @@
 //! cluster the run actually sees rather than the rate the operator guessed.
 
 use std::collections::VecDeque;
+use std::time::Instant;
 
 use crate::hwsim::failure::FailureSchedule;
-use crate::reliability::intervals::{optimal_interval, reft_ckpt_interval, save_overhead};
+use crate::reliability::intervals::{
+    optimal_interval, reft_ckpt_interval, reft_sn_interval, save_overhead,
+};
 
 /// Minimum observed failure events before the rolling empirical rate
 /// replaces the static `lambda_node` knob.
@@ -34,20 +37,90 @@ pub const MIN_EMPIRICAL_EVENTS: usize = 4;
 /// out, so a burst years of sim-time ago cannot dominate the rate forever.
 const EMPIRICAL_WINDOW: usize = 64;
 
-/// Live persist-cadence controller. Owned by the trainer; all methods run
-/// on the training thread and are O(1) (event ingestion amortized).
+/// The rolling empirical per-node failure rate, shared by every cadence
+/// scheduler in the control plane: a knob until enough observed events
+/// accrue, then the exponential-interarrival MLE over the event window.
+/// Feed ONE clock domain per tracker — wall or sim, never both.
 #[derive(Debug, Clone)]
-pub struct IntervalScheduler {
+pub struct LambdaTracker {
     /// static per-node failure rate (per second) — the operator's knob,
     /// used until enough live events accrue
-    lambda_knob: f64,
-    /// sharding-group size n (Eq. 7 exceedance input)
-    sg_size: usize,
+    knob: f64,
     /// cluster size the empirical rate normalizes over
     nodes: usize,
     /// observed failure-event times (seconds on the feeding clock),
     /// ascending, capped at [`EMPIRICAL_WINDOW`]
     events: VecDeque<f64>,
+}
+
+impl LambdaTracker {
+    pub fn new(knob: f64, nodes: usize) -> LambdaTracker {
+        LambdaTracker { knob, nodes: nodes.max(1), events: VecDeque::new() }
+    }
+
+    /// One observed failure event at `at_secs` on the feeding clock (any
+    /// node; the rate is normalized by the cluster size). Slightly
+    /// out-of-order deliveries are tolerated — the window is re-sorted so
+    /// the span math stays honest.
+    pub fn note_event(&mut self, at_secs: f64) {
+        if !at_secs.is_finite() {
+            return;
+        }
+        let out_of_order =
+            self.events.back().is_some_and(|&last| last > at_secs);
+        self.events.push_back(at_secs);
+        if out_of_order {
+            let mut v: Vec<f64> = self.events.drain(..).collect();
+            v.sort_by(f64::total_cmp);
+            self.events = v.into();
+        }
+        while self.events.len() > EMPIRICAL_WINDOW {
+            self.events.pop_front();
+        }
+    }
+
+    /// Bulk-feed a pre-drawn hwsim Weibull schedule: every event in
+    /// `(since, upto]` is ingested.
+    pub fn ingest_schedule(&mut self, schedule: &FailureSchedule, since: f64, upto: f64) {
+        for e in schedule.in_window(since, upto) {
+            self.note_event(e.at);
+        }
+    }
+
+    /// How many live failure events the rolling window currently holds.
+    pub fn events(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The rolling empirical rate, available only once
+    /// [`MIN_EMPIRICAL_EVENTS`] events accrued (k events spanning `t`
+    /// seconds across `nodes` nodes → the exponential-interarrival MLE
+    /// `(k-1) / (t * nodes)`).
+    pub fn empirical(&self) -> Option<f64> {
+        let k = self.events.len();
+        if k >= MIN_EMPIRICAL_EVENTS {
+            let span = self.events.back().unwrap() - self.events.front().unwrap();
+            if span > 0.0 {
+                return Some((k - 1) as f64 / (span * self.nodes as f64));
+            }
+        }
+        None
+    }
+
+    /// The rate driving interval math: the empirical rate when available,
+    /// else the knob.
+    pub fn lambda(&self) -> f64 {
+        self.empirical().unwrap_or(self.knob)
+    }
+}
+
+/// Live persist-cadence controller. Owned by the trainer; all methods run
+/// on the training thread and are O(1) (event ingestion amortized).
+#[derive(Debug, Clone)]
+pub struct IntervalScheduler {
+    lambda: LambdaTracker,
+    /// sharding-group size n (Eq. 7 exceedance input)
+    sg_size: usize,
     /// clamp bounds on the derived cadence, in steps
     min_steps: u64,
     max_steps: u64,
@@ -67,10 +140,8 @@ impl IntervalScheduler {
         fallback_steps: u64,
     ) -> IntervalScheduler {
         IntervalScheduler {
-            lambda_knob: lambda_node,
+            lambda: LambdaTracker::new(lambda_node, nodes),
             sg_size,
-            nodes: nodes.max(1),
-            events: VecDeque::new(),
             min_steps: 1,
             max_steps: 1_000_000,
             interval_steps: fallback_steps.max(1),
@@ -83,25 +154,9 @@ impl IntervalScheduler {
         self.interval_steps
     }
 
-    /// One observed failure event at `at_secs` on the feeding clock (any
-    /// node; the rate is normalized by the cluster size). Slightly
-    /// out-of-order deliveries are tolerated — the window is re-sorted so
-    /// the span math stays honest.
+    /// One observed failure event (see [`LambdaTracker::note_event`]).
     pub fn note_failure_event(&mut self, at_secs: f64) {
-        if !at_secs.is_finite() {
-            return;
-        }
-        let out_of_order =
-            self.events.back().is_some_and(|&last| last > at_secs);
-        self.events.push_back(at_secs);
-        if out_of_order {
-            let mut v: Vec<f64> = self.events.drain(..).collect();
-            v.sort_by(f64::total_cmp);
-            self.events = v.into();
-        }
-        while self.events.len() > EMPIRICAL_WINDOW {
-            self.events.pop_front();
-        }
+        self.lambda.note_event(at_secs);
     }
 
     /// Bulk-feed a pre-drawn hwsim Weibull schedule: every event in
@@ -113,30 +168,18 @@ impl IntervalScheduler {
         since: f64,
         upto: f64,
     ) {
-        for e in schedule.in_window(since, upto) {
-            self.note_failure_event(e.at);
-        }
+        self.lambda.ingest_schedule(schedule, since, upto);
     }
 
     /// How many live failure events the rolling window currently holds.
     pub fn empirical_events(&self) -> usize {
-        self.events.len()
+        self.lambda.events()
     }
 
     /// The per-node failure rate driving the interval math: the rolling
-    /// empirical rate once [`MIN_EMPIRICAL_EVENTS`] events accrued
-    /// (k events spanning `t` seconds across `nodes` nodes → the
-    /// exponential-interarrival MLE `(k-1) / (t * nodes)`), else the
-    /// static knob.
+    /// empirical rate once enough events accrued, else the static knob.
     pub fn lambda_node(&self) -> f64 {
-        let k = self.events.len();
-        if k >= MIN_EMPIRICAL_EVENTS {
-            let span = self.events.back().unwrap() - self.events.front().unwrap();
-            if span > 0.0 {
-                return (k - 1) as f64 / (span * self.nodes as f64);
-            }
-        }
-        self.lambda_knob
+        self.lambda.lambda()
     }
 
     /// Re-derive the cadence from measurements: `t_persist` is the wall
@@ -166,11 +209,131 @@ impl IntervalScheduler {
         self.interval_steps
     }
 
-    /// Cadence gate, called at each snapshot boundary on the training
-    /// thread. Marks the step as persisted when it fires.
+    /// Cadence gate, called every step on the training thread. Marks the
+    /// step as persisted when it fires. Self-healing under step rollback:
+    /// a recovery that restores an older checkpoint re-runs steps the gate
+    /// already marked, so a `last` ahead of the current step is clamped
+    /// back — otherwise the durable tier would go silent for the whole
+    /// re-done window plus one interval, exactly when a second failure is
+    /// most costly.
     pub fn should_persist(&mut self, step: u64) -> bool {
+        if self.last_persist_step > step {
+            self.last_persist_step = step;
+        }
         if step.saturating_sub(self.last_persist_step) >= self.interval_steps {
             self.last_persist_step = step;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Live *snapshot*-cadence controller (Eq. 9): the in-memory save interval
+/// derived from the measured snapshot cost and the rolling empirical λ —
+/// the second leg of the adaptive control plane, next to the persist-side
+/// [`IntervalScheduler`] (Eq. 11).
+///
+/// Deliberately more conservative than the persist scheduler about its
+/// failure-rate input: below the empirical event floor it holds the
+/// operator's **static snapshot interval** rather than deriving a cadence
+/// from the `lambda_node` knob — that knob was tuned for the durable tier's
+/// once-in-a-run exceedance math, and silently repurposing it here could
+/// swing the snapshot frequency by orders of magnitude on a guess. Only
+/// once the run has *observed* enough failures does Eq. 9 take over.
+#[derive(Debug, Clone)]
+pub struct SnapshotScheduler {
+    lambda: LambdaTracker,
+    /// the operator's `snapshot_interval` knob, held below the event floor
+    static_steps: u64,
+    min_steps: u64,
+    max_steps: u64,
+    interval_steps: u64,
+    last_snapshot_step: u64,
+    /// the wall clock [`SnapshotScheduler::note_failure`] stamps against
+    /// (sim-driven harnesses feed [`SnapshotScheduler::note_failure_event`]
+    /// directly instead — one clock domain per scheduler)
+    t0: Instant,
+}
+
+impl SnapshotScheduler {
+    pub fn new(lambda_node: f64, nodes: usize, static_steps: u64) -> SnapshotScheduler {
+        SnapshotScheduler {
+            lambda: LambdaTracker::new(lambda_node, nodes),
+            static_steps: static_steps.max(1),
+            min_steps: 1,
+            max_steps: 1_000_000,
+            interval_steps: static_steps.max(1),
+            last_snapshot_step: 0,
+            t0: Instant::now(),
+        }
+    }
+
+    /// Current cadence in steps (never zero).
+    pub fn interval_steps(&self) -> u64 {
+        self.interval_steps
+    }
+
+    /// One observed node failure, stamped on this scheduler's wall clock.
+    pub fn note_failure(&mut self) {
+        let at = self.t0.elapsed().as_secs_f64();
+        self.lambda.note_event(at);
+    }
+
+    /// One observed failure event on an external (e.g. sim) clock.
+    pub fn note_failure_event(&mut self, at_secs: f64) {
+        self.lambda.note_event(at_secs);
+    }
+
+    /// Bulk-feed a pre-drawn hwsim Weibull schedule (sim clock).
+    pub fn ingest_failure_schedule(
+        &mut self,
+        schedule: &FailureSchedule,
+        since: f64,
+        upto: f64,
+    ) {
+        self.lambda.ingest_schedule(schedule, since, upto);
+    }
+
+    pub fn empirical_events(&self) -> usize {
+        self.lambda.events()
+    }
+
+    pub fn lambda_node(&self) -> f64 {
+        self.lambda.lambda()
+    }
+
+    /// Re-derive the snapshot cadence from measurements: `t_snapshot` is
+    /// the per-round snapshot cost the training thread actually pays
+    /// (blocking round duration, or enqueue + amortized drain-tick time on
+    /// the async path), `t_step` one training iteration. Below the
+    /// empirical event floor this degrades to the static interval; above
+    /// it, Eq. 9 against the observed node rate. Never returns zero.
+    pub fn observe(&mut self, t_snapshot: f64, t_step: f64) -> u64 {
+        match self.lambda.empirical() {
+            Some(lam) if t_step > 0.0 && t_snapshot >= 0.0 && lam > 0.0 => {
+                let t_secs = reft_sn_interval(t_snapshot, t_step, lam);
+                self.interval_steps = if t_secs.is_finite() {
+                    ((t_secs / t_step).ceil() as u64).clamp(self.min_steps, self.max_steps)
+                } else {
+                    self.max_steps
+                };
+            }
+            _ => self.interval_steps = self.static_steps,
+        }
+        self.interval_steps
+    }
+
+    /// Cadence gate, called every step on the training thread. Marks the
+    /// step as snapshotted when it fires. Clamped under step rollback like
+    /// [`IntervalScheduler::should_persist`]: a recovery that rewinds the
+    /// step must not leave the fabric unprotected for the re-done window.
+    pub fn due(&mut self, step: u64) -> bool {
+        if self.last_snapshot_step > step {
+            self.last_snapshot_step = step;
+        }
+        if step.saturating_sub(self.last_snapshot_step) >= self.interval_steps {
+            self.last_snapshot_step = step;
             true
         } else {
             false
@@ -286,6 +449,73 @@ mod tests {
         // non-finite feeds are dropped, not poisoning the window
         s.note_failure_event(f64::NAN);
         assert_eq!(s.empirical_events(), 4);
+    }
+
+    #[test]
+    fn snapshot_cadence_holds_static_below_event_floor() {
+        let mut s = SnapshotScheduler::new(1e-3, 6, 5);
+        assert_eq!(s.interval_steps(), 5);
+        // a cost measurement with no observed failures must NOT repurpose
+        // the lambda knob — the static interval holds
+        assert_eq!(s.observe(0.5, 1.0), 5);
+        for t in [10.0, 20.0, 30.0] {
+            s.note_failure_event(t);
+        }
+        assert_eq!(s.observe(0.5, 1.0), 5, "3 events: still below the floor");
+        // the fourth event crosses the floor: Eq. 9 takes over
+        s.note_failure_event(40.0);
+        let derived = s.observe(5.0, 1.0);
+        assert!(derived >= 1);
+        // 3 renewals / (30 s * 6 nodes) = 1/60 per node-second;
+        // o = 4 s -> sqrt(2*4*60) ~ 21.9 s -> 22 steps at 1 s/step
+        assert_eq!(derived, 22, "Eq. 9 from the empirical rate");
+    }
+
+    #[test]
+    fn snapshot_cadence_gate_and_clamps() {
+        let mut s = SnapshotScheduler::new(1e-3, 4, 3);
+        assert!(!s.due(2));
+        assert!(s.due(3));
+        assert!(!s.due(4));
+        assert!(s.due(6));
+        // fully overlapped snapshot above the floor: epsilon overhead, the
+        // derived interval still floors at 1, never 0
+        for t in [1.0, 2.0, 3.0, 4.0] {
+            s.note_failure_event(t);
+        }
+        let steps = s.observe(0.0, 1.0);
+        assert!(steps >= 1, "{steps}");
+    }
+
+    #[test]
+    fn cadence_gates_self_heal_after_step_rollback() {
+        // recovery restored an old checkpoint: the trainer's step rewinds
+        // below the gate's high-water mark. The gate must clamp and keep
+        // its periodic cadence through the re-done window, not go silent
+        // for (rollback distance + interval) steps.
+        let mut p = IntervalScheduler::new(1e-4, 6, 6, 10);
+        assert!(p.should_persist(100));
+        assert!(!p.should_persist(21), "clamped to 21, interval not yet elapsed");
+        assert!(p.should_persist(31), "cadence resumes from the rolled-back step");
+        let mut s = SnapshotScheduler::new(1e-3, 6, 5);
+        assert!(s.due(50));
+        assert!(!s.due(8));
+        assert!(s.due(13), "snapshot cadence resumes inside the re-done window");
+    }
+
+    #[test]
+    fn snapshot_cadence_shortens_under_observed_failure_storm() {
+        // identical schedulers; one sees a storm -> its Eq. 9 interval must
+        // come in at or below the calm one's static fallback
+        let mut calm = SnapshotScheduler::new(1e-6, 6, 50);
+        let mut hot = SnapshotScheduler::new(1e-6, 6, 50);
+        for k in 0..16 {
+            hot.note_failure_event(5.0 * k as f64);
+        }
+        let calm_steps = calm.observe(2.0, 1.0); // static: below floor
+        let hot_steps = hot.observe(2.0, 1.0);
+        assert_eq!(calm_steps, 50);
+        assert!(hot_steps < calm_steps, "{hot_steps} vs {calm_steps}");
     }
 
     #[test]

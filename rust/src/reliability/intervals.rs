@@ -27,6 +27,20 @@ pub fn optimal_interval(o_save: f64, lambda_fail: f64) -> f64 {
     (2.0 * o_save / lambda_fail).sqrt()
 }
 
+/// Eq. 9: REFT's optimal *snapshot* interval — the cheap in-memory save
+/// amortizes against the raw per-node failure rate (any single node loss is
+/// served from memory, so every node failure is an event the snapshot tier
+/// must absorb). Fully overlapped snapshots clamp the overhead at an
+/// epsilon, which is the paper's "high-frequency cheap snapshots" regime:
+/// the optimum degenerates toward snapshotting every iteration.
+pub fn reft_sn_interval(t_sn: f64, t_comp: f64, lambda_node: f64) -> f64 {
+    if lambda_node <= 0.0 {
+        return f64::INFINITY;
+    }
+    let o = save_overhead(t_sn, t_comp).max(1e-6);
+    (2.0 * o / lambda_node).sqrt()
+}
+
 /// Eq. 7: the rate at which REFT's in-memory protection is exceeded
 /// (>= 2 nodes lost in an SG of n), given per-node failure prob `l` per unit
 /// time.
@@ -135,6 +149,17 @@ mod tests {
         // rate formula is consistent — with n=1, exceedance = 1-(1-l)-l = 0
         assert!(reft_fail_rate(0.01, 1).abs() < 1e-12);
         assert_eq!(reft_ckpt_interval(1.0, 2.0, 0.01, 1), f64::INFINITY);
+    }
+
+    #[test]
+    fn eq9_shape_and_degenerate_rate() {
+        // Eq. 9 follows the Young form against the RAW node rate
+        assert!((reft_sn_interval(1.5, 1.0, 0.01) - optimal_interval(0.5, 0.01)).abs() < 1e-12);
+        // fully overlapped snapshots degrade to the epsilon cap, not NaN/0
+        let t = reft_sn_interval(0.2, 1.0, 0.01);
+        assert!(t.is_finite() && t > 0.0);
+        // a dead rate means "never" rather than a division blow-up
+        assert_eq!(reft_sn_interval(2.0, 1.0, 0.0), f64::INFINITY);
     }
 
     #[test]

@@ -255,6 +255,22 @@ fn per_gpu_bytes(ctx: &SaveCtx, node: usize) -> Vec<u64> {
     per
 }
 
+/// Modeled REFT-Sn snapshot duration for a configuration, on a fresh
+/// hardware timeline: the Eq. 9 cost input for cadence schedulers that have
+/// no live measurement yet (benches, planning tools, the `intervals` CLI) —
+/// a run seeds `SnapshotScheduler::observe` with this and switches to the
+/// measured round cost as the metrics accrue.
+pub fn modeled_snapshot_secs(
+    topo: &Topology,
+    plan: &SnapshotPlan,
+    ft: &FtConfig,
+    iter_compute_secs: f64,
+) -> f64 {
+    let mut hw = ClusterHw::new(HwSpec::scaled(topo.nodes, topo.gpus_per_node));
+    let ctx = SaveCtx { topo, plan, ft, iter_compute_secs };
+    reft_cost(&mut hw, &ctx, false).total
+}
+
 /// Convenience: build everything for a DP-only config on the paper testbed
 /// shape and cost one save per method (used by benches and tests).
 pub fn compare_methods(
@@ -347,6 +363,21 @@ mod tests {
             costs.iter().map(|c| (c.method, c.stall)).collect();
         assert!(stall["reft-sn"] < stall["torchsnapshot"]);
         assert!(stall["torchsnapshot"] < stall["checkfreq"]);
+    }
+
+    #[test]
+    fn modeled_snapshot_cost_is_finite_and_method_consistent() {
+        let (topo, plan) = setup(6, 6, 1_000_000_000);
+        let ft = FtConfig { method: FtMethod::ReftSn, raim5: true, ..FtConfig::default() };
+        let t = modeled_snapshot_secs(&topo, &plan, &ft, 1.0);
+        assert!(t.is_finite() && t > 0.0);
+        // agrees with the full costing on a fresh timeline
+        let mut hw = ClusterHw::new(HwSpec::scaled(topo.nodes, topo.gpus_per_node));
+        let full = method_save_cost(
+            &mut hw,
+            &SaveCtx { topo: &topo, plan: &plan, ft: &ft, iter_compute_secs: 1.0 },
+        );
+        assert!((t - full.total).abs() < 1e-9, "{t} vs {}", full.total);
     }
 
     #[test]

@@ -13,10 +13,10 @@ use anyhow::{Context, Result};
 
 use crate::checkpoint::{storage::step_key, CheckpointFile, SectionKind, Storage};
 use crate::config::{FtMethod, RunConfig};
-use crate::elastic::ReftCluster;
+use crate::elastic::{DurableTier, RecoveryPath, RecoveryPlan, ReftCluster};
 use crate::metrics::Metrics;
 use crate::model::{StageState, SyntheticCorpus};
-use crate::persist::{self, PersistDriver, PersistStats};
+use crate::persist::{self, PersistDriver, PersistStats, SnapshotScheduler};
 use crate::runtime::{self, Engine, In, Manifest};
 use crate::snapshot::SharedPayload;
 use crate::topology::Topology;
@@ -47,6 +47,8 @@ pub struct DpTrainer {
     /// durable-tier driver: background drain engine + cadence + metric
     /// sync (REFT-Ckpt with `ft.persist.enabled`)
     persist: Option<PersistDriver>,
+    /// live Eq. 9 snapshot cadence (None = static `snapshot_interval`)
+    snap_sched: Option<SnapshotScheduler>,
 }
 
 impl DpTrainer {
@@ -98,6 +100,15 @@ impl DpTrainer {
             )),
             _ => None,
         };
+        // adaptive snapshot cadence (Eq. 9): live only for REFT methods —
+        // the baselines' checkpoint interval stays the static knob
+        let snap_sched = (reft.is_some() && cfg.ft.auto_snapshot_interval).then(|| {
+            SnapshotScheduler::new(
+                cfg.ft.persist.lambda_node,
+                cfg.nodes,
+                cfg.ft.snapshot_interval as u64,
+            )
+        });
         Ok(DpTrainer {
             cfg,
             topo,
@@ -112,6 +123,7 @@ impl DpTrainer {
             fwd_bwd_path,
             adam_path,
             persist,
+            snap_sched,
         })
     }
 
@@ -177,25 +189,19 @@ impl DpTrainer {
         // L2): a bounded bucket budget per node, never O(payload)
         self.tick_snapshot_backlog()?;
 
-        // fault-tolerance policy
+        // fault-tolerance policy. Snapshot cadence: the Eq. 9 scheduler
+        // when enabled (live cost x observed λ), else the static interval.
         let mut snapshotted = false;
         let mut checkpointed = false;
-        if self.state.step % self.cfg.ft.snapshot_interval as u64 == 0 {
+        let snap_due = match self.snap_sched.as_mut() {
+            Some(s) => s.due(self.state.step),
+            None => self.state.step % self.cfg.ft.snapshot_interval as u64 == 0,
+        };
+        if snap_due {
             match self.cfg.ft.method {
                 FtMethod::ReftSn | FtMethod::ReftCkpt => {
                     self.snapshot()?;
                     snapshotted = true;
-                    let persist = self.cfg.ft.persist_every as u64
-                        * self.cfg.ft.snapshot_interval as u64;
-                    // cadence: the driver's live Appendix-A scheduler when
-                    // enabled, else the static persist_every product
-                    let due = match self.persist.as_mut() {
-                        Some(d) => d.due(self.state.step, persist),
-                        None => self.state.step % persist == 0,
-                    };
-                    if self.cfg.ft.method == FtMethod::ReftCkpt && due {
-                        checkpointed = self.persist_now()?;
-                    }
                 }
                 FtMethod::CheckFreq | FtMethod::TorchSnapshot => {
                     // baselines go straight to storage every interval
@@ -205,6 +211,28 @@ impl DpTrainer {
                 FtMethod::None => {}
             }
         }
+        // Durable-persist cadence, evaluated EVERY step: with the Eq. 9
+        // snapshot scheduler the snapshot steps are no longer multiples of
+        // `snapshot_interval`, so gating this inside the snapshot branch
+        // would let the static `step % persist` product misfire or never
+        // fire. The engine drains the latest *promoted* round regardless of
+        // the current step, so persisting off a snapshot boundary is sound;
+        // it just needs one snapshot to have ever completed.
+        if self.cfg.ft.method == FtMethod::ReftCkpt
+            && self.metrics.counter("snapshots") > 0
+        {
+            let persist = self.cfg.ft.persist_every as u64
+                * self.cfg.ft.snapshot_interval as u64;
+            // cadence: the driver's live Appendix-A scheduler when
+            // enabled, else the static persist_every product
+            let due = match self.persist.as_mut() {
+                Some(d) => d.due(self.state.step, persist),
+                None => self.state.step % persist == 0,
+            };
+            if due {
+                checkpointed = self.persist_now()?;
+            }
+        }
 
         // live cadence re-derivation from this run's measured costs
         self.metrics.record_secs("step_wall", t_step0.elapsed().as_secs_f64());
@@ -212,7 +240,27 @@ impl DpTrainer {
         if let Some(d) = self.persist.as_mut() {
             d.observe(&metrics);
         }
+        self.observe_snapshot_cadence(&metrics);
         Ok(StepReport { step: self.state.step, loss, snapshotted, checkpointed })
+    }
+
+    /// Feed the Eq. 9 snapshot scheduler the cost the training thread
+    /// actually pays per round: the blocking round duration, or on the
+    /// async path the L1 enqueue plus the drain-tick time amortized per
+    /// round. A no-op before the first snapshot or with the static cadence.
+    fn observe_snapshot_cadence(&mut self, metrics: &Metrics) {
+        let Some(sched) = self.snap_sched.as_mut() else {
+            return;
+        };
+        let snap = metrics.timer("snapshot");
+        if snap.count == 0 {
+            return;
+        }
+        let tick = metrics.timer("snapshot_tick");
+        let t_sn = snap.mean() + tick.total / snap.count as f64;
+        let steps = sched.observe(t_sn, metrics.timer("step_wall").mean());
+        metrics.gauge("snapshot_interval_steps", steps as f64);
+        metrics.gauge("snapshot_lambda_node", sched.lambda_node());
     }
 
     pub fn run(&mut self, steps: usize) -> Result<Vec<f32>> {
@@ -367,63 +415,67 @@ impl DpTrainer {
         if let Some(d) = self.persist.as_mut() {
             d.note_failure();
         }
+        // the same event feeds the Eq. 9 snapshot cadence's rolling λ
+        if let Some(s) = self.snap_sched.as_mut() {
+            s.note_failure();
+        }
         self.metrics.inc("failures_hardware", 1);
     }
 
-    /// Recover from SMPs (decoding via RAIM5 if `dead` nodes are listed),
-    /// falling back to the latest checkpoint when in-memory recovery is
-    /// impossible. Returns the step we resumed from.
+    /// Recover from the failure described by `dead`, driven by the elastic
+    /// decision tree **up front**: `DurableAvailability::probe` plus the
+    /// in-memory protection state produce a [`RecoveryPlan`] *before* any
+    /// restore attempt — an in-memory restore is only tried when the tree
+    /// predicts it can serve, and a protection-exceeded plan goes straight
+    /// to its named durable tier. Metrics record the predicted tier vs the
+    /// tier actually used (`recovery_predicted_*` / `recoveries_*`,
+    /// mismatches under `recovery_mispredictions`). Returns the step we
+    /// resumed from.
     pub fn recover(&mut self, dead: &[usize]) -> Result<u64> {
-        let n_params = self.manifest.total_params;
-        let restored: Result<Vec<Vec<u8>>> = self
-            .reft
-            .as_ref()
-            .context("REFT not enabled")
-            .and_then(|r| r.restore_all(dead));
-        match restored {
-            Ok(payloads) => {
-                self.state = StageState::from_payload(0, n_params, &payloads[0])?;
-                self.metrics.inc("recoveries_inmemory", 1);
-            }
-            Err(e) => {
-                // in-memory protection exceeded (elastic decision tree
-                // case 3) -> the durable tier. The shared resolver picks
-                // the newest *complete*, shape-compatible persist manifest
-                // (atomic commit: partial uploads are invisible; a
-                // different-layout manifest degrades instead of aborting)
-                // unless the legacy inline checkpoint holds newer state.
-                let legacy_key = self.storage.latest_for(&self.cfg.model);
-                if let Some((man, stages)) = persist::resolve_for_recovery(
-                    self.storage.as_ref(),
-                    &self.cfg.model,
-                    1,
-                    legacy_key.as_deref(),
-                ) {
-                    self.state = StageState::from_payload(0, n_params, &stages[0])?;
-                    // durable-tier telemetry: the decision tree's
-                    // `LoadCheckpoint { tier: Manifest }` case, live
-                    self.metrics.inc("recoveries_checkpoint", 1);
-                    self.metrics.inc("recoveries_manifest", 1);
-                    self.metrics
-                        .gauge("recovered_manifest_step", man.snapshot_step as f64);
-                } else {
-                    // legacy checkpoint of THIS model — a shared store may
-                    // hold other models' steps
-                    let key = legacy_key.with_context(|| {
-                        format!("in-memory recovery failed ({e}) and no durable checkpoint exists")
-                    })?;
-                    let bytes = self.storage.get(&key)?;
-                    let file = CheckpointFile::decode(&bytes)?;
-                    let payload = file
-                        .stage_payload(0)
-                        .context("checkpoint missing stage payload")?;
-                    self.state = StageState::from_payload(0, n_params, payload)?;
-                    // `LoadCheckpoint { tier: Legacy }`: no manifest served
-                    self.metrics.inc("recoveries_checkpoint", 1);
-                    self.metrics.inc("recoveries_legacy", 1);
-                }
-            }
-        }
+        let plan = match &self.reft {
+            Some(_) => RecoveryPlan::probe(
+                &self.topo,
+                dead,
+                self.cfg.ft.raim5,
+                self.storage.as_ref(),
+                &self.cfg.model,
+            ),
+            // no in-memory fabric: the tree degenerates to the durable leaf
+            None => RecoveryPlan::durable_only(self.storage.as_ref(), &self.cfg.model),
+        };
+        plan.record_predicted(&self.metrics);
+        let restore_inmem = |me: &mut Self| -> Result<()> {
+            let payloads = me
+                .reft
+                .as_ref()
+                .context("REFT not enabled")
+                .and_then(|r| r.restore_all(dead))?;
+            let n_params = me.manifest.total_params;
+            me.state = StageState::from_payload(0, n_params, &payloads[0])?;
+            me.metrics.inc("recoveries_inmemory", 1);
+            Ok(())
+        };
+        let actual = match plan.predicted() {
+            Some(RecoveryPath::InMemory) => match restore_inmem(self) {
+                Ok(()) => RecoveryPath::InMemory,
+                // the tree predicted in-memory but the fabric refused (e.g.
+                // an SMP died after the status was taken): fall through to
+                // the durable tier and let the misprediction counter say so
+                Err(e) => self.recover_from_durable(Some(&e))?,
+            },
+            Some(RecoveryPath::Durable(_)) => self.recover_from_durable(None)?,
+            // Fatal: the tree says nothing can serve. Still try the fabric
+            // as a last resort (costs nothing; success = misprediction).
+            None => match restore_inmem(self) {
+                Ok(()) => RecoveryPath::InMemory,
+                Err(e) => anyhow::bail!(
+                    "protection exceeded and no durable checkpoint exists \
+                     (plan: {:?}; in-memory: {e})",
+                    plan.decision
+                ),
+            },
+        };
+        plan.record_actual(&self.metrics, actual);
         // elastic substitute nodes rejoin, then a fresh snapshot round
         for &n in dead {
             if let Some(reft) = self.reft.as_mut() {
@@ -434,6 +486,44 @@ impl DpTrainer {
             self.snapshot_blocking_for_recovery()?;
         }
         Ok(self.state.step)
+    }
+
+    /// The durable-tier restore (decision-tree case 3): the shared resolver
+    /// picks the newest *complete*, shape-compatible persist manifest
+    /// (atomic commit: partial uploads are invisible; a different-layout
+    /// manifest degrades instead of aborting) unless the legacy inline
+    /// checkpoint holds newer state. Returns the tier that actually served.
+    fn recover_from_durable(&mut self, inmem_err: Option<&anyhow::Error>) -> Result<RecoveryPath> {
+        let n_params = self.manifest.total_params;
+        let legacy_key = self.storage.latest_for(&self.cfg.model);
+        if let Some((man, stages)) = persist::resolve_for_recovery(
+            self.storage.as_ref(),
+            &self.cfg.model,
+            1,
+            legacy_key.as_deref(),
+        ) {
+            self.state = StageState::from_payload(0, n_params, &stages[0])?;
+            self.metrics.inc("recoveries_checkpoint", 1);
+            self.metrics.inc("recoveries_manifest", 1);
+            self.metrics
+                .gauge("recovered_manifest_step", man.snapshot_step as f64);
+            return Ok(RecoveryPath::Durable(DurableTier::Manifest));
+        }
+        // legacy checkpoint of THIS model — a shared store may hold other
+        // models' steps
+        let key = legacy_key.with_context(|| match inmem_err {
+            Some(e) => format!("in-memory recovery failed ({e}) and no durable checkpoint exists"),
+            None => "protection exceeded and no durable checkpoint exists".to_string(),
+        })?;
+        let bytes = self.storage.get(&key)?;
+        let file = CheckpointFile::decode(&bytes)?;
+        let payload = file
+            .stage_payload(0)
+            .context("checkpoint missing stage payload")?;
+        self.state = StageState::from_payload(0, n_params, payload)?;
+        self.metrics.inc("recoveries_checkpoint", 1);
+        self.metrics.inc("recoveries_legacy", 1);
+        Ok(RecoveryPath::Durable(DurableTier::Legacy))
     }
 }
 

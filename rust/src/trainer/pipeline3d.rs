@@ -19,10 +19,10 @@ use anyhow::{Context, Result};
 
 use crate::checkpoint::{storage::step_key, CheckpointFile, SectionKind, Storage};
 use crate::config::{FtMethod, RunConfig};
-use crate::elastic::ReftCluster;
+use crate::elastic::{DurableTier, RecoveryPath, RecoveryPlan, ReftCluster};
 use crate::metrics::Metrics;
 use crate::model::{StageState, SyntheticCorpus};
-use crate::persist::{self, PersistDriver, PersistStats};
+use crate::persist::{self, PersistDriver, PersistStats, SnapshotScheduler};
 use crate::pipeline::{self, Op, Schedule};
 use crate::runtime::{self, Engine, In, Manifest};
 use crate::snapshot::SharedPayload;
@@ -44,6 +44,8 @@ pub struct PipelineTrainer {
     /// durable-tier driver: background drain engine + cadence + metric
     /// sync (REFT-Ckpt with `ft.persist.enabled`)
     persist: Option<PersistDriver>,
+    /// live Eq. 9 snapshot cadence (None = static `snapshot_interval`)
+    snap_sched: Option<SnapshotScheduler>,
 }
 
 impl PipelineTrainer {
@@ -92,6 +94,15 @@ impl PipelineTrainer {
             )),
             _ => None,
         };
+        // adaptive snapshot cadence (Eq. 9): live only for REFT methods —
+        // the baselines' checkpoint interval stays the static knob
+        let snap_sched = (reft.is_some() && cfg.ft.auto_snapshot_interval).then(|| {
+            SnapshotScheduler::new(
+                cfg.ft.persist.lambda_node,
+                cfg.nodes,
+                cfg.ft.snapshot_interval as u64,
+            )
+        });
         Ok(PipelineTrainer {
             cfg,
             topo,
@@ -105,6 +116,7 @@ impl PipelineTrainer {
             metrics: Arc::new(Metrics::new()),
             losses: Vec::new(),
             persist,
+            snap_sched,
         })
     }
 
@@ -211,28 +223,42 @@ impl PipelineTrainer {
         // L2): a bounded bucket budget per node, never O(payload)
         self.tick_snapshot_backlog()?;
 
-        // fault tolerance
+        // fault tolerance. Snapshot cadence: the Eq. 9 scheduler when
+        // enabled (live cost x observed λ), else the static interval.
         let step = self.stages[0].step;
-        if step % self.cfg.ft.snapshot_interval as u64 == 0 {
+        let snap_due = match self.snap_sched.as_mut() {
+            Some(s) => s.due(step),
+            None => step % self.cfg.ft.snapshot_interval as u64 == 0,
+        };
+        if snap_due {
             match self.cfg.ft.method {
                 FtMethod::ReftSn | FtMethod::ReftCkpt => {
                     self.snapshot()?;
-                    let persist =
-                        self.cfg.ft.persist_every as u64 * self.cfg.ft.snapshot_interval as u64;
-                    // cadence: the driver's live Appendix-A scheduler when
-                    // enabled, else the static persist_every product
-                    let due = match self.persist.as_mut() {
-                        Some(d) => d.due(step, persist),
-                        None => step % persist == 0,
-                    };
-                    if self.cfg.ft.method == FtMethod::ReftCkpt && due {
-                        self.persist_now()?;
-                    }
                 }
                 FtMethod::CheckFreq | FtMethod::TorchSnapshot => {
                     self.checkpoint()?;
                 }
                 FtMethod::None => {}
+            }
+        }
+        // Durable-persist cadence, evaluated EVERY step (see
+        // `DpTrainer::step`): Eq. 9 snapshot steps are not multiples of
+        // `snapshot_interval`, so the static persist product must not hide
+        // inside the snapshot branch. The engine drains the latest promoted
+        // round, so this only needs one snapshot to have ever completed.
+        if self.cfg.ft.method == FtMethod::ReftCkpt
+            && self.metrics.counter("snapshots") > 0
+        {
+            let persist =
+                self.cfg.ft.persist_every as u64 * self.cfg.ft.snapshot_interval as u64;
+            // cadence: the driver's live Appendix-A scheduler when
+            // enabled, else the static persist_every product
+            let due = match self.persist.as_mut() {
+                Some(d) => d.due(step, persist),
+                None => step % persist == 0,
+            };
+            if due {
+                self.persist_now()?;
             }
         }
 
@@ -242,7 +268,25 @@ impl PipelineTrainer {
         if let Some(d) = self.persist.as_mut() {
             d.observe(&metrics);
         }
+        self.observe_snapshot_cadence(&metrics);
         Ok(loss)
+    }
+
+    /// Feed the Eq. 9 snapshot scheduler the cost the training thread
+    /// actually pays per round (see `DpTrainer::observe_snapshot_cadence`).
+    fn observe_snapshot_cadence(&mut self, metrics: &Metrics) {
+        let Some(sched) = self.snap_sched.as_mut() else {
+            return;
+        };
+        let snap = metrics.timer("snapshot");
+        if snap.count == 0 {
+            return;
+        }
+        let tick = metrics.timer("snapshot_tick");
+        let t_sn = snap.mean() + tick.total / snap.count as f64;
+        let steps = sched.observe(t_sn, metrics.timer("step_wall").mean());
+        metrics.gauge("snapshot_interval_steps", steps as f64);
+        metrics.gauge("snapshot_lambda_node", sched.lambda_node());
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -576,67 +620,60 @@ impl PipelineTrainer {
         if let Some(d) = self.persist.as_mut() {
             d.note_failure();
         }
+        // the same event feeds the Eq. 9 snapshot cadence's rolling λ
+        if let Some(s) = self.snap_sched.as_mut() {
+            s.note_failure();
+        }
         self.metrics.inc("failures_hardware", 1);
     }
 
+    /// Recover from the failure described by `dead`, driven by the elastic
+    /// decision tree **up front** (see `DpTrainer::recover` — same plan →
+    /// predict → execute → predicted-vs-actual telemetry flow, over
+    /// per-stage states here).
     pub fn recover(&mut self, dead: &[usize]) -> Result<u64> {
         let sizes: Vec<usize> = self.manifest.stages.iter().map(|m| m.n_params).collect();
-        let restored: Result<Vec<Vec<u8>>> = self
-            .reft
-            .as_ref()
-            .context("REFT not enabled")
-            .and_then(|r| r.restore_all(dead));
-        match restored {
-            Ok(payloads) => {
-                for (s, payload) in payloads.iter().enumerate() {
-                    self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
-                }
-                self.metrics.inc("recoveries_inmemory", 1);
+        let plan = match &self.reft {
+            Some(_) => RecoveryPlan::probe(
+                &self.topo,
+                dead,
+                self.cfg.ft.raim5,
+                self.storage.as_ref(),
+                &self.cfg.model,
+            ),
+            None => RecoveryPlan::durable_only(self.storage.as_ref(), &self.cfg.model),
+        };
+        plan.record_predicted(&self.metrics);
+        let restore_inmem = |me: &mut Self| -> Result<()> {
+            let payloads = me
+                .reft
+                .as_ref()
+                .context("REFT not enabled")
+                .and_then(|r| r.restore_all(dead))?;
+            for (s, payload) in payloads.iter().enumerate() {
+                me.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
             }
-            Err(e) => {
-                // in-memory protection exceeded (elastic decision tree
-                // case 3) -> the durable tier. The shared resolver picks
-                // the newest *complete* persist manifest with exactly this
-                // run's stage layout (atomic commit: partial uploads are
-                // invisible; a different-layout manifest degrades instead
-                // of aborting) unless the legacy inline checkpoint holds
-                // newer state.
-                let legacy_key = self.storage.latest_for(&self.cfg.model);
-                if let Some((man, payloads)) = persist::resolve_for_recovery(
-                    self.storage.as_ref(),
-                    &self.cfg.model,
-                    self.stages.len(),
-                    legacy_key.as_deref(),
-                ) {
-                    for (s, payload) in payloads.iter().enumerate() {
-                        self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
-                    }
-                    // durable-tier telemetry: the decision tree's
-                    // `LoadCheckpoint { tier: Manifest }` case, live
-                    self.metrics.inc("recoveries_checkpoint", 1);
-                    self.metrics.inc("recoveries_manifest", 1);
-                    self.metrics
-                        .gauge("recovered_manifest_step", man.snapshot_step as f64);
-                } else {
-                    // legacy checkpoint of THIS model — a shared store may
-                    // hold other models' steps with alphabetically-later
-                    // names
-                    let key = legacy_key.with_context(|| {
-                        format!("in-memory recovery failed ({e}) and no durable checkpoint exists")
-                    })?;
-                    let file = CheckpointFile::decode(&self.storage.get(&key)?)?;
-                    for s in 0..self.stages.len() {
-                        let payload = file
-                            .stage_payload(s as u32)
-                            .with_context(|| format!("checkpoint missing stage {s}"))?;
-                        self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
-                    }
-                    // `LoadCheckpoint { tier: Legacy }`: no manifest served
-                    self.metrics.inc("recoveries_checkpoint", 1);
-                    self.metrics.inc("recoveries_legacy", 1);
-                }
-            }
-        }
+            me.metrics.inc("recoveries_inmemory", 1);
+            Ok(())
+        };
+        let actual = match plan.predicted() {
+            Some(RecoveryPath::InMemory) => match restore_inmem(self) {
+                Ok(()) => RecoveryPath::InMemory,
+                // predicted in-memory, fabric refused: durable fallback,
+                // counted as a misprediction
+                Err(e) => self.recover_from_durable(&sizes, Some(&e))?,
+            },
+            Some(RecoveryPath::Durable(_)) => self.recover_from_durable(&sizes, None)?,
+            None => match restore_inmem(self) {
+                Ok(()) => RecoveryPath::InMemory,
+                Err(e) => anyhow::bail!(
+                    "protection exceeded and no durable checkpoint exists \
+                     (plan: {:?}; in-memory: {e})",
+                    plan.decision
+                ),
+            },
+        };
+        plan.record_actual(&self.metrics, actual);
         for &n in dead {
             if let Some(reft) = self.reft.as_mut() {
                 let _ = reft.replace_node(n);
@@ -646,6 +683,51 @@ impl PipelineTrainer {
             self.snapshot_blocking_for_recovery()?;
         }
         Ok(self.stages[0].step)
+    }
+
+    /// The durable-tier restore (decision-tree case 3): the shared resolver
+    /// picks the newest *complete* persist manifest with exactly this run's
+    /// stage layout (atomic commit: partial uploads are invisible; a
+    /// different-layout manifest degrades instead of aborting) unless the
+    /// legacy inline checkpoint holds newer state. Returns the tier that
+    /// actually served.
+    fn recover_from_durable(
+        &mut self,
+        sizes: &[usize],
+        inmem_err: Option<&anyhow::Error>,
+    ) -> Result<RecoveryPath> {
+        let legacy_key = self.storage.latest_for(&self.cfg.model);
+        if let Some((man, payloads)) = persist::resolve_for_recovery(
+            self.storage.as_ref(),
+            &self.cfg.model,
+            self.stages.len(),
+            legacy_key.as_deref(),
+        ) {
+            for (s, payload) in payloads.iter().enumerate() {
+                self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
+            }
+            self.metrics.inc("recoveries_checkpoint", 1);
+            self.metrics.inc("recoveries_manifest", 1);
+            self.metrics
+                .gauge("recovered_manifest_step", man.snapshot_step as f64);
+            return Ok(RecoveryPath::Durable(DurableTier::Manifest));
+        }
+        // legacy checkpoint of THIS model — a shared store may hold other
+        // models' steps with alphabetically-later names
+        let key = legacy_key.with_context(|| match inmem_err {
+            Some(e) => format!("in-memory recovery failed ({e}) and no durable checkpoint exists"),
+            None => "protection exceeded and no durable checkpoint exists".to_string(),
+        })?;
+        let file = CheckpointFile::decode(&self.storage.get(&key)?)?;
+        for s in 0..self.stages.len() {
+            let payload = file
+                .stage_payload(s as u32)
+                .with_context(|| format!("checkpoint missing stage {s}"))?;
+            self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
+        }
+        self.metrics.inc("recoveries_checkpoint", 1);
+        self.metrics.inc("recoveries_legacy", 1);
+        Ok(RecoveryPath::Durable(DurableTier::Legacy))
     }
 }
 

@@ -1,0 +1,608 @@
+//! Crash-matrix harness for the adaptive checkpoint control plane: a
+//! seeded-RNG sweep over (crash-point × parallelism-shape) combinations —
+//! crash before/during/after shard upload, mid-multipart, between commit
+//! and GC, during the asynchronous snapshot drain, a superseded round, and
+//! a probe invalidated after the fact — asserting that EVERY run recovers
+//! to a complete, byte-consistent checkpoint and that the `RecoveryPlan`
+//! prediction matches the tier actually used (or the misprediction counter
+//! says why).
+//!
+//! The harness drives the same building blocks the trainers compose —
+//! `RecoveryPlan::probe` → `decide` → in-memory restore /
+//! `persist::resolve_for_recovery` / legacy decode — plus the same
+//! predicted-vs-actual accounting (`record_predicted` / `record_actual`),
+//! so every edge of the decision tree is exercised end to end against real
+//! storage. Fixed seed: CI runs this in the gating test lane.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use reft::checkpoint::{storage::step_key, CheckpointFile, MemStorage, SectionKind, Storage};
+use reft::config::{FtConfig, PersistConfig};
+use reft::elastic::{DurableTier, RecoveryPath, RecoveryPlan, ReftCluster};
+use reft::metrics::Metrics;
+use reft::persist::{self, PersistEngine};
+use reft::snapshot::SharedPayload;
+use reft::topology::{ParallelPlan, Topology};
+use reft::util::rng::Rng;
+
+/// Fixed sweep seed — CI depends on the matrix being reproducible.
+const SEED: u64 = 0xC4A5_11;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum CrashPoint {
+    /// the failure lands BEFORE the persist job's shard uploads start
+    /// (dead writer source): the job aborts whole
+    BeforeUpload,
+    /// a shard put fails partway through the round's uploads
+    DuringUpload,
+    /// every shard lands, the crash hits between upload and manifest commit
+    BeforeCommit,
+    /// multipart upload crashes between parts; a retried step resumes from
+    /// the sidecar-recorded durable parts
+    MidMultipart,
+    /// the manifest commits but the GC pass dies (deletes fail): recovery
+    /// must be unaffected and older manifests must still degrade cleanly
+    CommitNoGc,
+    /// the failure hits while an asynchronous snapshot round is half
+    /// drained: only the previous promoted round may surface anywhere
+    DuringDrain,
+    /// an in-flight round is superseded before the failure
+    Superseded,
+    /// the probe sees a healthy manifest whose shards rot before the load:
+    /// the plan is wrong by construction and the counter must say so
+    CorruptAfterProbe,
+}
+
+const CRASH_POINTS: [CrashPoint; 8] = [
+    CrashPoint::BeforeUpload,
+    CrashPoint::DuringUpload,
+    CrashPoint::BeforeCommit,
+    CrashPoint::MidMultipart,
+    CrashPoint::CommitNoGc,
+    CrashPoint::DuringDrain,
+    CrashPoint::Superseded,
+    CrashPoint::CorruptAfterProbe,
+];
+
+struct Shape {
+    plan: ParallelPlan,
+    nodes: usize,
+    stages: usize,
+    raim5: bool,
+}
+
+fn shapes() -> Vec<Shape> {
+    vec![
+        Shape { plan: ParallelPlan::dp_only(24), nodes: 6, stages: 1, raim5: true },
+        Shape { plan: ParallelPlan::new(2, 4, 3), nodes: 6, stages: 3, raim5: true },
+        Shape { plan: ParallelPlan::new(4, 2, 2), nodes: 4, stages: 2, raim5: true },
+        // single-node sharding group: no RAIM5 peers, every node loss must
+        // fall through to the durable tier
+        Shape { plan: ParallelPlan::dp_only(4), nodes: 1, stages: 1, raim5: false },
+    ]
+}
+
+fn payloads(stage_bytes: &[u64], rng: &mut Rng) -> Vec<SharedPayload> {
+    stage_bytes
+        .iter()
+        .map(|&b| SharedPayload::new((0..b).map(|_| rng.next_u64() as u8).collect()))
+        .collect()
+}
+
+fn as_bytes(p: &[SharedPayload]) -> Vec<Vec<u8>> {
+    p.iter().map(|x| x.as_slice().to_vec()).collect()
+}
+
+/// Storage decorator whose puts fail after the first `remaining`, and whose
+/// deletes can be disabled wholesale (the commit-no-GC crash point).
+struct Chaos {
+    inner: Arc<MemStorage>,
+    puts_remaining: AtomicI64,
+    fail_substr: Option<String>,
+    fail_deletes: bool,
+}
+
+impl Chaos {
+    fn wrap(inner: Arc<MemStorage>) -> Chaos {
+        Chaos {
+            inner,
+            puts_remaining: AtomicI64::new(i64::MAX),
+            fail_substr: None,
+            fail_deletes: false,
+        }
+    }
+}
+
+impl Storage for Chaos {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            self.puts_remaining.fetch_sub(1, Ordering::SeqCst) > 0,
+            "injected crash at `{key}`"
+        );
+        if let Some(s) = &self.fail_substr {
+            anyhow::ensure!(!key.contains(s.as_str()), "injected crash at `{key}`");
+        }
+        self.inner.put(key, bytes)
+    }
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.inner.get(key)
+    }
+    fn exists(&self, key: &str) -> bool {
+        self.inner.exists(key)
+    }
+    fn list(&self) -> Vec<String> {
+        self.inner.list()
+    }
+    fn delete(&self, key: &str) -> Result<()> {
+        anyhow::ensure!(!self.fail_deletes, "injected GC death at `{key}`");
+        self.inner.delete(key)
+    }
+}
+
+fn base_persist() -> PersistConfig {
+    PersistConfig {
+        enabled: true,
+        throttle_bytes_per_sec: 0,
+        chunk_bytes: 4096,
+        keep_last: 8,
+        ..PersistConfig::default()
+    }
+}
+
+/// Execute the recovery the way both trainers do: follow the plan, fall
+/// back across tiers only where the plan (or a refused fabric) sends us,
+/// and report which path actually served plus the restored bytes.
+fn execute_recovery(
+    plan: &RecoveryPlan,
+    cluster: &ReftCluster,
+    storage: &dyn Storage,
+    model: &str,
+    stages: usize,
+    dead: &[usize],
+) -> Result<(RecoveryPath, Vec<Vec<u8>>)> {
+    let durable = |why: &str| -> Result<(RecoveryPath, Vec<Vec<u8>>)> {
+        let legacy_key = storage.latest_for(model);
+        if let Some((_, data)) =
+            persist::resolve_for_recovery(storage, model, stages, legacy_key.as_deref())
+        {
+            return Ok((RecoveryPath::Durable(DurableTier::Manifest), data));
+        }
+        let key = legacy_key
+            .with_context(|| format!("no durable checkpoint exists ({why})"))?;
+        let file = CheckpointFile::decode(&storage.get(&key)?)?;
+        let mut data = Vec::with_capacity(stages);
+        for s in 0..stages {
+            data.push(
+                file.stage_payload(s as u32)
+                    .with_context(|| format!("legacy checkpoint missing stage {s}"))?
+                    .to_vec(),
+            );
+        }
+        Ok((RecoveryPath::Durable(DurableTier::Legacy), data))
+    };
+    match plan.predicted() {
+        Some(RecoveryPath::InMemory) => match cluster.restore_all(dead) {
+            Ok(data) => Ok((RecoveryPath::InMemory, data)),
+            Err(e) => durable(&format!("fabric refused: {e}")),
+        },
+        Some(RecoveryPath::Durable(_)) => durable("plan named the durable tier"),
+        None => cluster
+            .restore_all(dead)
+            .map(|data| (RecoveryPath::InMemory, data))
+            .context("fatal plan and the fabric refused too"),
+    }
+}
+
+/// Two nodes of one SG when the shape tolerates single losses, else the one
+/// node a peer-less SG cannot survive losing.
+fn exceed_protection(topo: &Topology, rng: &mut Rng) -> Vec<usize> {
+    let wide: Vec<_> = topo
+        .sharding_groups()
+        .into_iter()
+        .filter(|sg| sg.len() >= 2)
+        .collect();
+    if wide.is_empty() {
+        let sgs = topo.sharding_groups();
+        return vec![sgs[0].nodes[0]];
+    }
+    let sg = &wide[rng.below(wide.len())];
+    let a = rng.below(sg.nodes.len());
+    let b = (a + 1 + rng.below(sg.nodes.len() - 1)) % sg.nodes.len();
+    vec![sg.nodes[a], sg.nodes[b]]
+}
+
+/// One node of a decodable (>= 2 member) SG; None when no SG can decode.
+fn one_decodable_loss(topo: &Topology, rng: &mut Rng) -> Option<usize> {
+    let wide: Vec<_> = topo
+        .sharding_groups()
+        .into_iter()
+        .filter(|sg| sg.len() >= 2)
+        .collect();
+    if wide.is_empty() {
+        return None;
+    }
+    let sg = &wide[rng.below(wide.len())];
+    Some(sg.nodes[rng.below(sg.nodes.len())])
+}
+
+fn run_scenario(shape: &Shape, crash: CrashPoint, rng: &mut Rng) -> Result<()> {
+    let ctx = format!("shape {:?}/{} nodes, crash {:?}", shape.plan, shape.nodes, crash);
+    let topo = Topology::build(shape.plan, shape.nodes, 4)?;
+    // >= 30 kB per stage: even split six ways every shard clears the 4 kB
+    // multipart part size, so the mid-multipart cell is genuinely multipart
+    // on every shape
+    let stage_bytes: Vec<u64> = (0..shape.stages)
+        .map(|_| 30_000 + rng.below(18_000) as u64)
+        .collect();
+    let async_on = matches!(crash, CrashPoint::DuringDrain | CrashPoint::Superseded);
+    // async scenarios: >= 4 buckets per node at a 2-bucket tick budget, so
+    // one tick provably leaves the round incomplete on every node
+    let ft = FtConfig {
+        raim5: shape.raim5,
+        bucket_bytes: if async_on { 1024 } else { 2048 },
+        async_snapshot: async_on,
+        drain_buckets_per_tick: 2,
+        ..FtConfig::default()
+    };
+    let mut cluster = ReftCluster::start(topo.clone(), &stage_bytes, ft)?;
+    let model = "cm";
+    let inner = Arc::new(MemStorage::new());
+    let metrics = Metrics::new();
+
+    // v1 protected + durably committed at step 10 on a clean storage handle
+    let v1 = payloads(&stage_bytes, rng);
+    cluster.snapshot_all(&v1)?;
+    {
+        let engine = PersistEngine::start(
+            model,
+            Arc::clone(&inner) as Arc<dyn Storage>,
+            cluster.plan.clone(),
+            base_persist(),
+        );
+        engine.enqueue(10, cluster.persist_sources(), vec![])?;
+        engine.flush()?;
+        anyhow::ensure!(
+            engine.stats().manifests_committed == 1,
+            "{ctx}: baseline persist failed: {:?}",
+            engine.stats().last_error
+        );
+    }
+    // a stale legacy checkpoint (step 5 < the manifests' contained state):
+    // present so the Legacy leaf is reachable, never preferred while a
+    // manifest survives
+    let v_legacy = payloads(&stage_bytes, rng);
+    {
+        let mut file = CheckpointFile::new(model, 5);
+        for (s, p) in v_legacy.iter().enumerate() {
+            file.add_section(SectionKind::StagePayload, s as u32, p.as_slice().to_vec());
+        }
+        inner.put(&step_key(model, 5), &file.encode())?;
+    }
+
+    // the crash-point play: what the failure interrupts, and what state the
+    // matrix expects recovery to land on afterwards
+    let mut dead: Vec<usize> = Vec::new();
+    let mut expect_path: Option<RecoveryPath> = None;
+    let mut expect_mispredictions = 0u64;
+    let expected_data: Vec<Vec<u8>>;
+    match crash {
+        CrashPoint::BeforeUpload => {
+            // v2 protected; the victim dies BEFORE the step-20 job runs, so
+            // its writer source is gone and the job aborts whole
+            let v2 = payloads(&stage_bytes, rng);
+            cluster.snapshot_all(&v2)?;
+            match one_decodable_loss(&topo, rng) {
+                Some(victim) => {
+                    cluster.kill_node(victim);
+                    dead = vec![victim];
+                    expect_path = Some(RecoveryPath::InMemory);
+                    expected_data = as_bytes(&v2);
+                }
+                None => {
+                    let victims = exceed_protection(&topo, rng);
+                    for &n in &victims {
+                        cluster.kill_node(n);
+                    }
+                    dead = victims;
+                    expect_path = Some(RecoveryPath::Durable(DurableTier::Manifest));
+                    expected_data = as_bytes(&v1); // step-10 round
+                }
+            }
+            let engine = PersistEngine::start(
+                model,
+                Arc::clone(&inner) as Arc<dyn Storage>,
+                cluster.plan.clone(),
+                base_persist(),
+            );
+            engine.enqueue(20, cluster.persist_sources(), vec![])?;
+            engine.flush()?;
+            anyhow::ensure!(
+                engine.stats().jobs_aborted == 1 && engine.stats().manifests_committed == 0,
+                "{ctx}: job against a dead source must abort whole"
+            );
+        }
+        CrashPoint::DuringUpload | CrashPoint::BeforeCommit => {
+            // v2 protected; the step-20 drain crashes mid-protocol, so the
+            // step-10 manifest must keep serving v1
+            let v2 = payloads(&stage_bytes, rng);
+            cluster.snapshot_all(&v2)?;
+            let chaos = Arc::new(match crash {
+                CrashPoint::DuringUpload => {
+                    let shard_puts = cluster.plan.shards.len() as i64;
+                    Chaos {
+                        puts_remaining: AtomicI64::new(rng.below(shard_puts as usize) as i64),
+                        ..Chaos::wrap(Arc::clone(&inner))
+                    }
+                }
+                _ => Chaos {
+                    fail_substr: Some("/manifest/step-000000000020".into()),
+                    ..Chaos::wrap(Arc::clone(&inner))
+                },
+            });
+            let engine = PersistEngine::start(
+                model,
+                chaos as Arc<dyn Storage>,
+                cluster.plan.clone(),
+                base_persist(),
+            );
+            engine.enqueue(20, cluster.persist_sources(), vec![])?;
+            engine.flush()?;
+            anyhow::ensure!(
+                engine.stats().manifests_committed == 0 && engine.stats().jobs_aborted == 1,
+                "{ctx}: crashed drain must abort manifest-less"
+            );
+            let victims = exceed_protection(&topo, rng);
+            for &n in &victims {
+                cluster.kill_node(n);
+            }
+            dead = victims;
+            expect_path = Some(RecoveryPath::Durable(DurableTier::Manifest));
+            expected_data = as_bytes(&v1);
+        }
+        CrashPoint::MidMultipart => {
+            // multipart drain of a FRESH round dies between parts; the
+            // retried step resumes from the sidecar and commits
+            let v2 = payloads(&stage_bytes, rng);
+            cluster.snapshot_all(&v2)?;
+            let part_cfg = PersistConfig { multipart_part_bytes: 4096, ..base_persist() };
+            {
+                let chaos = Arc::new(Chaos {
+                    puts_remaining: AtomicI64::new(2 + rng.below(4) as i64),
+                    ..Chaos::wrap(Arc::clone(&inner))
+                });
+                let engine = PersistEngine::start(
+                    model,
+                    chaos as Arc<dyn Storage>,
+                    cluster.plan.clone(),
+                    part_cfg.clone(),
+                );
+                engine.enqueue(20, cluster.persist_sources(), vec![])?;
+                engine.flush()?;
+                anyhow::ensure!(
+                    engine.stats().manifests_committed == 0,
+                    "{ctx}: the crashed multipart attempt must not commit"
+                );
+            }
+            // restart: the same step retries against healthy storage
+            let engine = PersistEngine::start(
+                model,
+                Arc::clone(&inner) as Arc<dyn Storage>,
+                cluster.plan.clone(),
+                part_cfg,
+            );
+            engine.enqueue(20, cluster.persist_sources(), vec![])?;
+            engine.flush()?;
+            let st = engine.stats();
+            anyhow::ensure!(
+                st.manifests_committed == 1,
+                "{ctx}: resumed attempt must commit: {:?}",
+                st.last_error
+            );
+            // shards at or below the part size land as single blobs — only
+            // genuinely multipart shards contribute part objects
+            let total_parts: u64 = (0..shape.stages)
+                .map(|stage| {
+                    cluster
+                        .plan
+                        .shards_for_stage(stage)
+                        .map(|sh| if sh.len() > 4096 { sh.len().div_ceil(4096) } else { 0 })
+                        .sum::<u64>()
+                })
+                .sum();
+            anyhow::ensure!(
+                st.parts_uploaded + st.parts_reused == total_parts,
+                "{ctx}: every part reused or uploaded exactly once \
+                 ({} + {} != {total_parts})",
+                st.parts_uploaded,
+                st.parts_reused
+            );
+            let victims = exceed_protection(&topo, rng);
+            for &n in &victims {
+                cluster.kill_node(n);
+            }
+            dead = victims;
+            expect_path = Some(RecoveryPath::Durable(DurableTier::Manifest));
+            expected_data = as_bytes(&v2); // the resumed step-20 round
+        }
+        CrashPoint::CommitNoGc => {
+            // retention wants to drop step 10 after step 20 commits, but
+            // the GC dies between commit and delete: both manifests remain,
+            // recovery serves the newest, the older still degrades cleanly
+            let v2 = payloads(&stage_bytes, rng);
+            cluster.snapshot_all(&v2)?;
+            let chaos = Arc::new(Chaos {
+                fail_deletes: true,
+                ..Chaos::wrap(Arc::clone(&inner))
+            });
+            let engine = PersistEngine::start(
+                model,
+                chaos as Arc<dyn Storage>,
+                cluster.plan.clone(),
+                PersistConfig { keep_last: 1, ..base_persist() },
+            );
+            engine.enqueue(20, cluster.persist_sources(), vec![])?;
+            engine.flush()?;
+            anyhow::ensure!(
+                engine.stats().manifests_committed == 1,
+                "{ctx}: commit must stand even when its GC pass dies"
+            );
+            anyhow::ensure!(
+                persist::persisted_steps(inner.as_ref(), model) == vec![10, 20],
+                "{ctx}: interrupted GC leaves both manifests"
+            );
+            let victims = exceed_protection(&topo, rng);
+            for &n in &victims {
+                cluster.kill_node(n);
+            }
+            dead = victims;
+            expect_path = Some(RecoveryPath::Durable(DurableTier::Manifest));
+            expected_data = as_bytes(&v2);
+        }
+        CrashPoint::DuringDrain => {
+            // an async v2 round is half drained when training dies: only
+            // the promoted v1 may surface, from memory and from storage
+            let v2 = payloads(&stage_bytes, rng);
+            cluster.request_snapshot(v2)?;
+            cluster.tick()?;
+            expect_path = Some(RecoveryPath::InMemory);
+            expected_data = as_bytes(&v1);
+        }
+        CrashPoint::Superseded => {
+            // v2 in flight is superseded by v3, which fully promotes; the
+            // failure then hits. v2 must be unobservable everywhere.
+            let v2 = payloads(&stage_bytes, rng);
+            let v3 = payloads(&stage_bytes, rng);
+            cluster.request_snapshot(v2)?;
+            cluster.tick()?;
+            cluster.request_snapshot(v3.clone())?;
+            cluster.drain_pending()?;
+            expect_path = Some(RecoveryPath::InMemory);
+            expected_data = as_bytes(&v3);
+        }
+        CrashPoint::CorruptAfterProbe => {
+            // handled below (the corruption must land AFTER the probe)
+            let victims = exceed_protection(&topo, rng);
+            for &n in &victims {
+                cluster.kill_node(n);
+            }
+            dead = victims;
+            expect_path = Some(RecoveryPath::Durable(DurableTier::Legacy));
+            expect_mispredictions = 1;
+            expected_data = as_bytes(&v_legacy);
+        }
+    }
+
+    // plan FIRST (probe + decision tree), restore attempts only after
+    let plan = RecoveryPlan::probe(&topo, &dead, shape.raim5, inner.as_ref(), model);
+    plan.record_predicted(&metrics);
+    if crash == CrashPoint::CorruptAfterProbe {
+        // the probe saw a healthy manifest tier; now its newest round's
+        // shards rot in place (same length, junk bytes) so the load-time
+        // CRC refuses every manifest and recovery crosses to legacy
+        let man = persist::PersistManifest::decode(
+            &inner.get(&persist::manifest_key(model, 10))?,
+        )?;
+        for sh in &man.shards {
+            if sh.parts.is_empty() {
+                inner.put(&sh.key, &vec![0xEE; sh.len as usize])?;
+            }
+        }
+        anyhow::ensure!(
+            plan.predicted() == Some(RecoveryPath::Durable(DurableTier::Manifest)),
+            "{ctx}: the stale probe must have predicted the manifest tier"
+        );
+    }
+    let (actual, recovered) =
+        execute_recovery(&plan, &cluster, inner.as_ref(), model, shape.stages, &dead)
+            .with_context(|| ctx.clone())?;
+    plan.record_actual(&metrics, actual);
+
+    // 1) byte-consistent, complete recovery to a known-good round
+    anyhow::ensure!(
+        recovered == expected_data,
+        "{ctx}: recovered bytes are not the expected round (path {actual:?})"
+    );
+    // 2) the prediction matched the tier used, or the counter says why
+    if let Some(want) = expect_path {
+        anyhow::ensure!(
+            actual == want,
+            "{ctx}: recovery took {actual:?}, the matrix expected {want:?}"
+        );
+    }
+    anyhow::ensure!(
+        metrics.counter("recovery_mispredictions") == expect_mispredictions,
+        "{ctx}: mispredictions {} (expected {expect_mispredictions})",
+        metrics.counter("recovery_mispredictions")
+    );
+    anyhow::ensure!(metrics.counter("recovery_plans") == 1, "{ctx}: plan recorded once");
+    Ok(())
+}
+
+/// The sweep: every crash point on every parallelism shape, randomized
+/// payloads and victims under a fixed seed. ~32 scenarios.
+#[test]
+fn crash_matrix_sweep() {
+    let mut rng = Rng::seed_from(SEED);
+    let mut ran = 0usize;
+    for shape in shapes() {
+        for crash in CRASH_POINTS {
+            run_scenario(&shape, crash, &mut rng)
+                .unwrap_or_else(|e| panic!("scenario failed: {e:#}"));
+            ran += 1;
+        }
+    }
+    assert_eq!(ran, 32, "the matrix must cover every (shape x crash) cell");
+}
+
+/// Cross-tier tie-break, live: a legacy checkpoint strictly newer than the
+/// newest manifest's contained state is both PREDICTED and SERVED — no
+/// misprediction, even though a manifest exists.
+#[test]
+fn crash_matrix_legacy_newer_than_manifest_predicts_and_serves_legacy() {
+    let mut rng = Rng::seed_from(SEED ^ 0x1E6);
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![24_000u64];
+    let mut cluster =
+        ReftCluster::start(topo.clone(), &stage_bytes, FtConfig::default()).unwrap();
+    let model = "cm-legacy";
+    let storage = Arc::new(MemStorage::new());
+    let v1 = payloads(&stage_bytes, &mut rng);
+    cluster.snapshot_all(&v1).unwrap();
+    let engine = PersistEngine::start(
+        model,
+        Arc::clone(&storage) as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        base_persist(),
+    );
+    engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+    engine.flush().unwrap();
+    assert_eq!(engine.stats().manifests_committed, 1);
+    // an inline checkpoint at step 15 > the manifest's contained step 10
+    let v_legacy = payloads(&stage_bytes, &mut rng);
+    let mut file = CheckpointFile::new(model, 15);
+    file.add_section(SectionKind::StagePayload, 0, v_legacy[0].as_slice().to_vec());
+    storage.put(&step_key(model, 15), &file.encode()).unwrap();
+
+    // both nodes of one SG die: protection exceeded
+    let dead = exceed_protection(&topo, &mut rng);
+    for &n in &dead {
+        cluster.kill_node(n);
+    }
+    let metrics = Metrics::new();
+    let plan = RecoveryPlan::probe(&topo, &dead, true, storage.as_ref(), model);
+    plan.record_predicted(&metrics);
+    assert_eq!(
+        plan.predicted(),
+        Some(RecoveryPath::Durable(DurableTier::Legacy)),
+        "prediction must apply the loader's cross-tier tie-break"
+    );
+    let (actual, recovered) =
+        execute_recovery(&plan, &cluster, storage.as_ref(), model, 1, &dead).unwrap();
+    plan.record_actual(&metrics, actual);
+    assert_eq!(actual, RecoveryPath::Durable(DurableTier::Legacy));
+    assert_eq!(recovered[0], v_legacy[0].as_slice());
+    assert_eq!(metrics.counter("recovery_mispredictions"), 0);
+}

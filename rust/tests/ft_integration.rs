@@ -700,14 +700,15 @@ impl Storage for FailAfter {
     }
 }
 
-/// A storage decorator recording every put key (in arrival order) over a
-/// shared inner store, optionally slowing or failing puts whose key
+/// A storage decorator recording every put AND get key (in arrival order)
+/// over a shared inner store, optionally slowing or failing puts whose key
 /// contains a marker substring — the observability the pipelined-engine
 /// ordering and multipart-resume tests need.
 #[derive(Default)]
 struct InstrumentedStorage {
     inner: Arc<MemStorage>,
     puts: Mutex<Vec<String>>,
+    gets: Mutex<Vec<String>>,
     slow_substr: Option<String>,
     slow_by: Duration,
     fail_substr: Option<String>,
@@ -730,6 +731,7 @@ impl Storage for InstrumentedStorage {
         self.inner.put(key, bytes)
     }
     fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.gets.lock().unwrap().push(key.to_string());
         self.inner.get(key)
     }
     fn exists(&self, key: &str) -> bool {
@@ -849,12 +851,15 @@ fn pipelined_engine_preserves_commit_order_and_atomicity() {
 }
 
 /// Tentpole: a crash between multipart parts provably resumes without
-/// re-uploading completed parts — the retried step verifies the durable
-/// parts' CRCs, reuses them, and uploads only the remainder.
+/// re-uploading the parts the progress sidecar recorded — and the resume
+/// check is **O(parts) metadata**: one sidecar read, `exists` probes, and
+/// NOT a single part-object byte read back (the pre-sidecar engine
+/// re-fetched and re-hashed whole durable parts to prove them reusable).
 #[test]
 fn crash_mid_multipart_resume_reuses_durable_parts() {
     // single-node topology: one writer worker, so the crash point is
-    // deterministic (parts upload strictly in order)
+    // deterministic (parts upload strictly in order, each followed by its
+    // sidecar record)
     let topo = Topology::build(ParallelPlan::dp_only(4), 1, 4).unwrap();
     let stage_bytes = vec![64_000u64];
     let ft = FtConfig { raim5: false, bucket_bytes: 4096, ..FtConfig::default() };
@@ -866,8 +871,10 @@ fn crash_mid_multipart_resume_reuses_durable_parts() {
     // 64 000 B / 4 096 B parts -> 16 parts (15 full + remainder)
     let part_cfg = PersistConfig { multipart_part_bytes: 4096, ..unthrottled_persist() };
 
-    // attempt 1 "crashes" after 5 part uploads: job aborts, no manifest,
-    // the 5 durable parts stay behind
+    // attempt 1 "crashes" after 5 puts. The put sequence interleaves parts
+    // with their sidecar records — part0, meta, part1, meta, part2, [meta
+    // fails, best-effort], part3 fails -> abort. So: 3 durable parts, the
+    // first 2 of them recorded in the sidecar.
     {
         let failing: Arc<dyn Storage> = Arc::new(FailAfter {
             inner: Arc::clone(&shared),
@@ -880,7 +887,7 @@ fn crash_mid_multipart_resume_reuses_durable_parts() {
         let stats = engine.stats();
         assert_eq!(stats.jobs_aborted, 1);
         assert_eq!(stats.manifests_committed, 0);
-        assert_eq!(stats.parts_uploaded, 5);
+        assert_eq!(stats.parts_uploaded, 3);
         assert_eq!(stats.parts_reused, 0);
     }
     let landed: Vec<String> = shared
@@ -888,15 +895,25 @@ fn crash_mid_multipart_resume_reuses_durable_parts() {
         .into_iter()
         .filter(|k| k.contains("/part-"))
         .collect();
-    assert_eq!(landed.len(), 5, "exactly the parts before the crash are durable");
+    assert_eq!(landed.len(), 3, "exactly the parts before the crash are durable");
+    let recorded = persist::PartProgress::load(
+        shared.as_ref(),
+        &persist::part_meta_key("pm", 10, 0, 0),
+    );
+    assert_eq!(
+        recorded.parts.keys().copied().collect::<Vec<_>>(),
+        vec![0, 1],
+        "the sidecar records the parts whose record put survived"
+    );
     assert!(
         persist::load_latest(shared.as_ref(), "pm").unwrap().is_none(),
         "no manifest -> the partial upload is invisible to recovery"
     );
 
-    // attempt 2 (the restarted engine retries the same step): the durable
-    // parts are CRC-verified and reused, never re-put; only the remaining
-    // 11 parts + the manifest upload
+    // attempt 2 (the restarted engine retries the same step): the
+    // sidecar-recorded parts are reused with metadata checks alone; the
+    // landed-but-unrecorded part 2 is conservatively re-uploaded; the
+    // remaining 13 parts upload fresh
     let counting = Arc::new(InstrumentedStorage {
         inner: Arc::clone(&shared),
         ..InstrumentedStorage::default()
@@ -911,12 +928,27 @@ fn crash_mid_multipart_resume_reuses_durable_parts() {
     engine.flush().unwrap();
     let stats = engine.stats();
     assert_eq!(stats.manifests_committed, 1, "{:?}", stats.last_error);
-    assert_eq!(stats.parts_reused, 5, "every durable part reused");
-    assert_eq!(stats.parts_uploaded, 11, "only the missing parts uploaded");
+    assert_eq!(stats.parts_reused, 2, "every sidecar-recorded part reused");
+    assert_eq!(stats.parts_uploaded, 14, "unrecorded + missing parts uploaded");
     let puts = counting.puts.lock().unwrap().clone();
-    for k in &landed {
-        assert!(!puts.contains(k), "durable part `{k}` was re-uploaded");
+    for k in ["part-00000", "part-00001"] {
+        assert!(
+            !puts.iter().any(|p| p.contains(k)),
+            "sidecar-recorded part `{k}` was re-uploaded"
+        );
     }
+    // the satellite's O(parts) claim, counted: the resume read the sidecar
+    // (and GC re-read the committed manifest) but NOT ONE part object —
+    // the old engine read back all 3 durable parts here
+    let gets = counting.gets.lock().unwrap().clone();
+    assert!(
+        !gets.iter().any(|g| g.contains("/part-")),
+        "resume must never read part bytes back: {gets:?}"
+    );
+    assert!(
+        gets.iter().any(|g| g.ends_with("/meta")),
+        "resume reads the progress sidecar once: {gets:?}"
+    );
     // the committed manifest records all 16 parts and restores the round
     // byte-identically
     let (man, stages) = persist::load_latest(shared.as_ref(), "pm").unwrap().unwrap();

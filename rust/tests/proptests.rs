@@ -112,6 +112,7 @@ fn prop_recovery_decisions() {
         let durable = DurableAvailability {
             manifest: rng.below(2) == 0,
             legacy: rng.below(2) == 0,
+            ..Default::default()
         };
         let d = decide(&topo, &status, true, durable);
 
@@ -163,6 +164,107 @@ fn prop_recovery_decisions() {
                 assert!(hit_sgs.is_empty() && !any_unhealthy, "case {case}: {status:?}");
             }
         }
+    }
+}
+
+/// Cadence math (Eq. 9 / Eq. 11) monotonicity: for arbitrary costs and
+/// failure rates, a hotter cluster never lengthens the interval and a
+/// costlier save never shortens it — on the raw formulas AND through the
+/// live schedulers.
+#[test]
+fn prop_cadence_intervals_monotone_in_lambda_and_cost() {
+    use reft::reliability::intervals::{reft_ckpt_interval, reft_sn_interval};
+    let mut rng = Rng::seed_from(0xCAD3);
+    for case in 0..CASES {
+        let t_comp = 0.1 + rng.below(1000) as f64 / 100.0;
+        let t_save = t_comp + rng.below(2000) as f64 / 100.0; // un-overlapped spill
+        // per-second probabilities stay well inside (0, 1): Eq. 7 is only
+        // monotone on that domain (it is a probability, not a raw rate)
+        let lam = 1e-8 * (1.0 + rng.below(100_000) as f64);
+        let lam_hot = lam * (1.0 + rng.below(50) as f64);
+        let t_dear = t_save + 1.0 + rng.below(1000) as f64 / 100.0;
+        let n = 2 + rng.below(7);
+
+        // Eq. 9 (snapshot tier, raw node rate)
+        let base = reft_sn_interval(t_save, t_comp, lam);
+        assert!(
+            reft_sn_interval(t_save, t_comp, lam_hot) <= base,
+            "case {case}: hotter λ lengthened Eq. 9"
+        );
+        assert!(
+            reft_sn_interval(t_dear, t_comp, lam) >= base,
+            "case {case}: dearer save shortened Eq. 9"
+        );
+        // Eq. 11 (durable tier, exceedance rate)
+        let base = reft_ckpt_interval(t_save, t_comp, lam, n);
+        assert!(
+            reft_ckpt_interval(t_save, t_comp, lam_hot, n) <= base,
+            "case {case}: hotter λ lengthened Eq. 11"
+        );
+        assert!(
+            reft_ckpt_interval(t_dear, t_comp, lam, n) >= base,
+            "case {case}: dearer save shortened Eq. 11"
+        );
+    }
+}
+
+/// Neither cadence scheduler ever emits a zero (or overflowing) interval,
+/// for arbitrary (including degenerate) cost measurements and event feeds.
+#[test]
+fn prop_schedulers_never_emit_zero_interval() {
+    use reft::persist::{IntervalScheduler, SnapshotScheduler};
+    let mut rng = Rng::seed_from(0x5C4ED);
+    for case in 0..CASES {
+        let nodes = 1 + rng.below(12);
+        let sg = 1 + rng.below(8);
+        let fallback = rng.below(100) as u64; // may be 0: must floor at 1
+        let mut per = IntervalScheduler::new(1e-4, sg, nodes, fallback);
+        let mut sn = SnapshotScheduler::new(1e-4, nodes, fallback);
+        assert!(per.interval_steps() >= 1, "case {case}");
+        assert!(sn.interval_steps() >= 1, "case {case}");
+        for _ in 0..rng.below(12) {
+            per.note_failure_event(rng.below(100_000) as f64);
+            sn.note_failure_event(rng.below(100_000) as f64);
+        }
+        for _ in 0..4 {
+            // degenerate measurements included: zero cost, zero step time
+            let t_save = rng.below(1000) as f64 / 100.0;
+            let t_step = rng.below(300) as f64 / 100.0;
+            let p = per.observe(t_save, t_step);
+            let s = sn.observe(t_save, t_step);
+            assert!(p >= 1 && p <= 1_000_000, "case {case}: persist {p}");
+            assert!(s >= 1 && s <= 1_000_000, "case {case}: snapshot {s}");
+            assert_eq!(p, per.interval_steps());
+            assert_eq!(s, sn.interval_steps());
+        }
+    }
+}
+
+/// Eq. 9 degrades to the operator's static interval below the empirical
+/// event floor, for arbitrary costs — and switches to the derived cadence
+/// the moment the floor is crossed.
+#[test]
+fn prop_eq9_degrades_to_static_below_event_floor() {
+    use reft::persist::{SnapshotScheduler, MIN_EMPIRICAL_EVENTS};
+    let mut rng = Rng::seed_from(0xF100);
+    for case in 0..CASES {
+        let static_steps = 1 + rng.below(200) as u64;
+        let mut s = SnapshotScheduler::new(1e-3, 1 + rng.below(8), static_steps);
+        for k in 0..MIN_EMPIRICAL_EVENTS - 1 {
+            s.note_failure_event(10.0 * (k as f64 + rng.below(100) as f64 / 200.0));
+            let t_save = rng.below(1000) as f64 / 10.0;
+            assert_eq!(
+                s.observe(t_save, 1.0),
+                static_steps,
+                "case {case}: knob leaked into Eq. 9 below the floor"
+            );
+        }
+        s.note_failure_event(1000.0 + rng.below(1000) as f64);
+        assert_eq!(s.empirical_events(), MIN_EMPIRICAL_EVENTS);
+        // above the floor with a real overhead: the interval is derived,
+        // finite, and >= 1 (the static knob no longer pins it)
+        let derived = s.observe(100.0, 1.0);
+        assert!(derived >= 1, "case {case}");
     }
 }
 
