@@ -113,8 +113,15 @@ impl CheckpointFile {
     }
 
     /// Parse + verify all checksums.
+    ///
+    /// Single-pass, symmetric to [`CheckpointFile::encode`]: a naive decoder
+    /// hashes each body for its section check and then re-hashes the whole
+    /// prefix for the trailer check — every body twice. Here each body is
+    /// hashed exactly once; its hasher serves the per-section compare and is
+    /// then folded into the streaming trailer hasher via CRC combine.
     pub fn decode(bytes: &[u8]) -> Result<CheckpointFile> {
         let mut r = Reader { b: bytes, pos: 0 };
+        let mut trailer = crc32fast::Hasher::new();
         if r.take(8)? != MAGIC {
             bail!("bad checkpoint magic");
         }
@@ -126,21 +133,26 @@ impl CheckpointFile {
         let name_len = r.u32()? as usize;
         let model = String::from_utf8(r.take(name_len)?.to_vec()).context("model name utf8")?;
         let n = r.u32()? as usize;
+        trailer.update(&bytes[..r.pos]); // file + section-count header, one shot
         let mut sections = Vec::with_capacity(n);
         for _ in 0..n {
+            let hdr_start = r.pos;
             let kind = SectionKind::from_u8(r.u8()?)?;
             let id = r.u32()?;
             let len = r.u64()? as usize;
             let crc = r.u32()?;
+            trailer.update(&bytes[hdr_start..r.pos]);
             let body = r.take(len)?.to_vec();
-            if crc32fast::hash(&body) != crc {
+            let mut body_crc = crc32fast::Hasher::new();
+            body_crc.update(&body);
+            if body_crc.clone().finalize() != crc {
                 bail!("section (kind {kind:?}, id {id}) CRC mismatch — checkpoint corrupt");
             }
             sections.push(Section { kind, id, body });
+            trailer.combine(&body_crc); // body hashed once, folded into trailer
         }
-        let trailer_pos = r.pos;
-        let trailer = r.u32()?;
-        if crc32fast::hash(&bytes[..trailer_pos]) != trailer {
+        let stored = r.u32()?;
+        if trailer.finalize() != stored {
             bail!("trailer CRC mismatch — checkpoint truncated or corrupt");
         }
         if r.pos != bytes.len() {

@@ -90,6 +90,11 @@ pub struct PersistConfig {
     /// this land as `part-{k}` objects with per-part CRCs, so a crashed
     /// upload resumes from the last durable part (0 disables multipart)
     pub multipart_part_bytes: usize,
+    /// bounded in-node worker pool for multipart part uploads: how many
+    /// `part-{k}` puts one writer keeps in flight concurrently (the node's
+    /// throttle lane still enforces its bytes/sec budget; 1 = the serial
+    /// pre-parallel loop, floors at 1)
+    pub multipart_streams: usize,
     /// let the engine tune its own pipeline depth between 1 and
     /// `pipeline_jobs` from the EWMA of observed storage RTT vs SMP fetch
     /// time (off = the static `pipeline_jobs` depth, the baseline)
@@ -108,6 +113,7 @@ impl Default for PersistConfig {
             lambda_node: 1e-4,
             pipeline_jobs: 2,
             multipart_part_bytes: 8 * 1024 * 1024,
+            multipart_streams: 4,
             adaptive_depth: false,
         }
     }
@@ -273,8 +279,8 @@ impl RunConfig {
                 if let Some(b) = p.get("enabled").and_then(Json::as_bool) {
                     c.ft.persist.enabled = b;
                 }
-                if let Some(n) = p.get("throttle_bytes_per_sec").and_then(Json::as_f64) {
-                    c.ft.persist.throttle_bytes_per_sec = n as u64;
+                if let Some(n) = p.get("throttle_bytes_per_sec").and_then(Json::as_u64) {
+                    c.ft.persist.throttle_bytes_per_sec = n;
                 }
                 if let Some(n) = p.get("chunk_bytes").and_then(Json::as_usize) {
                     c.ft.persist.chunk_bytes = n.max(4096);
@@ -282,8 +288,8 @@ impl RunConfig {
                 if let Some(n) = p.get("keep_last").and_then(Json::as_usize) {
                     c.ft.persist.keep_last = n.max(1);
                 }
-                if let Some(n) = p.get("keep_every").and_then(Json::as_f64) {
-                    c.ft.persist.keep_every = n as u64;
+                if let Some(n) = p.get("keep_every").and_then(Json::as_u64) {
+                    c.ft.persist.keep_every = n;
                 }
                 if let Some(b) = p.get("auto_interval").and_then(Json::as_bool) {
                     c.ft.persist.auto_interval = b;
@@ -299,6 +305,9 @@ impl RunConfig {
                     // typo cannot explode a shard into millions of parts
                     c.ft.persist.multipart_part_bytes =
                         if n == 0 { 0 } else { n.max(4096) };
+                }
+                if let Some(n) = p.get("multipart_streams").and_then(Json::as_usize) {
+                    c.ft.persist.multipart_streams = n.max(1);
                 }
                 if let Some(b) = p.get("adaptive_depth").and_then(Json::as_bool) {
                     c.ft.persist.adaptive_depth = b;
@@ -371,6 +380,7 @@ mod tests {
                                "auto_interval": true, "lambda_node": 0.001,
                                "pipeline_jobs": 3,
                                "multipart_part_bytes": 1048576,
+                               "multipart_streams": 6,
                                "adaptive_depth": true},
                    "auto_snapshot_interval": true}
         }"#;
@@ -386,11 +396,13 @@ mod tests {
         assert!((c.ft.persist.lambda_node - 1e-3).abs() < 1e-12);
         assert_eq!(c.ft.persist.pipeline_jobs, 3);
         assert_eq!(c.ft.persist.multipart_part_bytes, 1 << 20);
+        assert_eq!(c.ft.persist.multipart_streams, 6);
         // defaults: engine off, retention floors, control plane static
         let d = RunConfig::default();
         assert!(!d.ft.persist.enabled);
         assert!(d.ft.persist.keep_last >= 1);
         assert!(d.ft.persist.pipeline_jobs >= 1);
+        assert!(d.ft.persist.multipart_streams >= 1);
         assert!(!d.ft.persist.adaptive_depth);
         assert!(!d.ft.auto_snapshot_interval);
         let z = RunConfig::from_json_text(r#"{"ft": {"persist": {"keep_last": 0}}}"#).unwrap();
@@ -408,6 +420,12 @@ mod tests {
         )
         .unwrap();
         assert_eq!(z.ft.persist.multipart_part_bytes, 0);
+        // part-upload streams floor at 1 (serial)
+        let z = RunConfig::from_json_text(
+            r#"{"ft": {"persist": {"multipart_streams": 0}}}"#,
+        )
+        .unwrap();
+        assert_eq!(z.ft.persist.multipart_streams, 1);
     }
 
     #[test]

@@ -9,7 +9,8 @@
 //!              [--persist-engine BOOL] [--persist-throttle-bytes N]
 //!              [--persist-keep-last N] [--persist-keep-every N]
 //!              [--persist-auto-interval BOOL] [--persist-pipeline-jobs N]
-//!              [--persist-part-bytes N] [--persist-adaptive-depth BOOL]
+//!              [--persist-part-bytes N] [--persist-part-streams N]
+//!              [--persist-adaptive-depth BOOL]
 //!              [--auto-snapshot-interval BOOL]
 //! reft survival    [--threshold 0.9]        # Fig. 8 curves + crossing table
 //! reft intervals   [--lambda 1e-4] [--sg 6] # Appendix-A optimal intervals
@@ -145,6 +146,8 @@ fn build_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
         get_usize("persist-pipeline-jobs", cfg.ft.persist.pipeline_jobs)?.max(1);
     let part = get_usize("persist-part-bytes", cfg.ft.persist.multipart_part_bytes)?;
     cfg.ft.persist.multipart_part_bytes = if part == 0 { 0 } else { part.max(4096) };
+    cfg.ft.persist.multipart_streams =
+        get_usize("persist-part-streams", cfg.ft.persist.multipart_streams)?.max(1);
     if let Some(a) = flags.get("persist-adaptive-depth") {
         cfg.ft.persist.adaptive_depth = a == "true" || a == "1";
     }

@@ -22,8 +22,14 @@
 //!   clocks — persist I/O still cannot starve training bandwidth, but a
 //!   straggler can no longer serialize the whole cluster behind it;
 //! * large shards upload as **resumable multipart** part-objects with
-//!   per-part CRCs: a crash mid-shard resumes from the last durable part
-//!   instead of re-uploading the whole shard (see [`super::manifest`]);
+//!   per-part CRCs, fanned across a bounded in-node worker pool
+//!   (`persist.multipart_streams`) that keeps several part RTTs in flight
+//!   per writer while the node's throttle lane still enforces its bytes/sec
+//!   budget; a crash mid-shard resumes from the last durable part instead
+//!   of re-uploading the whole shard (see [`super::manifest`]). CRCs are
+//!   fused into the storage write loop (`put_checksummed`) and the
+//!   whole-shard CRC comes from GF(2) `combine` — each byte is touched
+//!   exactly once on the way out;
 //! * commit is all-or-nothing **and in enqueue order**: a commit turnstile
 //!   serializes the manifest writes, so overlapped jobs can never commit
 //!   out of order and `latest` advances monotonically — in *content* too: a
@@ -40,7 +46,7 @@
 //! shutdown (and tests): it barriers on the queue, not on any in-band step.
 
 use std::collections::{BTreeSet, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -495,10 +501,112 @@ struct NodeWrite {
     acc: UploadAcc,
 }
 
+/// Bounded-cadence sidecar writer. The previous engine rewrote the whole
+/// multipart-progress sidecar after EVERY part put — O(parts²) metadata
+/// write volume per shard. The flusher rewrites it only when the records
+/// added since the last flush reach the records already flushed (doubling
+/// cadence): O(log parts) sidecar puts and O(parts) total sidecar bytes,
+/// while a crash loses at most the newer half of the records — a resumed
+/// attempt re-uploads those parts, which is conservative, never corrupt.
+/// Shared behind a `Mutex` by the parallel part workers; the encoded body
+/// is returned to the caller so the RTT-paying sidecar put happens OUTSIDE
+/// the lock (an older body overwriting a newer one is equally conservative).
+struct SidecarFlusher {
+    progress: PartProgress,
+    /// records in the sidecar body as of the last flush
+    flushed: usize,
+    /// records added since the last flush
+    unflushed: usize,
+}
+
+impl SidecarFlusher {
+    fn new(progress: PartProgress) -> SidecarFlusher {
+        let flushed = progress.len();
+        SidecarFlusher { progress, flushed, unflushed: 0 }
+    }
+
+    /// The `(len, crc)` a prior attempt durably recorded for part `k`.
+    fn get(&self, k: usize) -> Option<(u64, u32)> {
+        self.progress.get(k)
+    }
+
+    /// Record a landed part; `Some(body)` when the cadence says flush.
+    fn record(&mut self, k: usize, len: u64, crc: u32) -> Option<Vec<u8>> {
+        self.progress.record(k, len, crc);
+        self.unflushed += 1;
+        if self.unflushed >= self.flushed.max(1) {
+            self.flushed = self.progress.len();
+            self.unflushed = 0;
+            Some(self.progress.encode())
+        } else {
+            None
+        }
+    }
+}
+
+/// Land one `part-{k}` object. Reuse fast path: the sidecar's `(len, crc)`
+/// record plus `exists()` plus ONE hash pass over the in-memory piece prove
+/// the durable part holds exactly these bytes — no byte read-back. Upload
+/// path: paced on the node's throttle lane, then a **fused**
+/// `put_checksummed` (the CRC is computed inside the storage write loop,
+/// not in a separate pass), then the sidecar record at the flusher's
+/// bounded cadence. The sidecar put is best-effort — it is an optimization,
+/// and a failed metadata put must not abort the job.
+#[allow(clippy::too_many_arguments)]
+fn upload_part(
+    shared: &EngineShared,
+    step: u64,
+    stage: usize,
+    node: usize,
+    k: usize,
+    piece: &[u8],
+    flusher: &Mutex<SidecarFlusher>,
+    meta_key: &str,
+    acc: &mut UploadAcc,
+) -> Result<PartEntry> {
+    let cfg = &shared.cfg;
+    let storage = shared.storage.as_ref();
+    let pkey = part_key(&shared.model, step, stage, node, k);
+    let recorded = flusher.lock().unwrap().get(k);
+    if let Some((len, crc)) = recorded {
+        // record first (written only AFTER a successful part put), cheap
+        // exists() second, the hash pass over the in-memory piece last
+        if len == piece.len() as u64
+            && storage.exists(&pkey)
+            && crc32fast::hash(piece) == crc
+        {
+            acc.parts_reused += 1;
+            return Ok(PartEntry { key: pkey, len, crc32: crc });
+        }
+    }
+    for sub in piece.chunks(cfg.chunk_bytes.max(1)) {
+        acc.waited += shared.throttles.consume(node, sub.len());
+    }
+    let crc = storage
+        .put_checksummed(&pkey, piece)
+        .with_context(|| format!("uploading part `{pkey}`"))?;
+    acc.parts_uploaded += 1;
+    // a crash between the part put and the next sidecar flush just
+    // re-uploads the unrecorded parts on resume (conservative)
+    let body = flusher.lock().unwrap().record(k, piece.len() as u64, crc);
+    if let Some(body) = body {
+        let _ = storage.put(meta_key, &body);
+    }
+    Ok(PartEntry { key: pkey, len: piece.len() as u64, crc32: crc })
+}
+
 /// Land one shard's bytes: a single paced blob below the multipart
-/// threshold, else `part-{k}` objects with per-part CRCs. A part that is
-/// already durable with matching bytes (same CRC) is **reused**, not
+/// threshold, else `part-{k}` objects with per-part CRCs, fanned across a
+/// bounded in-node worker pool (`persist.multipart_streams`). A part that
+/// is already durable with matching bytes (same CRC) is **reused**, not
 /// re-uploaded — the crash-resume fast path a retried step hits.
+///
+/// Byte-touch budget: every byte is hashed inside the storage write loop
+/// (`put_checksummed`) — never in a separate whole-shard pass. The
+/// whole-shard CRC the manifest records comes from folding the part CRCs
+/// with GF(2) `combine` (O(log len) per part), which equals the CRC of the
+/// concatenated bytes exactly, so manifests are indistinguishable from the
+/// hash-twice engine's.
 fn upload_shard(
     shared: &EngineShared,
     step: u64,
@@ -509,18 +617,18 @@ fn upload_shard(
 ) -> Result<ShardEntry> {
     let cfg = &shared.cfg;
     let storage = shared.storage.as_ref();
-    let crc = crc32fast::hash(bytes);
     let key = shard_key(&shared.model, step, shard.stage, node);
     let part_bytes = cfg.multipart_part_bytes;
     if part_bytes == 0 || bytes.len() <= part_bytes {
         // single blob: pace chunk by chunk on this node's lane, then land
         // the blob in one atomic put (the PR-3 fast path, kept for small
-        // shards where part bookkeeping would cost more than it saves)
+        // shards where part bookkeeping would cost more than it saves);
+        // the CRC is computed inside the put's write loop
         for piece in bytes.chunks(cfg.chunk_bytes.max(1)) {
             acc.waited += shared.throttles.consume(node, piece.len());
         }
-        storage
-            .put(&key, bytes)
+        let crc = storage
+            .put_checksummed(&key, bytes)
             .with_context(|| format!("uploading `{key}`"))?;
         return Ok(ShardEntry {
             key,
@@ -537,34 +645,106 @@ fn upload_shard(
     // per-part byte read-back (the pre-sidecar engine re-fetched and
     // re-hashed whole parts to prove them reusable)
     let meta_key = part_meta_key(&shared.model, step, shard.stage, node);
-    let mut progress = PartProgress::load(storage, &meta_key);
-    let mut parts = Vec::with_capacity(bytes.len().div_ceil(part_bytes));
-    for (k, piece) in bytes.chunks(part_bytes).enumerate() {
-        let pkey = part_key(&shared.model, step, shard.stage, node, k);
-        let pcrc = crc32fast::hash(piece);
-        // reuse iff the sidecar proves a part with exactly these bytes was
-        // put (the record is written only AFTER the part put succeeds) and
-        // the object still exists — both metadata operations
-        let reusable =
-            progress.matches(k, piece.len() as u64, pcrc) && storage.exists(&pkey);
-        if reusable {
-            acc.parts_reused += 1;
-        } else {
-            for sub in piece.chunks(cfg.chunk_bytes.max(1)) {
-                acc.waited += shared.throttles.consume(node, sub.len());
-            }
-            storage
-                .put(&pkey, piece)
-                .with_context(|| format!("uploading part `{pkey}`"))?;
-            acc.parts_uploaded += 1;
-            // record the landed part before moving on: a crash between the
-            // part put and this sidecar put just re-uploads that one part
-            // on resume (conservative). Best-effort — the sidecar is an
-            // optimization, a failed metadata put must not abort the job.
-            progress.record(k, piece.len() as u64, pcrc);
-            let _ = storage.put(&meta_key, &progress.encode());
+    let flusher = Mutex::new(SidecarFlusher::new(PartProgress::load(storage, &meta_key)));
+    let n_parts = bytes.len().div_ceil(part_bytes);
+    let streams = cfg.multipart_streams.max(1).min(n_parts);
+    let parts: Vec<PartEntry> = if streams <= 1 {
+        // serial lane: deterministic part order — the crash-matrix tests
+        // pin `multipart_streams: 1` to place fault injections exactly,
+        // and the hotpath bench keeps it as the measured baseline
+        let mut parts = Vec::with_capacity(n_parts);
+        for (k, piece) in bytes.chunks(part_bytes).enumerate() {
+            parts.push(upload_part(
+                shared, step, shard.stage, node, k, piece, &flusher, &meta_key, acc,
+            )?);
         }
-        parts.push(PartEntry { key: pkey, len: piece.len() as u64, crc32: pcrc });
+        parts
+    } else {
+        // bounded in-node worker pool: workers claim part indices from a
+        // shared atomic, so `streams` part puts keep their storage RTTs in
+        // flight concurrently. The node's throttle lane is a mutex-clocked
+        // reservation queue, so concurrent workers still share exactly the
+        // lane's bytes/sec budget — pacing semantics are unchanged.
+        let chunks: Vec<(usize, &[u8])> = bytes.chunks(part_bytes).enumerate().collect();
+        let next = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        let mut outs: Vec<(UploadAcc, Result<Vec<(usize, PartEntry)>>)> =
+            Vec::with_capacity(streams);
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(streams);
+            for _ in 0..streams {
+                let chunks = &chunks;
+                let flusher = &flusher;
+                let meta_key = meta_key.as_str();
+                let next = &next;
+                let failed = &failed;
+                handles.push(scope.spawn(move || {
+                    let mut wacc = UploadAcc::default();
+                    let mut got: Vec<(usize, PartEntry)> = Vec::new();
+                    loop {
+                        if failed.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        let Some(&(k, piece)) = chunks.get(i) else { break };
+                        match upload_part(
+                            shared, step, shard.stage, node, k, piece, flusher, meta_key,
+                            &mut wacc,
+                        ) {
+                            Ok(e) => got.push((k, e)),
+                            Err(e) => {
+                                // early-stop the siblings; the accounting
+                                // for parts already landed is kept
+                                failed.store(true, Ordering::Relaxed);
+                                return (wacc, Err(e));
+                            }
+                        }
+                    }
+                    (wacc, Ok(got))
+                }));
+            }
+            for h in handles {
+                outs.push(h.join().unwrap_or_else(|_| {
+                    (UploadAcc::default(), Err(anyhow::anyhow!("part upload worker panicked")))
+                }));
+            }
+        });
+        let mut slots: Vec<Option<PartEntry>> = Vec::new();
+        slots.resize_with(n_parts, || None);
+        let mut first_err: Option<anyhow::Error> = None;
+        for (wacc, res) in outs {
+            // merge accounting even from failed workers: the waits happened
+            // and the parts that landed are reusable by a retry
+            acc.waited += wacc.waited;
+            acc.parts_uploaded += wacc.parts_uploaded;
+            acc.parts_reused += wacc.parts_reused;
+            match res {
+                Ok(got) => {
+                    for (k, e) in got {
+                        slots[k] = Some(e);
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        // every index was claimed exactly once and none errored, so the
+        // slots are complete — and in k-order by construction
+        slots
+            .into_iter()
+            .map(|p| p.expect("part worker invariant: every index claimed once"))
+            .collect()
+    };
+    // whole-shard CRC from the part CRCs via GF(2) combine — no extra pass
+    let mut whole = crc32fast::Hasher::new();
+    for p in &parts {
+        whole.combine(&crc32fast::Hasher::new_with_initial_len(p.crc32, p.len));
     }
     Ok(ShardEntry {
         key,
@@ -572,7 +752,7 @@ fn upload_shard(
         node,
         offset: shard.range.start,
         len: shard.len(),
-        crc32: crc,
+        crc32: whole.finalize(),
         parts,
     })
 }
@@ -877,6 +1057,39 @@ mod tests {
     fn node_throttles_unknown_lane_is_unpaced() {
         let t = NodeThrottles::new(1 << 20, 2);
         assert_eq!(t.consume(99, 1 << 30), 0.0);
+    }
+
+    #[test]
+    fn sidecar_flusher_doubling_cadence() {
+        // fresh shard: flushes after parts 1, 2, 4, 8, ... so a 16-part
+        // upload pays O(log parts) sidecar puts, not 16 (the old engine
+        // rewrote the sidecar after every part — O(parts²) bytes)
+        let mut f = SidecarFlusher::new(PartProgress::default());
+        let mut flushes = 0;
+        for k in 0..16usize {
+            if f.record(k, 4096, k as u32).is_some() {
+                flushes += 1;
+            }
+        }
+        assert_eq!(flushes, 5, "16 fresh parts flush at 1, 2, 4, 8, 16");
+        // every record is retained regardless of cadence
+        assert_eq!(f.progress.len(), 16);
+        // resumed attempt starting from 8 durable records: no flush until
+        // 8 MORE records land
+        let mut resumed = PartProgress::default();
+        for k in 0..8usize {
+            resumed.record(k, 1, 0);
+        }
+        let mut f = SidecarFlusher::new(resumed);
+        let mut flushes = 0;
+        for k in 8..16usize {
+            if f.record(k, 1, 0).is_some() {
+                flushes += 1;
+            }
+        }
+        assert_eq!(flushes, 1, "one flush when the unflushed half catches up");
+        assert_eq!(f.get(3), Some((1, 0)));
+        assert_eq!(f.get(99), None);
     }
 
     #[test]

@@ -27,18 +27,28 @@
 //!
 //! Loading is a **parallel sharded gather** ([`load_manifest_payload`]):
 //! scoped threads fetch + CRC-verify shards concurrently and stitch them
-//! directly into the pre-allocated stage buffers (`Storage::get_into`, no
-//! intermediate allocation), mirroring the in-memory parallel restore. The
-//! pre-parallel serial loop is kept as
-//! [`load_manifest_payload_serial`] — the measured baseline for
-//! `benches/hotpath.rs` and the byte-identity oracle in the tests.
+//! directly into the pre-allocated stage buffers, mirroring the in-memory
+//! parallel restore. Verification is **fused into the fetch**
+//! (`Storage::get_into_checksummed`): each chunk is hashed while it is
+//! cache-warm from the copy, so restore touches every byte exactly once;
+//! multipart shards get their whole-shard CRC from the per-part CRCs via
+//! GF(2) `combine` without another byte pass. The pre-parallel serial loop
+//! is kept as [`load_manifest_payload_serial`] (parallel-vs-serial
+//! baseline/oracle) and the pre-fusion leaf as
+//! [`load_manifest_payload_separate`] (fused-vs-separate baseline/oracle)
+//! for `benches/hotpath.rs` and the tests.
+//!
+//! Manifests and sidecars encode/decode through the **streaming** JSON
+//! writer/reader (`util::json::{JsonWriter, JsonReader}`) — no intermediate
+//! DOM tree on the per-commit path. The DOM codecs are retained as
+//! `encode_dom`/`decode_dom`, the byte- and value-identity oracles.
 
 use std::collections::BTreeSet;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::checkpoint::Storage;
-use crate::util::json::Json;
+use crate::util::json::{Json, JsonReader, JsonWriter};
 
 /// Key of one persisted shard blob.
 pub fn shard_key(model: &str, step: u64, stage: usize, node: usize) -> String {
@@ -141,7 +151,35 @@ pub struct PartProgress {
 }
 
 impl PartProgress {
+    /// Streaming single-pass encode: bytes go straight into the output
+    /// buffer, no intermediate `Json` tree. Byte-identical to
+    /// [`PartProgress::encode_dom`] (the retained oracle) — keys are
+    /// emitted in the sorted order the DOM's BTreeMap would produce.
     pub fn encode(&self) -> Vec<u8> {
+        let mut w = JsonWriter::with_capacity(16 + self.parts.len() * 48);
+        w.begin_obj();
+        w.key("parts");
+        w.begin_arr();
+        for (&k, &(len, crc)) in &self.parts {
+            w.begin_obj();
+            w.key("crc32");
+            w.u32(crc);
+            w.key("k");
+            w.usize(k);
+            w.key("len");
+            w.u64(len);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.raw(b"\n");
+        w.finish()
+    }
+
+    /// DOM-tree encode — the pre-streaming spelling, retained as the
+    /// byte-identity oracle the tests compare [`PartProgress::encode`]
+    /// against.
+    pub fn encode_dom(&self) -> Vec<u8> {
         let parts = Json::Arr(
             self.parts
                 .iter()
@@ -157,15 +195,53 @@ impl PartProgress {
         format!("{}\n", Json::obj(vec![("parts", parts)])).into_bytes()
     }
 
+    /// Streaming incremental decode: walks the document in place, parsing
+    /// counts straight from the digit runs (exact over the full u64 range,
+    /// negatives/fractions rejected). Unknown fields are skipped.
     pub fn decode(bytes: &[u8]) -> Result<PartProgress> {
+        let text = std::str::from_utf8(bytes).context("part sidecar is not utf-8")?;
+        let mut r = JsonReader::new(text);
+        let mut parts = std::collections::BTreeMap::new();
+        r.obj_begin()?;
+        while let Some(top) = r.key()? {
+            if top == "parts" {
+                r.arr_begin()?;
+                while r.arr_next()? {
+                    r.obj_begin()?;
+                    let (mut k, mut len, mut crc) = (None, None, None);
+                    while let Some(f) = r.key()? {
+                        match f.as_str() {
+                            "k" => k = Some(r.usize()?),
+                            "len" => len = Some(r.u64()?),
+                            "crc32" => crc = Some(r.u32()?),
+                            _ => r.skip_value()?,
+                        }
+                    }
+                    parts.insert(
+                        k.ok_or_else(|| anyhow!("part record missing `k`"))?,
+                        (
+                            len.ok_or_else(|| anyhow!("part record missing `len`"))?,
+                            crc.ok_or_else(|| anyhow!("part record missing `crc32`"))?,
+                        ),
+                    );
+                }
+            } else {
+                r.skip_value()?;
+            }
+        }
+        r.end()?;
+        Ok(PartProgress { parts })
+    }
+
+    /// DOM-tree decode — retained as the value-identity oracle for
+    /// [`PartProgress::decode`]. Uses the strict integer accessors, so it
+    /// rejects the same lossy values the streaming reader does.
+    pub fn decode_dom(bytes: &[u8]) -> Result<PartProgress> {
         let text = std::str::from_utf8(bytes).context("part sidecar is not utf-8")?;
         let j = Json::parse(text).map_err(|e| anyhow::anyhow!("part sidecar: {e}"))?;
         let mut parts = std::collections::BTreeMap::new();
         for p in j.req_arr("parts")? {
-            parts.insert(
-                p.req_usize("k")?,
-                (p.req_f64("len")? as u64, p.req_f64("crc32")? as u32),
-            );
+            parts.insert(p.req_usize("k")?, (p.req_u64("len")?, p.req_u32("crc32")?));
         }
         Ok(PartProgress { parts })
     }
@@ -186,6 +262,19 @@ impl PartProgress {
 
     pub fn record(&mut self, k: usize, len: u64, crc: u32) {
         self.parts.insert(k, (len, crc));
+    }
+
+    /// The recorded `(len, crc)` of part `k`, if it has durably landed.
+    pub fn get(&self, k: usize) -> Option<(u64, u32)> {
+        self.parts.get(&k).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.parts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
     }
 }
 
@@ -209,7 +298,71 @@ pub struct PersistManifest {
 }
 
 impl PersistManifest {
+    /// Streaming single-pass encode — the per-commit hot path. No
+    /// intermediate `Json` tree; keys are emitted in the sorted order the
+    /// DOM's BTreeMap would produce, so the output is byte-identical to
+    /// [`PersistManifest::encode_dom`] (the retained oracle) and the wire
+    /// format is unchanged from PR 3/4 — including omitting `parts` for
+    /// single-blob shards.
     pub fn encode(&self) -> Vec<u8> {
+        let mut w = JsonWriter::with_capacity(128 + self.shards.len() * 192);
+        w.begin_obj();
+        w.key("model");
+        w.str(&self.model);
+        w.key("shards");
+        w.begin_arr();
+        for s in &self.shards {
+            w.begin_obj();
+            w.key("crc32");
+            w.u32(s.crc32);
+            w.key("key");
+            w.str(&s.key);
+            w.key("len");
+            w.u64(s.len);
+            w.key("node");
+            w.usize(s.node);
+            w.key("offset");
+            w.u64(s.offset);
+            if !s.parts.is_empty() {
+                w.key("parts");
+                w.begin_arr();
+                for p in &s.parts {
+                    w.begin_obj();
+                    w.key("crc32");
+                    w.u32(p.crc32);
+                    w.key("key");
+                    w.str(&p.key);
+                    w.key("len");
+                    w.u64(p.len);
+                    w.end_obj();
+                }
+                w.end_arr();
+            }
+            w.key("stage");
+            w.usize(s.stage);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.key("snapshot_step");
+        w.u64(self.snapshot_step);
+        w.key("stage_bytes");
+        w.begin_arr();
+        for &b in &self.stage_bytes {
+            w.u64(b);
+        }
+        w.end_arr();
+        w.key("step");
+        w.u64(self.step);
+        w.key("version");
+        w.u64(self.version);
+        w.end_obj();
+        w.raw(b"\n");
+        w.finish()
+    }
+
+    /// DOM-tree encode — the pre-streaming spelling, retained as the
+    /// byte-identity oracle for [`PersistManifest::encode`].
+    pub fn encode_dom(&self) -> Vec<u8> {
         let shards = Json::Arr(
             self.shards
                 .iter()
@@ -259,21 +412,73 @@ impl PersistManifest {
         format!("{j}\n").into_bytes()
     }
 
+    /// Streaming incremental decode: no intermediate tree, counts and key
+    /// components parsed straight from the digit runs (exact over the full
+    /// u64 range; negatives, fractions, and NaN are rejected instead of
+    /// being silently truncated as the old `req_f64(...) as u64` did).
+    /// Field order independent; unknown fields are skipped.
     pub fn decode(bytes: &[u8]) -> Result<PersistManifest> {
+        let text = std::str::from_utf8(bytes).context("manifest is not utf-8")?;
+        let mut r = JsonReader::new(text);
+        let mut model = None;
+        let mut step = None;
+        let mut version = None;
+        let mut snapshot_step = None;
+        let mut stage_bytes = None;
+        let mut shards = None;
+        r.obj_begin()?;
+        while let Some(top) = r.key()? {
+            match top.as_str() {
+                "model" => model = Some(r.str()?),
+                "step" => step = Some(r.u64()?),
+                "version" => version = Some(r.u64()?),
+                "snapshot_step" => snapshot_step = Some(r.u64()?),
+                "stage_bytes" => {
+                    let mut v = Vec::new();
+                    r.arr_begin()?;
+                    while r.arr_next()? {
+                        v.push(r.u64()?);
+                    }
+                    stage_bytes = Some(v);
+                }
+                "shards" => {
+                    let mut v = Vec::new();
+                    r.arr_begin()?;
+                    while r.arr_next()? {
+                        v.push(decode_shard(&mut r)?);
+                    }
+                    shards = Some(v);
+                }
+                _ => r.skip_value()?,
+            }
+        }
+        r.end()?;
+        Ok(PersistManifest {
+            model: model.ok_or_else(|| anyhow!("manifest missing `model`"))?,
+            step: step.ok_or_else(|| anyhow!("manifest missing `step`"))?,
+            version: version.ok_or_else(|| anyhow!("manifest missing `version`"))?,
+            snapshot_step: snapshot_step
+                .ok_or_else(|| anyhow!("manifest missing `snapshot_step`"))?,
+            stage_bytes: stage_bytes.ok_or_else(|| anyhow!("manifest missing `stage_bytes`"))?,
+            shards: shards.ok_or_else(|| anyhow!("manifest missing `shards`"))?,
+        })
+    }
+
+    /// DOM-tree decode — retained as the value-identity oracle for
+    /// [`PersistManifest::decode`]. Uses the strict integer accessors
+    /// (`req_u64`/`req_u32`), so it rejects the same lossy values the
+    /// streaming reader does.
+    pub fn decode_dom(bytes: &[u8]) -> Result<PersistManifest> {
         let text = std::str::from_utf8(bytes).context("manifest is not utf-8")?;
         let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
         let model = j.req_str("model")?.to_string();
-        let step = j.req_f64("step")? as u64;
-        let version = j.req_f64("version")? as u64;
-        let snapshot_step = j.req_f64("snapshot_step")? as u64;
+        let step = j.req_u64("step")?;
+        let version = j.req_u64("version")?;
+        let snapshot_step = j.req_u64("snapshot_step")?;
         let stage_bytes = j
             .req_arr("stage_bytes")?
             .iter()
-            .map(|v| {
-                v.as_f64()
-                    .map(|f| f as u64)
-                    .context("invalid stage_bytes entry")
-            })
+            .map(|v| v.as_u64().context("invalid stage_bytes entry"))
             .collect::<Result<Vec<u64>>>()?;
         let mut shards = Vec::new();
         for s in j.req_arr("shards")? {
@@ -282,8 +487,8 @@ impl PersistManifest {
                 for p in arr {
                     parts.push(PartEntry {
                         key: p.req_str("key")?.to_string(),
-                        len: p.req_f64("len")? as u64,
-                        crc32: p.req_f64("crc32")? as u32,
+                        len: p.req_u64("len")?,
+                        crc32: p.req_u32("crc32")?,
                     });
                 }
             }
@@ -291,14 +496,73 @@ impl PersistManifest {
                 key: s.req_str("key")?.to_string(),
                 stage: s.req_usize("stage")?,
                 node: s.req_usize("node")?,
-                offset: s.req_f64("offset")? as u64,
-                len: s.req_f64("len")? as u64,
-                crc32: s.req_f64("crc32")? as u32,
+                offset: s.req_u64("offset")?,
+                len: s.req_u64("len")?,
+                crc32: s.req_u32("crc32")?,
                 parts,
             });
         }
         Ok(PersistManifest { model, step, version, snapshot_step, stage_bytes, shards })
     }
+}
+
+/// One shard object from the streaming reader (cursor just past its `{`'s
+/// predecessor — `obj_begin` is called here).
+fn decode_shard(r: &mut JsonReader<'_>) -> Result<ShardEntry> {
+    r.obj_begin()?;
+    let mut key = None;
+    let mut stage = None;
+    let mut node = None;
+    let mut offset = None;
+    let mut len = None;
+    let mut crc32 = None;
+    let mut parts = Vec::new();
+    while let Some(f) = r.key()? {
+        match f.as_str() {
+            "key" => key = Some(r.str()?),
+            "stage" => stage = Some(r.usize()?),
+            "node" => node = Some(r.usize()?),
+            "offset" => offset = Some(r.u64()?),
+            "len" => len = Some(r.u64()?),
+            "crc32" => crc32 = Some(r.u32()?),
+            "parts" => {
+                r.arr_begin()?;
+                while r.arr_next()? {
+                    parts.push(decode_part(r)?);
+                }
+            }
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(ShardEntry {
+        key: key.ok_or_else(|| anyhow!("shard missing `key`"))?,
+        stage: stage.ok_or_else(|| anyhow!("shard missing `stage`"))?,
+        node: node.ok_or_else(|| anyhow!("shard missing `node`"))?,
+        offset: offset.ok_or_else(|| anyhow!("shard missing `offset`"))?,
+        len: len.ok_or_else(|| anyhow!("shard missing `len`"))?,
+        crc32: crc32.ok_or_else(|| anyhow!("shard missing `crc32`"))?,
+        parts,
+    })
+}
+
+fn decode_part(r: &mut JsonReader<'_>) -> Result<PartEntry> {
+    r.obj_begin()?;
+    let mut key = None;
+    let mut len = None;
+    let mut crc32 = None;
+    while let Some(f) = r.key()? {
+        match f.as_str() {
+            "key" => key = Some(r.str()?),
+            "len" => len = Some(r.u64()?),
+            "crc32" => crc32 = Some(r.u32()?),
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(PartEntry {
+        key: key.ok_or_else(|| anyhow!("part missing `key`"))?,
+        len: len.ok_or_else(|| anyhow!("part missing `len`"))?,
+        crc32: crc32.ok_or_else(|| anyhow!("part missing `crc32`"))?,
+    })
 }
 
 /// Every committed step of `model`, ascending.
@@ -315,10 +579,72 @@ pub fn persisted_steps(storage: &dyn Storage, model: &str) -> Vec<u64> {
 }
 
 /// Fetch one manifest shard directly into `out` (pre-carved to `entry.len`
-/// bytes), verifying the per-part CRCs (multipart) or the whole-shard CRC
-/// (single blob). The shared leaf of both the serial and the parallel
-/// loader, so byte-for-byte semantics cannot diverge between them.
+/// bytes), verifying as it goes. The CRC is **fused** into the fetch
+/// (`Storage::get_into_checksummed`): the backend hashes each chunk while
+/// it is cache-warm from the copy, so restore touches every byte once
+/// instead of copy-then-rehash. Multipart shards additionally fold the
+/// per-part CRCs into a whole-shard CRC via GF(2) `combine` (O(log len)
+/// per part, no byte pass) and check it against the recorded `crc32` —
+/// per-part checks alone cannot catch a parts list whose entries were
+/// reordered consistently with their blobs. The shared leaf of the serial
+/// and the parallel loader, so byte-for-byte semantics cannot diverge.
 fn fetch_shard_into(storage: &dyn Storage, s: &ShardEntry, out: &mut [u8]) -> Result<()> {
+    anyhow::ensure!(
+        out.len() as u64 == s.len,
+        "shard `{}` buffer is {} bytes, manifest says {}",
+        s.key,
+        out.len(),
+        s.len
+    );
+    if s.parts.is_empty() {
+        let crc = storage
+            .get_into_checksummed(&s.key, out)
+            .with_context(|| format!("shard `{}` missing or mis-sized", s.key))?;
+        anyhow::ensure!(
+            crc == s.crc32,
+            "shard `{}` CRC mismatch — durable copy corrupt",
+            s.key
+        );
+        return Ok(());
+    }
+    let covered: u64 = s.parts.iter().map(|p| p.len).sum();
+    anyhow::ensure!(
+        covered == s.len,
+        "shard `{}` parts cover {covered} of {} bytes",
+        s.key,
+        s.len
+    );
+    let mut off = 0usize;
+    let mut whole = crc32fast::Hasher::new();
+    for p in &s.parts {
+        let end = off + p.len as usize;
+        let slice = &mut out[off..end];
+        let crc = storage
+            .get_into_checksummed(&p.key, slice)
+            .with_context(|| format!("part `{}` missing or mis-sized", p.key))?;
+        anyhow::ensure!(
+            crc == p.crc32,
+            "part `{}` CRC mismatch — durable copy corrupt",
+            p.key
+        );
+        whole.combine(&crc32fast::Hasher::new_with_initial_len(crc, p.len));
+        off = end;
+    }
+    anyhow::ensure!(
+        whole.finalize() == s.crc32,
+        "shard `{}` whole-shard CRC mismatch — parts list truncated or reordered",
+        s.key
+    );
+    Ok(())
+}
+
+/// The pre-fusion leaf: plain `get_into` followed by a separate
+/// `crc32fast::hash` pass over the bytes just moved (for multipart shards,
+/// one pass per part plus a naive whole-shard pass — the shard-level check
+/// spelled without `combine`). Retained as the semantics oracle for the
+/// tests and the measured "separate hash pass" baseline of the
+/// `crc_fused_restore` section of `benches/hotpath.rs`.
+fn fetch_shard_into_separate(storage: &dyn Storage, s: &ShardEntry, out: &mut [u8]) -> Result<()> {
     anyhow::ensure!(
         out.len() as u64 == s.len,
         "shard `{}` buffer is {} bytes, manifest says {}",
@@ -358,6 +684,11 @@ fn fetch_shard_into(storage: &dyn Storage, s: &ShardEntry, out: &mut [u8]) -> Re
         );
         off = end;
     }
+    anyhow::ensure!(
+        crc32fast::hash(out) == s.crc32,
+        "shard `{}` whole-shard CRC mismatch — parts list truncated or reordered",
+        s.key
+    );
     Ok(())
 }
 
@@ -414,6 +745,29 @@ pub fn load_manifest_payload(
     storage: &dyn Storage,
     man: &PersistManifest,
 ) -> Result<Vec<Vec<u8>>> {
+    load_manifest_payload_with(storage, man, fetch_shard_into)
+}
+
+/// The parallel gather over the **pre-fusion leaf** (separate hash pass per
+/// shard/part plus a naive whole-shard pass for multipart). Same carving,
+/// same thread layout, same verification outcome as
+/// [`load_manifest_payload`] — only the number of times each byte is
+/// touched differs, which is exactly what the `crc_fused_restore` bench
+/// section measures.
+pub fn load_manifest_payload_separate(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+) -> Result<Vec<Vec<u8>>> {
+    load_manifest_payload_with(storage, man, fetch_shard_into_separate)
+}
+
+/// The shared parallel-gather harness, parameterized over the fetch leaf so
+/// the production path and the kept baseline cannot drift structurally.
+fn load_manifest_payload_with(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+    leaf: impl Fn(&dyn Storage, &ShardEntry, &mut [u8]) -> Result<()> + Sync,
+) -> Result<Vec<Vec<u8>>> {
     let order = tiling_order(man)?;
     let mut out: Vec<Vec<u8>> =
         man.stage_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
@@ -433,12 +787,13 @@ pub fn load_manifest_payload(
     let workers = work.len().clamp(1, LOAD_WORKERS);
     let chunk = work.len().div_ceil(workers).max(1);
     let mut results: Vec<Result<()>> = Vec::with_capacity(workers);
+    let leaf = &leaf;
     std::thread::scope(|scope| {
         let mut handles = Vec::with_capacity(workers);
         for batch in work.chunks_mut(chunk) {
             handles.push(scope.spawn(move || -> Result<()> {
                 for (i, slice) in batch.iter_mut() {
-                    fetch_shard_into(storage, &man.shards[*i], slice)?;
+                    leaf(storage, &man.shards[*i], slice)?;
                 }
                 Ok(())
             }));
@@ -456,10 +811,11 @@ pub fn load_manifest_payload(
     Ok(out)
 }
 
-/// The pre-parallel serial loader: one shard (and one part) at a time.
-/// Kept as the measured baseline for the `manifest_load_parallel_vs_serial`
-/// section of `benches/hotpath.rs` and as the byte-identity oracle the
-/// parallel-path tests compare against.
+/// The pre-parallel serial loader: one shard (and one part) at a time, over
+/// the same fused leaf as the parallel path. Kept as the measured baseline
+/// for the `manifest_load_parallel_vs_serial` section of
+/// `benches/hotpath.rs` and as the byte-identity oracle the parallel-path
+/// tests compare against.
 pub fn load_manifest_payload_serial(
     storage: &dyn Storage,
     man: &PersistManifest,
@@ -654,6 +1010,64 @@ mod tests {
     }
 
     #[test]
+    fn streaming_codec_matches_dom_oracle() {
+        let s = MemStorage::new();
+        for man in [sample(), multipart_sample(&s)] {
+            // byte identity: the streaming writer emits exactly what the
+            // BTreeMap-backed DOM Display would
+            assert_eq!(man.encode(), man.encode_dom());
+            // value identity: both decoders read both encodings to the
+            // same manifest
+            assert_eq!(PersistManifest::decode(&man.encode()).unwrap(), man);
+            assert_eq!(PersistManifest::decode_dom(&man.encode()).unwrap(), man);
+        }
+        let mut p = PartProgress::default();
+        p.record(0, 4096, 0xDEAD_BEEF);
+        p.record(7, 1, 0);
+        for p in [PartProgress::default(), p] {
+            assert_eq!(p.encode(), p.encode_dom());
+            assert_eq!(PartProgress::decode(&p.encode()).unwrap(), p);
+            assert_eq!(PartProgress::decode_dom(&p.encode()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn streaming_codec_exact_above_2_53() {
+        // the DOM's f64 numbers round above 2^53; the streaming codec
+        // parses/prints digit runs and must stay exact to u64::MAX
+        let man = PersistManifest {
+            model: "m".into(),
+            step: u64::MAX,
+            version: (1 << 53) + 1,
+            snapshot_step: u64::MAX - 1,
+            stage_bytes: vec![(1 << 60) + 3],
+            shards: vec![],
+        };
+        let back = PersistManifest::decode(&man.encode()).unwrap();
+        assert_eq!(back, man, "no precision loss through the streaming codec");
+        // the strict DOM decoder refuses rather than silently rounding
+        assert!(PersistManifest::decode_dom(&man.encode()).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_lossy_integers() {
+        let good = String::from_utf8(sample().encode()).unwrap();
+        // a negative or fractional count must fail BOTH decoders instead of
+        // being truncated by `as u64` (the old bug)
+        let neg = good.replace("\"step\":40", "\"step\":-40");
+        assert_ne!(neg, good);
+        assert!(PersistManifest::decode(neg.as_bytes()).is_err());
+        assert!(PersistManifest::decode_dom(neg.as_bytes()).is_err());
+        let frac = good.replace("\"step\":40", "\"step\":40.5");
+        assert!(PersistManifest::decode(frac.as_bytes()).is_err());
+        assert!(PersistManifest::decode_dom(frac.as_bytes()).is_err());
+        // crc32 must fit u32 (prefixing digits makes every crc huge)
+        let wide = good.replace("\"crc32\":", "\"crc32\":4294967296");
+        assert!(PersistManifest::decode(wide.as_bytes()).is_err());
+        assert!(PersistManifest::decode_dom(wide.as_bytes()).is_err());
+    }
+
+    #[test]
     fn multipart_manifest_roundtrip_and_load() {
         let s = MemStorage::new();
         let man = multipart_sample(&s);
@@ -667,6 +1081,47 @@ mod tests {
         assert_eq!(stages[1], vec![3u8; 6]);
         // serial oracle agrees byte for byte
         assert_eq!(load_manifest_payload_serial(&s, &man).unwrap(), stages);
+    }
+
+    #[test]
+    fn loaders_reject_consistently_reordered_parts() {
+        // Swap the two part ENTRIES of the multipart shard but leave the
+        // part blobs in place: every per-part CRC still matches its entry
+        // and the covered length is unchanged, so only the whole-shard
+        // check (GF(2) combine on the fused path, the naive extra hash pass
+        // on the separate path) can catch that the stitched bytes are in
+        // the wrong order.
+        let s = MemStorage::new();
+        let mut man = multipart_sample(&s);
+        man.shards[1].parts.swap(0, 1);
+        s.put(&manifest_key("m", 40), &man.encode()).unwrap();
+        let e = load_manifest_payload(&s, &man).unwrap_err().to_string();
+        assert!(e.contains("whole-shard"), "fused path names the shard-level check: {e}");
+        assert!(load_manifest_payload_separate(&s, &man).is_err());
+        assert!(load_manifest_payload_serial(&s, &man).is_err());
+        assert!(load_latest(&s, "m").unwrap().is_none());
+    }
+
+    #[test]
+    fn separate_loader_is_byte_identical_oracle() {
+        // fused production path and the kept pre-fusion baseline agree byte
+        // for byte on both single-blob and multipart manifests
+        let s = MemStorage::new();
+        let man = multipart_sample(&s);
+        let fused = load_manifest_payload(&s, &man).unwrap();
+        assert_eq!(load_manifest_payload_separate(&s, &man).unwrap(), fused);
+        assert_eq!(load_manifest_payload_serial(&s, &man).unwrap(), fused);
+        let s2 = MemStorage::new();
+        let man2 = sample();
+        put_shards(&s2, &man2);
+        assert_eq!(
+            load_manifest_payload(&s2, &man2).unwrap(),
+            load_manifest_payload_separate(&s2, &man2).unwrap()
+        );
+        // and both reject the same corruption
+        s2.put(&man2.shards[0].key, &[7; 6]).unwrap();
+        assert!(load_manifest_payload(&s2, &man2).is_err());
+        assert!(load_manifest_payload_separate(&s2, &man2).is_err());
     }
 
     #[test]

@@ -41,10 +41,10 @@ pub mod scheduler;
 pub use driver::PersistDriver;
 pub use engine::{NodeThrottles, PersistEngine, PersistStats, Throttle};
 pub use manifest::{
-    load_latest, load_manifest_payload, load_manifest_payload_serial, manifest_key,
-    manifest_prefix, part_key, part_meta_key, persisted_steps, resolve_for_recovery,
-    shard_key, step_of_key, sweep_orphan_shards, PartEntry, PartProgress, PersistManifest,
-    ShardEntry,
+    load_latest, load_manifest_payload, load_manifest_payload_separate,
+    load_manifest_payload_serial, manifest_key, manifest_prefix, part_key, part_meta_key,
+    persisted_steps, resolve_for_recovery, shard_key, step_of_key, sweep_orphan_shards,
+    PartEntry, PartProgress, PersistManifest, ShardEntry,
 };
 pub use retention::{run_gc, GcReport, RetentionPolicy};
 pub use scheduler::{IntervalScheduler, LambdaTracker, SnapshotScheduler, MIN_EMPIRICAL_EVENTS};

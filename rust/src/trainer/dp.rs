@@ -492,7 +492,10 @@ impl DpTrainer {
     /// picks the newest *complete*, shape-compatible persist manifest
     /// (atomic commit: partial uploads are invisible; a different-layout
     /// manifest degrades instead of aborting) unless the legacy inline
-    /// checkpoint holds newer state. Returns the tier that actually served.
+    /// checkpoint holds newer state. Manifest shards arrive through the
+    /// fused fetch path — CRC verified in the same pass that fills the
+    /// payload buffer, parts combined into the whole-shard check — so
+    /// restore touches every byte once. Returns the tier that served.
     fn recover_from_durable(&mut self, inmem_err: Option<&anyhow::Error>) -> Result<RecoveryPath> {
         let n_params = self.manifest.total_params;
         let legacy_key = self.storage.latest_for(&self.cfg.model);
@@ -507,6 +510,9 @@ impl DpTrainer {
             self.metrics.inc("recoveries_manifest", 1);
             self.metrics
                 .gauge("recovered_manifest_step", man.snapshot_step as f64);
+            let restored: usize = stages.iter().map(Vec::len).sum();
+            self.metrics
+                .gauge("restored_durable_bytes", restored as f64);
             return Ok(RecoveryPath::Durable(DurableTier::Manifest));
         }
         // legacy checkpoint of THIS model — a shared store may hold other

@@ -1,12 +1,25 @@
 //! Minimal JSON parser + writer (serde is not in the vendored crate set).
 //!
-//! Supports the full JSON data model with the restrictions that suit our
-//! inputs: UTF-8 text, `\uXXXX` escapes decoded for the BMP (surrogate pairs
-//! supported), numbers parsed as f64 (exact for the integer ranges the
-//! manifest uses: parameter counts < 2^53).
+//! Two tiers:
+//!
+//! * **DOM** (`Json::parse` / `Display`): full JSON data model with the
+//!   restrictions that suit our inputs — UTF-8 text, `\uXXXX` escapes decoded
+//!   for the BMP (surrogate pairs supported), numbers parsed as f64. Used for
+//!   config and anything low-volume.
+//! * **Streaming** ([`JsonWriter`] / [`JsonReader`]): push serializer and pull
+//!   parser that never build an intermediate tree, for the hot persist path
+//!   (`PersistManifest` / `PartProgress`). Writer output is byte-identical to
+//!   `Display` on the equivalent DOM value when keys are emitted in sorted
+//!   order; integers stay exact over the full u64 range.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Largest integer an f64 represents exactly (2^53). The strict DOM integer
+/// accessors refuse anything above it (an f64 round-trip could have silently
+/// rounded such a value); `JsonReader::u64` parses digit runs natively and is
+/// exact over the full u64 range.
+const MAX_EXACT_INT: f64 = 9_007_199_254_740_992.0;
 
 /// A parsed JSON value. Objects use a BTreeMap for deterministic iteration.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,8 +84,26 @@ impl Json {
         }
     }
 
+    /// Exactly-representable unsigned integer. Rejects NaN/±inf, negatives,
+    /// fractional values, and anything above 2^53 (where f64 stops being
+    /// exact) instead of silently truncating like `as_f64() as u64` would.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n)
+                if n.is_finite() && *n >= 0.0 && n.fract() == 0.0 && *n <= MAX_EXACT_INT =>
+            {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_u32(&self) -> Option<u32> {
+        self.as_u64().and_then(|v| u32::try_from(v).ok())
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|f| f as usize)
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -115,6 +146,18 @@ impl Json {
         self.get(key)
             .and_then(Json::as_usize)
             .ok_or_else(|| anyhow::anyhow!("missing/invalid integer field `{key}`"))
+    }
+
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.get(key)
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid unsigned integer field `{key}`"))
+    }
+
+    pub fn req_u32(&self, key: &str) -> anyhow::Result<u32> {
+        self.get(key)
+            .and_then(Json::as_u32)
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid u32 field `{key}`"))
     }
 
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
@@ -435,6 +478,305 @@ fn write_escaped(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
     write!(f, "\"")
 }
 
+// ---------------------------------------------------------------------------
+// streaming writer / reader
+// ---------------------------------------------------------------------------
+
+/// Push-style JSON serializer that writes bytes directly into a buffer —
+/// no intermediate `Json` tree. Emission is byte-identical to `Display` on
+/// the equivalent DOM value *provided the caller emits object keys in
+/// alphabetical order* (the DOM uses a BTreeMap, so its keys always come
+/// out sorted). Integers go through `u64`, which never loses precision.
+pub struct JsonWriter {
+    buf: Vec<u8>,
+    /// One entry per open container: `true` until the first element is written.
+    stack: Vec<bool>,
+    /// Set by `key`; the next value must not emit a comma.
+    after_key: bool,
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter { buf: Vec::new(), stack: Vec::new(), after_key: false }
+    }
+
+    pub fn with_capacity(cap: usize) -> JsonWriter {
+        JsonWriter { buf: Vec::with_capacity(cap), stack: Vec::new(), after_key: false }
+    }
+
+    /// Comma logic shared by every element: nothing after a key or for the
+    /// first element of a container, `,` otherwise.
+    fn sep(&mut self) {
+        if self.after_key {
+            self.after_key = false;
+            return;
+        }
+        if let Some(first) = self.stack.last_mut() {
+            if *first {
+                *first = false;
+            } else {
+                self.buf.push(b',');
+            }
+        }
+    }
+
+    pub fn begin_obj(&mut self) {
+        self.sep();
+        self.buf.push(b'{');
+        self.stack.push(true);
+    }
+
+    pub fn end_obj(&mut self) {
+        self.stack.pop();
+        self.buf.push(b'}');
+    }
+
+    pub fn begin_arr(&mut self) {
+        self.sep();
+        self.buf.push(b'[');
+        self.stack.push(true);
+    }
+
+    pub fn end_arr(&mut self) {
+        self.stack.pop();
+        self.buf.push(b']');
+    }
+
+    pub fn key(&mut self, k: &str) {
+        self.sep();
+        escape_into(&mut self.buf, k);
+        self.buf.push(b':');
+        self.after_key = true;
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.sep();
+        push_u64(&mut self.buf, v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.u64(v as u64);
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// f64 with the same formatting `Display` uses for `Json::Num`. Only
+    /// needed for genuinely fractional values; counts should use `u64`.
+    pub fn num(&mut self, n: f64) {
+        self.sep();
+        if n.fract() == 0.0 && n.abs() < 9e15 {
+            let i = n as i64;
+            if i < 0 {
+                self.buf.push(b'-');
+                push_u64(&mut self.buf, i.unsigned_abs());
+            } else {
+                push_u64(&mut self.buf, i as u64);
+            }
+        } else {
+            use std::io::Write;
+            let _ = write!(self.buf, "{n}");
+        }
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.sep();
+        escape_into(&mut self.buf, s);
+    }
+
+    pub fn bool(&mut self, b: bool) {
+        self.sep();
+        self.buf.extend_from_slice(if b { b"true" } else { b"false" });
+    }
+
+    pub fn null(&mut self) {
+        self.sep();
+        self.buf.extend_from_slice(b"null");
+    }
+
+    /// Raw byte append (e.g. a trailing newline). Not part of the JSON value.
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Decimal rendering without `format!` (20 digits covers u64::MAX).
+fn push_u64(buf: &mut Vec<u8>, mut v: u64) {
+    let mut tmp = [0u8; 20];
+    let mut i = tmp.len();
+    loop {
+        i -= 1;
+        tmp[i] = b'0' + (v % 10) as u8;
+        v /= 10;
+        if v == 0 {
+            break;
+        }
+    }
+    buf.extend_from_slice(&tmp[i..]);
+}
+
+/// Byte-level twin of `write_escaped`: same escape set, same lowercase
+/// `\u00xx` form for control characters, so writer output stays
+/// byte-identical to `Display`.
+fn escape_into(buf: &mut Vec<u8>, s: &str) {
+    buf.push(b'"');
+    for c in s.chars() {
+        match c {
+            '"' => buf.extend_from_slice(b"\\\""),
+            '\\' => buf.extend_from_slice(b"\\\\"),
+            '\n' => buf.extend_from_slice(b"\\n"),
+            '\r' => buf.extend_from_slice(b"\\r"),
+            '\t' => buf.extend_from_slice(b"\\t"),
+            c if (c as u32) < 0x20 => {
+                let v = c as u32;
+                const HEX: &[u8; 16] = b"0123456789abcdef";
+                buf.extend_from_slice(b"\\u00");
+                buf.push(HEX[(v >> 4) as usize]);
+                buf.push(HEX[(v & 0xF) as usize]);
+            }
+            c => {
+                let mut utf8 = [0u8; 4];
+                buf.extend_from_slice(c.encode_utf8(&mut utf8).as_bytes());
+            }
+        }
+    }
+    buf.push(b'"');
+}
+
+/// Pull-style incremental parser: walks the document in place without
+/// building a `Json` tree. Integers parse straight from the digit run
+/// (exact for the full u64 range — no f64 round-trip). Unknown fields can
+/// be discarded with `skip_value`.
+pub struct JsonReader<'a> {
+    p: Parser<'a>,
+    /// One entry per open container: `true` until its first element is read.
+    first: Vec<bool>,
+}
+
+impl<'a> JsonReader<'a> {
+    pub fn new(text: &'a str) -> JsonReader<'a> {
+        JsonReader { p: Parser { b: text.as_bytes(), pos: 0 }, first: Vec::new() }
+    }
+
+    pub fn obj_begin(&mut self) -> Result<(), JsonError> {
+        self.p.skip_ws();
+        self.p.expect(b'{')?;
+        self.first.push(true);
+        Ok(())
+    }
+
+    /// Next key in the current object, or `None` at `}` (which is consumed).
+    pub fn key(&mut self) -> Result<Option<String>, JsonError> {
+        self.p.skip_ws();
+        if self.p.peek() == Some(b'}') {
+            self.p.pos += 1;
+            self.first.pop();
+            return Ok(None);
+        }
+        self.element_sep()?;
+        self.p.skip_ws();
+        let k = self.p.string()?;
+        self.p.skip_ws();
+        self.p.expect(b':')?;
+        Ok(Some(k))
+    }
+
+    pub fn arr_begin(&mut self) -> Result<(), JsonError> {
+        self.p.skip_ws();
+        self.p.expect(b'[')?;
+        self.first.push(true);
+        Ok(())
+    }
+
+    /// `true` if another element follows; consumes `]` and returns `false`
+    /// at the end of the array.
+    pub fn arr_next(&mut self) -> Result<bool, JsonError> {
+        self.p.skip_ws();
+        if self.p.peek() == Some(b']') {
+            self.p.pos += 1;
+            self.first.pop();
+            return Ok(false);
+        }
+        self.element_sep()?;
+        Ok(true)
+    }
+
+    fn element_sep(&mut self) -> Result<(), JsonError> {
+        match self.first.last_mut() {
+            Some(first) if *first => {
+                *first = false;
+                Ok(())
+            }
+            Some(_) => {
+                self.p.expect(b',')?;
+                Ok(())
+            }
+            None => Err(self.p.err("element outside any container")),
+        }
+    }
+
+    pub fn u64(&mut self) -> Result<u64, JsonError> {
+        self.p.skip_ws();
+        if self.p.peek() == Some(b'-') {
+            return Err(self.p.err("unsigned integer expected, got negative"));
+        }
+        let start = self.p.pos;
+        while matches!(self.p.peek(), Some(c) if c.is_ascii_digit()) {
+            self.p.pos += 1;
+        }
+        if self.p.pos == start {
+            return Err(self.p.err("expected an unsigned integer"));
+        }
+        if matches!(self.p.peek(), Some(b'.' | b'e' | b'E')) {
+            return Err(self.p.err("integer expected, got a fractional number"));
+        }
+        let text = std::str::from_utf8(&self.p.b[start..self.p.pos]).unwrap();
+        text.parse::<u64>().map_err(|_| self.p.err("integer out of u64 range"))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, JsonError> {
+        let v = self.u64()?;
+        u32::try_from(v).map_err(|_| self.p.err("integer out of u32 range"))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, JsonError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| self.p.err("integer out of usize range"))
+    }
+
+    pub fn str(&mut self) -> Result<String, JsonError> {
+        self.p.skip_ws();
+        self.p.string()
+    }
+
+    /// Discard the next value of any shape (forward compatibility for
+    /// unknown manifest fields). This is the only reader path that may
+    /// allocate a temporary tree; it never runs on fields we emit.
+    pub fn skip_value(&mut self) -> Result<(), JsonError> {
+        self.p.value().map(|_| ())
+    }
+
+    /// Assert end of document (trailing whitespace/newline allowed).
+    pub fn end(&mut self) -> Result<(), JsonError> {
+        self.p.skip_ws();
+        if self.p.pos != self.p.b.len() {
+            return Err(self.p.err("trailing data"));
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -492,5 +834,134 @@ mod tests {
         assert_eq!(v.req_usize("a").unwrap(), 1);
         let e = v.req_str("zzz").unwrap_err().to_string();
         assert!(e.contains("zzz"));
+    }
+
+    #[test]
+    fn strict_integer_accessors_reject_lossy_values() {
+        assert_eq!(Json::Num(5.0).as_u64(), Some(5));
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        // 2^53 is the last exactly-representable integer
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), Some(9_007_199_254_740_992));
+        assert_eq!(Json::Num(9_007_199_254_741_000.0).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_u64(), None);
+        assert_eq!(Json::Str("5".into()).as_u64(), None);
+        // as_u32 additionally range-checks
+        assert_eq!(Json::Num(4_294_967_295.0).as_u32(), Some(u32::MAX));
+        assert_eq!(Json::Num(4_294_967_296.0).as_u32(), None);
+        // as_usize now routes through the strict path: no truncation
+        assert_eq!(Json::Num(1.5).as_usize(), None);
+        assert_eq!(Json::Num(-3.0).as_usize(), None);
+        let v = Json::parse(r#"{"neg": -4, "frac": 2.5, "ok": 7}"#).unwrap();
+        assert_eq!(v.req_u64("ok").unwrap(), 7);
+        assert!(v.req_u64("neg").is_err());
+        assert!(v.req_u64("frac").is_err());
+        assert!(v.req_u32("missing").is_err());
+    }
+
+    #[test]
+    fn writer_matches_display_byte_for_byte() {
+        // Keys emitted alphabetically, exactly as the BTreeMap DOM sorts them.
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("arr");
+        w.begin_arr();
+        w.u64(1);
+        w.num(2.5);
+        w.str("s\n\"x\\\u{1}é😀");
+        w.end_arr();
+        w.key("b");
+        w.bool(false);
+        w.key("n");
+        w.null();
+        w.key("num");
+        w.num(-3.0);
+        w.key("z");
+        w.begin_obj();
+        w.end_obj();
+        w.end_obj();
+        let bytes = w.finish();
+        let dom = Json::obj(vec![
+            ("arr", Json::Arr(vec![Json::num(1.0), Json::num(2.5), Json::str("s\n\"x\\\u{1}é😀")])),
+            ("b", Json::from(false)),
+            ("n", Json::Null),
+            ("num", Json::num(-3.0)),
+            ("z", Json::obj(vec![])),
+        ]);
+        assert_eq!(String::from_utf8(bytes).unwrap(), dom.to_string());
+    }
+
+    #[test]
+    fn writer_u64_exact_above_2_53() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("big");
+        w.u64(u64::MAX);
+        w.end_obj();
+        assert_eq!(
+            String::from_utf8(w.finish()).unwrap(),
+            format!("{{\"big\":{}}}", u64::MAX)
+        );
+    }
+
+    #[test]
+    fn reader_walks_objects_and_arrays() {
+        let text = "{\"a\":[1,2,3],\"big\":18446744073709551615,\"s\":\"x\\ny\",\"skip\":{\"deep\":[null,true]}}\n";
+        let mut r = JsonReader::new(text);
+        r.obj_begin().unwrap();
+        let mut seen = Vec::new();
+        while let Some(k) = r.key().unwrap() {
+            match k.as_str() {
+                "a" => {
+                    r.arr_begin().unwrap();
+                    let mut sum = 0u64;
+                    while r.arr_next().unwrap() {
+                        sum += r.u64().unwrap();
+                    }
+                    assert_eq!(sum, 6);
+                }
+                "big" => assert_eq!(r.u64().unwrap(), u64::MAX),
+                "s" => assert_eq!(r.str().unwrap(), "x\ny"),
+                _ => r.skip_value().unwrap(),
+            }
+            seen.push(k);
+        }
+        r.end().unwrap();
+        assert_eq!(seen, ["a", "big", "s", "skip"]);
+    }
+
+    #[test]
+    fn reader_rejects_non_integers_and_garbage() {
+        assert!(JsonReader::new("-5").u64().is_err());
+        assert!(JsonReader::new("1.5").u64().is_err());
+        assert!(JsonReader::new("1e3").u64().is_err());
+        assert!(JsonReader::new("18446744073709551616").u64().is_err()); // u64::MAX + 1
+        assert!(JsonReader::new("4294967296").u32().is_err());
+        assert!(JsonReader::new("\"s\"").u64().is_err());
+        let mut r = JsonReader::new("[1 1]");
+        r.arr_begin().unwrap();
+        assert!(r.arr_next().unwrap());
+        r.u64().unwrap();
+        assert!(r.arr_next().is_err()); // missing comma
+        let mut r = JsonReader::new("{}x");
+        r.obj_begin().unwrap();
+        assert_eq!(r.key().unwrap(), None);
+        assert!(r.end().is_err()); // trailing data
+    }
+
+    #[test]
+    fn reader_empty_containers() {
+        let mut r = JsonReader::new("{\"a\":[],\"o\":{}}\n");
+        r.obj_begin().unwrap();
+        assert_eq!(r.key().unwrap().as_deref(), Some("a"));
+        r.arr_begin().unwrap();
+        assert!(!r.arr_next().unwrap());
+        assert_eq!(r.key().unwrap().as_deref(), Some("o"));
+        r.obj_begin().unwrap();
+        assert_eq!(r.key().unwrap(), None);
+        assert_eq!(r.key().unwrap(), None); // outer object ends too
+        r.end().unwrap();
     }
 }

@@ -868,13 +868,19 @@ fn crash_mid_multipart_resume_reuses_durable_parts() {
     cluster.snapshot_all(&data).unwrap();
 
     let shared = Arc::new(MemStorage::new());
-    // 64 000 B / 4 096 B parts -> 16 parts (15 full + remainder)
-    let part_cfg = PersistConfig { multipart_part_bytes: 4096, ..unthrottled_persist() };
+    // 64 000 B / 4 096 B parts -> 16 parts (15 full + remainder); one upload
+    // stream so parts land strictly in order and the crash point is exact
+    let part_cfg = PersistConfig {
+        multipart_part_bytes: 4096,
+        multipart_streams: 1,
+        ..unthrottled_persist()
+    };
 
-    // attempt 1 "crashes" after 5 puts. The put sequence interleaves parts
-    // with their sidecar records — part0, meta, part1, meta, part2, [meta
-    // fails, best-effort], part3 fails -> abort. So: 3 durable parts, the
-    // first 2 of them recorded in the sidecar.
+    // attempt 1 "crashes" after 5 puts. The doubling flush cadence
+    // interleaves parts with sidecar rewrites — part0, meta{0}, part1,
+    // meta{0,1}, part2 (cadence holds the next rewrite until part 3),
+    // part3 fails -> abort. So: 3 durable parts, the first 2 of them
+    // recorded in the sidecar.
     {
         let failing: Arc<dyn Storage> = Arc::new(FailAfter {
             inner: Arc::clone(&shared),
@@ -956,6 +962,108 @@ fn crash_mid_multipart_resume_reuses_durable_parts() {
     assert_eq!(man.shards.len(), 1);
     assert_eq!(man.shards[0].parts.len(), 16);
     assert_eq!(stages[0], data[0].as_slice());
+}
+
+/// Satellite regression: the progress sidecar is rewritten on a doubling
+/// cadence — O(log parts) meta puts and O(parts) total sidecar bytes per
+/// shard, not the old rewrite-after-every-part O(parts²) byte bill.
+#[test]
+fn sidecar_flush_cadence_is_logarithmic_in_parts() {
+    let topo = Topology::build(ParallelPlan::dp_only(4), 1, 4).unwrap();
+    let stage_bytes = vec![64_000u64];
+    let ft = FtConfig { raim5: false, bucket_bytes: 4096, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    cluster.snapshot_all(&payloads(&stage_bytes, 0x5C)).unwrap();
+
+    let counting = Arc::new(InstrumentedStorage::default());
+    let engine = PersistEngine::start(
+        "pm",
+        Arc::clone(&counting) as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        // one 16-part shard, serial lane so the flush points are exact
+        PersistConfig {
+            multipart_part_bytes: 4096,
+            multipart_streams: 1,
+            ..unthrottled_persist()
+        },
+    );
+    engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+    engine.flush().unwrap();
+    let stats = engine.stats();
+    assert_eq!(stats.manifests_committed, 1, "{:?}", stats.last_error);
+    assert_eq!(stats.parts_uploaded, 16);
+
+    let meta_puts = counting
+        .puts
+        .lock()
+        .unwrap()
+        .iter()
+        .filter(|k| k.ends_with("/meta"))
+        .count();
+    // doubling cadence over a fresh 16-part shard: rewrites after parts
+    // 1, 2, 4, 8 and 16 — five puts where the old engine issued sixteen
+    assert_eq!(
+        meta_puts, 5,
+        "sidecar rewrites must be O(log parts), not one per part"
+    );
+}
+
+/// Tentpole: the bounded in-node part-upload pool must be a pure latency
+/// optimization — parts listed in k-order under the combined whole-shard
+/// CRC, a manifest byte-identical to the serial lane's, and a restore that
+/// returns the snapshotted payload exactly.
+#[test]
+fn parallel_part_streams_commit_matches_serial_lane() {
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![96_000u64];
+    let ft = FtConfig { bucket_bytes: 4096, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    let data = payloads(&stage_bytes, 0x7E);
+    cluster.snapshot_all(&data).unwrap();
+
+    let mut manifests = Vec::new();
+    for streams in [1usize, 4] {
+        let storage = Arc::new(MemStorage::new());
+        let engine = PersistEngine::start(
+            "pm",
+            Arc::clone(&storage) as Arc<dyn Storage>,
+            cluster.plan.clone(),
+            // 6 shards of 16 000 B -> 4 parts each at 4 096 B
+            PersistConfig {
+                multipart_part_bytes: 4096,
+                multipart_streams: streams,
+                ..unthrottled_persist()
+            },
+        );
+        engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+        engine.flush().unwrap();
+        let stats = engine.stats();
+        assert_eq!(
+            stats.manifests_committed, 1,
+            "streams={streams}: {:?}",
+            stats.last_error
+        );
+        assert_eq!(stats.parts_uploaded, 24, "streams={streams}");
+        assert_eq!(stats.parts_reused, 0, "streams={streams}");
+
+        let raw = storage.get(&persist::manifest_key("pm", 10)).unwrap();
+        let man = PersistManifest::decode(&raw).unwrap();
+        for s in &man.shards {
+            let keys: Vec<_> = s.parts.iter().map(|p| p.key.clone()).collect();
+            let mut sorted = keys.clone();
+            sorted.sort();
+            assert_eq!(keys, sorted, "streams={streams}: parts out of k-order");
+        }
+        let (man2, stages) =
+            persist::load_latest(storage.as_ref(), "pm").unwrap().unwrap();
+        assert_eq!(man2.step, 10);
+        assert_eq!(stages[0], data[0].as_slice(), "streams={streams}");
+        manifests.push(raw);
+    }
+    assert_eq!(
+        manifests[0], manifests[1],
+        "the parallel pool must commit a manifest byte-identical to the serial lane's"
+    );
 }
 
 /// Per-node throttle isolation: one node with a huge backlogged reservation

@@ -493,6 +493,81 @@ fn prop_schedules_valid() {
     }
 }
 
+/// Streaming manifest/sidecar codec vs the DOM oracle: for arbitrary
+/// manifests the streaming encoder emits byte-identical text, and both
+/// parsers decode that text back to the original value.
+#[test]
+fn prop_manifest_streaming_codec_matches_dom() {
+    use reft::persist::{PartEntry, PartProgress, PersistManifest, ShardEntry};
+    // DOM numbers are f64: stay inside the exactly-representable range so
+    // the oracle itself is lossless (the >2^53 regime has its own test in
+    // the manifest module — only the streaming codec survives it)
+    const EXACT: u64 = 1 << 53;
+    fn s(rng: &mut Rng, max: usize) -> String {
+        (0..rng.below(max))
+            .map(|_| (rng.below(95) as u8 + 32) as char) // incl. `"` and `\`
+            .collect()
+    }
+    let mut rng = Rng::seed_from(0x57EA);
+    for case in 0..CASES {
+        let n_shards = rng.below(5);
+        let shards: Vec<ShardEntry> = (0..n_shards)
+            .map(|i| {
+                let n_parts = rng.below(4);
+                let parts: Vec<PartEntry> = (0..n_parts)
+                    .map(|j| PartEntry {
+                        key: format!("p{j}-{}", s(&mut rng, 10)),
+                        len: rng.next_u64() % EXACT,
+                        crc32: rng.next_u64() as u32,
+                    })
+                    .collect();
+                ShardEntry {
+                    key: format!("k{i}-{}", s(&mut rng, 10)),
+                    stage: rng.below(8),
+                    node: rng.below(64),
+                    offset: rng.next_u64() % EXACT,
+                    len: rng.next_u64() % EXACT,
+                    crc32: rng.next_u64() as u32,
+                    parts,
+                }
+            })
+            .collect();
+        let man = PersistManifest {
+            model: s(&mut rng, 12),
+            step: rng.next_u64() % EXACT,
+            version: rng.next_u64() % EXACT,
+            snapshot_step: rng.next_u64() % EXACT,
+            stage_bytes: (0..rng.below(4)).map(|_| rng.next_u64() % EXACT).collect(),
+            shards,
+        };
+        let streamed = man.encode();
+        assert_eq!(
+            streamed,
+            man.encode_dom(),
+            "case {case}: streaming encode diverged from the DOM oracle"
+        );
+        assert_eq!(PersistManifest::decode(&streamed).unwrap(), man, "case {case}");
+        assert_eq!(
+            PersistManifest::decode_dom(&streamed).unwrap(),
+            man,
+            "case {case}"
+        );
+
+        // the progress sidecar codec, same contract
+        let prog = PartProgress {
+            parts: (0..rng.below(6))
+                .map(|_| {
+                    (rng.below(100_000), (rng.next_u64() % EXACT, rng.next_u64() as u32))
+                })
+                .collect(),
+        };
+        let streamed = prog.encode();
+        assert_eq!(streamed, prog.encode_dom(), "case {case}: sidecar codec");
+        assert_eq!(PartProgress::decode(&streamed).unwrap(), prog, "case {case}");
+        assert_eq!(PartProgress::decode_dom(&streamed).unwrap(), prog, "case {case}");
+    }
+}
+
 /// StageState payload round-trips for random sizes.
 #[test]
 fn prop_state_payload_roundtrip() {
