@@ -730,6 +730,7 @@ fn main() {
         step: 120,
         version: 12,
         snapshot_step: 115,
+        base_step: None,
         stage_bytes: vec![plen as u64; 3],
         shards: Vec::new(),
     };
@@ -741,6 +742,7 @@ fn main() {
             offset: (i as u64) << 20,
             len: 1 << 20,
             crc32: 0x9E37_79B9u32.wrapping_mul(i as u32 + 1),
+            extents: vec![],
             parts: (0..16)
                 .map(|p| persist::PartEntry {
                     key: persist::part_key("bench-codec", 120, i % 3, i, p),
@@ -857,6 +859,166 @@ fn main() {
         failures.push(format!(
             "fused-CRC restore ({verify_fused:.2} GB/s) must be strictly faster than \
              the separate-verify loader ({verify_sep:.2} GB/s)"
+        ));
+    }
+
+    // Sparse delta snapshots (PR 7): ship only changed bytes, end to end.
+    // A delta-enabled cluster+engine twin runs one base round plus four
+    // 10%-extent-churn rounds against a full-capture twin. Gates: (a) at
+    // 10% churn the SMP plane enqueues AND the durable plane persists
+    // < 25% of the full baseline's bytes; (b) the 4-deep delta chain
+    // restores byte-identical to the full-capture oracle; (c) at 100%
+    // churn the delta path's wall time is within 10% of full capture
+    // (the planner degrades to Full, the engine uploads shard bytes
+    // directly and collapses the manifest to a fresh base).
+    let dsz = if smoke { 8 * mib } else { 48 * mib };
+    let dext = 64 * 1024usize;
+    let churn_len = dsz / 10 / dext * dext; // ~10% of the payload, extent-aligned
+    println!(
+        "sparse delta snapshots ({} MiB over 6 nodes, {} KiB extents, 10% churn/round):",
+        dsz / mib,
+        dext / 1024
+    );
+    let mk_delta_cluster = |delta: bool| -> ReftCluster {
+        let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+        let ft = FtConfig {
+            bucket_bytes: 16 << 20,
+            delta_extent_bytes: if delta { dext } else { 0 },
+            delta_chain_max: 16,
+            ..FtConfig::default()
+        };
+        ReftCluster::start(topo, &[dsz as u64], ft).unwrap()
+    };
+    let mk_delta_engine = |name: &str, store: &Arc<MemStorage>, cl: &ReftCluster, delta: bool| {
+        PersistEngine::start(
+            name,
+            Arc::clone(store) as Arc<dyn Storage>,
+            cl.plan.clone(),
+            PersistConfig {
+                enabled: true,
+                throttle_bytes_per_sec: 0,
+                chunk_bytes: 1 << 20,
+                keep_last: 8,
+                delta_extent_bytes: if delta { dext } else { 0 },
+                delta_chain_max: 16,
+                ..PersistConfig::default()
+            },
+        )
+    };
+    let mut d_cluster = mk_delta_cluster(true);
+    let mut f_cluster = mk_delta_cluster(false);
+    let d_store = Arc::new(MemStorage::new());
+    let f_store = Arc::new(MemStorage::new());
+    let d_engine = mk_delta_engine("bench-delta-d", &d_store, &d_cluster, true);
+    let f_engine = mk_delta_engine("bench-delta-f", &f_store, &f_cluster, false);
+    let mut d_master = src[..dsz].to_vec();
+    for round in 0..5u64 {
+        if round > 0 {
+            // rounds 1..4 churn one fresh extent-aligned 10% region each
+            let start = (round as usize - 1) * 2 * churn_len;
+            for b in &mut d_master[start..start + churn_len] {
+                *b ^= 0x5A;
+            }
+        }
+        let p = vec![SharedPayload::new(d_master.clone())];
+        d_cluster.snapshot_all(&p).unwrap();
+        f_cluster.snapshot_all(&p).unwrap();
+        let step = 10 * (round + 1);
+        d_engine.enqueue(step, d_cluster.persist_sources(), vec![]).unwrap();
+        f_engine.enqueue(step, f_cluster.persist_sources(), vec![]).unwrap();
+        d_engine.flush().unwrap();
+        f_engine.flush().unwrap();
+    }
+    let d_stats = d_engine.stats();
+    let f_stats = f_engine.stats();
+    assert_eq!(d_stats.manifests_committed, 5, "{:?}", d_stats.last_error);
+    assert_eq!(d_stats.jobs_aborted, 0, "{:?}", d_stats.last_error);
+    assert_eq!(f_stats.persisted_bytes, 5 * dsz as u64, "full twin ships the model each round");
+    // SMP plane: the planner's shipped bytes for the four sparse rounds vs
+    // the full twin's four payloads
+    let ds = d_cluster.delta_stats().unwrap();
+    let smp_delta = ds.shipped_bytes - dsz as u64; // minus the base round
+    let smp_ratio = smp_delta as f64 / (4 * dsz) as f64;
+    // durable plane: delta bytes persisted vs four full captures
+    let persist_ratio = d_stats.persisted_delta_bytes as f64 / (4 * dsz) as f64;
+    println!(
+        "  SMP-enqueued delta bytes               {:>8.1}% of full baseline (gate < 25%)",
+        smp_ratio * 100.0
+    );
+    println!(
+        "  persisted delta bytes                  {:>8.1}% of full baseline (gate < 25%)",
+        persist_ratio * 100.0
+    );
+    // 4-deep chain restore == the full-capture oracle == the live payload
+    let (d_man, d_stages) = persist::load_latest(d_store.as_ref(), "bench-delta-d")
+        .unwrap()
+        .expect("delta chain resolves");
+    let (f_man, f_stages) = persist::load_latest(f_store.as_ref(), "bench-delta-f")
+        .unwrap()
+        .expect("full twin resolves");
+    assert_eq!((d_man.step, f_man.step), (50, 50));
+    assert_eq!(d_man.base_step, Some(40), "four-deep chain tip links to its predecessor");
+    assert_eq!(d_stages, f_stages, "delta chain diverged from the full-capture oracle");
+    assert_eq!(d_stages[0], d_master, "restore diverged from the live payload");
+    // 100% churn: every byte changes every round; fresh twins, best-of-2
+    let full_churn_run = |delta: bool, tag: &str| -> f64 {
+        let mut cluster = mk_delta_cluster(delta);
+        let store = Arc::new(MemStorage::new());
+        let engine = mk_delta_engine(tag, &store, &cluster, delta);
+        let mut m = src[..dsz].to_vec();
+        let mut total = 0f64;
+        for round in 0..3u64 {
+            for b in &mut m {
+                *b = b.wrapping_add(1);
+            }
+            let p = vec![SharedPayload::new(m.clone())];
+            let t0 = Instant::now();
+            cluster.snapshot_all(&p).unwrap();
+            engine.enqueue(10 * (round + 1), cluster.persist_sources(), vec![]).unwrap();
+            engine.flush().unwrap();
+            total += t0.elapsed().as_secs_f64();
+        }
+        assert_eq!(engine.stats().manifests_committed, 3, "{:?}", engine.stats().last_error);
+        total
+    };
+    let churn_full_s = full_churn_run(false, "bench-churn-f").min(full_churn_run(false, "bench-churn-f2"));
+    let churn_delta_s = full_churn_run(true, "bench-churn-d").min(full_churn_run(true, "bench-churn-d2"));
+    println!(
+        "  100% churn, full capture               {:>8.1} ms / 3 rounds",
+        churn_full_s * 1e3
+    );
+    println!(
+        "  100% churn, delta path                 {:>8.1} ms / 3 rounds ({:.0}% of full, gate <= 110%)\n",
+        churn_delta_s * 1e3,
+        churn_delta_s / churn_full_s * 100.0
+    );
+    rec(&mut report, "sparse_delta_bytes", vec![
+        ("smp_delta_ratio", smp_ratio),
+        ("persist_delta_ratio", persist_ratio),
+        ("chain_depth", 4.0),
+        ("full_churn_full_s", churn_full_s),
+        ("full_churn_delta_s", churn_delta_s),
+        ("full_churn_overhead", churn_delta_s / churn_full_s),
+        ("extent_bytes", dext as f64),
+    ]);
+    if smp_ratio >= 0.25 {
+        failures.push(format!(
+            "sparse delta SMP plane shipped {:.1}% of the full baseline at 10% churn \
+             (gate < 25%)",
+            smp_ratio * 100.0
+        ));
+    }
+    if persist_ratio >= 0.25 {
+        failures.push(format!(
+            "sparse delta durable plane persisted {:.1}% of the full baseline at 10% \
+             churn (gate < 25%)",
+            persist_ratio * 100.0
+        ));
+    }
+    if churn_delta_s > churn_full_s * 1.10 {
+        failures.push(format!(
+            "100%-churn delta path ({churn_delta_s:.4}s) must be no slower than full \
+             capture ({churn_full_s:.4}s) + 10%"
         ));
     }
 

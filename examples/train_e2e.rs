@@ -68,6 +68,10 @@ fn main() -> anyhow::Result<()> {
         .get("auto-cadence")
         .map(|s| s == "true" || s == "1")
         .unwrap_or(false);
+    // `--delta-extent N` turns the sparse-snapshot layer on (0 = off):
+    // extent tables diff consecutive rounds so both planes ship only the
+    // changed bytes; the control-plane line reports the resulting ratio
+    let delta_extent: usize = flags.get("delta-extent").map(|s| s.parse()).unwrap_or(Ok(0))?;
 
     let mut cfg = RunConfig::default();
     cfg.model = model.clone();
@@ -96,6 +100,8 @@ fn main() -> anyhow::Result<()> {
     cfg.ft.auto_snapshot_interval = auto_cadence;
     cfg.ft.persist.auto_interval = auto_cadence;
     cfg.ft.persist.adaptive_depth = auto_cadence;
+    // sparse delta snapshots (same clamp as the CLI: 0 disables)
+    cfg.ft.delta_extent_bytes = if delta_extent == 0 { 0 } else { delta_extent.max(1024) };
 
     // fresh checkpoint dir per run: a stale checkpoint from an earlier run
     // must never satisfy this run's fallback path
@@ -107,7 +113,9 @@ fn main() -> anyhow::Result<()> {
     println!(
         "model={model} steps={steps} plan=dp{dp}/pp{pp} ft=reft-ckpt \
          snapshot_every=5 persist_every=20 async_snapshot={async_on} \
-         persist_engine={persist_on} auto_cadence={auto_cadence}"
+         persist_engine={persist_on} auto_cadence={auto_cadence} \
+         delta_extent={}",
+        cfg.ft.delta_extent_bytes
     );
 
     // inject only after at least one snapshot round exists (interval 5)
@@ -206,11 +214,20 @@ fn main() -> anyhow::Result<()> {
                 );
             }
             // the adaptive control plane's run report: where each decision
-            // layer landed, and whether the recovery predictions held
+            // layer landed, whether the recovery predictions held, and how
+            // much of the durable traffic the sparse-delta layer saved
+            let pfull = $tr.metrics.counter("persisted_full_bytes");
+            let pdelta = $tr.metrics.counter("persisted_delta_bytes");
+            let delta_pct = if pfull + pdelta == 0 {
+                0.0
+            } else {
+                pdelta as f64 * 100.0 / (pfull + pdelta) as f64
+            };
             println!(
                 "control plane: snapshot cadence {} steps (λ {:.2e}), persist cadence {} \
                  steps, pipeline depth {}; recovery plans {} \
-                 (inmem {} / manifest {} / legacy {}) mispredictions {}",
+                 (inmem {} / manifest {} / legacy {}) mispredictions {}; \
+                 persisted full/delta {pfull}/{pdelta} B (delta share {delta_pct:.1}%)",
                 $tr.metrics
                     .gauge_value("snapshot_interval_steps")
                     .unwrap_or(cfg.ft.snapshot_interval as f64),

@@ -99,6 +99,15 @@ pub struct PersistConfig {
     /// `pipeline_jobs` from the EWMA of observed storage RTT vs SMP fetch
     /// time (off = the static `pipeline_jobs` depth, the baseline)
     pub adaptive_depth: bool,
+    /// sparse delta persists: extent granularity in bytes for the engine's
+    /// content-hash diff against the previously committed round (0 = every
+    /// persist uploads full shards). Mirrored from `ft.delta_extent_bytes`
+    /// by the persist driver; benches may set it directly.
+    pub delta_extent_bytes: usize,
+    /// force a full (base) upload once a delta chain reaches this depth,
+    /// bounding restore chain length and GC liveness (mirrored from
+    /// `ft.delta_chain_max`)
+    pub delta_chain_max: u64,
 }
 
 impl Default for PersistConfig {
@@ -115,6 +124,8 @@ impl Default for PersistConfig {
             multipart_part_bytes: 8 * 1024 * 1024,
             multipart_streams: 4,
             adaptive_depth: false,
+            delta_extent_bytes: 0,
+            delta_chain_max: 8,
         }
     }
 }
@@ -148,6 +159,16 @@ pub struct FtConfig {
     /// `snapshot_interval` knob; below the empirical event floor the
     /// static interval still holds
     pub auto_snapshot_interval: bool,
+    /// sparse delta snapshots: extent granularity in bytes for the
+    /// content-hash diff of each round's payload against the previous
+    /// *completed* round. 0 (the default) disables the delta layer and
+    /// every round ships full shards — the pre-PR-7 behavior. Non-zero
+    /// values floor at 1 KiB so a typo cannot explode the extent tables.
+    pub delta_extent_bytes: usize,
+    /// periodic full-round fallback: after this many consecutive sparse
+    /// rounds a full base round is forced, bounding delta-chain depth for
+    /// both the in-memory patch path and durable chain reconstruction
+    pub delta_chain_max: u64,
     /// durable-tier persistence engine (REFT-Ckpt background drain)
     pub persist: PersistConfig,
 }
@@ -164,6 +185,8 @@ impl Default for FtConfig {
             async_snapshot: false,
             drain_buckets_per_tick: 8,
             auto_snapshot_interval: false,
+            delta_extent_bytes: 0,
+            delta_chain_max: 8,
             persist: PersistConfig::default(),
         }
     }
@@ -274,6 +297,13 @@ impl RunConfig {
             }
             if let Some(b) = ft.get("auto_snapshot_interval").and_then(Json::as_bool) {
                 c.ft.auto_snapshot_interval = b;
+            }
+            if let Some(n) = ft.get("delta_extent_bytes").and_then(Json::as_usize) {
+                // 0 disables the delta layer; non-zero floors at 1 KiB
+                c.ft.delta_extent_bytes = if n == 0 { 0 } else { n.max(1024) };
+            }
+            if let Some(n) = ft.get("delta_chain_max").and_then(Json::as_u64) {
+                c.ft.delta_chain_max = n.max(1);
             }
             if let Some(p) = ft.get("persist") {
                 if let Some(b) = p.get("enabled").and_then(Json::as_bool) {
@@ -426,6 +456,31 @@ mod tests {
         )
         .unwrap();
         assert_eq!(z.ft.persist.multipart_streams, 1);
+    }
+
+    #[test]
+    fn parse_delta_knobs() {
+        let text = r#"{
+            "ft": {"delta_extent_bytes": 65536, "delta_chain_max": 4}
+        }"#;
+        let c = RunConfig::from_json_text(text).unwrap();
+        assert_eq!(c.ft.delta_extent_bytes, 64 * 1024);
+        assert_eq!(c.ft.delta_chain_max, 4);
+        // defaults: delta layer off, chain bound sane
+        let d = RunConfig::default();
+        assert_eq!(d.ft.delta_extent_bytes, 0);
+        assert!(d.ft.delta_chain_max >= 1);
+        assert_eq!(d.ft.persist.delta_extent_bytes, 0);
+        // 0 keeps the layer disabled; tiny values floor at 1 KiB; the
+        // chain bound floors at 1 (every round a base)
+        let z = RunConfig::from_json_text(
+            r#"{"ft": {"delta_extent_bytes": 0, "delta_chain_max": 0}}"#,
+        )
+        .unwrap();
+        assert_eq!(z.ft.delta_extent_bytes, 0);
+        assert_eq!(z.ft.delta_chain_max, 1);
+        let z = RunConfig::from_json_text(r#"{"ft": {"delta_extent_bytes": 7}}"#).unwrap();
+        assert_eq!(z.ft.delta_extent_bytes, 1024);
     }
 
     #[test]

@@ -88,7 +88,10 @@ impl Raim5Group {
     }
 
     /// The sub-block index of node `j` that maps to parity hosted on `host`.
-    fn block_index_for(&self, host: usize, j: usize) -> usize {
+    /// Public so the sparse-snapshot coordinator can map a contributor's
+    /// changed byte ranges into parity-local patch ranges (parity is
+    /// XOR-linear: only stripes overlapping a changed extent differ).
+    pub fn block_index_for(&self, host: usize, j: usize) -> usize {
         debug_assert_ne!(host, j);
         (host + self.n - j - 1) % self.n
     }

@@ -16,6 +16,7 @@
 //! returning, so its call sites keep snapshot-visible-on-return semantics.
 
 use std::collections::BTreeMap;
+use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver};
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -23,9 +24,13 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::config::FtConfig;
 use crate::ec::Raim5Group;
 use crate::smp::{BucketRef, Signal, Smp, SmpMsg};
+use crate::snapshot::coord::parity_patches;
 use crate::snapshot::payload::{PayloadView, SharedPayload};
 use crate::snapshot::plan::NodeShard;
-use crate::snapshot::{BucketPipe, CoordSink, SnapshotCoordinator, SnapshotPlan, TickReport};
+use crate::snapshot::{
+    BucketPipe, CoordSink, DeltaPlanner, DeltaStats, SnapshotCoordinator, SnapshotPlan,
+    StageShip, TickReport,
+};
 use crate::topology::Topology;
 
 /// The in-memory fault-tolerance fabric of one training cluster.
@@ -40,6 +45,13 @@ pub struct ReftCluster {
     /// the asynchronous drain state machine (idle unless a snapshot is in
     /// flight); also consulted by the blocking path to cancel stale rounds
     coord: SnapshotCoordinator,
+    /// the sparse-snapshot planner (`Some` when `ft.delta_extent_bytes > 0`):
+    /// hashes each round into extent tables and decides per stage whether to
+    /// ship the full payload or only the extents changed since the last
+    /// *committed* round. Reset to force a full re-base whenever SMP contents
+    /// may no longer match the committed tables (membership change, torn
+    /// blocking round, mid-drain abort).
+    delta: Option<DeltaPlanner>,
     /// the snapshot version counter (one per requested snapshot round)
     pub version: u64,
 }
@@ -85,6 +97,18 @@ impl CoordSink for SmpSink<'_> {
         self.smp(node)?.send(SmpMsg::EndSnapshot { version, stage })
     }
 
+    fn begin_delta(
+        &mut self,
+        node: usize,
+        version: u64,
+        stage: usize,
+        total_len: usize,
+        delta_len: usize,
+    ) -> Result<()> {
+        self.smp(node)?
+            .send(SmpMsg::BeginDeltaSnapshot { version, stage, total_len, delta_len })
+    }
+
     fn store_parity(
         &mut self,
         node: usize,
@@ -93,6 +117,16 @@ impl CoordSink for SmpSink<'_> {
         data: Vec<u8>,
     ) -> Result<()> {
         self.smp(node)?.send(SmpMsg::StoreParity { version, stage, data })
+    }
+
+    fn store_parity_delta(
+        &mut self,
+        node: usize,
+        version: u64,
+        stage: usize,
+        patches: Vec<(usize, Vec<u8>)>,
+    ) -> Result<()> {
+        self.smp(node)?.send(SmpMsg::StoreParityDelta { version, stage, patches })
     }
 
     fn abort(&mut self, node: usize, version: u64, stage: usize) -> Result<()> {
@@ -129,7 +163,9 @@ impl ReftCluster {
             ft.bucket_bytes,
             ft.drain_buckets_per_tick,
         );
-        Ok(ReftCluster { topo, plan, ft, smps, groups, coord, version: 0 })
+        let delta = (ft.delta_extent_bytes > 0)
+            .then(|| DeltaPlanner::new(ft.delta_extent_bytes, ft.delta_chain_max));
+        Ok(ReftCluster { topo, plan, ft, smps, groups, coord, delta, version: 0 })
     }
 
     pub fn smp(&self, node: usize) -> Option<&Smp> {
@@ -155,9 +191,21 @@ impl ReftCluster {
     pub fn request_snapshot(&mut self, payloads: Vec<SharedPayload>) -> Result<u64> {
         self.version += 1;
         let v = self.version;
+        let ships = self.delta.as_mut().map(|p| p.plan(v, &payloads));
         let mut sink = SmpSink { smps: &self.smps };
-        self.coord.submit(v, payloads, &mut sink)?;
-        Ok(v)
+        let submitted = match ships {
+            Some(ships) if ships.iter().any(|s| matches!(s, StageShip::Sparse(_))) => {
+                self.coord.submit_sparse(v, payloads, ships, &mut sink)
+            }
+            _ => self.coord.submit(v, payloads, &mut sink),
+        };
+        if submitted.is_err() {
+            // the enqueue never opened; v will never commit — forget its plan
+            if let Some(p) = self.delta.as_mut() {
+                p.drop_pending();
+            }
+        }
+        submitted.map(|()| v)
     }
 
     /// L2 drain: move up to `drain_buckets_per_tick` buckets per node.
@@ -165,7 +213,19 @@ impl ReftCluster {
     /// nothing is in flight.
     pub fn tick(&mut self) -> Result<TickReport> {
         let mut sink = SmpSink { smps: &self.smps };
-        self.coord.tick(&mut sink)
+        let report = self.coord.tick(&mut sink)?;
+        if let Some(p) = self.delta.as_mut() {
+            if report.completed {
+                if let Some(v) = report.version {
+                    p.commit(v);
+                }
+            } else if report.aborted {
+                // a failed completion burst may have promoted the round on a
+                // subset of SMPs — only a full re-base is safe to diff against
+                p.reset();
+            }
+        }
+        Ok(report)
     }
 
     /// Tick until the in-flight round completes or aborts (bounded by the
@@ -190,6 +250,18 @@ impl ReftCluster {
     pub fn cancel_in_flight(&mut self) {
         let mut sink = SmpSink { smps: &self.smps };
         self.coord.abort_in_flight(&mut sink);
+        // an abort drops every dirty buffer before any promotion, so the
+        // SMPs still hold the last committed round — dropping the pending
+        // tables (not resetting) keeps the sparse chain alive
+        if let Some(p) = self.delta.as_mut() {
+            p.drop_pending();
+        }
+    }
+
+    /// Sparse-snapshot planner counters (`None` when the delta layer is
+    /// disabled): full vs sparse round counts and total vs shipped bytes.
+    pub fn delta_stats(&self) -> Option<DeltaStats> {
+        self.delta.as_ref().map(DeltaPlanner::stats)
     }
 
     /// Coordinator introspection (versions, pending buckets, stats).
@@ -253,6 +325,79 @@ impl ReftCluster {
         Ok(())
     }
 
+    /// The blocking counterpart of a coordinator sparse round: every SMP
+    /// seeds its dirty buffer from its latest clean copy (the round the
+    /// planner diffed against), only the buckets overlapping `changed`
+    /// ranges drain, and parity is patched rather than re-stored. The full
+    /// [`Self::snapshot_stage`] stays as the oracle path.
+    fn snapshot_stage_sparse(
+        &mut self,
+        version: u64,
+        stage: usize,
+        payload: &SharedPayload,
+        changed: &[Range<u64>],
+    ) -> Result<()> {
+        let stage_len = self.plan.stage_bytes[stage] as usize;
+        anyhow::ensure!(
+            payload.len() == stage_len,
+            "stage {stage} payload {} != planned {stage_len}",
+            payload.len()
+        );
+        let shards: Vec<NodeShard> = self.plan.shards_for_stage(stage).cloned().collect();
+        for shard in &shards {
+            let segs: Vec<Range<u64>> = changed
+                .iter()
+                .filter_map(|g| {
+                    let lo = g.start.max(shard.range.start);
+                    let hi = g.end.min(shard.range.end);
+                    (lo < hi).then(|| lo..hi)
+                })
+                .collect();
+            let delta_len: usize = segs.iter().map(|r| (r.end - r.start) as usize).sum();
+            let Some(smp) = self.smp(shard.node) else {
+                bail!("node {} is offline — cannot snapshot", shard.node);
+            };
+            smp.send(SmpMsg::BeginDeltaSnapshot {
+                version,
+                stage,
+                total_len: shard.len() as usize,
+                delta_len,
+            })?;
+            for seg in &segs {
+                for r in BucketPipe::new(seg.clone(), self.ft.bucket_bytes) {
+                    smp.send(SmpMsg::Bucket {
+                        version,
+                        stage,
+                        // SMP-local offsets are shard-relative
+                        offset: (r.start - shard.range.start) as usize,
+                        data: BucketRef::Shared(
+                            payload.view(r.start as usize..r.end as usize),
+                        ),
+                    })?;
+                }
+            }
+            smp.send(SmpMsg::EndSnapshot { version, stage })?;
+        }
+        // parity pass: encode in full from the new payload, ship only the
+        // spans that can differ (parity is XOR-linear in its contributors)
+        if let Some(group) = self.groups.get(&stage) {
+            let shard_refs: Vec<&NodeShard> = shards.iter().collect();
+            let views: Vec<&[u8]> = shards
+                .iter()
+                .map(|s| &payload.as_slice()[s.range.start as usize..s.range.end as usize])
+                .collect();
+            for (host_idx, shard) in shards.iter().enumerate() {
+                let parity = group.encode_parity(host_idx, &views);
+                let patches = parity_patches(group, host_idx, &shard_refs, changed, &parity);
+                let Some(smp) = self.smp(shard.node) else {
+                    bail!("node {} offline during parity placement", shard.node);
+                };
+                smp.send(SmpMsg::StoreParityDelta { version, stage, patches })?;
+            }
+        }
+        Ok(())
+    }
+
     /// Snapshot all stages (one consistent version), complete on return.
     /// Dispatches on `FtConfig::async_snapshot`: the async flavour still
     /// exercises the coordinator (enqueue + bounded drain), the blocking
@@ -282,10 +427,37 @@ impl ReftCluster {
         self.cancel_in_flight();
         self.version += 1;
         let v = self.version;
+        let ships = self.delta.as_mut().map(|p| p.plan(v, payloads));
+        let mut outcome = Ok(());
         for (stage, payload) in payloads.iter().enumerate() {
-            self.snapshot_stage(v, stage, payload)?;
+            let r = match ships.as_ref().map(|s| &s[stage]) {
+                Some(StageShip::Sparse(ranges)) => {
+                    self.snapshot_stage_sparse(v, stage, payload, ranges)
+                }
+                _ => self.snapshot_stage(v, stage, payload),
+            };
+            if r.is_err() {
+                outcome = r;
+                break;
+            }
         }
-        Ok(v)
+        match outcome {
+            Ok(()) => {
+                if let Some(p) = self.delta.as_mut() {
+                    p.commit(v);
+                }
+                Ok(v)
+            }
+            Err(e) => {
+                // a torn blocking round may have promoted v on earlier
+                // stages' SMPs; the committed tables no longer describe what
+                // every SMP holds, so force a full re-base
+                if let Some(p) = self.delta.as_mut() {
+                    p.reset();
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Restore one stage's full payload from SMP shards, RAIM5-decoding the
@@ -580,6 +752,11 @@ impl ReftCluster {
             smp.kill();
         }
         self.cancel_in_flight();
+        // the dead node's clean copies are gone; its replacement starts
+        // empty, so the next round must re-base in full
+        if let Some(p) = self.delta.as_mut() {
+            p.reset();
+        }
     }
 
     /// Elastic substitute-node introduction: a fresh SMP joins in place of a
@@ -589,6 +766,10 @@ impl ReftCluster {
         let smp = Smp::spawn(node, self.ft.clean_copies);
         smp.send(SmpMsg::Signal(Signal::Snap))?;
         self.smps[node] = Some(smp);
+        // the substitute holds no clean copy to patch — force a full re-base
+        if let Some(p) = self.delta.as_mut() {
+            p.reset();
+        }
         Ok(())
     }
 
@@ -796,6 +977,101 @@ mod tests {
         c.kill_node(2); // v2 aborted on survivors; v1 stays clean
         let restored = c.restore_all(&[2]).unwrap();
         assert_eq!(restored, payloads, "torn v2 must never surface");
+    }
+
+    fn dp6_delta_cluster(async_snapshot: bool) -> (ReftCluster, Vec<SharedPayload>) {
+        let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+        let bytes = vec![60_000u64];
+        let ft = FtConfig {
+            raim5: true,
+            bucket_bytes: 1024,
+            async_snapshot,
+            drain_buckets_per_tick: 4,
+            delta_extent_bytes: 512,
+            delta_chain_max: 8,
+            ..FtConfig::default()
+        };
+        let cluster = ReftCluster::start(topo, &bytes, ft).unwrap();
+        let payloads = vec![payload(60_000, 9)];
+        (cluster, payloads)
+    }
+
+    #[test]
+    fn sparse_blocking_rounds_restore_and_decode_after_patches() {
+        let (mut c, mut payloads) = dp6_delta_cluster(false);
+        c.snapshot_all(&payloads).unwrap(); // full base round
+        let mut bytes = payloads[0].as_slice().to_vec();
+        for i in (3_000..4_000).chain(41_000..45_000) {
+            bytes[i] ^= 0x5A;
+        }
+        payloads[0] = SharedPayload::new(bytes);
+        c.snapshot_all(&payloads).unwrap(); // sparse round
+        let st = c.delta_stats().unwrap();
+        assert_eq!((st.full_rounds, st.sparse_rounds), (1, 1));
+        assert!(st.shipped_bytes < st.payload_bytes, "{st:?}");
+        assert_eq!(c.restore_all(&[]).unwrap(), payloads);
+        // parity was patched in place, never re-stored in full — a decode of
+        // a lost shard must still be bit-exact
+        c.kill_node(2);
+        assert_eq!(c.restore_all(&[2]).unwrap(), payloads);
+    }
+
+    #[test]
+    fn sparse_async_rounds_commit_and_ship_only_changed_bytes() {
+        let (mut c, mut payloads) = dp6_delta_cluster(true);
+        c.snapshot_all(&payloads).unwrap(); // full base via the coordinator
+        let mut bytes = payloads[0].as_slice().to_vec();
+        for b in bytes.iter_mut().take(2_000) {
+            *b = b.wrapping_add(1);
+        }
+        payloads[0] = SharedPayload::new(bytes);
+        c.snapshot_all(&payloads).unwrap(); // sparse drain + commit on tick
+        let st = c.delta_stats().unwrap();
+        assert_eq!((st.full_rounds, st.sparse_rounds), (1, 1));
+        assert_eq!(c.restore_all(&[]).unwrap(), payloads);
+        // 60k full base + one 2k churn round padded to the 512 B extent
+        // grain: far below two full rounds
+        let sent = c.coordinator().stats().payload_bytes_sent;
+        assert!(sent < 63_000, "shipped {sent} bytes");
+    }
+
+    #[test]
+    fn node_replacement_forces_full_rebase_round() {
+        let (mut c, mut payloads) = dp6_delta_cluster(false);
+        c.snapshot_all(&payloads).unwrap();
+        c.kill_node(4);
+        c.replace_node(4).unwrap();
+        // the unchanged payload would diff to an empty delta, but the fresh
+        // SMP holds no base to patch — membership change must force a full
+        // round, or node 4 would promote garbage
+        c.snapshot_all(&payloads).unwrap();
+        let st = c.delta_stats().unwrap();
+        assert_eq!(st.full_rounds, 2);
+        assert_eq!(c.restore_all(&[]).unwrap(), payloads);
+        // and sparse rounds resume on the rebuilt base
+        let mut bytes = payloads[0].as_slice().to_vec();
+        bytes[100] ^= 1;
+        payloads[0] = SharedPayload::new(bytes);
+        c.snapshot_all(&payloads).unwrap();
+        assert_eq!(c.delta_stats().unwrap().sparse_rounds, 1);
+        assert_eq!(c.restore_all(&[]).unwrap(), payloads);
+    }
+
+    #[test]
+    fn cancelled_sparse_round_keeps_diffing_against_last_committed() {
+        let (mut c, mut payloads) = dp6_delta_cluster(true);
+        c.snapshot_all(&payloads).unwrap(); // v1 full, committed
+        let v1_payloads = payloads.clone();
+        let mut bytes = payloads[0].as_slice().to_vec();
+        bytes[10_000] ^= 0xFF;
+        payloads[0] = SharedPayload::new(bytes);
+        c.request_snapshot(payloads.clone()).unwrap(); // v2 sparse, in flight
+        c.cancel_in_flight(); // v2 never promotes anywhere
+        assert_eq!(c.restore_all(&[]).unwrap(), v1_payloads);
+        // v3 must diff against v1 (the last *committed* round): the byte v2
+        // would have shipped is shipped again, so the restore is exact
+        c.snapshot_all(&payloads).unwrap();
+        assert_eq!(c.restore_all(&[]).unwrap(), payloads);
     }
 
     #[test]

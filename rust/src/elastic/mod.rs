@@ -321,8 +321,10 @@ mod tests {
                 offset: 0,
                 len: 4,
                 crc32: crc32fast::hash(&[7; 4]),
+                extents: vec![],
                 parts: vec![],
             }],
+            base_step: None,
         }
     }
 

@@ -20,10 +20,12 @@
 //! nodes, split into *software* failures (kill the training process, SMP
 //! survives) and *hardware* failures (node offline, memory lost).
 
+pub mod churn;
 pub mod cluster;
 pub mod failure;
 pub mod resource;
 
+pub use churn::{ChurnReport, SkewedChurn, SkewedChurnSpec};
 pub use cluster::{ClusterHw, HwSpec, NodeHw};
 pub use failure::{FailureEvent, FailureKind, FailureModel, FailureSchedule};
 pub use resource::{Resource, Timeline};

@@ -12,6 +12,7 @@
 //!              [--persist-part-bytes N] [--persist-part-streams N]
 //!              [--persist-adaptive-depth BOOL]
 //!              [--auto-snapshot-interval BOOL]
+//!              [--delta-extent-bytes N] [--delta-chain-max N]
 //! reft survival    [--threshold 0.9]        # Fig. 8 curves + crossing table
 //! reft intervals   [--lambda 1e-4] [--sg 6] # Appendix-A optimal intervals
 //! reft save-cost   [--model opt-350m] [--dp 24]  # one-shot save costing
@@ -154,6 +155,12 @@ fn build_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
     if let Some(a) = flags.get("auto-snapshot-interval") {
         cfg.ft.auto_snapshot_interval = a == "true" || a == "1";
     }
+    // sparse delta snapshots: 0 disables; live values floor at one extent
+    // of 1 KiB, mirroring the JSON knob's clamp
+    let extent = get_usize("delta-extent-bytes", cfg.ft.delta_extent_bytes)?;
+    cfg.ft.delta_extent_bytes = if extent == 0 { 0 } else { extent.max(1024) };
+    cfg.ft.delta_chain_max =
+        (get_usize("delta-chain-max", cfg.ft.delta_chain_max as usize)? as u64).max(1);
     if let Some(a) = flags.get("artifacts") {
         cfg.artifacts_dir = a.clone();
     }

@@ -51,7 +51,13 @@ impl PersistDriver {
         sg_size: usize,
     ) -> PersistDriver {
         let nodes = plan.nodes();
-        let engine = PersistEngine::start(model, storage, plan, ft.persist.clone());
+        // the sparse-delta knobs live under `ft` (the snapshot layer reads
+        // them first); mirror them into the engine config so one pair of
+        // JSON knobs drives the whole changed-bytes path end to end
+        let mut pcfg = ft.persist.clone();
+        pcfg.delta_extent_bytes = ft.delta_extent_bytes;
+        pcfg.delta_chain_max = ft.delta_chain_max;
+        let engine = PersistEngine::start(model, storage, plan, pcfg);
         let sched = ft.persist.auto_interval.then(|| {
             IntervalScheduler::new(
                 ft.persist.lambda_node,
@@ -180,6 +186,14 @@ impl PersistDriver {
     fn sync(&mut self, metrics: &Metrics) {
         let st = self.engine.stats();
         metrics.inc("persisted_bytes", st.persisted_bytes - self.seen.persisted_bytes);
+        metrics.inc(
+            "persisted_full_bytes",
+            st.persisted_full_bytes - self.seen.persisted_full_bytes,
+        );
+        metrics.inc(
+            "persisted_delta_bytes",
+            st.persisted_delta_bytes - self.seen.persisted_delta_bytes,
+        );
         metrics.inc(
             "persist_commits",
             st.manifests_committed - self.seen.manifests_committed,

@@ -30,6 +30,16 @@
 //!   fused into the storage write loop (`put_checksummed`) and the
 //!   whole-shard CRC comes from GF(2) `combine` — each byte is touched
 //!   exactly once on the way out;
+//! * with `persist.delta_extent_bytes > 0` the engine keeps the extent
+//!   tables of the last committed round ([`BaseRound`]) and ships each
+//!   shard as a **sparse delta**: only the extents whose content hash
+//!   changed since that round are concatenated into the blob, and the
+//!   manifest links back via `base_step` (chain reconstruction lives in
+//!   [`super::manifest`]). A full base is forced on the first round, after
+//!   `persist.delta_chain_max` chained deltas, when a sibling job's commit
+//!   supersedes the cached base mid-flight, and when every shard changed
+//!   end to end anyway (the round then collapses back to a base so restore
+//!   chains never grow for nothing);
 //! * commit is all-or-nothing **and in enqueue order**: a commit turnstile
 //!   serializes the manifest writes, so overlapped jobs can never commit
 //!   out of order and `latest` advances monotonically — in *content* too: a
@@ -45,7 +55,8 @@
 //! [`PersistEngine::flush`] is the only blocking call and exists for
 //! shutdown (and tests): it barriers on the queue, not on any in-band step.
 
-use std::collections::{BTreeSet, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -58,7 +69,7 @@ use crate::checkpoint::Storage;
 use crate::config::PersistConfig;
 use crate::smp::SmpMsg;
 use crate::snapshot::plan::NodeShard;
-use crate::snapshot::SnapshotPlan;
+use crate::snapshot::{ExtentTable, SnapshotPlan};
 
 use super::manifest::{
     manifest_key, part_key, part_meta_key, shard_key, PartEntry, PartProgress,
@@ -235,8 +246,14 @@ pub struct PersistStats {
     /// jobs dropped without a manifest (dead SMP, version skew across
     /// nodes, no clean snapshot yet, storage error)
     pub jobs_aborted: u64,
-    /// shard payload bytes landed under a committed manifest
+    /// bytes shipped under committed manifests — the sum of the full and
+    /// delta counters below (equal to the payload bytes whenever delta
+    /// snapshots are off)
     pub persisted_bytes: u64,
+    /// bytes shipped by full base rounds (whole shards)
+    pub persisted_full_bytes: u64,
+    /// bytes shipped by sparse delta rounds (changed extents only)
+    pub persisted_delta_bytes: u64,
     /// multipart part-objects uploaded (committed and aborted jobs alike)
     pub parts_uploaded: u64,
     /// multipart part-objects found durable with a matching CRC and reused
@@ -301,6 +318,19 @@ impl CommitGate {
     }
 }
 
+/// The committed round the next delta job diffs against: its step, its
+/// chain depth and the extent tables of every shard it landed, keyed by
+/// `(stage, node)`. Only ever replaced inside the commit turnstile, so the
+/// cache always describes the latest committed manifest.
+#[derive(Clone)]
+struct BaseRound {
+    step: u64,
+    /// delta links between this round and its full base (0 = this round IS
+    /// a base); a delta on top of it would be `depth + 1` deep
+    depth: u64,
+    tables: BTreeMap<(usize, usize), ExtentTable>,
+}
+
 /// Everything a pipelined job needs, shared once behind an `Arc` instead of
 /// cloned per job.
 struct EngineShared {
@@ -312,6 +342,8 @@ struct EngineShared {
     stats: Arc<Mutex<PersistStats>>,
     gate: CommitGate,
     depth: Arc<DepthController>,
+    /// `None` until the first commit (or always, with delta snapshots off)
+    delta: Mutex<Option<BaseRound>>,
 }
 
 /// Handle to the running engine thread. Dropping it drains the queue
@@ -353,6 +385,7 @@ impl PersistEngine {
                     stats: thread_stats,
                     gate: CommitGate::new(),
                     depth: thread_depth,
+                    delta: Mutex::new(None),
                 });
                 let mut inflight: VecDeque<JoinHandle<()>> = VecDeque::new();
                 let mut seq = 0u64;
@@ -494,10 +527,24 @@ struct UploadAcc {
     upload_s: f64,
 }
 
-/// What one writer worker produced: the (fallible) served snapshot version
-/// + manifest entries + bytes moved, plus the always-present accounting.
+/// What one writer worker produced on success.
+struct NodeOutcome {
+    /// the snapshot version the SMP served
+    version: u64,
+    entries: Vec<ShardEntry>,
+    /// bytes shipped as whole shards (base rounds / delta off)
+    full_bytes: u64,
+    /// bytes shipped as changed-extent delta blobs
+    delta_bytes: u64,
+    /// freshly hashed extent tables, `(stage, node)`-keyed — empty when
+    /// delta snapshots are off
+    tables: Vec<((usize, usize), ExtentTable)>,
+}
+
+/// What one writer worker produced: the fallible outcome plus the
+/// always-present accounting.
 struct NodeWrite {
-    outcome: Result<(u64, Vec<ShardEntry>, u64)>,
+    outcome: Result<NodeOutcome>,
     acc: UploadAcc,
 }
 
@@ -595,29 +642,28 @@ fn upload_part(
     Ok(PartEntry { key: pkey, len: piece.len() as u64, crc32: crc })
 }
 
-/// Land one shard's bytes: a single paced blob below the multipart
+/// Land one blob under `key`: a single paced put below the multipart
 /// threshold, else `part-{k}` objects with per-part CRCs, fanned across a
 /// bounded in-node worker pool (`persist.multipart_streams`). A part that
 /// is already durable with matching bytes (same CRC) is **reused**, not
 /// re-uploaded — the crash-resume fast path a retried step hits.
 ///
 /// Byte-touch budget: every byte is hashed inside the storage write loop
-/// (`put_checksummed`) — never in a separate whole-shard pass. The
-/// whole-shard CRC the manifest records comes from folding the part CRCs
-/// with GF(2) `combine` (O(log len) per part), which equals the CRC of the
-/// concatenated bytes exactly, so manifests are indistinguishable from the
-/// hash-twice engine's.
-fn upload_shard(
+/// (`put_checksummed`) — never in a separate whole-blob pass. Returns the
+/// whole-blob CRC (folded from the part CRCs with GF(2) `combine`, which
+/// equals the CRC of the concatenated bytes exactly) and the part layout
+/// (empty for a single blob).
+fn upload_blob(
     shared: &EngineShared,
     step: u64,
-    shard: &NodeShard,
+    stage: usize,
     node: usize,
+    key: &str,
     bytes: &[u8],
     acc: &mut UploadAcc,
-) -> Result<ShardEntry> {
+) -> Result<(u32, Vec<PartEntry>)> {
     let cfg = &shared.cfg;
     let storage = shared.storage.as_ref();
-    let key = shard_key(&shared.model, step, shard.stage, node);
     let part_bytes = cfg.multipart_part_bytes;
     if part_bytes == 0 || bytes.len() <= part_bytes {
         // single blob: pace chunk by chunk on this node's lane, then land
@@ -628,23 +674,15 @@ fn upload_shard(
             acc.waited += shared.throttles.consume(node, piece.len());
         }
         let crc = storage
-            .put_checksummed(&key, bytes)
+            .put_checksummed(key, bytes)
             .with_context(|| format!("uploading `{key}`"))?;
-        return Ok(ShardEntry {
-            key,
-            stage: shard.stage,
-            node,
-            offset: shard.range.start,
-            len: shard.len(),
-            crc32: crc,
-            parts: Vec::new(),
-        });
+        return Ok((crc, Vec::new()));
     }
     // O(parts)-metadata resume: ONE sidecar read recovers the (len, crc)
     // record of every part a crashed earlier attempt durably landed — no
     // per-part byte read-back (the pre-sidecar engine re-fetched and
     // re-hashed whole parts to prove them reusable)
-    let meta_key = part_meta_key(&shared.model, step, shard.stage, node);
+    let meta_key = part_meta_key(&shared.model, step, stage, node);
     let flusher = Mutex::new(SidecarFlusher::new(PartProgress::load(storage, &meta_key)));
     let n_parts = bytes.len().div_ceil(part_bytes);
     let streams = cfg.multipart_streams.max(1).min(n_parts);
@@ -655,7 +693,7 @@ fn upload_shard(
         let mut parts = Vec::with_capacity(n_parts);
         for (k, piece) in bytes.chunks(part_bytes).enumerate() {
             parts.push(upload_part(
-                shared, step, shard.stage, node, k, piece, &flusher, &meta_key, acc,
+                shared, step, stage, node, k, piece, &flusher, &meta_key, acc,
             )?);
         }
         parts
@@ -688,7 +726,7 @@ fn upload_shard(
                         let i = next.fetch_add(1, Ordering::Relaxed);
                         let Some(&(k, piece)) = chunks.get(i) else { break };
                         match upload_part(
-                            shared, step, shard.stage, node, k, piece, flusher, meta_key,
+                            shared, step, stage, node, k, piece, flusher, meta_key,
                             &mut wacc,
                         ) {
                             Ok(e) => got.push((k, e)),
@@ -741,20 +779,92 @@ fn upload_shard(
             .map(|p| p.expect("part worker invariant: every index claimed once"))
             .collect()
     };
-    // whole-shard CRC from the part CRCs via GF(2) combine — no extra pass
+    // whole-blob CRC from the part CRCs via GF(2) combine — no extra pass
     let mut whole = crc32fast::Hasher::new();
     for p in &parts {
         whole.combine(&crc32fast::Hasher::new_with_initial_len(p.crc32, p.len));
     }
+    Ok((whole.finalize(), parts))
+}
+
+/// Land one shard whole — the base-round (and delta-off) path.
+fn upload_shard(
+    shared: &EngineShared,
+    step: u64,
+    shard: &NodeShard,
+    node: usize,
+    bytes: &[u8],
+    acc: &mut UploadAcc,
+) -> Result<ShardEntry> {
+    let key = shard_key(&shared.model, step, shard.stage, node);
+    let (crc, parts) = upload_blob(shared, step, shard.stage, node, &key, bytes, acc)?;
     Ok(ShardEntry {
         key,
         stage: shard.stage,
         node,
         offset: shard.range.start,
         len: shard.len(),
-        crc32: whole.finalize(),
+        crc32: crc,
+        extents: Vec::new(),
         parts,
     })
+}
+
+/// Land one shard as a sparse delta: the changed shard-local `ranges` are
+/// concatenated into one blob (shipped through the same single/multipart
+/// machinery, under the same shard key) and recorded as `extents`; the
+/// entry's `crc32` is the CRC of the FULL reconstructed shard (the extent
+/// table's GF(2) fold — no second hash pass), which is what chain
+/// reconstruction verifies at restore. A shard with no changed extents
+/// uploads nothing at all: the manifest entry alone says "keep the base
+/// round's bytes".
+#[allow(clippy::too_many_arguments)]
+fn upload_delta_shard(
+    shared: &EngineShared,
+    step: u64,
+    shard: &NodeShard,
+    node: usize,
+    bytes: &[u8],
+    ranges: &[Range<u64>],
+    whole_crc: u32,
+    acc: &mut UploadAcc,
+) -> Result<ShardEntry> {
+    let key = shard_key(&shared.model, step, shard.stage, node);
+    let mut entry = ShardEntry {
+        key: key.clone(),
+        stage: shard.stage,
+        node,
+        offset: shard.range.start,
+        len: shard.len(),
+        crc32: whole_crc,
+        extents: ranges.iter().map(|r| (r.start, r.end - r.start)).collect(),
+        parts: Vec::new(),
+    };
+    if ranges.is_empty() {
+        return Ok(entry);
+    }
+    // a full-coverage delta (100% churn; the all-full collapse rewrites the
+    // manifest entry as a base) uploads the shard bytes directly — the
+    // concatenation copy would double the round's memory traffic for
+    // nothing, and the 100%-churn path must track the full-capture path
+    let built: Vec<u8>;
+    let blob: &[u8] = if ranges.len() == 1 && ranges[0] == (0..shard.len()) {
+        bytes
+    } else {
+        let delta_len: usize = ranges.iter().map(|r| (r.end - r.start) as usize).sum();
+        let mut b = Vec::with_capacity(delta_len);
+        for r in ranges {
+            b.extend_from_slice(&bytes[r.start as usize..r.end as usize]);
+        }
+        built = b;
+        &built
+    };
+    // the blob-level CRC is dropped on the single-blob path (the manifest
+    // records the whole-shard CRC instead and restore verifies THAT); the
+    // multipart path still records per-part CRCs for resumability
+    let (_, parts) = upload_blob(shared, step, shard.stage, node, &key, blob, acc)?;
+    entry.parts = parts;
+    Ok(entry)
 }
 
 /// One writer worker: pull every clean shard this node owns from its SMP
@@ -766,9 +876,10 @@ fn write_node(
     step: u64,
     node: usize,
     source: Option<Sender<SmpMsg>>,
+    base: Option<&BTreeMap<(usize, usize), ExtentTable>>,
 ) -> NodeWrite {
     let mut acc = UploadAcc::default();
-    let outcome = write_node_inner(shared, step, node, source, &mut acc);
+    let outcome = write_node_inner(shared, step, node, source, base, &mut acc);
     NodeWrite { outcome, acc }
 }
 
@@ -777,13 +888,16 @@ fn write_node_inner(
     step: u64,
     node: usize,
     source: Option<Sender<SmpMsg>>,
+    base: Option<&BTreeMap<(usize, usize), ExtentTable>>,
     acc: &mut UploadAcc,
-) -> Result<(u64, Vec<ShardEntry>, u64)> {
+) -> Result<NodeOutcome> {
     let source =
         source.with_context(|| format!("node {node} is offline — cannot persist"))?;
     let shards: Vec<&NodeShard> = shared.plan.shards_for_node(node).collect();
     let mut entries: Vec<ShardEntry> = Vec::with_capacity(shards.len());
-    let mut total = 0u64;
+    let mut full_bytes = 0u64;
+    let mut delta_bytes = 0u64;
+    let mut tables: Vec<((usize, usize), ExtentTable)> = Vec::new();
     let mut version: Option<u64> = None;
     let mut pending = match shards.first() {
         Some(sh) => Some(
@@ -826,20 +940,47 @@ fn write_node_inner(
             ),
             None => version = Some(v),
         }
+        // one content-hash pass over the fetched bytes whenever delta
+        // snapshots are on — even on base rounds, whose tables seed the
+        // next round's diff
+        let grain = shared.cfg.delta_extent_bytes;
+        let table = (grain > 0).then(|| ExtentTable::build(&bytes, grain));
         let waited_before = acc.waited;
         let t_upload = Instant::now();
-        let entry = upload_shard(shared, step, shard, node, &bytes, acc)?;
+        let entry = match (&table, base) {
+            (Some(t), Some(base)) => {
+                // delta round: every shard ships as an extent list. A shard
+                // whose table is incomparable with the base's (elastic
+                // resize, grain change) degrades to one full-coverage
+                // extent — still a valid delta entry.
+                let ranges = match base.get(&(shard.stage, node)).and_then(|b| t.diff(b)) {
+                    Some(r) => r,
+                    None if shard.len() == 0 => Vec::new(),
+                    None => vec![0..shard.len()],
+                };
+                delta_bytes += ranges.iter().map(|r| r.end - r.start).sum::<u64>();
+                upload_delta_shard(
+                    shared, step, shard, node, &bytes, &ranges, t.whole_crc32(), acc,
+                )?
+            }
+            _ => {
+                full_bytes += bytes.len() as u64;
+                upload_shard(shared, step, shard, node, &bytes, acc)?
+            }
+        };
         // storage time net of this shard's throttle sleeps: pacing is
         // policy, not RTT, and counting it would teach the controller to
         // out-deepen its own bandwidth budget
         acc.upload_s += (t_upload.elapsed().as_secs_f64() - (acc.waited - waited_before))
             .max(0.0);
-        total += bytes.len() as u64;
+        if let Some(t) = table {
+            tables.push(((shard.stage, node), t));
+        }
         entries.push(entry);
     }
     let version =
         version.with_context(|| format!("node {node} holds no planned shards"))?;
-    Ok((version, entries, total))
+    Ok(NodeOutcome { version, entries, full_bytes, delta_bytes, tables })
 }
 
 fn run_job(
@@ -850,6 +991,20 @@ fn run_job(
     version_steps: &[(u64, u64)],
 ) {
     let t0 = Instant::now();
+    // the diff base, snapshotted ONCE per job so every writer diffs against
+    // the same committed round; `None` ⇒ this job lands a full base (delta
+    // off, nothing committed yet, or the chain hit its depth cap)
+    let base: Option<BaseRound> = if shared.cfg.delta_extent_bytes > 0 {
+        shared
+            .delta
+            .lock()
+            .unwrap()
+            .clone()
+            .filter(|b| b.depth < shared.cfg.delta_chain_max)
+    } else {
+        None
+    };
+    let base_tables = base.as_ref().map(|b| &b.tables);
     // -- phase A: fetch + upload, concurrent with sibling jobs -------------
     let nodes: BTreeSet<usize> = shared.plan.shards.iter().map(|s| s.node).collect();
     let mut results: Vec<NodeWrite> = Vec::new();
@@ -857,7 +1012,9 @@ fn run_job(
         let mut handles = Vec::new();
         for &node in &nodes {
             let source = sources.get_mut(node).and_then(|s| s.take());
-            handles.push(scope.spawn(move || write_node(shared, step, node, source)));
+            handles.push(
+                scope.spawn(move || write_node(shared, step, node, source, base_tables)),
+            );
         }
         for h in handles {
             results.push(h.join().unwrap_or_else(|_| NodeWrite {
@@ -874,7 +1031,9 @@ fn run_job(
     // from failed workers too: the bytes really moved.
     let mut entries = Vec::new();
     let mut versions: BTreeSet<u64> = BTreeSet::new();
-    let mut total_bytes = 0u64;
+    let mut full_bytes = 0u64;
+    let mut delta_bytes = 0u64;
+    let mut tables: BTreeMap<(usize, usize), ExtentTable> = BTreeMap::new();
     let mut wait_s = 0f64;
     let mut parts_uploaded = 0u64;
     let mut parts_reused = 0u64;
@@ -888,10 +1047,12 @@ fn run_job(
         fetch_s += w.acc.fetch_s;
         upload_s += w.acc.upload_s;
         match w.outcome {
-            Ok((v, es, bytes)) => {
-                versions.insert(v);
-                total_bytes += bytes;
-                entries.extend(es);
+            Ok(o) => {
+                versions.insert(o.version);
+                full_bytes += o.full_bytes;
+                delta_bytes += o.delta_bytes;
+                tables.extend(o.tables);
+                entries.extend(o.entries);
             }
             Err(e) => error = Some(format!("{e:#}")),
         }
@@ -932,6 +1093,23 @@ fn run_job(
             }
         }
     }
+    // a delta manifest links to the round it diffed against, and that base
+    // must be the *immediately preceding* commit: if a sibling job committed
+    // in between, its GC pass could not see this job's pending reference and
+    // may already have made the base eligible for deletion. Dropping the job
+    // here keeps every restore chain anchored; the next job simply diffs
+    // against the sibling's (newer) cached tables.
+    if error.is_none() {
+        if let Some(bs) = base.as_ref().map(|b| b.step) {
+            let last = shared.stats.lock().unwrap().last_commit_step;
+            if last != Some(bs) {
+                error = Some(format!(
+                    "delta base step {bs} was superseded by a sibling commit \
+                     (latest is {last:?}) — dropping the job"
+                ));
+            }
+        }
+    }
     if let Some(e) = error {
         let mut g = shared.stats.lock().unwrap();
         g.throttle_wait_s += wait_s;
@@ -946,6 +1124,23 @@ fn run_job(
 
     let version = versions.into_iter().next().expect("checked above");
     entries.sort_by(|a, b| (a.stage, a.offset).cmp(&(b.stage, b.offset)));
+    // degenerate delta: every shard changed end to end, so the "delta"
+    // carries exactly the bytes a base would — commit it AS a base (extents
+    // stripped; the blobs and CRCs are already in base form) and keep the
+    // restore chain from growing for nothing. Zero-length shards never
+    // qualify (their delta entry skipped the blob upload a base needs).
+    let mut base_step = base.as_ref().map(|b| b.step);
+    if base_step.is_some()
+        && !entries.is_empty()
+        && entries.iter().all(|e| e.extents == [(0, e.len)])
+    {
+        for e in &mut entries {
+            e.extents.clear();
+        }
+        base_step = None;
+        full_bytes += delta_bytes;
+        delta_bytes = 0;
+    }
     // the step whose state the drained round actually contains: with async
     // snapshots the promoted round can be older than the enqueue step, and
     // recovery's cross-tier tie-break must not overstate it
@@ -962,6 +1157,7 @@ fn run_job(
         snapshot_step,
         stage_bytes: shared.plan.stage_bytes.clone(),
         shards: entries,
+        base_step,
     };
     let storage = shared.storage.as_ref();
     let committed = storage.put(&manifest_key(&shared.model, step), &manifest.encode());
@@ -976,6 +1172,15 @@ fn run_job(
     } else {
         None
     };
+    // the committed round becomes the diff base for the next job; replaced
+    // inside the turn so siblings always observe a fully committed cache
+    if committed.is_ok() && shared.cfg.delta_extent_bytes > 0 {
+        let depth = match base_step {
+            Some(_) => base.as_ref().map_or(0, |b| b.depth) + 1,
+            None => 0,
+        };
+        *shared.delta.lock().unwrap() = Some(BaseRound { step, depth, tables });
+    }
 
     let mut g = shared.stats.lock().unwrap();
     g.throttle_wait_s += wait_s;
@@ -984,7 +1189,9 @@ fn run_job(
     match committed {
         Ok(()) => {
             g.manifests_committed += 1;
-            g.persisted_bytes += total_bytes;
+            g.persisted_bytes += full_bytes + delta_bytes;
+            g.persisted_full_bytes += full_bytes;
+            g.persisted_delta_bytes += delta_bytes;
             g.last_commit_step = Some(step);
             g.last_commit_version = Some(version);
             g.last_job_secs =

@@ -118,8 +118,19 @@ pub struct ShardEntry {
     pub offset: u64,
     pub len: u64,
     /// CRC of the whole shard payload (also covered part-by-part for
-    /// multipart shards)
+    /// multipart shards). For a **delta** shard this covers the full
+    /// *reconstructed* shard — base bytes with the extents patched in — so
+    /// restore verifies the chain end to end, not just the shipped bytes.
     pub crc32: u32,
+    /// sparse layout, only meaningful inside a **delta** manifest (one whose
+    /// top-level `base_step` is set): the shard-local `(start, len)` byte
+    /// ranges the blob at `key` (or the parts) contains, concatenated in
+    /// order, to be patched over the base round's shard. Empty in a delta
+    /// manifest = the shard did not change — **no blob exists at all** and
+    /// restore just re-verifies the base bytes against `crc32`. In a full
+    /// (base) manifest this list is always empty and the blob holds every
+    /// byte of the shard.
+    pub extents: Vec<(u64, u64)>,
     /// multipart layout; empty = the shard is one blob at `key`
     pub parts: Vec<PartEntry>,
 }
@@ -295,6 +306,13 @@ pub struct PersistManifest {
     /// per-stage payload sizes (restore pre-allocates from these)
     pub stage_bytes: Vec<u64>,
     pub shards: Vec<ShardEntry>,
+    /// `Some(step)` makes this a **delta** manifest: shards with `extents`
+    /// patch over the payload reconstructed from the manifest committed at
+    /// `step` (which may itself chain further back). `None` is a full
+    /// (base) manifest — the only kind prior wire formats could express,
+    /// and the field is omitted from the encoding in that case so base
+    /// manifests stay byte-identical to them.
+    pub base_step: Option<u64>,
 }
 
 impl PersistManifest {
@@ -307,6 +325,12 @@ impl PersistManifest {
     pub fn encode(&self) -> Vec<u8> {
         let mut w = JsonWriter::with_capacity(128 + self.shards.len() * 192);
         w.begin_obj();
+        // "base_step" sorts before every other top-level key; omitted for
+        // base manifests so their bytes stay identical to the old format
+        if let Some(b) = self.base_step {
+            w.key("base_step");
+            w.u64(b);
+        }
         w.key("model");
         w.str(&self.model);
         w.key("shards");
@@ -315,6 +339,17 @@ impl PersistManifest {
             w.begin_obj();
             w.key("crc32");
             w.u32(s.crc32);
+            if !s.extents.is_empty() {
+                // flat [start0, len0, start1, len1, ...] — half the braces
+                // of an object per extent on what can be a long list
+                w.key("extents");
+                w.begin_arr();
+                for &(start, len) in &s.extents {
+                    w.u64(start);
+                    w.u64(len);
+                }
+                w.end_arr();
+            }
             w.key("key");
             w.str(&s.key);
             w.key("len");
@@ -375,6 +410,19 @@ impl PersistManifest {
                         ("len", Json::num(s.len as f64)),
                         ("crc32", Json::num(s.crc32 as f64)),
                     ];
+                    if !s.extents.is_empty() {
+                        fields.push((
+                            "extents",
+                            Json::Arr(
+                                s.extents
+                                    .iter()
+                                    .flat_map(|&(start, len)| {
+                                        [Json::num(start as f64), Json::num(len as f64)]
+                                    })
+                                    .collect(),
+                            ),
+                        ));
+                    }
                     // single-blob shards keep the PR-3 wire format exactly;
                     // only multipart shards carry the extra field
                     if !s.parts.is_empty() {
@@ -398,7 +446,7 @@ impl PersistManifest {
                 })
                 .collect(),
         );
-        let j = Json::obj(vec![
+        let mut top = vec![
             ("model", Json::str(self.model.clone())),
             ("step", Json::num(self.step as f64)),
             ("version", Json::num(self.version as f64)),
@@ -408,7 +456,11 @@ impl PersistManifest {
                 Json::Arr(self.stage_bytes.iter().map(|&b| Json::num(b as f64)).collect()),
             ),
             ("shards", shards),
-        ]);
+        ];
+        if let Some(b) = self.base_step {
+            top.push(("base_step", Json::num(b as f64)));
+        }
+        let j = Json::obj(top);
         format!("{j}\n").into_bytes()
     }
 
@@ -426,6 +478,7 @@ impl PersistManifest {
         let mut snapshot_step = None;
         let mut stage_bytes = None;
         let mut shards = None;
+        let mut base_step = None;
         r.obj_begin()?;
         while let Some(top) = r.key()? {
             match top.as_str() {
@@ -433,6 +486,7 @@ impl PersistManifest {
                 "step" => step = Some(r.u64()?),
                 "version" => version = Some(r.u64()?),
                 "snapshot_step" => snapshot_step = Some(r.u64()?),
+                "base_step" => base_step = Some(r.u64()?),
                 "stage_bytes" => {
                     let mut v = Vec::new();
                     r.arr_begin()?;
@@ -461,6 +515,7 @@ impl PersistManifest {
                 .ok_or_else(|| anyhow!("manifest missing `snapshot_step`"))?,
             stage_bytes: stage_bytes.ok_or_else(|| anyhow!("manifest missing `stage_bytes`"))?,
             shards: shards.ok_or_else(|| anyhow!("manifest missing `shards`"))?,
+            base_step,
         })
     }
 
@@ -475,6 +530,10 @@ impl PersistManifest {
         let step = j.req_u64("step")?;
         let version = j.req_u64("version")?;
         let snapshot_step = j.req_u64("snapshot_step")?;
+        let base_step = match j.get("base_step") {
+            Some(v) => Some(v.as_u64().context("invalid base_step")?),
+            None => None,
+        };
         let stage_bytes = j
             .req_arr("stage_bytes")?
             .iter()
@@ -492,6 +551,15 @@ impl PersistManifest {
                     });
                 }
             }
+            let mut extents = Vec::new();
+            if let Some(arr) = s.get("extents").and_then(Json::as_arr) {
+                let flat = arr
+                    .iter()
+                    .map(|v| v.as_u64().context("invalid extents entry"))
+                    .collect::<Result<Vec<u64>>>()?;
+                anyhow::ensure!(flat.len() % 2 == 0, "extents list has an odd length");
+                extents = flat.chunks_exact(2).map(|c| (c[0], c[1])).collect();
+            }
             shards.push(ShardEntry {
                 key: s.req_str("key")?.to_string(),
                 stage: s.req_usize("stage")?,
@@ -499,10 +567,11 @@ impl PersistManifest {
                 offset: s.req_u64("offset")?,
                 len: s.req_u64("len")?,
                 crc32: s.req_u32("crc32")?,
+                extents,
                 parts,
             });
         }
-        Ok(PersistManifest { model, step, version, snapshot_step, stage_bytes, shards })
+        Ok(PersistManifest { model, step, version, snapshot_step, stage_bytes, shards, base_step })
     }
 }
 
@@ -516,6 +585,7 @@ fn decode_shard(r: &mut JsonReader<'_>) -> Result<ShardEntry> {
     let mut offset = None;
     let mut len = None;
     let mut crc32 = None;
+    let mut extents = Vec::new();
     let mut parts = Vec::new();
     while let Some(f) = r.key()? {
         match f.as_str() {
@@ -525,6 +595,15 @@ fn decode_shard(r: &mut JsonReader<'_>) -> Result<ShardEntry> {
             "offset" => offset = Some(r.u64()?),
             "len" => len = Some(r.u64()?),
             "crc32" => crc32 = Some(r.u32()?),
+            "extents" => {
+                let mut flat = Vec::new();
+                r.arr_begin()?;
+                while r.arr_next()? {
+                    flat.push(r.u64()?);
+                }
+                anyhow::ensure!(flat.len() % 2 == 0, "extents list has an odd length");
+                extents = flat.chunks_exact(2).map(|c| (c[0], c[1])).collect();
+            }
             "parts" => {
                 r.arr_begin()?;
                 while r.arr_next()? {
@@ -541,6 +620,7 @@ fn decode_shard(r: &mut JsonReader<'_>) -> Result<ShardEntry> {
         offset: offset.ok_or_else(|| anyhow!("shard missing `offset`"))?,
         len: len.ok_or_else(|| anyhow!("shard missing `len`"))?,
         crc32: crc32.ok_or_else(|| anyhow!("shard missing `crc32`"))?,
+        extents,
         parts,
     })
 }
@@ -734,6 +814,146 @@ fn tiling_order(man: &PersistManifest) -> Result<Vec<usize>> {
 /// gets), not compute-bound, so the cap is independent of the core count.
 const LOAD_WORKERS: usize = 8;
 
+/// Hard cap on delta-chain length at restore. The engine re-bases every
+/// `delta_chain_max` commits (default 8), so a longer walk means corrupt or
+/// cyclic links — fail loudly instead of spinning.
+const MAX_CHAIN_DEPTH: usize = 64;
+
+/// Resolve the base→…→`man` manifest chain, base (a full manifest) first.
+/// Every link must strictly decrease the step (no cycles), keep the stage
+/// shape, and resolve to a committed manifest; the walk is bounded by
+/// [`MAX_CHAIN_DEPTH`].
+fn load_chain(storage: &dyn Storage, man: &PersistManifest) -> Result<Vec<PersistManifest>> {
+    let mut chain = vec![man.clone()];
+    while let Some(base) = chain.last().expect("non-empty").base_step {
+        anyhow::ensure!(
+            chain.len() <= MAX_CHAIN_DEPTH,
+            "delta chain from step {} exceeds {MAX_CHAIN_DEPTH} links",
+            man.step
+        );
+        let cur = chain.last().expect("non-empty");
+        anyhow::ensure!(
+            base < cur.step,
+            "delta manifest at step {} links forward to base {base}",
+            cur.step
+        );
+        let bytes = storage
+            .get(&manifest_key(&man.model, base))
+            .with_context(|| format!("base manifest for step {base} is gone"))?;
+        let prev = PersistManifest::decode(&bytes)?;
+        anyhow::ensure!(
+            prev.stage_bytes == man.stage_bytes,
+            "base manifest at step {base} has a different stage shape"
+        );
+        chain.push(prev);
+    }
+    chain.reverse();
+    Ok(chain)
+}
+
+/// Apply one delta manifest over the payload reconstructed so far: every
+/// shard fetches only its extent bytes (nothing at all when unchanged) and
+/// patches them in place, then verifies the whole reconstructed shard
+/// against the recorded CRC.
+fn apply_manifest_into(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+    stages: &mut [Vec<u8>],
+) -> Result<()> {
+    let order = tiling_order(man)?;
+    anyhow::ensure!(
+        stages.len() == man.stage_bytes.len()
+            && stages.iter().zip(&man.stage_bytes).all(|(s, &b)| s.len() as u64 == b),
+        "delta-chain buffers do not match the manifest's stage shape"
+    );
+    for &i in &order {
+        let s = &man.shards[i];
+        let (a, b) = (s.offset as usize, (s.offset + s.len) as usize);
+        apply_delta_into(storage, s, &mut stages[s.stage][a..b])?;
+    }
+    Ok(())
+}
+
+/// Fetch a delta shard's extent blob (single or multipart) and patch it over
+/// `out`, which holds the shard as reconstructed up to the previous chain
+/// link. The recorded `crc32` covers the **patched** shard, so corruption of
+/// the shipped bytes, the base bytes, or the extent list itself is caught
+/// here before the chain result is trusted.
+fn apply_delta_into(storage: &dyn Storage, s: &ShardEntry, out: &mut [u8]) -> Result<()> {
+    anyhow::ensure!(
+        out.len() as u64 == s.len,
+        "shard `{}` buffer is {} bytes, manifest says {}",
+        s.key,
+        out.len(),
+        s.len
+    );
+    let mut prev_end = 0u64;
+    let mut delta_len = 0u64;
+    for &(start, len) in &s.extents {
+        anyhow::ensure!(
+            start >= prev_end && len > 0 && start.checked_add(len).is_some_and(|e| e <= s.len),
+            "shard `{}` extents must be ascending, non-empty, non-overlapping \
+             and within the shard",
+            s.key
+        );
+        prev_end = start + len;
+        delta_len += len;
+    }
+    let mut blob = vec![0u8; delta_len as usize];
+    if delta_len == 0 {
+        // unchanged shard: no blob was ever uploaded; just re-verify below
+    } else if s.parts.is_empty() {
+        // no independent blob CRC is recorded for a single-blob delta — the
+        // whole-shard check below covers those bytes
+        storage
+            .get_into(&s.key, &mut blob)
+            .with_context(|| format!("delta shard `{}` missing or mis-sized", s.key))?;
+    } else {
+        let covered: u64 = s.parts.iter().map(|p| p.len).sum();
+        anyhow::ensure!(
+            covered == delta_len,
+            "delta shard `{}` parts cover {covered} of {delta_len} extent bytes",
+            s.key
+        );
+        let mut off = 0usize;
+        for p in &s.parts {
+            let end = off + p.len as usize;
+            let crc = storage
+                .get_into_checksummed(&p.key, &mut blob[off..end])
+                .with_context(|| format!("part `{}` missing or mis-sized", p.key))?;
+            anyhow::ensure!(
+                crc == p.crc32,
+                "part `{}` CRC mismatch — durable copy corrupt",
+                p.key
+            );
+            off = end;
+        }
+    }
+    let mut off = 0usize;
+    for &(start, len) in &s.extents {
+        out[start as usize..(start + len) as usize]
+            .copy_from_slice(&blob[off..off + len as usize]);
+        off += len as usize;
+    }
+    anyhow::ensure!(
+        crc32fast::hash(out) == s.crc32,
+        "shard `{}` reconstruction CRC mismatch — delta chain corrupt",
+        s.key
+    );
+    Ok(())
+}
+
+/// Fail loudly on the shapes the full-manifest fast paths cannot serve: a
+/// delta shard without a `base_step` link, or vice versa.
+fn ensure_full_manifest(man: &PersistManifest) -> Result<()> {
+    anyhow::ensure!(
+        man.shards.iter().all(|s| s.extents.is_empty()),
+        "manifest at step {} has delta shards but no base_step link",
+        man.step
+    );
+    Ok(())
+}
+
 /// Fetch and verify one manifest's full payload — every shard present,
 /// length- and CRC-clean, tiling each stage payload exactly — as a
 /// **parallel sharded gather**: the stage buffers are pre-allocated and
@@ -741,11 +961,25 @@ const LOAD_WORKERS: usize = 8;
 /// and CRC-verify shards concurrently, stitching each directly into place
 /// (mirroring the parallel in-memory restore; this is the checkpoint-
 /// fallback restart path, where the serial NFS-shaped read loop dominated).
+/// A **delta** manifest (`base_step` set) is reconstructed by walking its
+/// chain to the base full manifest, parallel-gathering that, and applying
+/// each subsequent delta in order — every patched shard verified against its
+/// recorded whole-shard CRC before the result is trusted.
 pub fn load_manifest_payload(
     storage: &dyn Storage,
     man: &PersistManifest,
 ) -> Result<Vec<Vec<u8>>> {
-    load_manifest_payload_with(storage, man, fetch_shard_into)
+    if man.base_step.is_none() {
+        ensure_full_manifest(man)?;
+        return load_manifest_payload_with(storage, man, fetch_shard_into);
+    }
+    let chain = load_chain(storage, man)?;
+    ensure_full_manifest(&chain[0])?;
+    let mut stages = load_manifest_payload_with(storage, &chain[0], fetch_shard_into)?;
+    for link in &chain[1..] {
+        apply_manifest_into(storage, link, &mut stages)?;
+    }
+    Ok(stages)
 }
 
 /// The parallel gather over the **pre-fusion leaf** (separate hash pass per
@@ -758,6 +992,9 @@ pub fn load_manifest_payload_separate(
     storage: &dyn Storage,
     man: &PersistManifest,
 ) -> Result<Vec<Vec<u8>>> {
+    // a bench-only baseline: full manifests only, by design
+    anyhow::ensure!(man.base_step.is_none(), "separate-pass loader cannot walk delta chains");
+    ensure_full_manifest(man)?;
     load_manifest_payload_with(storage, man, fetch_shard_into_separate)
 }
 
@@ -820,13 +1057,28 @@ pub fn load_manifest_payload_serial(
     storage: &dyn Storage,
     man: &PersistManifest,
 ) -> Result<Vec<Vec<u8>>> {
-    let order = tiling_order(man)?;
+    let chain = match man.base_step {
+        None => {
+            ensure_full_manifest(man)?;
+            vec![man.clone()]
+        }
+        Some(_) => {
+            let chain = load_chain(storage, man)?;
+            ensure_full_manifest(&chain[0])?;
+            chain
+        }
+    };
+    let base = &chain[0];
+    let order = tiling_order(base)?;
     let mut out: Vec<Vec<u8>> =
-        man.stage_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
+        base.stage_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
     for &i in &order {
-        let s = &man.shards[i];
+        let s = &base.shards[i];
         let (a, b) = (s.offset as usize, (s.offset + s.len) as usize);
         fetch_shard_into(storage, s, &mut out[s.stage][a..b])?;
+    }
+    for link in &chain[1..] {
+        apply_manifest_into(storage, link, &mut out)?;
     }
     Ok(out)
 }
@@ -947,6 +1199,7 @@ mod tests {
                     offset: 0,
                     len: 6,
                     crc32: crc32fast::hash(&[1; 6]),
+                    extents: vec![],
                     parts: vec![],
                 },
                 ShardEntry {
@@ -956,6 +1209,7 @@ mod tests {
                     offset: 6,
                     len: 4,
                     crc32: crc32fast::hash(&[2; 4]),
+                    extents: vec![],
                     parts: vec![],
                 },
                 ShardEntry {
@@ -965,9 +1219,11 @@ mod tests {
                     offset: 0,
                     len: 6,
                     crc32: crc32fast::hash(&[3; 6]),
+                    extents: vec![],
                     parts: vec![],
                 },
             ],
+            base_step: None,
         }
     }
 
@@ -1042,6 +1298,7 @@ mod tests {
             snapshot_step: u64::MAX - 1,
             stage_bytes: vec![(1 << 60) + 3],
             shards: vec![],
+            base_step: Some((1 << 53) + 7),
         };
         let back = PersistManifest::decode(&man.encode()).unwrap();
         assert_eq!(back, man, "no precision loss through the streaming codec");
@@ -1291,6 +1548,106 @@ mod tests {
         assert!(resolve_for_recovery(&s, "m", 2, Some(legacy_newer.as_str())).is_none());
         let legacy_older = step_key("m", 37);
         assert!(resolve_for_recovery(&s, "m", 2, Some(legacy_older.as_str())).is_some());
+    }
+
+    /// A committed base round at step 40 plus a delta round at step 44:
+    /// shard 0 patched at bytes 1..3, shard 1 (stage 0) unchanged (no blob),
+    /// shard 2 (stage 1) patched at its first and last byte.
+    fn delta_sample(s: &MemStorage) -> (PersistManifest, PersistManifest) {
+        let base = sample();
+        put_shards(s, &base);
+        s.put(&manifest_key("m", 40), &base.encode()).unwrap();
+        let mut d = sample();
+        d.step = 44;
+        d.snapshot_step = 44;
+        d.base_step = Some(40);
+        for sh in &mut d.shards {
+            sh.key = shard_key("m", 44, sh.stage, sh.node);
+        }
+        d.shards[0].extents = vec![(1, 2)];
+        d.shards[0].crc32 = crc32fast::hash(&[1, 9, 9, 1, 1, 1]);
+        s.put(&d.shards[0].key, &[9, 9]).unwrap();
+        // shards[1] stays at the base bytes: empty extents, no blob at all
+        d.shards[2].extents = vec![(0, 1), (5, 1)];
+        d.shards[2].crc32 = crc32fast::hash(&[7, 3, 3, 3, 3, 8]);
+        s.put(&d.shards[2].key, &[7, 8]).unwrap();
+        s.put(&manifest_key("m", 44), &d.encode()).unwrap();
+        (base, d)
+    }
+
+    #[test]
+    fn base_manifest_wire_format_is_unchanged() {
+        // full manifests must stay byte-compatible with the pre-delta format
+        let text = String::from_utf8(sample().encode()).unwrap();
+        assert!(!text.contains("base_step"));
+        assert!(!text.contains("extents"));
+    }
+
+    #[test]
+    fn delta_manifest_codec_roundtrip_matches_dom() {
+        let s = MemStorage::new();
+        let (_, d) = delta_sample(&s);
+        assert_eq!(d.encode(), d.encode_dom());
+        assert_eq!(PersistManifest::decode(&d.encode()).unwrap(), d);
+        assert_eq!(PersistManifest::decode_dom(&d.encode()).unwrap(), d);
+    }
+
+    #[test]
+    fn delta_chain_load_reconstructs_patched_payload() {
+        let s = MemStorage::new();
+        let (_, d) = delta_sample(&s);
+        let (hit, stages) = load_latest(&s, "m").unwrap().unwrap();
+        assert_eq!(hit.step, 44);
+        let mut expect0 = vec![1, 9, 9, 1, 1, 1];
+        expect0.extend_from_slice(&[2; 4]);
+        assert_eq!(stages[0], expect0);
+        assert_eq!(stages[1], vec![7, 3, 3, 3, 3, 8]);
+        assert_eq!(
+            load_manifest_payload_serial(&s, &d).unwrap(),
+            stages,
+            "serial oracle walks the chain to the same bytes"
+        );
+    }
+
+    #[test]
+    fn corrupt_delta_falls_back_to_the_base_round() {
+        let s = MemStorage::new();
+        let (_, d) = delta_sample(&s);
+        // same length, wrong bytes: only the reconstruction CRC can see it
+        s.put(&d.shards[0].key, &[9, 8]).unwrap();
+        let (hit, stages) = load_latest(&s, "m").unwrap().unwrap();
+        assert_eq!(hit.step, 40, "torn delta degrades to the base, never blocks");
+        assert_eq!(stages[1], vec![3u8; 6]);
+    }
+
+    #[test]
+    fn unchanged_shards_are_still_verified() {
+        let s = MemStorage::new();
+        let (_, mut d) = delta_sample(&s);
+        // claim the unchanged shard reconstructs to different bytes: the
+        // re-verify over the base bytes must refuse the chain
+        d.shards[1].crc32 ^= 1;
+        s.put(&manifest_key("m", 44), &d.encode()).unwrap();
+        assert!(load_manifest_payload(&s, &d).is_err());
+        assert_eq!(load_latest(&s, "m").unwrap().unwrap().0.step, 40);
+    }
+
+    #[test]
+    fn chain_walk_rejects_forward_links_missing_bases_and_orphan_deltas() {
+        let s = MemStorage::new();
+        let (_, mut d) = delta_sample(&s);
+        d.base_step = Some(50); // forward link (cycle bait)
+        assert!(load_manifest_payload(&s, &d).is_err());
+        d.base_step = Some(30); // no manifest ever committed there
+        assert!(load_manifest_payload(&s, &d).is_err());
+        // extents without a base_step link are malformed, not "full"
+        let mut orphan = sample();
+        orphan.shards[0].extents = vec![(0, 1)];
+        assert!(load_manifest_payload(&s, &orphan).is_err());
+        // overlapping extents are refused before any byte is trusted
+        let (_, mut bad) = delta_sample(&s);
+        bad.shards[2].extents = vec![(0, 3), (2, 2)];
+        assert!(load_manifest_payload(&s, &bad).is_err());
     }
 
     #[test]

@@ -15,6 +15,14 @@
 //! * keys under a *retained* step that its committed manifest does not
 //!   reference — part debris of an earlier crashed attempt whose chunking
 //!   differed from the attempt that finally committed.
+//!
+//! **Chain liveness rule** (sparse delta snapshots): a delta manifest is
+//! only restorable while every link down to its full base survives, so a
+//! retained delta transitively pins its whole `base_step` chain regardless
+//! of the chain members' own age. Conversely a delta whose chain is already
+//! broken (a base manifest missing) can never load again — keeping it would
+//! only shadow older restorable rounds at recovery, so the sweep deletes
+//! such orphaned deltas along with their blobs.
 
 use std::collections::BTreeSet;
 
@@ -79,7 +87,51 @@ pub fn run_gc(
     let Some(&newest) = steps.last() else {
         return Ok(GcReport::default());
     };
-    let keep = policy.retained(&steps);
+    let mut keep = policy.retained(&steps);
+    let manifested: BTreeSet<u64> = steps.iter().copied().collect();
+    // chain-aware expansion + orphan detection (module docs: the chain
+    // liveness rule). Each kept manifest's `base_step` chain is walked to
+    // its full base: live links join the keep-set, while a dangling link
+    // (base manifest gone) marks every dependent above it as an orphan —
+    // unrestorable forever, so it is retired below like any dropped step.
+    let mut orphaned: BTreeSet<u64> = BTreeSet::new();
+    for &step in steps.iter().rev() {
+        if !keep.contains(&step) || orphaned.contains(&step) {
+            continue;
+        }
+        let mut cur = step;
+        let mut chain = vec![cur];
+        let broken = loop {
+            let link = storage
+                .get(&manifest::manifest_key(model, cur))
+                .ok()
+                .and_then(|b| PersistManifest::decode(&b).ok())
+                .map(|m| m.base_step);
+            match link {
+                // undecodable manifest: recovery skips it too, but deleting
+                // on what may be a transient read error would be
+                // destructive — leave it and just don't pin a chain for it
+                None => break false,
+                Some(None) => break false, // reached a full base
+                Some(Some(base)) => {
+                    // `base >= cur` cannot come from the engine (links
+                    // strictly decrease); treat it as a broken chain rather
+                    // than walking a corrupt cycle
+                    if !manifested.contains(&base) || base >= cur {
+                        break true;
+                    }
+                    cur = base;
+                    chain.push(base);
+                }
+            }
+        };
+        if broken {
+            orphaned.extend(chain);
+        } else {
+            keep.extend(chain);
+        }
+    }
+    keep.retain(|s| !orphaned.contains(s));
     let mut report = GcReport::default();
     // shard-namespace keys the debris-swept manifest references, and the
     // steps whose manifest decoded cleanly (only those are safe to sweep
@@ -124,7 +176,6 @@ pub fn run_gc(
     }
     // orphans = shard steps that never committed a manifest; steps whose
     // manifest was just retired above were handled through its shard list
-    let manifested: BTreeSet<u64> = steps.iter().copied().collect();
     report.blobs_deleted +=
         manifest::sweep_orphans_in(storage, model, &manifested, newest, &keys);
     // multipart debris under the just-committed step: a crashed earlier
@@ -217,8 +268,10 @@ mod tests {
                     offset: 0,
                     len: 8,
                     crc32: crc32fast::hash(&body),
+                    extents: vec![],
                     parts: entries,
                 }],
+                base_step: None,
             }
         };
         let old = mk_manifest(10, 2);
@@ -250,5 +303,109 @@ mod tests {
         let (man, stages) = crate::persist::load_latest(&s, "m").unwrap().unwrap();
         assert_eq!(man.step, 20);
         assert_eq!(stages[0], vec![20u8; 8]);
+    }
+
+    /// One single-blob full manifest at `step` holding `body`.
+    fn put_full(s: &MemStorage, step: u64, body: &[u8]) -> PersistManifest {
+        let key = shard_key("m", step, 0, 0);
+        s.put(&key, body).unwrap();
+        let m = PersistManifest {
+            model: "m".into(),
+            step,
+            version: step,
+            snapshot_step: step,
+            stage_bytes: vec![body.len() as u64],
+            shards: vec![ShardEntry {
+                key,
+                stage: 0,
+                node: 0,
+                offset: 0,
+                len: body.len() as u64,
+                crc32: crc32fast::hash(body),
+                extents: vec![],
+                parts: vec![],
+            }],
+            base_step: None,
+        };
+        s.put(&manifest_key("m", step), &m.encode()).unwrap();
+        m
+    }
+
+    /// One delta manifest at `step` linking to `base`, whose reconstructed
+    /// shard is `body` with only the `(start, len)` extent shipped.
+    fn put_delta(
+        s: &MemStorage,
+        step: u64,
+        base: u64,
+        body: &[u8],
+        ext: (u64, u64),
+    ) -> PersistManifest {
+        let key = shard_key("m", step, 0, 0);
+        s.put(&key, &body[ext.0 as usize..(ext.0 + ext.1) as usize]).unwrap();
+        let m = PersistManifest {
+            model: "m".into(),
+            step,
+            version: step,
+            snapshot_step: step,
+            stage_bytes: vec![body.len() as u64],
+            shards: vec![ShardEntry {
+                key,
+                stage: 0,
+                node: 0,
+                offset: 0,
+                len: body.len() as u64,
+                crc32: crc32fast::hash(body),
+                extents: vec![ext],
+                parts: vec![],
+            }],
+            base_step: Some(base),
+        };
+        s.put(&manifest_key("m", step), &m.encode()).unwrap();
+        m
+    }
+
+    /// A retained delta pins its whole chain: the base (and mid-chain
+    /// links) survive keep-last-1 even though they are older, and the
+    /// newest round still reconstructs after the sweep.
+    #[test]
+    fn gc_keeps_the_chain_of_a_retained_delta() {
+        let s = MemStorage::new();
+        put_full(&s, 10, &[1u8; 8]);
+        put_delta(&s, 20, 10, &[1, 1, 9, 9, 1, 1, 1, 1], (2, 2));
+        put_delta(&s, 30, 20, &[1, 1, 9, 9, 1, 1, 7, 7], (6, 2));
+        // an unrelated old full round IS collected — chain pinning must not
+        // degenerate into keep-everything
+        put_full(&s, 5, &[5u8; 8]);
+        let policy = RetentionPolicy { keep_last: 1, keep_every: 0 };
+        let report = run_gc(&s, "m", &policy, None).unwrap();
+        assert_eq!(report.manifests_deleted, 1, "only step 5 retired");
+        assert!(s.exists(&manifest_key("m", 10)), "base pinned by the chain");
+        assert!(s.exists(&manifest_key("m", 20)), "mid-chain link pinned");
+        let (man, stages) = crate::persist::load_latest(&s, "m").unwrap().unwrap();
+        assert_eq!(man.step, 30);
+        assert_eq!(stages[0], vec![1, 1, 9, 9, 1, 1, 7, 7]);
+    }
+
+    /// A delta whose base manifest is gone can never load again: the sweep
+    /// retires the whole broken chain (manifests and blobs) and recovery
+    /// falls back to the newest restorable round.
+    #[test]
+    fn gc_sweeps_orphaned_delta_chains() {
+        let s = MemStorage::new();
+        put_full(&s, 10, &[1u8; 8]);
+        // chain 40 -> 30 -> 15, but 15 never existed (or was lost): both
+        // deltas are unrestorable
+        let d30 = put_delta(&s, 30, 15, &[1, 1, 9, 9, 1, 1, 1, 1], (2, 2));
+        let d40 = put_delta(&s, 40, 30, &[1, 1, 9, 9, 1, 1, 7, 7], (6, 2));
+        let policy = RetentionPolicy { keep_last: 3, keep_every: 0 };
+        let report = run_gc(&s, "m", &policy, None).unwrap();
+        assert_eq!(report.manifests_deleted, 2, "both orphaned deltas retired");
+        assert!(!s.exists(&manifest_key("m", 30)));
+        assert!(!s.exists(&manifest_key("m", 40)));
+        assert!(!s.exists(&d30.shards[0].key), "orphan blobs swept");
+        assert!(!s.exists(&d40.shards[0].key));
+        let (man, stages) = crate::persist::load_latest(&s, "m").unwrap().unwrap();
+        assert_eq!(man.step, 10, "recovery lands on the surviving base");
+        assert_eq!(stages[0], vec![1u8; 8]);
     }
 }

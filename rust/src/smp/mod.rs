@@ -45,6 +45,16 @@ pub enum SmpMsg {
     Signal(Signal),
     /// open the dirty buffer for a new snapshot version of one stage shard
     BeginSnapshot { version: u64, stage: usize, total_len: usize },
+    /// open a *sparse* dirty buffer: seed it from a copy of the latest clean
+    /// snapshot (which must be `total_len` bytes) and expect only
+    /// `delta_len` bytes of buckets — the changed extents, patched in place
+    /// at their sparse offsets. Promotion on `EndSnapshot` requires
+    /// `delta_len` coverage, so a partially-patched buffer can never be
+    /// served. Without a matching-size clean base the message is ignored
+    /// and the round's `EndSnapshot` lands as a stale end (no promotion) —
+    /// the coordinator's planner resets to a full base round on any
+    /// membership change, which is the only way a base can be missing.
+    BeginDeltaSnapshot { version: u64, stage: usize, total_len: usize, delta_len: usize },
     /// one tiny bucket of snapshot bytes. `data` is a view into the writer's
     /// shared payload: the channel transfers an `Arc`-backed `PayloadView`
     /// (zero-copy, like mapping the same shm page), the SMP then copies the
@@ -58,6 +68,13 @@ pub enum SmpMsg {
     AbortSnapshot { version: u64, stage: usize },
     /// store a RAIM5 parity block this node hosts
     StoreParity { version: u64, stage: usize, data: Vec<u8> },
+    /// sparse-round parity update: patch `(offset, bytes)` spans into the
+    /// hosted parity block in place and stamp it with the new version.
+    /// Parity is XOR-linear, so outside the changed contributors' stripes
+    /// the old block already equals the new one. Without a hosted block of
+    /// sufficient size the patch is dropped — the stale version stamp then
+    /// makes any decode attempt fail loudly instead of mixing rounds.
+    StoreParityDelta { version: u64, stage: usize, patches: Vec<(usize, Vec<u8>)> },
     /// fetch the latest clean snapshot of a stage shard
     GetClean { stage: usize, reply: Sender<Option<(u64, Vec<u8>)>> },
     /// fetch a hosted parity block
@@ -115,6 +132,9 @@ struct DirtyBuf {
     version: u64,
     data: Vec<u8>,
     filled: usize,
+    /// bytes that must arrive before promotion: `data.len()` for a full
+    /// snapshot, the sparse delta length for a patch round
+    expect: usize,
 }
 
 struct SmpState {
@@ -175,7 +195,28 @@ impl SmpState {
                         Some(buf) if buf.len() == total_len => buf,
                         _ => vec![0; total_len],
                     };
-                    self.dirty.insert(stage, DirtyBuf { version, data, filled: 0 });
+                    self.dirty
+                        .insert(stage, DirtyBuf { version, data, filled: 0, expect: total_len });
+                }
+            }
+            SmpMsg::BeginDeltaSnapshot { version, stage, total_len, delta_len } => {
+                if self.accepting {
+                    let seed = self
+                        .clean
+                        .get(&stage)
+                        .and_then(|q| q.back())
+                        .filter(|(_, d)| d.len() == total_len);
+                    if let Some((_, base)) = seed {
+                        let mut data = match self.free.get_mut(&stage).and_then(Vec::pop) {
+                            Some(buf) if buf.len() == total_len => buf,
+                            _ => vec![0; total_len],
+                        };
+                        data.copy_from_slice(base);
+                        self.dirty
+                            .insert(stage, DirtyBuf { version, data, filled: 0, expect: delta_len });
+                    }
+                    // no clean base of the right size: ignore — the round's
+                    // EndSnapshot becomes a stale end and nothing promotes
                 }
             }
             SmpMsg::Bucket { version, stage, offset, data } => {
@@ -191,7 +232,7 @@ impl SmpState {
             SmpMsg::EndSnapshot { version, stage } => {
                 let complete = matches!(
                     self.dirty.get(&stage),
-                    Some(b) if b.version == version && b.filled >= b.data.len()
+                    Some(b) if b.version == version && b.filled >= b.expect
                 );
                 if complete {
                     let buf = self.dirty.remove(&stage).unwrap();
@@ -228,6 +269,16 @@ impl SmpState {
             }
             SmpMsg::StoreParity { version, stage, data } => {
                 self.parity.insert(stage, (version, data));
+            }
+            SmpMsg::StoreParityDelta { version, stage, patches } => {
+                if let Some((v, data)) = self.parity.get_mut(&stage) {
+                    if patches.iter().all(|(off, b)| off + b.len() <= data.len()) {
+                        for (off, b) in &patches {
+                            data[*off..*off + b.len()].copy_from_slice(b);
+                        }
+                        *v = version;
+                    }
+                }
             }
             SmpMsg::GetClean { stage, reply } => {
                 let out = self
@@ -527,6 +578,125 @@ mod tests {
         let stats = smp.stats().unwrap();
         assert_eq!(stats.stale_end_snapshots, 1);
         assert_eq!(stats.clean_versions[&0], 1);
+    }
+
+    #[test]
+    fn delta_snapshot_patches_clean_in_place() {
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        let base: Vec<u8> = (0..200u32).map(|i| i as u8).collect();
+        snapshot_roundtrip(&smp, 0, 1, &base, 64);
+        // sparse round: only bytes 50..80 changed
+        smp.send(SmpMsg::BeginDeltaSnapshot {
+            version: 2,
+            stage: 0,
+            total_len: 200,
+            delta_len: 30,
+        })
+        .unwrap();
+        smp.send(SmpMsg::Bucket { version: 2, stage: 0, offset: 50, data: vec![0xEE; 30].into() })
+            .unwrap();
+        smp.send(SmpMsg::EndSnapshot { version: 2, stage: 0 }).unwrap();
+        let (v, data) = smp.get_clean(0).unwrap().unwrap();
+        assert_eq!(v, 2);
+        let mut want = base.clone();
+        want[50..80].fill(0xEE);
+        assert_eq!(data, want, "unchanged bytes come from the seeded base");
+        // a partially-patched delta never promotes
+        smp.send(SmpMsg::BeginDeltaSnapshot {
+            version: 3,
+            stage: 0,
+            total_len: 200,
+            delta_len: 30,
+        })
+        .unwrap();
+        smp.send(SmpMsg::Bucket { version: 3, stage: 0, offset: 50, data: vec![1; 10].into() })
+            .unwrap();
+        smp.send(SmpMsg::EndSnapshot { version: 3, stage: 0 }).unwrap();
+        let stats = smp.stats().unwrap();
+        assert_eq!(stats.clean_versions[&0], 2);
+        assert_eq!(stats.stale_end_snapshots, 1);
+    }
+
+    #[test]
+    fn delta_snapshot_without_base_never_promotes() {
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        // no clean snapshot exists: the delta begin is ignored
+        smp.send(SmpMsg::BeginDeltaSnapshot {
+            version: 1,
+            stage: 0,
+            total_len: 100,
+            delta_len: 0,
+        })
+        .unwrap();
+        smp.send(SmpMsg::EndSnapshot { version: 1, stage: 0 }).unwrap();
+        assert!(smp.get_clean(0).unwrap().is_none());
+        assert_eq!(smp.stats().unwrap().stale_end_snapshots, 1);
+        // wrong-size base is equally rejected
+        snapshot_roundtrip(&smp, 0, 2, &[3u8; 64], 64);
+        smp.send(SmpMsg::BeginDeltaSnapshot {
+            version: 3,
+            stage: 0,
+            total_len: 100,
+            delta_len: 0,
+        })
+        .unwrap();
+        smp.send(SmpMsg::EndSnapshot { version: 3, stage: 0 }).unwrap();
+        assert_eq!(smp.stats().unwrap().clean_versions[&0], 2);
+    }
+
+    #[test]
+    fn empty_delta_promotes_base_at_new_version() {
+        // nothing changed this round: the seeded copy itself promotes, so
+        // versions advance cluster-wide even on a zero-churn round
+        let smp = Smp::spawn(0, 1);
+        smp.send(SmpMsg::Signal(Signal::Snap)).unwrap();
+        snapshot_roundtrip(&smp, 0, 1, &[7u8; 32], 32);
+        smp.send(SmpMsg::BeginDeltaSnapshot {
+            version: 2,
+            stage: 0,
+            total_len: 32,
+            delta_len: 0,
+        })
+        .unwrap();
+        smp.send(SmpMsg::EndSnapshot { version: 2, stage: 0 }).unwrap();
+        let (v, data) = smp.get_clean(0).unwrap().unwrap();
+        assert_eq!((v, data), (2, vec![7u8; 32]));
+    }
+
+    #[test]
+    fn parity_delta_patches_in_place_or_fails_loudly() {
+        let smp = Smp::spawn(3, 1);
+        // no hosted parity yet: the patch is dropped entirely
+        smp.send(SmpMsg::StoreParityDelta { version: 2, stage: 1, patches: vec![(0, vec![1; 4])] })
+            .unwrap();
+        assert!(smp.get_parity(1).unwrap().is_none());
+        smp.send(SmpMsg::StoreParity { version: 4, stage: 1, data: vec![0xAB; 16] })
+            .unwrap();
+        // in-bounds patches apply and restamp the version
+        smp.send(SmpMsg::StoreParityDelta {
+            version: 5,
+            stage: 1,
+            patches: vec![(2, vec![0x11; 3]), (10, vec![0x22; 2])],
+        })
+        .unwrap();
+        let (v, p) = smp.get_parity(1).unwrap().unwrap();
+        assert_eq!(v, 5);
+        let mut want = vec![0xAB; 16];
+        want[2..5].fill(0x11);
+        want[10..12].fill(0x22);
+        assert_eq!(p, want);
+        // an out-of-bounds patch is rejected wholesale: bytes AND version
+        // stay put, so a later decode sees the version skew and errors
+        smp.send(SmpMsg::StoreParityDelta { version: 6, stage: 1, patches: vec![(15, vec![0; 2])] })
+            .unwrap();
+        let (v, p) = smp.get_parity(1).unwrap().unwrap();
+        assert_eq!((v, p), (5, want));
+        // an empty patch list still restamps (zero-churn round)
+        smp.send(SmpMsg::StoreParityDelta { version: 7, stage: 1, patches: vec![] })
+            .unwrap();
+        assert_eq!(smp.get_parity(1).unwrap().unwrap().0, 7);
     }
 
     #[test]

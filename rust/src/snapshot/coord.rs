@@ -25,10 +25,12 @@
 //! whole drain/abort/completion protocol testable without threads.
 
 use std::collections::BTreeMap;
+use std::ops::Range;
 
 use anyhow::Result;
 
 use crate::ec::Raim5Group;
+use crate::snapshot::delta::StageShip;
 use crate::snapshot::payload::{PayloadView, SharedPayload};
 use crate::snapshot::plan::{NodeShard, SnapshotPlan};
 
@@ -36,6 +38,17 @@ use crate::snapshot::plan::{NodeShard, SnapshotPlan};
 /// Implementations must preserve per-node call order (channels are FIFO).
 pub trait CoordSink {
     fn begin(&mut self, node: usize, version: u64, stage: usize, total_len: usize) -> Result<()>;
+    /// Open a sparse dirty buffer: the SMP seeds it from its latest clean
+    /// copy and promotes once `delta_len` bytes of changed-extent buckets
+    /// have landed (the sparse-snapshot patch-in-place path).
+    fn begin_delta(
+        &mut self,
+        node: usize,
+        version: u64,
+        stage: usize,
+        total_len: usize,
+        delta_len: usize,
+    ) -> Result<()>;
     /// One tiny bucket. `offset` is shard-relative (the SMP's dirty-buffer
     /// offset); `view` is a zero-copy slice of the stage's full payload.
     fn bucket(
@@ -49,27 +62,48 @@ pub trait CoordSink {
     fn end(&mut self, node: usize, version: u64, stage: usize) -> Result<()>;
     fn store_parity(&mut self, node: usize, version: u64, stage: usize, data: Vec<u8>)
         -> Result<()>;
+    /// Sparse-round parity update: patch `(parity-local offset, bytes)`
+    /// spans into the hosted parity block and restamp its version.
+    fn store_parity_delta(
+        &mut self,
+        node: usize,
+        version: u64,
+        stage: usize,
+        patches: Vec<(usize, Vec<u8>)>,
+    ) -> Result<()>;
     fn abort(&mut self, node: usize, version: u64, stage: usize) -> Result<()>;
     /// Liveness probe for the L3 pre-flight: promotion must be all-or-none,
     /// so the completion burst only starts when every target is reachable.
     fn alive(&mut self, node: usize) -> bool;
 }
 
-/// One shard's drain progress.
+/// One shard's drain progress: the absolute stage-payload byte segments
+/// this worker must ship. A full round is one segment spanning the whole
+/// shard; a sparse round is the changed extents intersected with the shard.
 #[derive(Debug, Clone)]
 struct Worker {
     shard: NodeShard,
-    /// bytes already sent (shard-relative)
+    /// absolute, ascending, non-empty, non-overlapping segments
+    segs: Vec<Range<u64>>,
+    /// current segment index
+    seg: usize,
+    /// bytes of the current segment already sent
     sent: u64,
 }
 
 impl Worker {
     fn remaining_buckets(&self, bucket: u64) -> u64 {
-        (self.shard.len() - self.sent).div_ceil(bucket)
+        let mut n = 0;
+        for (i, s) in self.segs.iter().enumerate().skip(self.seg) {
+            let len = s.end - s.start;
+            let left = if i == self.seg { len - self.sent } else { len };
+            n += left.div_ceil(bucket);
+        }
+        n
     }
 
     fn done(&self) -> bool {
-        self.sent >= self.shard.len()
+        self.seg >= self.segs.len()
     }
 }
 
@@ -79,6 +113,9 @@ struct Inflight {
     /// per-stage payload, shared with every bucket message (zero-copy)
     payloads: Vec<SharedPayload>,
     workers: Vec<Worker>,
+    /// per-stage ship decision: `None` for a classic full round. Retained so
+    /// the completion burst knows which parity stripes to patch.
+    ships: Option<Vec<StageShip>>,
 }
 
 impl Inflight {
@@ -98,6 +135,11 @@ pub struct CoordStats {
     pub aborted_on_failure: u64,
     pub ticks: u64,
     pub buckets_sent: u64,
+    /// payload bytes enqueued to SMPs as buckets (the sparse-snapshot win
+    /// is this scaling with churn, not model size)
+    pub payload_bytes_sent: u64,
+    /// parity bytes shipped at completion time (full blocks or patches)
+    pub parity_bytes_sent: u64,
     pub last_completed_version: Option<u64>,
 }
 
@@ -195,6 +237,52 @@ impl SnapshotCoordinator {
         payloads: Vec<SharedPayload>,
         sink: &mut impl CoordSink,
     ) -> Result<()> {
+        self.submit_inner(version, payloads, None, sink)
+    }
+
+    /// Sparse L1 enqueue: like [`SnapshotCoordinator::submit`], but stages
+    /// planned `Sparse` only drain their changed extents — each SMP seeds
+    /// the dirty buffer from its latest clean copy and the buckets patch it
+    /// in place. Callers (the delta planner) guarantee every SMP holds a
+    /// clean copy of the previous *completed* round, which is exactly the
+    /// state the sparse ranges were diffed against.
+    pub fn submit_sparse(
+        &mut self,
+        version: u64,
+        payloads: Vec<SharedPayload>,
+        ships: Vec<StageShip>,
+        sink: &mut impl CoordSink,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            ships.len() == self.plan.stage_bytes.len(),
+            "submit_sparse: {} ship decisions for {} stages",
+            ships.len(),
+            self.plan.stage_bytes.len()
+        );
+        for (stage, ship) in ships.iter().enumerate() {
+            if let StageShip::Sparse(ranges) = ship {
+                let mut prev_end = 0u64;
+                for r in ranges {
+                    anyhow::ensure!(
+                        r.start >= prev_end && r.start < r.end
+                            && r.end <= self.plan.stage_bytes[stage],
+                        "stage {stage}: sparse ranges must be ascending, non-empty, \
+                         non-overlapping and within the payload"
+                    );
+                    prev_end = r.end;
+                }
+            }
+        }
+        self.submit_inner(version, payloads, Some(ships), sink)
+    }
+
+    fn submit_inner(
+        &mut self,
+        version: u64,
+        payloads: Vec<SharedPayload>,
+        ships: Option<Vec<StageShip>>,
+        sink: &mut impl CoordSink,
+    ) -> Result<()> {
         anyhow::ensure!(
             payloads.len() == self.plan.stage_bytes.len(),
             "submit: {} payloads for {} stages",
@@ -217,20 +305,54 @@ impl SnapshotCoordinator {
             .plan
             .shards
             .iter()
-            .map(|s| Worker { shard: s.clone(), sent: 0 })
+            .map(|s| {
+                let segs: Vec<Range<u64>> = match ships.as_ref().map(|v| &v[s.stage]) {
+                    None | Some(StageShip::Full) => {
+                        if s.range.start < s.range.end {
+                            vec![s.range.clone()]
+                        } else {
+                            vec![]
+                        }
+                    }
+                    Some(StageShip::Sparse(ranges)) => ranges
+                        .iter()
+                        .filter_map(|r| {
+                            let lo = r.start.max(s.range.start);
+                            let hi = r.end.min(s.range.end);
+                            (lo < hi).then(|| lo..hi)
+                        })
+                        .collect(),
+                };
+                Worker { shard: s.clone(), segs, seg: 0, sent: 0 }
+            })
             .collect();
         // open every dirty buffer up front so in-flight state is visible on
         // the SMPs from the moment of the enqueue
         for w in &workers {
-            if let Err(e) = sink.begin(w.shard.node, version, w.shard.stage, w.shard.len() as usize)
-            {
+            let sparse_stage = matches!(
+                ships.as_ref().map(|v| &v[w.shard.stage]),
+                Some(StageShip::Sparse(_))
+            );
+            let r = if sparse_stage {
+                let delta_len: u64 = w.segs.iter().map(|s| s.end - s.start).sum();
+                sink.begin_delta(
+                    w.shard.node,
+                    version,
+                    w.shard.stage,
+                    w.shard.len() as usize,
+                    delta_len as usize,
+                )
+            } else {
+                sink.begin(w.shard.node, version, w.shard.stage, w.shard.len() as usize)
+            };
+            if let Err(e) = r {
                 // a dead node at enqueue time: nothing in flight, caller
                 // handles it exactly like the blocking path would
                 self.abort_partial(&workers, version, sink);
                 return Err(e);
             }
         }
-        self.inflight = Some(Inflight { version, payloads, workers });
+        self.inflight = Some(Inflight { version, payloads, workers, ships });
         self.stats.submitted += 1;
         Ok(())
     }
@@ -265,27 +387,35 @@ impl SnapshotCoordinator {
                 .entry(w.shard.node)
                 .or_insert(self.drain_buckets_per_tick);
             while *left > 0 && !w.done() {
-                let rel_start = w.sent;
-                let rel_end = (rel_start + self.bucket_bytes).min(w.shard.len());
-                let abs = (w.shard.range.start + rel_start) as usize
-                    ..(w.shard.range.start + rel_end) as usize;
+                // buckets never span segments: a sparse extent's bytes land
+                // at their own shard-relative offsets, everything between
+                // stays untouched on the SMP
+                let seg = w.segs[w.seg].clone();
+                let abs_start = seg.start + w.sent;
+                let abs_end = (abs_start + self.bucket_bytes).min(seg.end);
+                let offset = (abs_start - w.shard.range.start) as usize;
                 if sink
                     .bucket(
                         w.shard.node,
                         f.version,
                         w.shard.stage,
-                        rel_start as usize,
-                        f.payloads[w.shard.stage].view(abs),
+                        offset,
+                        f.payloads[w.shard.stage].view(abs_start as usize..abs_end as usize),
                     )
                     .is_err()
                 {
                     failed = true;
                     break 'drain;
                 }
-                w.sent = rel_end;
+                w.sent += abs_end - abs_start;
+                if w.sent >= seg.end - seg.start {
+                    w.seg += 1;
+                    w.sent = 0;
+                }
                 *left -= 1;
                 report.buckets_sent += 1;
                 self.stats.buckets_sent += 1;
+                self.stats.payload_bytes_sent += abs_end - abs_start;
             }
         }
 
@@ -324,8 +454,14 @@ impl SnapshotCoordinator {
     }
 
     /// L3 completion burst: promote every shard (EndSnapshot), then encode
-    /// and place the RAIM5 parities from the retained payload views.
-    fn flush_completed(&self, f: &Inflight, sink: &mut impl CoordSink) -> Result<()> {
+    /// and place the RAIM5 parities from the retained payload views. On a
+    /// sparse round the parity blocks are still *encoded* in full (a cheap
+    /// in-memory XOR over payload views the coordinator already holds) but
+    /// only the stripes overlapping a changed extent are *shipped*, as
+    /// patches onto the parity block each host already stores: parity is
+    /// XOR-linear, so outside the changed contributors' stripes the hosted
+    /// block is already byte-identical to the new one.
+    fn flush_completed(&mut self, f: &Inflight, sink: &mut impl CoordSink) -> Result<()> {
         for w in &f.workers {
             sink.end(w.shard.node, f.version, w.shard.stage)?;
         }
@@ -341,9 +477,25 @@ impl SnapshotCoordinator {
                 .iter()
                 .map(|s| &payload.as_slice()[s.range.start as usize..s.range.end as usize])
                 .collect();
+            let changed = match f.ships.as_ref().map(|v| &v[*stage]) {
+                Some(StageShip::Sparse(ranges)) => Some(ranges),
+                _ => None,
+            };
             for (host_idx, shard) in shards.iter().enumerate() {
                 let parity = group.encode_parity(host_idx, &views);
-                sink.store_parity(shard.node, f.version, *stage, parity)?;
+                match changed {
+                    None => {
+                        self.stats.parity_bytes_sent += parity.len() as u64;
+                        sink.store_parity(shard.node, f.version, *stage, parity)?;
+                    }
+                    Some(changed) => {
+                        let patches =
+                            parity_patches(group, host_idx, &shards, changed, &parity);
+                        self.stats.parity_bytes_sent +=
+                            patches.iter().map(|(_, b)| b.len() as u64).sum::<u64>();
+                        sink.store_parity_delta(shard.node, f.version, *stage, patches)?;
+                    }
+                }
             }
         }
         Ok(())
@@ -371,6 +523,60 @@ impl SnapshotCoordinator {
     }
 }
 
+/// The parity-local spans of `host`'s freshly encoded parity block that can
+/// differ from the previous round, given the stage's changed payload ranges:
+/// for each contributor `j != host`, its changed shard-local bytes that fall
+/// inside the sub-block striped onto `host` map 1:1 into parity coordinates.
+/// The union of those spans (contributors overlap in parity space — that is
+/// the point of XOR) is returned as `(offset, bytes)` patches carved from
+/// the new parity block.
+pub(crate) fn parity_patches(
+    group: &Raim5Group,
+    host_idx: usize,
+    shards: &[&NodeShard],
+    changed: &[Range<u64>],
+    parity: &[u8],
+) -> Vec<(usize, Vec<u8>)> {
+    let mut spans: Vec<Range<usize>> = Vec::new();
+    for (j, peer) in shards.iter().enumerate() {
+        if j == host_idx {
+            continue;
+        }
+        let b = group.block_index_for(host_idx, j);
+        let br = group.block_range(j, b); // peer-shard-local stripe
+        if br.is_empty() {
+            continue;
+        }
+        let base = b * group.block_len; // parity-local = peer-local - base
+        for g in changed {
+            let lo = g.start.max(peer.range.start);
+            let hi = g.end.min(peer.range.end);
+            if lo >= hi {
+                continue;
+            }
+            let l = (lo - peer.range.start) as usize;
+            let h = (hi - peer.range.start) as usize;
+            let s = l.max(br.start);
+            let e = h.min(br.end);
+            if s < e {
+                spans.push(s - base..e - base);
+            }
+        }
+    }
+    spans.sort_by_key(|r| r.start);
+    let mut merged: Vec<Range<usize>> = Vec::new();
+    for r in spans {
+        match merged.last_mut() {
+            Some(m) if r.start <= m.end => m.end = m.end.max(r.end),
+            _ => merged.push(r),
+        }
+    }
+    merged
+        .into_iter()
+        .map(|r| (r.start, parity[r].to_vec()))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,9 +585,11 @@ mod tests {
     #[derive(Debug, Clone, PartialEq)]
     enum Ev {
         Begin(usize, u64, usize, usize),
+        BeginDelta(usize, u64, usize, usize, usize),
         Bucket { node: usize, version: u64, stage: usize, offset: usize, bytes: Vec<u8> },
         End(usize, u64, usize),
-        Parity(usize, u64, usize, usize),
+        Parity(usize, u64, usize, Vec<u8>),
+        ParityDelta { node: usize, version: u64, stage: usize, patches: Vec<(usize, Vec<u8>)> },
         Abort(usize, u64, usize),
     }
 
@@ -405,6 +613,19 @@ mod tests {
         fn begin(&mut self, node: usize, v: u64, stage: usize, len: usize) -> Result<()> {
             self.check(node)?;
             self.events.push(Ev::Begin(node, v, stage, len));
+            Ok(())
+        }
+
+        fn begin_delta(
+            &mut self,
+            node: usize,
+            v: u64,
+            stage: usize,
+            total_len: usize,
+            delta_len: usize,
+        ) -> Result<()> {
+            self.check(node)?;
+            self.events.push(Ev::BeginDelta(node, v, stage, total_len, delta_len));
             Ok(())
         }
 
@@ -435,7 +656,19 @@ mod tests {
 
         fn store_parity(&mut self, node: usize, v: u64, stage: usize, data: Vec<u8>) -> Result<()> {
             self.check(node)?;
-            self.events.push(Ev::Parity(node, v, stage, data.len()));
+            self.events.push(Ev::Parity(node, v, stage, data));
+            Ok(())
+        }
+
+        fn store_parity_delta(
+            &mut self,
+            node: usize,
+            version: u64,
+            stage: usize,
+            patches: Vec<(usize, Vec<u8>)>,
+        ) -> Result<()> {
+            self.check(node)?;
+            self.events.push(Ev::ParityDelta { node, version, stage, patches });
             Ok(())
         }
 
@@ -647,6 +880,185 @@ mod tests {
         let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 4);
         let mut sink = Recorder { dead_node: Some(0), ..Default::default() };
         assert!(c.submit(1, payloads(&bytes), &mut sink).is_err());
+        assert!(c.is_idle());
+    }
+
+    #[test]
+    fn sparse_round_ships_only_changed_bytes_and_patches_parity() {
+        use crate::snapshot::delta::ExtentTable;
+        let bytes = [60_000u64];
+        let mut c = coord_for(24, 1, 6, 4, &bytes, 1000, 64);
+        let mut sink = Recorder::default();
+        let p1 = payloads(&bytes);
+        c.submit(1, p1.clone(), &mut sink).unwrap();
+        for _ in 0..c.ticks_bound() {
+            if c.tick(&mut sink).unwrap().completed {
+                break;
+            }
+        }
+        assert_eq!(c.stats().completed, 1);
+        assert_eq!(c.stats().payload_bytes_sent, 60_000, "full round ships everything");
+
+        // round 2 mutates two regions; the extent diff drives the sparse list
+        let mut v2 = p1[0].to_vec();
+        for b in &mut v2[1_000..1_200] {
+            *b ^= 0x5A;
+        }
+        for b in &mut v2[33_000..35_000] {
+            *b ^= 0xA5;
+        }
+        let changed = ExtentTable::build(&v2, 512)
+            .diff(&ExtentTable::build(p1[0].as_slice(), 512))
+            .unwrap();
+        assert!(!changed.is_empty());
+        let changed_total: u64 = changed.iter().map(|r| r.end - r.start).sum();
+        assert!(changed_total < 10_000, "test churn must stay a small fraction");
+        c.submit_sparse(
+            2,
+            vec![SharedPayload::new(v2.clone())],
+            vec![StageShip::Sparse(changed.clone())],
+            &mut sink,
+        )
+        .unwrap();
+        let delta_begins = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, Ev::BeginDelta(_, 2, _, total, _) if *total == 10_000))
+            .count();
+        assert_eq!(delta_begins, 6, "every shard opens a sparse dirty buffer");
+        for _ in 0..c.ticks_bound().max(1) {
+            if c.tick(&mut sink).unwrap().completed {
+                break;
+            }
+        }
+        assert_eq!(c.stats().completed, 2);
+
+        // bytes enqueued for round 2 are exactly the changed extents
+        let v2_bucket_bytes: usize = sink
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                Ev::Bucket { version: 2, bytes, .. } => Some(bytes.len()),
+                _ => None,
+            })
+            .sum();
+        assert_eq!(v2_bucket_bytes as u64, changed_total);
+
+        // patching round 1's payload with round 2's buckets reproduces the
+        // new payload exactly (what every SMP's seeded dirty buffer does)
+        let mut rebuilt = p1[0].to_vec();
+        let mut shard_base: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+        for s in &c.plan.shards {
+            shard_base.insert((s.node, s.stage), s.range.start as usize);
+        }
+        for e in &sink.events {
+            if let Ev::Bucket { node, version: 2, stage, offset, bytes } = e {
+                let base = shard_base[&(*node, *stage)];
+                rebuilt[base + offset..base + offset + bytes.len()].copy_from_slice(bytes);
+            }
+        }
+        assert_eq!(rebuilt, v2, "sparse buckets must patch the base exactly");
+
+        // parity: applying round 2's patches onto round 1's full parity
+        // blocks must equal a from-scratch encode over the new payload
+        let group = &c.groups[&0];
+        let shards: Vec<&NodeShard> =
+            c.plan.shards.iter().filter(|s| s.stage == 0).collect();
+        let views: Vec<&[u8]> = shards
+            .iter()
+            .map(|s| &v2[s.range.start as usize..s.range.end as usize])
+            .collect();
+        for (host_idx, shard) in shards.iter().enumerate() {
+            let mut patched: Vec<u8> = sink
+                .events
+                .iter()
+                .find_map(|e| match e {
+                    Ev::Parity(n, 1, 0, data) if *n == shard.node => Some(data.clone()),
+                    _ => None,
+                })
+                .expect("round 1 stored a full parity block");
+            let patches = sink
+                .events
+                .iter()
+                .find_map(|e| match e {
+                    Ev::ParityDelta { node, version: 2, stage: 0, patches }
+                        if *node == shard.node =>
+                    {
+                        Some(patches.clone())
+                    }
+                    _ => None,
+                })
+                .expect("round 2 shipped a parity patch");
+            let mut patch_bytes = 0usize;
+            for (off, b) in &patches {
+                patched[*off..*off + b.len()].copy_from_slice(b);
+                patch_bytes += b.len();
+            }
+            let expect = group.encode_parity(host_idx, &views);
+            assert_eq!(patched, expect, "patched parity on host {}", shard.node);
+            assert!(patch_bytes < expect.len(), "patch must be a strict subset");
+        }
+    }
+
+    #[test]
+    fn zero_churn_sparse_round_completes_immediately() {
+        let bytes = [12_000u64];
+        let mut c = coord_for(24, 1, 6, 4, &bytes, 1000, 8);
+        let mut sink = Recorder::default();
+        let p = payloads(&bytes);
+        c.submit(1, p.clone(), &mut sink).unwrap();
+        for _ in 0..c.ticks_bound() {
+            if c.tick(&mut sink).unwrap().completed {
+                break;
+            }
+        }
+        let full_bytes = c.stats().payload_bytes_sent;
+        // nothing changed: the sparse round has zero buckets but still runs
+        // so every SMP promotes (reseeded) and parity version stamps advance
+        c.submit_sparse(2, p, vec![StageShip::Sparse(vec![])], &mut sink)
+            .unwrap();
+        let r = c.tick(&mut sink).unwrap();
+        assert!(r.completed, "zero-bucket round completes on the first tick");
+        assert_eq!(r.buckets_sent, 0);
+        assert_eq!(c.stats().payload_bytes_sent, full_bytes, "no payload bytes moved");
+        let empty_patches = sink
+            .events
+            .iter()
+            .filter(
+                |e| matches!(e, Ev::ParityDelta { version: 2, patches, .. } if patches.is_empty()),
+            )
+            .count();
+        assert_eq!(empty_patches, 6, "every host restamps its parity version");
+        assert!(sink.events.iter().any(|e| matches!(e, Ev::End(_, 2, _))));
+    }
+
+    #[test]
+    fn submit_sparse_rejects_malformed_ranges() {
+        let bytes = [10_000u64];
+        let mut c = coord_for(8, 1, 2, 4, &bytes, 1000, 4);
+        let mut sink = Recorder::default();
+        // out of payload bounds
+        assert!(c
+            .submit_sparse(
+                1,
+                payloads(&bytes),
+                vec![StageShip::Sparse(vec![9_000..11_000])],
+                &mut sink,
+            )
+            .is_err());
+        // overlapping / non-ascending
+        assert!(c
+            .submit_sparse(
+                1,
+                payloads(&bytes),
+                vec![StageShip::Sparse(vec![100..300, 200..400])],
+                &mut sink,
+            )
+            .is_err());
+        // wrong arity
+        assert!(c
+            .submit_sparse(1, payloads(&bytes), vec![], &mut sink)
+            .is_err());
         assert!(c.is_idle());
     }
 

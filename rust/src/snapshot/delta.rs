@@ -1,0 +1,387 @@
+//! Sparse delta snapshots: the dirty-extent / content-hash layer (PR 7).
+//!
+//! Every snapshot round used to capture and persist every shard even when
+//! most bytes were unchanged between intervals — exactly the waste *Sparse
+//! Checkpointing* (arxiv 2412.15411) identifies for MoE training, where most
+//! experts are cold between checkpoints. This module makes a round ship only
+//! changed bytes:
+//!
+//! * [`ExtentTable`] splits a payload into fixed-size extents
+//!   (`ft.delta_extent_bytes`) and hashes each with the vendored crc32fast.
+//!   Two tables diff in O(extents) into a coalesced sparse range list, and
+//!   the whole-payload CRC falls out for free via the GF(2) `combine` of the
+//!   per-extent CRCs (reused by the persist engine for delta-shard manifest
+//!   entries without a second hash pass).
+//! * [`DeltaPlanner`] owns the table lifecycle across rounds. The invariant
+//!   that makes in-place SMP patching safe: a diff is only ever computed
+//!   against the table of the last round that actually **completed** (was
+//!   promoted on every SMP). Tables for an in-flight round are held as
+//!   `pending` and only become the diff base on [`DeltaPlanner::commit`];
+//!   aborted or superseded rounds drop their pending tables, so a stale
+//!   clean copy can never be patched with a diff computed against bytes it
+//!   never received.
+//!
+//! A full base round is forced every `ft.delta_chain_max` sparse rounds
+//! (bounding both patch-chain drift and durable restore chains), after any
+//! membership change ([`DeltaPlanner::reset`]), and whenever table shapes
+//! mismatch. `snapshot_all`'s full-capture path remains the oracle: with
+//! `delta_extent_bytes = 0` no planner exists and every round is full.
+
+use std::ops::Range;
+
+use crate::snapshot::payload::SharedPayload;
+
+/// Content-hash table over one payload: per-extent `(crc32, len)` where
+/// `len` only differs from `extent_bytes` on the tail extent. Comparing
+/// `(crc32, len)` pairs is the "cheap 64-bit mix over crc32" the diff uses;
+/// a false negative needs a same-length crc32 collision on a changed extent
+/// (~2^-32 per changed extent).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExtentTable {
+    extent_bytes: usize,
+    total_len: usize,
+    extents: Vec<(u32, u32)>,
+}
+
+impl ExtentTable {
+    /// Hash `bytes` into extents of `extent_bytes` (floors at 1). One pass.
+    pub fn build(bytes: &[u8], extent_bytes: usize) -> Self {
+        let extent_bytes = extent_bytes.max(1);
+        let mut extents = Vec::with_capacity(bytes.len().div_ceil(extent_bytes).max(1));
+        for chunk in bytes.chunks(extent_bytes) {
+            extents.push((crc32fast::hash(chunk), chunk.len() as u32));
+        }
+        ExtentTable { extent_bytes, total_len: bytes.len(), extents }
+    }
+
+    pub fn extent_bytes(&self) -> usize {
+        self.extent_bytes
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.total_len
+    }
+
+    pub fn num_extents(&self) -> usize {
+        self.extents.len()
+    }
+
+    /// Whole-payload crc32 from the per-extent crcs via GF(2) `combine` —
+    /// identical to `crc32fast::hash` over the full payload, no extra pass.
+    pub fn whole_crc32(&self) -> u32 {
+        let mut whole = crc32fast::Hasher::new();
+        for &(crc, len) in &self.extents {
+            whole.combine(&crc32fast::Hasher::new_with_initial_len(crc, len as u64));
+        }
+        whole.finalize()
+    }
+
+    /// Coalesced, ascending, non-overlapping byte ranges whose extent hash
+    /// differs from `prev`. `None` when the tables are not comparable
+    /// (different grain or payload length) and the caller must ship full.
+    pub fn diff(&self, prev: &ExtentTable) -> Option<Vec<Range<u64>>> {
+        if self.extent_bytes != prev.extent_bytes || self.total_len != prev.total_len {
+            return None;
+        }
+        debug_assert_eq!(self.extents.len(), prev.extents.len());
+        let mut out: Vec<Range<u64>> = Vec::new();
+        for (i, (a, b)) in self.extents.iter().zip(prev.extents.iter()).enumerate() {
+            if a == b {
+                continue;
+            }
+            let start = (i * self.extent_bytes) as u64;
+            let end = start + a.1 as u64;
+            match out.last_mut() {
+                Some(last) if last.end == start => last.end = end,
+                _ => out.push(start..end),
+            }
+        }
+        Some(out)
+    }
+}
+
+/// Per-stage ship decision for one snapshot round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StageShip {
+    /// capture the whole stage payload (base round / incomparable tables)
+    Full,
+    /// ship only these absolute byte ranges of the stage payload
+    /// (coalesced, ascending, non-overlapping; may be empty when nothing
+    /// changed — the round still runs so versions advance everywhere)
+    Sparse(Vec<Range<u64>>),
+}
+
+impl StageShip {
+    /// Bytes this decision ships for a stage of `total` bytes.
+    pub fn shipped_bytes(&self, total: u64) -> u64 {
+        match self {
+            StageShip::Full => total,
+            StageShip::Sparse(ranges) => ranges.iter().map(|r| r.end - r.start).sum(),
+        }
+    }
+}
+
+/// Cumulative planner accounting (updated at plan time).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DeltaStats {
+    /// rounds planned as full base captures
+    pub full_rounds: u64,
+    /// rounds planned with at least one sparse stage
+    pub sparse_rounds: u64,
+    /// logical payload bytes across all planned rounds
+    pub payload_bytes: u64,
+    /// bytes actually selected for shipping (full rounds count in full)
+    pub shipped_bytes: u64,
+}
+
+struct Pending {
+    version: u64,
+    tables: Vec<ExtentTable>,
+    full: bool,
+}
+
+/// Round-to-round diff state for one cluster: the committed extent tables
+/// of the last completed round, the pending tables of the in-flight round,
+/// and the forced-base cadence.
+pub struct DeltaPlanner {
+    extent_bytes: usize,
+    chain_max: u64,
+    committed: Option<Vec<ExtentTable>>,
+    sparse_since_full: u64,
+    pending: Option<Pending>,
+    stats: DeltaStats,
+}
+
+impl DeltaPlanner {
+    /// `extent_bytes` floors at 1; `chain_max` floors at 1 (every round a
+    /// base). Callers gate construction on `ft.delta_extent_bytes > 0`.
+    pub fn new(extent_bytes: usize, chain_max: u64) -> Self {
+        DeltaPlanner {
+            extent_bytes: extent_bytes.max(1),
+            chain_max: chain_max.max(1),
+            committed: None,
+            sparse_since_full: 0,
+            pending: None,
+            stats: DeltaStats::default(),
+        }
+    }
+
+    /// Decide how round `version` ships and stash its tables as pending.
+    /// Supersedes any previous pending round (its tables are dropped — the
+    /// diff base stays the last *completed* round).
+    pub fn plan(&mut self, version: u64, payloads: &[SharedPayload]) -> Vec<StageShip> {
+        let tables: Vec<ExtentTable> = payloads
+            .iter()
+            .map(|p| ExtentTable::build(p.as_slice(), self.extent_bytes))
+            .collect();
+        let force_full = match &self.committed {
+            None => true,
+            Some(c) => c.len() != tables.len() || self.sparse_since_full >= self.chain_max,
+        };
+        let ships: Vec<StageShip> = if force_full {
+            tables.iter().map(|_| StageShip::Full).collect()
+        } else {
+            let committed = self.committed.as_ref().expect("checked above");
+            tables
+                .iter()
+                .zip(committed.iter())
+                .map(|(new, old)| match new.diff(old) {
+                    // whole stage changed: the sparse list buys nothing
+                    Some(r) if r.iter().map(|r| r.end - r.start).sum::<u64>()
+                        >= new.total_len() as u64 => StageShip::Full,
+                    Some(ranges) => StageShip::Sparse(ranges),
+                    None => StageShip::Full,
+                })
+                .collect()
+        };
+        let full = ships.iter().all(|s| matches!(s, StageShip::Full));
+        for (ship, t) in ships.iter().zip(tables.iter()) {
+            self.stats.payload_bytes += t.total_len() as u64;
+            self.stats.shipped_bytes += ship.shipped_bytes(t.total_len() as u64);
+        }
+        if full {
+            self.stats.full_rounds += 1;
+        } else {
+            self.stats.sparse_rounds += 1;
+        }
+        self.pending = Some(Pending { version, tables, full });
+        ships
+    }
+
+    /// Round `version` completed on every SMP: its tables become the diff
+    /// base for the next round. A stale version (superseded since) is a
+    /// no-op.
+    pub fn commit(&mut self, version: u64) {
+        if self.pending.as_ref().is_some_and(|p| p.version == version) {
+            let p = self.pending.take().expect("checked above");
+            self.sparse_since_full = if p.full { 0 } else { self.sparse_since_full + 1 };
+            self.committed = Some(p.tables);
+        }
+    }
+
+    /// The in-flight round aborted or was cancelled: drop its tables so the
+    /// next diff still runs against the last completed round.
+    pub fn drop_pending(&mut self) {
+        self.pending = None;
+    }
+
+    /// Membership changed (node killed/replaced) or the cluster hit an
+    /// error path: forget everything so the next round ships a full base.
+    pub fn reset(&mut self) {
+        self.committed = None;
+        self.pending = None;
+        self.sparse_since_full = 0;
+    }
+
+    pub fn stats(&self) -> DeltaStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payloads(stages: &[Vec<u8>]) -> Vec<SharedPayload> {
+        stages.iter().map(|b| SharedPayload::new(b.clone())).collect()
+    }
+
+    #[test]
+    fn table_diff_finds_changed_extents_and_coalesces() {
+        let mut a = vec![0u8; 10_000];
+        let t0 = ExtentTable::build(&a, 1024);
+        assert_eq!(t0.num_extents(), 10);
+        assert_eq!(t0.total_len(), 10_000);
+        // identical tables: empty diff
+        assert_eq!(t0.diff(&t0).unwrap(), vec![]);
+        // one byte in extent 3
+        a[3 * 1024 + 5] ^= 0xff;
+        let t1 = ExtentTable::build(&a, 1024);
+        assert_eq!(t1.diff(&t0).unwrap(), vec![3 * 1024..4 * 1024]);
+        // adjacent extents 3 and 4 coalesce into one range
+        a[4 * 1024] ^= 0xff;
+        let t2 = ExtentTable::build(&a, 1024);
+        assert_eq!(t2.diff(&t0).unwrap(), vec![3 * 1024..5 * 1024]);
+        // tail extent is short (10_000 = 9*1024 + 784)
+        a[9_999] ^= 0xff;
+        let t3 = ExtentTable::build(&a, 1024);
+        assert_eq!(
+            t3.diff(&t2).unwrap(),
+            vec![9 * 1024..10_000],
+            "tail extent range clamps to payload length"
+        );
+    }
+
+    #[test]
+    fn table_diff_rejects_incomparable_shapes() {
+        let a = vec![7u8; 4096];
+        let t = ExtentTable::build(&a, 1024);
+        assert!(t.diff(&ExtentTable::build(&a, 2048)).is_none(), "grain mismatch");
+        assert!(t.diff(&ExtentTable::build(&a[..4000], 1024)).is_none(), "length mismatch");
+    }
+
+    #[test]
+    fn whole_crc_matches_single_pass_hash() {
+        let mut data = vec![0u8; 100_000];
+        let mut x = 0x9e3779b97f4a7c15u64;
+        for b in data.iter_mut() {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            *b = x as u8;
+        }
+        for grain in [1usize, 7, 1024, 65_536, 1 << 20] {
+            let t = ExtentTable::build(&data, grain);
+            assert_eq!(t.whole_crc32(), crc32fast::hash(&data), "grain {grain}");
+        }
+        // empty payload: no extents, crc of nothing
+        let t = ExtentTable::build(&[], 1024);
+        assert_eq!(t.num_extents(), 0);
+        assert_eq!(t.whole_crc32(), crc32fast::hash(&[]));
+    }
+
+    #[test]
+    fn planner_first_round_full_then_sparse() {
+        let mut p = DeltaPlanner::new(1024, 8);
+        let mut stage = vec![1u8; 8192];
+        assert_eq!(p.plan(1, &payloads(&[stage.clone()])), vec![StageShip::Full]);
+        p.commit(1);
+        // nothing changed: sparse with an empty range list
+        assert_eq!(
+            p.plan(2, &payloads(&[stage.clone()])),
+            vec![StageShip::Sparse(vec![])]
+        );
+        p.commit(2);
+        // one extent changed
+        stage[2048] ^= 1;
+        assert_eq!(
+            p.plan(3, &payloads(&[stage.clone()])),
+            vec![StageShip::Sparse(vec![2048..3072])]
+        );
+        p.commit(3);
+        let s = p.stats();
+        assert_eq!((s.full_rounds, s.sparse_rounds), (1, 2));
+        assert_eq!(s.payload_bytes, 3 * 8192);
+        assert_eq!(s.shipped_bytes, 8192 + 0 + 1024);
+    }
+
+    #[test]
+    fn planner_uncommitted_round_does_not_advance_the_diff_base() {
+        let mut p = DeltaPlanner::new(1024, 8);
+        let mut stage = vec![1u8; 4096];
+        p.plan(1, &payloads(&[stage.clone()]));
+        p.commit(1);
+        // round 2 changes extent 0 but is never committed (superseded)
+        stage[0] ^= 1;
+        p.plan(2, &payloads(&[stage.clone()]));
+        p.drop_pending();
+        // round 3 changes extent 2 on top; diff must still be vs round 1,
+        // so BOTH extents are in the sparse list
+        stage[2048] ^= 1;
+        assert_eq!(
+            p.plan(3, &payloads(&[stage.clone()])),
+            vec![StageShip::Sparse(vec![0..1024, 2048..3072])]
+        );
+    }
+
+    #[test]
+    fn planner_chain_max_forces_periodic_base() {
+        let mut p = DeltaPlanner::new(1024, 2);
+        let mut stage = vec![0u8; 4096];
+        p.plan(1, &payloads(&[stage.clone()]));
+        p.commit(1); // full (base)
+        for v in 2..=3 {
+            stage[0] = v as u8;
+            assert!(matches!(
+                p.plan(v, &payloads(&[stage.clone()]))[0],
+                StageShip::Sparse(_)
+            ));
+            p.commit(v);
+        }
+        // two sparse rounds committed: chain_max = 2 forces a base now
+        stage[0] = 99;
+        assert_eq!(p.plan(4, &payloads(&[stage.clone()])), vec![StageShip::Full]);
+        p.commit(4);
+        // and the counter restarts
+        stage[0] = 100;
+        assert!(matches!(
+            p.plan(5, &payloads(&[stage.clone()]))[0],
+            StageShip::Sparse(_)
+        ));
+    }
+
+    #[test]
+    fn planner_full_coverage_and_reset_fall_back_to_full() {
+        let mut p = DeltaPlanner::new(1024, 8);
+        let stage = vec![0u8; 4096];
+        p.plan(1, &payloads(&[stage.clone()]));
+        p.commit(1);
+        // every byte changed: Sparse would cover 100% — planner ships Full
+        let flipped = vec![0xffu8; 4096];
+        assert_eq!(p.plan(2, &payloads(&[flipped.clone()])), vec![StageShip::Full]);
+        p.commit(2);
+        // membership change: reset forces a base even with no byte changed
+        p.reset();
+        assert_eq!(p.plan(3, &payloads(&[flipped])), vec![StageShip::Full]);
+    }
+}

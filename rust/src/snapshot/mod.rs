@@ -14,6 +14,10 @@
 //!   (§4.1 L1-L3): enqueue-and-return saves whose buckets drain across
 //!   subsequent training iterations under a per-node interference budget,
 //!   with version supersession and completion-time parity encoding.
+//! * [`delta`] — the sparse-snapshot layer: fixed-size extent tables hashed
+//!   with crc32fast, diffed against the previous *completed* round so a
+//!   round ships only changed extents (with a periodic forced base every
+//!   `delta_chain_max` rounds).
 //! * [`payload`] — the zero-copy payload currency: `Arc`-backed
 //!   [`SharedPayload`]s captured once by the trainer and carried by
 //!   reference (as [`PayloadView`] bucket slices) all the way to the SMP
@@ -23,11 +27,13 @@
 pub mod bucket;
 pub mod coord;
 pub mod cost;
+pub mod delta;
 pub mod payload;
 pub mod plan;
 
 pub use bucket::BucketPipe;
 pub use coord::{CoordSink, CoordStats, SnapshotCoordinator, TickReport};
+pub use delta::{DeltaPlanner, DeltaStats, ExtentTable, StageShip};
 pub use cost::{method_save_cost, SaveCost, SaveCtx};
 pub use payload::{PayloadView, SharedPayload};
 pub use plan::{NodeShard, SnapshotPlan};

@@ -241,6 +241,7 @@ impl DpTrainer {
             d.observe(&metrics);
         }
         self.observe_snapshot_cadence(&metrics);
+        self.sync_delta_gauges();
         Ok(StepReport { step: self.state.step, loss, snapshotted, checkpointed })
     }
 
@@ -261,6 +262,19 @@ impl DpTrainer {
         let steps = sched.observe(t_sn, metrics.timer("step_wall").mean());
         metrics.gauge("snapshot_interval_steps", steps as f64);
         metrics.gauge("snapshot_lambda_node", sched.lambda_node());
+    }
+
+    /// Sparse-snapshot accounting: mirror the delta planner's counters into
+    /// run gauges so dashboards and the e2e control plane can report the
+    /// shipped/full byte ratio live. A no-op when the delta layer is off.
+    fn sync_delta_gauges(&self) {
+        let Some(ds) = self.reft.as_ref().and_then(|r| r.delta_stats()) else {
+            return;
+        };
+        self.metrics.gauge("delta_full_rounds", ds.full_rounds as f64);
+        self.metrics.gauge("delta_sparse_rounds", ds.sparse_rounds as f64);
+        self.metrics.gauge("delta_payload_bytes", ds.payload_bytes as f64);
+        self.metrics.gauge("delta_shipped_bytes", ds.shipped_bytes as f64);
     }
 
     pub fn run(&mut self, steps: usize) -> Result<Vec<f32>> {

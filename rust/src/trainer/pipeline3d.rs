@@ -269,6 +269,7 @@ impl PipelineTrainer {
             d.observe(&metrics);
         }
         self.observe_snapshot_cadence(&metrics);
+        self.sync_delta_gauges();
         Ok(loss)
     }
 
@@ -464,6 +465,19 @@ impl PipelineTrainer {
         self.stages[s].adam_m = runtime::vec_f32(&outs[1])?;
         self.stages[s].adam_v = runtime::vec_f32(&outs[2])?;
         Ok(())
+    }
+
+    /// Sparse-snapshot accounting: mirror the delta planner's counters into
+    /// run gauges (see `DpTrainer::sync_delta_gauges`). A no-op when the
+    /// delta layer is off.
+    fn sync_delta_gauges(&self) {
+        let Some(ds) = self.reft.as_ref().and_then(|r| r.delta_stats()) else {
+            return;
+        };
+        self.metrics.gauge("delta_full_rounds", ds.full_rounds as f64);
+        self.metrics.gauge("delta_sparse_rounds", ds.sparse_rounds as f64);
+        self.metrics.gauge("delta_payload_bytes", ds.payload_bytes as f64);
+        self.metrics.gauge("delta_shipped_bytes", ds.shipped_bytes as f64);
     }
 
     pub fn run(&mut self, steps: usize) -> Result<Vec<f32>> {

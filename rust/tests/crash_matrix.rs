@@ -1,8 +1,9 @@
 //! Crash-matrix harness for the adaptive checkpoint control plane: a
 //! seeded-RNG sweep over (crash-point × parallelism-shape) combinations —
 //! crash before/during/after shard upload, mid-multipart, between commit
-//! and GC, during the asynchronous snapshot drain, a superseded round, and
-//! a probe invalidated after the fact — asserting that EVERY run recovers
+//! and GC, during the asynchronous snapshot drain, a superseded round, a
+//! probe invalidated after the fact, and a sparse delta round dying with
+//! its chain half-written — asserting that EVERY run recovers
 //! to a complete, byte-consistent checkpoint and that the `RecoveryPlan`
 //! prediction matches the tier actually used (or the misprediction counter
 //! says why).
@@ -54,9 +55,14 @@ enum CrashPoint {
     /// the probe sees a healthy manifest whose shards rot before the load:
     /// the plan is wrong by construction and the counter must say so
     CorruptAfterProbe,
+    /// a sparse-delta persist dies with its extent blobs half uploaded:
+    /// the dangling delta must be unobservable and recovery must land on
+    /// the last COMPLETE chain (base + committed deltas), reconstructed
+    /// byte-identically
+    MidDeltaPersist,
 }
 
-const CRASH_POINTS: [CrashPoint; 8] = [
+const CRASH_POINTS: [CrashPoint; 9] = [
     CrashPoint::BeforeUpload,
     CrashPoint::DuringUpload,
     CrashPoint::BeforeCommit,
@@ -65,6 +71,7 @@ const CRASH_POINTS: [CrashPoint; 8] = [
     CrashPoint::DuringDrain,
     CrashPoint::Superseded,
     CrashPoint::CorruptAfterProbe,
+    CrashPoint::MidDeltaPersist,
 ];
 
 struct Shape {
@@ -493,6 +500,80 @@ fn run_scenario(shape: &Shape, crash: CrashPoint, rng: &mut Rng) -> Result<()> {
             expect_mispredictions = 1;
             expected_data = as_bytes(&v_legacy);
         }
+        CrashPoint::MidDeltaPersist => {
+            // a sparse chain grows on the durable tier — base at step 20,
+            // committed delta at 30 — then the step-40 delta dies with its
+            // extent blobs half uploaded. The dangling delta must never
+            // commit, and recovery must reconstruct the step-30 chain
+            // (base + delta) byte-identically.
+            let mutate = |src: &[SharedPayload], rng: &mut Rng| -> Vec<SharedPayload> {
+                src.iter()
+                    .map(|p| {
+                        let mut b = p.as_slice().to_vec();
+                        let at = 2048 + rng.below(8192);
+                        for x in &mut b[at..at + 2048] {
+                            *x ^= 0x5A;
+                        }
+                        SharedPayload::new(b)
+                    })
+                    .collect()
+            };
+            let chaos = Arc::new(Chaos::wrap(Arc::clone(&inner)));
+            let engine = PersistEngine::start(
+                model,
+                Arc::clone(&chaos) as Arc<dyn Storage>,
+                cluster.plan.clone(),
+                PersistConfig {
+                    delta_extent_bytes: 1024,
+                    delta_chain_max: 8,
+                    ..base_persist()
+                },
+            );
+            // first round through this engine: no cached base, a full
+            // manifest lands at step 20
+            let v2 = payloads(&stage_bytes, rng);
+            cluster.snapshot_all(&v2)?;
+            engine.enqueue(20, cluster.persist_sources(), vec![])?;
+            engine.flush()?;
+            // second round: a sparse delta chained on the step-20 base
+            let v3 = mutate(&v2, rng);
+            cluster.snapshot_all(&v3)?;
+            engine.enqueue(30, cluster.persist_sources(), vec![])?;
+            engine.flush()?;
+            let st = engine.stats();
+            anyhow::ensure!(
+                st.manifests_committed == 2 && st.persisted_delta_bytes > 0,
+                "{ctx}: the step-30 round must commit as a sparse delta"
+            );
+            // third round dies between extent-blob puts (or before the
+            // manifest put when only one blob changed)
+            let v4 = mutate(&v3, rng);
+            cluster.snapshot_all(&v4)?;
+            chaos.puts_remaining.store(rng.below(2) as i64, Ordering::SeqCst);
+            engine.enqueue(40, cluster.persist_sources(), vec![])?;
+            engine.flush()?;
+            let st = engine.stats();
+            anyhow::ensure!(
+                st.manifests_committed == 2 && st.jobs_aborted == 1,
+                "{ctx}: the crashed delta must abort manifest-less: {:?}",
+                st.last_error
+            );
+            anyhow::ensure!(
+                !inner.exists(&persist::manifest_key(model, 40)),
+                "{ctx}: no dangling step-40 manifest may surface"
+            );
+            anyhow::ensure!(
+                persist::persisted_steps(inner.as_ref(), model) == vec![10, 20, 30],
+                "{ctx}: committed rounds are exactly the complete chain"
+            );
+            let victims = exceed_protection(&topo, rng);
+            for &n in &victims {
+                cluster.kill_node(n);
+            }
+            dead = victims;
+            expect_path = Some(RecoveryPath::Durable(DurableTier::Manifest));
+            expected_data = as_bytes(&v3); // base 20 + delta 30, stitched
+        }
     }
 
     // plan FIRST (probe + decision tree), restore attempts only after
@@ -542,7 +623,7 @@ fn run_scenario(shape: &Shape, crash: CrashPoint, rng: &mut Rng) -> Result<()> {
 }
 
 /// The sweep: every crash point on every parallelism shape, randomized
-/// payloads and victims under a fixed seed. ~32 scenarios.
+/// payloads and victims under a fixed seed. ~36 scenarios.
 #[test]
 fn crash_matrix_sweep() {
     let mut rng = Rng::seed_from(SEED);
@@ -554,7 +635,7 @@ fn crash_matrix_sweep() {
             ran += 1;
         }
     }
-    assert_eq!(ran, 32, "the matrix must cover every (shape x crash) cell");
+    assert_eq!(ran, 36, "the matrix must cover every (shape x crash) cell");
 }
 
 /// Cross-tier tie-break, live: a legacy checkpoint strictly newer than the

@@ -528,6 +528,11 @@ fn prop_manifest_streaming_codec_matches_dom() {
                     offset: rng.next_u64() % EXACT,
                     len: rng.next_u64() % EXACT,
                     crc32: rng.next_u64() as u32,
+                    // arbitrary pairs: the codec round-trips extents as-is
+                    // (validity is an apply-time concern, not a wire one)
+                    extents: (0..rng.below(4))
+                        .map(|_| (rng.next_u64() % EXACT, rng.next_u64() % EXACT))
+                        .collect(),
                     parts,
                 }
             })
@@ -539,6 +544,7 @@ fn prop_manifest_streaming_codec_matches_dom() {
             snapshot_step: rng.next_u64() % EXACT,
             stage_bytes: (0..rng.below(4)).map(|_| rng.next_u64() % EXACT).collect(),
             shards,
+            base_step: (rng.below(2) == 1).then(|| rng.next_u64() % EXACT),
         };
         let streamed = man.encode();
         assert_eq!(
@@ -565,6 +571,114 @@ fn prop_manifest_streaming_codec_matches_dom() {
         assert_eq!(streamed, prog.encode_dom(), "case {case}: sidecar codec");
         assert_eq!(PartProgress::decode(&streamed).unwrap(), prog, "case {case}");
         assert_eq!(PartProgress::decode_dom(&streamed).unwrap(), prog, "case {case}");
+    }
+}
+
+/// Sparse delta chains vs the full-capture oracle: at churn rates
+/// 0/1/50/100% a delta-enabled cluster + engine and a delta-off twin see
+/// identical payload mutations; after a base + 4 random delta rounds the
+/// SMP restore AND the durable chain reconstruction are byte-identical to
+/// the oracle's full captures.
+#[test]
+fn prop_delta_chain_matches_full_capture_oracle() {
+    use reft::checkpoint::MemStorage;
+    use reft::config::{FtConfig, PersistConfig};
+    use reft::elastic::ReftCluster;
+    use reft::persist::{self, PersistEngine};
+    use reft::snapshot::SharedPayload;
+    use std::sync::Arc;
+
+    const LEN: usize = 16_000;
+    let mut rng = Rng::seed_from(0xDE17A);
+    for churn_pct in [0usize, 1, 50, 100] {
+        let topo = Topology::build(ParallelPlan::dp_only(8), 4, 2).unwrap();
+        let stage_bytes = vec![LEN as u64];
+        let mut delta_ft = FtConfig {
+            bucket_bytes: 1024,
+            raim5: true,
+            delta_extent_bytes: 256,
+            delta_chain_max: 16,
+            ..FtConfig::default()
+        };
+        delta_ft.persist.delta_extent_bytes = 256;
+        delta_ft.persist.delta_chain_max = 16;
+        let full_ft = FtConfig { bucket_bytes: 1024, raim5: true, ..FtConfig::default() };
+        let mut dc = ReftCluster::start(topo.clone(), &stage_bytes, delta_ft).unwrap();
+        let mut fc = ReftCluster::start(topo, &stage_bytes, full_ft).unwrap();
+        let ds = Arc::new(MemStorage::new());
+        let fs = Arc::new(MemStorage::new());
+        let de = PersistEngine::start(
+            "d",
+            Arc::clone(&ds),
+            dc.plan.clone(),
+            PersistConfig {
+                enabled: true,
+                delta_extent_bytes: 256,
+                delta_chain_max: 16,
+                ..PersistConfig::default()
+            },
+        );
+        let fe = PersistEngine::start(
+            "f",
+            Arc::clone(&fs),
+            fc.plan.clone(),
+            PersistConfig { enabled: true, ..PersistConfig::default() },
+        );
+        let mut master: Vec<u8> = (0..LEN).map(|_| rng.next_u64() as u8).collect();
+        for round in 0..5u64 {
+            if round > 0 {
+                match churn_pct {
+                    0 => {}
+                    // every byte changes (an odd xor can't be a no-op)
+                    100 => master.iter_mut().for_each(|b| *b ^= 0x5B),
+                    pct => {
+                        for _ in 0..LEN * pct / 100 {
+                            let p = rng.below(LEN);
+                            master[p] ^= (rng.next_u64() as u8) | 1;
+                        }
+                    }
+                }
+            }
+            let p = [SharedPayload::new(master.clone())];
+            dc.snapshot_all(&p).unwrap();
+            fc.snapshot_all(&p).unwrap();
+            assert_eq!(
+                dc.restore_all(&[]).unwrap(),
+                fc.restore_all(&[]).unwrap(),
+                "churn {churn_pct}% round {round}: SMP restore diverged"
+            );
+            de.enqueue(10 * (round + 1), dc.persist_sources(), vec![]).unwrap();
+            fe.enqueue(10 * (round + 1), fc.persist_sources(), vec![]).unwrap();
+        }
+        de.flush().unwrap();
+        fe.flush().unwrap();
+        assert_eq!(de.stats().jobs_aborted, 0, "{:?}", de.stats().last_error);
+        let (dm, dstages) = persist::load_latest(ds.as_ref(), "d").unwrap().unwrap();
+        let (fm, fstages) = persist::load_latest(fs.as_ref(), "f").unwrap().unwrap();
+        assert_eq!(dm.step, fm.step, "churn {churn_pct}%");
+        assert_eq!(
+            dstages, fstages,
+            "churn {churn_pct}%: chain reconstruction diverged from the oracle"
+        );
+        assert_eq!(dstages[0], master, "churn {churn_pct}%");
+        match churn_pct {
+            0 => {
+                // zero churn: one full base, then empty deltas chained on
+                // every later round — no byte ships twice
+                assert_eq!(dm.base_step, Some(40));
+                assert_eq!(de.stats().persisted_full_bytes, LEN as u64);
+                assert_eq!(de.stats().persisted_delta_bytes, 0);
+            }
+            // low churn must actually have exercised the sparse path (how
+            // much ships is up to the random extent coverage)
+            1 => assert!(
+                de.stats().persisted_delta_bytes > 0,
+                "1% churn never went sparse"
+            ),
+            // full churn collapses every round back to a fresh base
+            100 => assert_eq!(dm.base_step, None),
+            _ => {}
+        }
     }
 }
 

@@ -184,6 +184,42 @@ fn pipeline_trainer_snapshot_restore_with_node_loss() {
 }
 
 #[test]
+fn delta_layer_snapshots_and_recovers_in_both_trainers() {
+    let Some(root) = artifacts() else { return };
+    // DP trainer with the sparse-snapshot layer on: rounds plan through
+    // the delta planner, recovery is still bit-exact
+    let mut cfg = dp_cfg(&root, 2, FtMethod::ReftSn);
+    cfg.ft.delta_extent_bytes = 1024;
+    cfg.ft.delta_chain_max = 4;
+    let mut tr = DpTrainer::new(cfg, Arc::new(MemStorage::new())).unwrap();
+    tr.run(3).unwrap();
+    let params = tr.state.params.clone();
+    tr.inject_software_failure();
+    tr.recover(&[]).unwrap();
+    assert_eq!(tr.state.params, params, "bit-exact through the sparse layer");
+    assert!(tr.metrics.gauge_value("delta_full_rounds").unwrap() >= 1.0);
+    assert!(tr.metrics.gauge_value("delta_shipped_bytes").unwrap() > 0.0);
+
+    // pipeline trainer, same knobs, through a node loss
+    let mut cfg = dp_cfg(&root, 2, FtMethod::ReftSn);
+    cfg.plan = ParallelPlan::new(2, 1, 4);
+    cfg.nodes = 2;
+    cfg.microbatches = 2;
+    cfg.ft.delta_extent_bytes = 1024;
+    cfg.ft.delta_chain_max = 4;
+    let mut pt =
+        PipelineTrainer::new(cfg, Arc::new(MemStorage::new()), Schedule::OneFOneB).unwrap();
+    pt.run(2).unwrap();
+    let stage_params: Vec<Vec<f32>> = pt.stages.iter().map(|s| s.params.clone()).collect();
+    pt.inject_node_failure(0);
+    pt.recover(&[0]).unwrap();
+    for (s, before) in stage_params.iter().enumerate() {
+        assert_eq!(&pt.stages[s].params, before, "stage {s} bit-exact");
+    }
+    assert!(pt.metrics.gauge_value("delta_shipped_bytes").unwrap() > 0.0);
+}
+
+#[test]
 fn baseline_methods_checkpoint_to_storage() {
     let Some(root) = artifacts() else { return };
     for method in [FtMethod::CheckFreq, FtMethod::TorchSnapshot] {
