@@ -27,6 +27,17 @@ fn payloads(stage_bytes: &[u64], seed: u64) -> Vec<SharedPayload> {
 }
 
 fn main() -> anyhow::Result<()> {
+    // `--trace-out PATH`: record the walkthrough's elastic/SMP span stream
+    // and write a Chrome/Perfetto trace at the end (same flag as train_e2e)
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trace_out = args
+        .iter()
+        .position(|a| a == "--trace-out")
+        .and_then(|i| args.get(i + 1).cloned());
+    if trace_out.is_some() {
+        reft::obs::enable();
+    }
+
     // the paper's Fig. 3 topology: 2 DP x 4 TP x 3 PP on 6 nodes x 4 GPUs
     let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4)?;
     let stage_bytes = vec![8_000_000u64, 6_000_000, 7_000_000];
@@ -153,6 +164,12 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(metrics.counter("recovery_mispredictions"), 0);
 
     println!("\nall scenarios behaved per the paper's recovery tree ✓");
+    if let Some(path) = trace_out.as_deref() {
+        let dump = reft::obs::drain();
+        let n = dump.events.len();
+        std::fs::write(path, reft::obs::chrome_trace_json(&dump))?;
+        println!("trace: {n} events written to {path}");
+    }
     Ok(())
 }
 

@@ -72,6 +72,15 @@ fn main() -> anyhow::Result<()> {
     // extent tables diff consecutive rounds so both planes ship only the
     // changed bytes; the control-plane line reports the resulting ratio
     let delta_extent: usize = flags.get("delta-extent").map(|s| s.parse()).unwrap_or(Ok(0))?;
+    // `--trace-out PATH` turns the span tracer on for the whole run and
+    // writes a Chrome/Perfetto trace there at the end — load it in
+    // https://ui.perfetto.dev to see the enqueue→drain→persist chain per
+    // round. Tracing must be enabled before the trainer spawns its SMP and
+    // persist threads so their per-thread buffers capture from step 0.
+    let trace_out = flags.get("trace-out").cloned();
+    if trace_out.is_some() {
+        reft::obs::enable();
+    }
 
     let mut cfg = RunConfig::default();
     cfg.model = model.clone();
@@ -244,6 +253,63 @@ fn main() -> anyhow::Result<()> {
                 $tr.metrics.counter("recovery_predicted_legacy"),
                 $tr.metrics.counter("recovery_mispredictions"),
             );
+            // the same report as one machine-readable line: field names are
+            // the metrics keys themselves so CI greps and dashboards never
+            // chase a renamed column (keys alphabetical — util/json.rs
+            // JsonWriter round-trips byte-identically through JsonReader)
+            let mut w = reft::util::json::JsonWriter::with_capacity(512);
+            w.begin_obj();
+            w.key("persist_aborts");
+            w.u64($tr.metrics.counter("persist_aborts"));
+            w.key("persist_commits");
+            w.u64($tr.metrics.counter("persist_commits"));
+            w.key("persist_interval_steps");
+            w.num(
+                $tr.metrics
+                    .gauge_value("persist_interval_steps")
+                    .unwrap_or((cfg.ft.persist_every * cfg.ft.snapshot_interval) as f64),
+            );
+            w.key("persist_pipeline_depth");
+            w.num(
+                $tr.metrics
+                    .gauge_value("persist_pipeline_depth")
+                    .unwrap_or(cfg.ft.persist.pipeline_jobs as f64),
+            );
+            w.key("persist_stall_p99_s");
+            w.num($tr.metrics.timer_quantile("persist_stall", 0.99));
+            w.key("persisted_bytes");
+            w.u64($tr.metrics.counter("persisted_bytes"));
+            w.key("persisted_delta_bytes");
+            w.u64(pdelta);
+            w.key("persisted_full_bytes");
+            w.u64(pfull);
+            w.key("recoveries_inmemory");
+            w.u64($tr.metrics.counter("recoveries_inmemory"));
+            w.key("recovery_mispredictions");
+            w.u64($tr.metrics.counter("recovery_mispredictions"));
+            w.key("recovery_plans");
+            w.u64($tr.metrics.counter("recovery_plans"));
+            w.key("recovery_predicted_inmemory");
+            w.u64($tr.metrics.counter("recovery_predicted_inmemory"));
+            w.key("recovery_predicted_legacy");
+            w.u64($tr.metrics.counter("recovery_predicted_legacy"));
+            w.key("recovery_predicted_manifest");
+            w.u64($tr.metrics.counter("recovery_predicted_manifest"));
+            w.key("snapshot_interval_steps");
+            w.num(
+                $tr.metrics
+                    .gauge_value("snapshot_interval_steps")
+                    .unwrap_or(cfg.ft.snapshot_interval as f64),
+            );
+            w.key("snapshot_lambda_node");
+            w.num($tr.metrics.gauge_value("snapshot_lambda_node").unwrap_or(0.0));
+            w.key("snapshot_stall_p99_s");
+            w.num($tr.metrics.timer_quantile("snapshot", 0.99));
+            w.end_obj();
+            println!(
+                "control_plane_json: {}",
+                String::from_utf8(w.finish()).expect("json is utf-8")
+            );
             format!("{}", $tr.metrics.to_json())
         }};
     }
@@ -284,6 +350,13 @@ fn main() -> anyhow::Result<()> {
     println!("wall time: {:.1} s total", t0.elapsed().as_secs_f64());
     println!("loss curve written to {csv_path}");
     println!("metrics: {metrics_json}");
+    if let Some(path) = trace_out.as_deref() {
+        let dump = reft::obs::drain();
+        let n = dump.events.len();
+        let dropped = dump.dropped;
+        std::fs::write(path, reft::obs::chrome_trace_json(&dump))?;
+        println!("trace: {n} events ({dropped} dropped) written to {path}");
+    }
     if steps >= 100 {
         anyhow::ensure!(last < first, "loss did not descend");
         println!("\nE2E OK: loss descended through 1 software + 1 hardware failure");

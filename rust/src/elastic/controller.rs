@@ -23,6 +23,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::FtConfig;
 use crate::ec::Raim5Group;
+use crate::obs;
 use crate::smp::{BucketRef, Signal, Smp, SmpMsg};
 use crate::snapshot::coord::parity_patches;
 use crate::snapshot::payload::{PayloadView, SharedPayload};
@@ -476,6 +477,7 @@ impl ReftCluster {
     }
 
     fn restore_stage_into(&self, stage: usize, dead: &[usize], out: &mut [u8]) -> Result<()> {
+        let _sp = obs::span_arg(obs::cat::ELASTIC, "restore_stage", 0, stage as u64);
         let shards: Vec<NodeShard> = self.plan.shards_for_stage(stage).cloned().collect();
         // The slice carving below requires the plan to tile the stage
         // payload contiguously in ascending *plan order* and fails loudly
@@ -596,6 +598,7 @@ impl ReftCluster {
             versions.iter().all(|&x| x == v),
             "inconsistent snapshot versions {versions:?} for stage {stage}"
         );
+        obs::instant(obs::cat::ELASTIC, "restored", v, stage as u64);
 
         if let Some(&lost) = dead_in_sg.first() {
             let group = self.groups.get(&stage).expect("checked above");
@@ -635,6 +638,7 @@ impl ReftCluster {
                 })
                 .collect();
             group.decode_into(lost, &views, &parities, lost_slice)?;
+            obs::instant(obs::cat::ELASTIC, "decode", v, shards[lost].node as u64);
         }
         Ok(())
     }
@@ -748,6 +752,7 @@ impl ReftCluster {
     /// asynchronous round can no longer complete consistently, so it is
     /// aborted on the survivors (their last clean version stays served).
     pub fn kill_node(&mut self, node: usize) {
+        obs::instant(obs::cat::ELASTIC, "kill_node", self.version, node as u64);
         if let Some(mut smp) = self.smps[node].take() {
             smp.kill();
         }
@@ -762,6 +767,7 @@ impl ReftCluster {
     /// Elastic substitute-node introduction: a fresh SMP joins in place of a
     /// lost one (empty — it will be filled by decode + the next snapshot).
     pub fn replace_node(&mut self, node: usize) -> Result<()> {
+        obs::instant(obs::cat::ELASTIC, "replace_node", self.version, node as u64);
         anyhow::ensure!(self.smps[node].is_none(), "node {node} is not vacant");
         let smp = Smp::spawn(node, self.ft.clean_copies);
         smp.send(SmpMsg::Signal(Signal::Snap))?;

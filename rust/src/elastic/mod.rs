@@ -22,7 +22,8 @@ pub mod controller;
 pub use controller::ReftCluster;
 
 use crate::checkpoint::Storage;
-use crate::metrics::Metrics;
+use crate::metrics::{keys, Metrics};
+use crate::obs;
 use crate::topology::Topology;
 
 /// Per-node rendezvous status.
@@ -258,16 +259,23 @@ impl RecoveryPlan {
         }
     }
 
-    /// Record the prediction (`recovery_predicted_*` counters).
+    /// Record the prediction (`recovery_predicted_*` counters) and leave a
+    /// plan-decision event in the flight recorder (arg encodes the leaf:
+    /// 0 in-memory, 1 manifest, 2 legacy, 3 fatal).
     pub fn record_predicted(&self, metrics: &Metrics) {
-        metrics.inc("recovery_plans", 1);
-        let name = match self.predicted() {
-            Some(RecoveryPath::InMemory) => "recovery_predicted_inmemory",
-            Some(RecoveryPath::Durable(DurableTier::Manifest)) => "recovery_predicted_manifest",
-            Some(RecoveryPath::Durable(DurableTier::Legacy)) => "recovery_predicted_legacy",
-            None => "recovery_predicted_fatal",
+        metrics.inc_k(keys::RECOVERY_PLANS, 1);
+        let (key, code) = match self.predicted() {
+            Some(RecoveryPath::InMemory) => (keys::RECOVERY_PREDICTED_INMEMORY, 0),
+            Some(RecoveryPath::Durable(DurableTier::Manifest)) => {
+                (keys::RECOVERY_PREDICTED_MANIFEST, 1)
+            }
+            Some(RecoveryPath::Durable(DurableTier::Legacy)) => {
+                (keys::RECOVERY_PREDICTED_LEGACY, 2)
+            }
+            None => (keys::RECOVERY_PREDICTED_FATAL, 3),
         };
-        metrics.inc(name, 1);
+        metrics.inc_k(key, 1);
+        obs::instant(obs::cat::ELASTIC, "plan", 0, code);
     }
 
     /// Record the path recovery actually took; a mismatch with the
@@ -276,7 +284,8 @@ impl RecoveryPlan {
     /// found at load time, shape-filtered manifest, ...).
     pub fn record_actual(&self, metrics: &Metrics, actual: RecoveryPath) {
         if self.predicted() != Some(actual) {
-            metrics.inc("recovery_mispredictions", 1);
+            metrics.inc_k(keys::RECOVERY_MISPREDICTIONS, 1);
+            obs::instant(obs::cat::ELASTIC, "mispredict", 0, 0);
         }
     }
 }

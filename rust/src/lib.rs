@@ -28,6 +28,7 @@ pub mod elastic;
 pub mod hwsim;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod persist;
 pub mod pipeline;
 pub mod reliability;

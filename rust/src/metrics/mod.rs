@@ -1,29 +1,345 @@
-//! Metrics: counters, wall-clock timers and simulated-time series.
+//! Metrics: counters, wall-clock timers with log2-bucketed histograms, and
+//! simulated-time series.
 //!
 //! Two clocks coexist deliberately (DESIGN.md §Substitutions): *wall time*
 //! measures real work this process does (XOR encode, memcpy, PJRT execute) —
 //! that is what §Perf optimizes — while *sim time* carries the modeled
 //! device-class transfers the benches report in paper shape.
+//!
+//! ## Hot path
+//!
+//! The known metric names (everything the trainers, coordinator, and persist
+//! driver touch per iteration) are **pre-interned** into static key tables
+//! ([`keys`]). For those, `inc`/`record_secs` route to per-slot atomics —
+//! no lock, no allocation — whether the caller uses the string API (one
+//! binary search over the static table) or a [`CounterKey`]/[`TimerKey`]
+//! handle directly (one array index). Unknown names keep the old
+//! mutex-guarded map so dynamic metrics still work; they are just not free.
+//!
+//! ## Histograms
+//!
+//! Every timer — fast or dynamic — feeds a log2-bucketed [`Histogram`]
+//! (bucket *i* counts samples in `[2^i, 2^{i+1})` nanoseconds), so stall
+//! *distributions* (p50/p95/p99) are first-class, not just count/mean/max.
+//! The paper's "near-zero overhead" claim is a claim about tails; the
+//! `obs_overhead` bench section reads these quantiles.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::util::json::Json;
 
+/// Handle to a pre-interned counter slot — see [`keys`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterKey(usize);
+
+/// Handle to a pre-interned timer slot — see [`keys`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TimerKey(usize);
+
+/// The static key tables. Arrays are sorted (the string API binary-searches
+/// them); each `const` names its slot index. A unit test pins the
+/// index↔name agreement and the sort order.
+pub mod keys {
+    use super::{CounterKey, TimerKey};
+
+    /// Known counter names, sorted.
+    pub static KNOWN_COUNTERS: &[&str] = &[
+        "checkpoints",
+        "failures_hardware",
+        "failures_software",
+        "persist_aborts",
+        "persist_enqueues",
+        "persisted_bytes",
+        "recoveries_checkpoint",
+        "recoveries_inmemory",
+        "recoveries_legacy",
+        "recoveries_manifest",
+        "recovery_mispredictions",
+        "recovery_plans",
+        "recovery_predicted_fatal",
+        "recovery_predicted_inmemory",
+        "recovery_predicted_legacy",
+        "recovery_predicted_manifest",
+        "saves",
+        "snapshots",
+        "snapshots_aborted",
+        "snapshots_completed",
+        "snapshots_superseded",
+        "steps",
+    ];
+
+    pub const CHECKPOINTS: CounterKey = CounterKey(0);
+    pub const FAILURES_HARDWARE: CounterKey = CounterKey(1);
+    pub const FAILURES_SOFTWARE: CounterKey = CounterKey(2);
+    pub const PERSIST_ABORTS: CounterKey = CounterKey(3);
+    pub const PERSIST_ENQUEUES: CounterKey = CounterKey(4);
+    pub const PERSISTED_BYTES: CounterKey = CounterKey(5);
+    pub const RECOVERIES_CHECKPOINT: CounterKey = CounterKey(6);
+    pub const RECOVERIES_INMEMORY: CounterKey = CounterKey(7);
+    pub const RECOVERIES_LEGACY: CounterKey = CounterKey(8);
+    pub const RECOVERIES_MANIFEST: CounterKey = CounterKey(9);
+    pub const RECOVERY_MISPREDICTIONS: CounterKey = CounterKey(10);
+    pub const RECOVERY_PLANS: CounterKey = CounterKey(11);
+    pub const RECOVERY_PREDICTED_FATAL: CounterKey = CounterKey(12);
+    pub const RECOVERY_PREDICTED_INMEMORY: CounterKey = CounterKey(13);
+    pub const RECOVERY_PREDICTED_LEGACY: CounterKey = CounterKey(14);
+    pub const RECOVERY_PREDICTED_MANIFEST: CounterKey = CounterKey(15);
+    pub const SAVES: CounterKey = CounterKey(16);
+    pub const SNAPSHOTS: CounterKey = CounterKey(17);
+    pub const SNAPSHOTS_ABORTED: CounterKey = CounterKey(18);
+    pub const SNAPSHOTS_COMPLETED: CounterKey = CounterKey(19);
+    pub const SNAPSHOTS_SUPERSEDED: CounterKey = CounterKey(20);
+    pub const STEPS: CounterKey = CounterKey(21);
+
+    /// Known timer names, sorted.
+    pub static KNOWN_TIMERS: &[&str] = &[
+        "adam",
+        "ckpt_encode",
+        "ckpt_put",
+        "fwd_bwd",
+        "persist_flush",
+        "persist_job",
+        "persist_stall",
+        "snapshot",
+        "snapshot_recovery",
+        "snapshot_tick",
+        "stage_bwd",
+        "stage_fwd",
+        "stage_fwdbwd",
+        "step_wall",
+    ];
+
+    pub const ADAM: TimerKey = TimerKey(0);
+    pub const CKPT_ENCODE: TimerKey = TimerKey(1);
+    pub const CKPT_PUT: TimerKey = TimerKey(2);
+    pub const FWD_BWD: TimerKey = TimerKey(3);
+    pub const PERSIST_FLUSH: TimerKey = TimerKey(4);
+    pub const PERSIST_JOB: TimerKey = TimerKey(5);
+    pub const PERSIST_STALL: TimerKey = TimerKey(6);
+    pub const SNAPSHOT: TimerKey = TimerKey(7);
+    pub const SNAPSHOT_RECOVERY: TimerKey = TimerKey(8);
+    pub const SNAPSHOT_TICK: TimerKey = TimerKey(9);
+    pub const STAGE_BWD: TimerKey = TimerKey(10);
+    pub const STAGE_FWD: TimerKey = TimerKey(11);
+    pub const STAGE_FWDBWD: TimerKey = TimerKey(12);
+    pub const STEP_WALL: TimerKey = TimerKey(13);
+
+    pub(super) fn counter_index(name: &str) -> Option<usize> {
+        KNOWN_COUNTERS.binary_search(&name).ok()
+    }
+
+    pub(super) fn timer_index(name: &str) -> Option<usize> {
+        KNOWN_TIMERS.binary_search(&name).ok()
+    }
+}
+
+/// Number of log2 buckets: bucket `i` counts samples in `[2^i, 2^{i+1})`
+/// nanoseconds (bucket 0 also absorbs 0 ns), which spans 1 ns to ~584
+/// years — every wall-clock duration this system can see.
+pub const HIST_BUCKETS: usize = 64;
+
+/// A log2-bucketed latency histogram (nanosecond samples). Plain data —
+/// what [`Metrics::histogram`] snapshots out of the live atomics.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub count: u64,
+    pub total_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+    pub buckets: [u64; HIST_BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: 0,
+            total_ns: 0,
+            min_ns: 0,
+            max_ns: 0,
+            buckets: [0; HIST_BUCKETS],
+        }
+    }
+}
+
+/// Which bucket a sample lands in: `floor(log2(ns))`, with 0 ns joining
+/// bucket 0.
+pub fn bucket_of(ns: u64) -> usize {
+    ns.max(1).ilog2() as usize
+}
+
+/// The `[lo, hi)` nanosecond range bucket `i` covers (bucket 0 starts at 0).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    debug_assert!(i < HIST_BUCKETS);
+    let lo = if i == 0 { 0 } else { 1u64 << i };
+    let hi = if i + 1 >= 64 { u64::MAX } else { 1u64 << (i + 1) };
+    (lo, hi)
+}
+
+impl Histogram {
+    pub fn record_ns(&mut self, ns: u64) {
+        if self.count == 0 {
+            self.min_ns = ns;
+            self.max_ns = ns;
+        } else {
+            self.min_ns = self.min_ns.min(ns);
+            self.max_ns = self.max_ns.max(ns);
+        }
+        self.count += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        self.buckets[bucket_of(ns)] += 1;
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record_ns(secs_to_ns(secs));
+    }
+
+    /// Quantile in **seconds**, `q` in `[0, 1]`. Linear interpolation
+    /// within the covering bucket, clamped to the exact observed
+    /// `[min, max]`; monotone in `q` by construction. The empty histogram
+    /// answers 0.0 for every quantile.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = q * self.count as f64;
+        let mut cum = 0.0f64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let c = c as f64;
+            if cum + c >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                let frac = ((rank - cum) / c).clamp(0.0, 1.0);
+                let v = lo as f64 + frac * (hi as f64 - lo as f64);
+                return v.clamp(self.min_ns as f64, self.max_ns as f64) / 1e9;
+            }
+            cum += c;
+        }
+        self.max_ns as f64 / 1e9
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+}
+
+fn secs_to_ns(secs: f64) -> u64 {
+    if secs <= 0.0 {
+        return 0;
+    }
+    let ns = secs * 1e9;
+    if ns >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        ns as u64
+    }
+}
+
 /// A monotonically growing set of named counters/gauges/timing stats.
-/// Thread-safe; cheap enough for hot-path increments outside the innermost
-/// loops.
-#[derive(Debug, Default)]
+/// Thread-safe; known-name updates are lock-free (see module docs).
+#[derive(Debug)]
 pub struct Metrics {
+    fast_counters: Box<[AtomicU64]>,
+    fast_timers: Box<[FastTimer]>,
     inner: Mutex<Inner>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            fast_counters: (0..keys::KNOWN_COUNTERS.len())
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            fast_timers: (0..keys::KNOWN_TIMERS.len()).map(|_| FastTimer::new()).collect(),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
 }
 
 #[derive(Debug, Default)]
 struct Inner {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
-    timers: BTreeMap<String, TimerStat>,
+    timers: BTreeMap<String, DynTimer>,
+}
+
+#[derive(Debug, Default)]
+struct DynTimer {
+    stat: TimerStat,
+    hist: Histogram,
+}
+
+/// One pre-interned timer slot: five atomics + the bucket array, all
+/// updated relaxed. `min_ns` starts at `u64::MAX` so `fetch_min` works
+/// without a sentinel branch.
+#[derive(Debug)]
+struct FastTimer {
+    count: AtomicU64,
+    total_ns: AtomicU64,
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+    last_ns: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl FastTimer {
+    fn new() -> FastTimer {
+        FastTimer {
+            count: AtomicU64::new(0),
+            total_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+            last_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn record_ns(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.last_ns.store(ns, Ordering::Relaxed);
+        self.buckets[bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn stat(&self) -> TimerStat {
+        let count = self.count.load(Ordering::Relaxed);
+        if count == 0 {
+            return TimerStat::default();
+        }
+        TimerStat {
+            count,
+            total: self.total_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            min: self.min_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            max: self.max_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            last: self.last_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    fn histogram(&self) -> Histogram {
+        let count = self.count.load(Ordering::Relaxed);
+        Histogram {
+            count,
+            total_ns: self.total_ns.load(Ordering::Relaxed),
+            min_ns: if count == 0 { 0 } else { self.min_ns.load(Ordering::Relaxed) },
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, Default)]
@@ -65,7 +381,27 @@ impl Metrics {
         Self::default()
     }
 
+    /// Pre-interned counter handle for `name`, if it is a known key.
+    pub fn counter_key(name: &str) -> Option<CounterKey> {
+        keys::counter_index(name).map(CounterKey)
+    }
+
+    /// Pre-interned timer handle for `name`, if it is a known key.
+    pub fn timer_key(name: &str) -> Option<TimerKey> {
+        keys::timer_index(name).map(TimerKey)
+    }
+
+    /// Lock-free counter bump via a pre-interned handle.
+    #[inline]
+    pub fn inc_k(&self, key: CounterKey, by: u64) {
+        self.fast_counters[key.0].fetch_add(by, Ordering::Relaxed);
+    }
+
     pub fn inc(&self, name: &str, by: u64) {
+        if let Some(i) = keys::counter_index(name) {
+            self.fast_counters[i].fetch_add(by, Ordering::Relaxed);
+            return;
+        }
         let mut g = self.inner.lock().unwrap();
         *g.counters.entry(name.to_string()).or_default() += by;
     }
@@ -74,9 +410,21 @@ impl Metrics {
         self.inner.lock().unwrap().gauges.insert(name.to_string(), value);
     }
 
+    /// Lock-free timer sample via a pre-interned handle.
+    #[inline]
+    pub fn record_secs_k(&self, key: TimerKey, secs: f64) {
+        self.fast_timers[key.0].record_ns(secs_to_ns(secs));
+    }
+
     pub fn record_secs(&self, name: &str, secs: f64) {
+        if let Some(i) = keys::timer_index(name) {
+            self.fast_timers[i].record_ns(secs_to_ns(secs));
+            return;
+        }
         let mut g = self.inner.lock().unwrap();
-        g.timers.entry(name.to_string()).or_default().record(secs);
+        let t = g.timers.entry(name.to_string()).or_default();
+        t.stat.record(secs);
+        t.hist.record_secs(secs);
     }
 
     /// Time a closure under `name` (wall clock).
@@ -87,7 +435,19 @@ impl Metrics {
         out
     }
 
+    /// Time a closure via a pre-interned handle — the hot-path form.
+    #[inline]
+    pub fn time_k<T>(&self, key: TimerKey, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record_secs_k(key, t0.elapsed().as_secs_f64());
+        out
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
+        if let Some(i) = keys::counter_index(name) {
+            return self.fast_counters[i].load(Ordering::Relaxed);
+        }
         self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
     }
 
@@ -96,51 +456,87 @@ impl Metrics {
     }
 
     pub fn timer(&self, name: &str) -> TimerStat {
+        if let Some(i) = keys::timer_index(name) {
+            return self.fast_timers[i].stat();
+        }
         self.inner
             .lock()
             .unwrap()
             .timers
             .get(name)
-            .copied()
+            .map(|t| t.stat)
             .unwrap_or_default()
     }
 
+    /// Snapshot the latency histogram behind a timer (empty if the name
+    /// was never recorded).
+    pub fn histogram(&self, name: &str) -> Histogram {
+        if let Some(i) = keys::timer_index(name) {
+            return self.fast_timers[i].histogram();
+        }
+        self.inner
+            .lock()
+            .unwrap()
+            .timers
+            .get(name)
+            .map(|t| t.hist.clone())
+            .unwrap_or_default()
+    }
+
+    /// Convenience: `histogram(name).quantile(q)`.
+    pub fn timer_quantile(&self, name: &str, q: f64) -> f64 {
+        self.histogram(name).quantile(q)
+    }
+
     /// Dump everything as JSON (for EXPERIMENTS.md tables and CI diffing).
+    /// Timers now carry p50/p95/p99 from their histograms alongside the
+    /// classic count/total/mean/min/max.
     pub fn to_json(&self) -> Json {
         let g = self.inner.lock().unwrap();
-        let counters = Json::Obj(
-            g.counters
-                .iter()
-                .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
-                .collect(),
-        );
+        let mut counters: BTreeMap<String, Json> = g
+            .counters
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+            .collect();
+        for (i, name) in keys::KNOWN_COUNTERS.iter().enumerate() {
+            let v = self.fast_counters[i].load(Ordering::Relaxed);
+            if v > 0 {
+                counters.insert(name.to_string(), Json::Num(v as f64));
+            }
+        }
         let gauges = Json::Obj(
             g.gauges
                 .iter()
                 .map(|(k, v)| (k.clone(), Json::Num(*v)))
                 .collect(),
         );
-        let timers = Json::Obj(
-            g.timers
-                .iter()
-                .map(|(k, t)| {
-                    (
-                        k.clone(),
-                        Json::obj(vec![
-                            ("count", Json::from(t.count as usize)),
-                            ("total_s", Json::from(t.total)),
-                            ("mean_s", Json::from(t.mean())),
-                            ("min_s", Json::from(t.min)),
-                            ("max_s", Json::from(t.max)),
-                        ]),
-                    )
-                })
-                .collect(),
-        );
+        let timer_json = |stat: &TimerStat, hist: &Histogram| {
+            Json::obj(vec![
+                ("count", Json::from(stat.count as usize)),
+                ("total_s", Json::from(stat.total)),
+                ("mean_s", Json::from(stat.mean())),
+                ("min_s", Json::from(stat.min)),
+                ("max_s", Json::from(stat.max)),
+                ("p50_s", Json::from(hist.p50())),
+                ("p95_s", Json::from(hist.p95())),
+                ("p99_s", Json::from(hist.p99())),
+            ])
+        };
+        let mut timers: BTreeMap<String, Json> = g
+            .timers
+            .iter()
+            .map(|(k, t)| (k.clone(), timer_json(&t.stat, &t.hist)))
+            .collect();
+        for (i, name) in keys::KNOWN_TIMERS.iter().enumerate() {
+            let ft = &self.fast_timers[i];
+            if ft.count.load(Ordering::Relaxed) > 0 {
+                timers.insert(name.to_string(), timer_json(&ft.stat(), &ft.histogram()));
+            }
+        }
         Json::obj(vec![
-            ("counters", counters),
+            ("counters", Json::Obj(counters)),
             ("gauges", gauges),
-            ("timers", timers),
+            ("timers", Json::Obj(timers)),
         ])
     }
 }
@@ -230,6 +626,117 @@ mod tests {
         assert_eq!(j.at(&["counters", "c"]).as_usize(), Some(5));
         assert_eq!(j.at(&["gauges", "g"]).as_f64(), Some(1.5));
         assert_eq!(j.at(&["timers", "t", "count"]).as_usize(), Some(1));
+        assert!(j.at(&["timers", "t", "p99_s"]).as_f64().is_some());
+    }
+
+    #[test]
+    fn key_tables_are_sorted_and_consts_agree() {
+        assert!(keys::KNOWN_COUNTERS.windows(2).all(|w| w[0] < w[1]), "counters sorted");
+        assert!(keys::KNOWN_TIMERS.windows(2).all(|w| w[0] < w[1]), "timers sorted");
+        // spot-check index↔name agreement for the hottest handles
+        assert_eq!(keys::KNOWN_TIMERS[keys::SNAPSHOT.0], "snapshot");
+        assert_eq!(keys::KNOWN_TIMERS[keys::SNAPSHOT_TICK.0], "snapshot_tick");
+        assert_eq!(keys::KNOWN_TIMERS[keys::STEP_WALL.0], "step_wall");
+        assert_eq!(keys::KNOWN_TIMERS[keys::PERSIST_STALL.0], "persist_stall");
+        assert_eq!(keys::KNOWN_TIMERS[keys::PERSIST_JOB.0], "persist_job");
+        assert_eq!(keys::KNOWN_COUNTERS[keys::SNAPSHOTS.0], "snapshots");
+        assert_eq!(keys::KNOWN_COUNTERS[keys::STEPS.0], "steps");
+        assert_eq!(keys::KNOWN_COUNTERS[keys::RECOVERY_PLANS.0], "recovery_plans");
+        // every const resolves through the string lookup to itself
+        for (i, name) in keys::KNOWN_COUNTERS.iter().enumerate() {
+            assert_eq!(Metrics::counter_key(name), Some(CounterKey(i)));
+        }
+        for (i, name) in keys::KNOWN_TIMERS.iter().enumerate() {
+            assert_eq!(Metrics::timer_key(name), Some(TimerKey(i)));
+        }
+        assert_eq!(Metrics::counter_key("definitely_dynamic"), None);
+    }
+
+    #[test]
+    fn string_and_key_apis_share_slots() {
+        let m = Metrics::new();
+        m.inc("snapshots", 2);
+        m.inc_k(keys::SNAPSHOTS, 3);
+        assert_eq!(m.counter("snapshots"), 5);
+        m.record_secs("snapshot", 0.5);
+        m.record_secs_k(keys::SNAPSHOT, 1.5);
+        let t = m.timer("snapshot");
+        assert_eq!(t.count, 2);
+        assert!((t.total - 2.0).abs() < 1e-6);
+        assert!((t.min - 0.5).abs() < 1e-6);
+        assert!((t.max - 1.5).abs() < 1e-6);
+        assert!((t.last - 1.5).abs() < 1e-6);
+        let out = m.time_k(keys::SNAPSHOT, || 7);
+        assert_eq!(out, 7);
+        assert_eq!(m.timer("snapshot").count, 3);
+        // known names surface in the JSON dump exactly like dynamic ones
+        let j = m.to_json();
+        assert_eq!(j.at(&["counters", "snapshots"]).as_usize(), Some(5));
+        assert_eq!(j.at(&["timers", "snapshot", "count"]).as_usize(), Some(3));
+    }
+
+    #[test]
+    fn histogram_bucket_boundaries() {
+        // 0 and 1 ns share bucket 0; exact powers of two open their bucket
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(1023), 9);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), 63);
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo < hi);
+            assert_eq!(bucket_of(lo.max(1)), i, "lower bound lands in its bucket");
+            assert_eq!(bucket_of(hi - 1), i, "last value before the bound stays");
+        }
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone_and_clamped() {
+        let mut h = Histogram::default();
+        for ns in [100u64, 200, 300, 1000, 5000, 5000, 100_000] {
+            h.record_ns(ns);
+        }
+        assert_eq!(h.count, 7);
+        let mut prev = -1.0;
+        for i in 0..=100 {
+            let q = i as f64 / 100.0;
+            let v = h.quantile(q);
+            assert!(v >= prev, "quantile must be monotone in q ({q})");
+            prev = v;
+        }
+        // clamped to the observed range
+        assert!(h.quantile(0.0) >= 100.0 / 1e9);
+        assert!((h.quantile(1.0) - 100_000.0 / 1e9).abs() < 1e-12);
+        // p50 sits in the data's body, not at an extreme
+        let p50 = h.quantile(0.5) * 1e9;
+        assert!((100.0..=5000.0).contains(&p50), "p50 {p50} ns");
+    }
+
+    #[test]
+    fn empty_histogram_quantiles_are_defined() {
+        let h = Histogram::default();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0);
+        }
+        assert_eq!(h.p50(), 0.0);
+        // a never-recorded timer yields the same defined answer
+        let m = Metrics::new();
+        assert_eq!(m.timer_quantile("snapshot", 0.99), 0.0);
+        assert_eq!(m.timer_quantile("no_such_timer", 0.5), 0.0);
+    }
+
+    #[test]
+    fn single_sample_histogram_pins_all_quantiles() {
+        let mut h = Histogram::default();
+        h.record_ns(1_000_000); // 1 ms
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            let v = h.quantile(q);
+            assert!((v - 1e-3).abs() < 1e-12, "q={q} gave {v}");
+        }
     }
 
     #[test]
@@ -239,5 +746,22 @@ mod tests {
         tr.push(1.0, 0.7);
         assert!((tr.mean() - 0.8).abs() < 1e-12);
         assert!(tr.to_csv().lines().count() == 3);
+    }
+
+    #[test]
+    fn trace_csv_format_is_stable() {
+        // header + fixed 6-decimal rows — what the plotting scripts parse
+        let mut tr = Trace::new("cpu");
+        tr.push(0.5, 0.25);
+        tr.push(1.25, 3.0);
+        let csv = tr.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "t,value");
+        assert_eq!(lines[1], "0.500000,0.250000");
+        assert_eq!(lines[2], "1.250000,3.000000");
+        assert!(csv.ends_with('\n'), "trailing newline kept");
+        // empty trace still emits the header
+        assert_eq!(Trace::new("empty").to_csv(), "t,value\n");
+        assert_eq!(Trace::new("empty").mean(), 0.0);
     }
 }

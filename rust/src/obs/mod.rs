@@ -1,0 +1,626 @@
+//! Observability: structured span tracing and the crash-surviving flight
+//! recorder (DESIGN.md §Observability).
+//!
+//! Three pieces, all built on one event stream:
+//!
+//! * **Span tracing** — `span()` / `instant()` record begin/end/instant
+//!   events into bounded per-thread rings. Each event carries a *category*
+//!   (the layer: `trainer`, `coord`, `smp`, `persist`, `elastic`), a static
+//!   *name*, and a **correlation id** — the snapshot round version (or the
+//!   persist step where no round is in scope) threaded
+//!   trainer → coordinator → SMP messages → persist jobs → manifest commit,
+//!   so one round's whole lifetime can be stitched back together from the
+//!   flat stream.
+//! * **Chrome/Perfetto export** — [`chrome_trace_json`] renders a dump in
+//!   the Trace Event format (`chrome://tracing`, ui.perfetto.dev):
+//!   wall-clock events under pid 1, sim-clock events under pid 2 (the
+//!   two-clock rule — the clocks never share a timeline).
+//! * **Flight recorder** — the per-thread rings *are* the black box: they
+//!   keep the newest `ring_capacity()` events per thread, dropping the
+//!   oldest under pressure (drop counts are reported in the dump header).
+//!   [`flight_dump`] snapshots them to a file without clearing;
+//!   [`install_panic_hook`] arranges the same dump on panic.
+//!
+//! Cost model: when tracing is off — the default — every hook is a single
+//! relaxed atomic load. When on, recording is one `Instant::now()` plus a
+//! push into a thread-owned ring whose lock is never contended (only the
+//! drain side ever takes it from another thread). The `obs_overhead` bench
+//! section holds the async save path to <1% overhead with tracing on.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{Json, JsonWriter};
+
+/// Event phase, mirroring the Chrome trace `ph` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// span begin (`"B"`)
+    Begin,
+    /// span end (`"E"`)
+    End,
+    /// point event (`"i"`)
+    Instant,
+}
+
+impl Phase {
+    fn ph(self) -> &'static str {
+        match self {
+            Phase::Begin => "B",
+            Phase::End => "E",
+            Phase::Instant => "i",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Phase> {
+        match s {
+            "B" => Some(Phase::Begin),
+            "E" => Some(Phase::End),
+            "i" => Some(Phase::Instant),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded event. `cat`/`name` are static so recording never
+/// allocates; `corr` is the cross-layer correlation id (round version or
+/// persist step); `arg` is a free detail slot (node id, byte count, ...).
+#[derive(Debug, Clone)]
+pub struct Ev {
+    pub phase: Phase,
+    pub cat: &'static str,
+    pub name: &'static str,
+    pub corr: u64,
+    pub arg: u64,
+    /// recorder thread (small dense ids assigned at first record)
+    pub tid: u64,
+    /// microseconds since the tracer epoch (wall) or sim-clock µs
+    pub t_us: u64,
+    /// which clock stamped `t_us` (the two-clock rule: never mix)
+    pub sim: bool,
+}
+
+/// A drained or snapshotted trace: the merged event stream plus how many
+/// events the rings discarded under pressure.
+#[derive(Debug, Default)]
+pub struct TraceDump {
+    pub events: Vec<Ev>,
+    pub dropped: u64,
+}
+
+// -- global state -----------------------------------------------------------
+
+/// The hot-path gate: one relaxed load decides whether any recording work
+/// happens at all.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static RING_CAP: AtomicUsize = AtomicUsize::new(DEFAULT_RING_CAP);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+const DEFAULT_RING_CAP: usize = 16 * 1024;
+
+struct ThreadRing {
+    tid: u64,
+    /// owner-thread appends + foreign-thread drains; never contended in
+    /// steady state, so the lock costs an uncontended CAS per event
+    buf: Mutex<RingInner>,
+}
+
+#[derive(Default)]
+struct RingInner {
+    events: VecDeque<Ev>,
+    dropped: u64,
+}
+
+struct Registry {
+    epoch: Instant,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+}
+
+fn registry() -> &'static Registry {
+    static REG: OnceLock<Registry> = OnceLock::new();
+    REG.get_or_init(|| Registry { epoch: Instant::now(), rings: Mutex::new(Vec::new()) })
+}
+
+thread_local! {
+    static LOCAL_RING: OnceLock<Arc<ThreadRing>> = const { OnceLock::new() };
+}
+
+fn local_ring() -> Arc<ThreadRing> {
+    LOCAL_RING.with(|cell| {
+        Arc::clone(cell.get_or_init(|| {
+            let ring = Arc::new(ThreadRing {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                buf: Mutex::new(RingInner::default()),
+            });
+            registry().rings.lock().unwrap().push(Arc::clone(&ring));
+            ring
+        }))
+    })
+}
+
+/// Is tracing live? Inlined into every instrumentation site.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on, clearing any previously buffered events so the stream
+/// starts fresh (one enable = one trace session).
+pub fn enable() {
+    registry(); // pin the epoch before any event can be recorded
+    clear();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Turn tracing off. Buffered events stay drainable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Resize the per-thread rings (applies to events recorded after the call).
+pub fn set_ring_capacity(cap: usize) {
+    RING_CAP.store(cap.max(16), Ordering::SeqCst);
+}
+
+pub fn ring_capacity() -> usize {
+    RING_CAP.load(Ordering::Relaxed)
+}
+
+fn now_us() -> u64 {
+    registry().epoch.elapsed().as_micros() as u64
+}
+
+fn record(ev: Ev) {
+    let ring = local_ring();
+    let mut g = ring.buf.lock().unwrap();
+    let cap = ring_capacity();
+    while g.events.len() >= cap {
+        g.events.pop_front();
+        g.dropped += 1;
+    }
+    g.events.push_back(ev);
+}
+
+fn record_wall(phase: Phase, cat: &'static str, name: &'static str, corr: u64, arg: u64) {
+    let t_us = now_us();
+    let ring = local_ring();
+    record(Ev { phase, cat, name, corr, arg, tid: ring.tid, t_us, sim: false });
+}
+
+// -- recording API ----------------------------------------------------------
+
+/// RAII span: begin recorded at construction, end at drop. Inert (zero
+/// work beyond one atomic load) when tracing is off at begin time.
+#[must_use = "a span measures the scope it lives in"]
+pub struct SpanGuard {
+    live: bool,
+    cat: &'static str,
+    name: &'static str,
+    corr: u64,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.live && enabled() {
+            record_wall(Phase::End, self.cat, self.name, self.corr, 0);
+        }
+    }
+}
+
+/// Open a wall-clock span on the current thread.
+#[inline]
+pub fn span(cat: &'static str, name: &'static str, corr: u64) -> SpanGuard {
+    span_arg(cat, name, corr, 0)
+}
+
+/// Open a wall-clock span carrying a detail argument on its begin event.
+#[inline]
+pub fn span_arg(cat: &'static str, name: &'static str, corr: u64, arg: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { live: false, cat, name, corr };
+    }
+    record_wall(Phase::Begin, cat, name, corr, arg);
+    SpanGuard { live: true, cat, name, corr }
+}
+
+/// Record a point event (round abort, plan decision, throttle stall, GC
+/// pass, ...) on the wall clock.
+#[inline]
+pub fn instant(cat: &'static str, name: &'static str, corr: u64, arg: u64) {
+    if !enabled() {
+        return;
+    }
+    record_wall(Phase::Instant, cat, name, corr, arg);
+}
+
+/// Record a complete span on the **sim clock** (hwsim modeled transfers):
+/// explicit begin/duration in sim-µs, exported under its own pid so the
+/// two clocks never share a timeline.
+pub fn sim_span(cat: &'static str, name: &'static str, corr: u64, t0_us: u64, dur_us: u64) {
+    if !enabled() {
+        return;
+    }
+    let tid = local_ring().tid;
+    record(Ev { phase: Phase::Begin, cat, name, corr, arg: 0, tid, t_us: t0_us, sim: true });
+    record(Ev {
+        phase: Phase::End,
+        cat,
+        name,
+        corr,
+        arg: 0,
+        tid,
+        t_us: t0_us.saturating_add(dur_us),
+        sim: true,
+    });
+}
+
+// -- draining / export ------------------------------------------------------
+
+fn collect(clear_after: bool) -> TraceDump {
+    let rings: Vec<Arc<ThreadRing>> = registry().rings.lock().unwrap().clone();
+    let mut dump = TraceDump::default();
+    for ring in rings {
+        let mut g = ring.buf.lock().unwrap();
+        dump.dropped += g.dropped;
+        if clear_after {
+            dump.events.extend(g.events.drain(..));
+            g.dropped = 0;
+        } else {
+            dump.events.extend(g.events.iter().cloned());
+        }
+    }
+    // stable order: by timestamp, then thread — makes exports and test
+    // assertions deterministic even across ring boundaries
+    dump.events.sort_by_key(|e| (e.sim, e.t_us, e.tid));
+    dump
+}
+
+/// Move every buffered event out of the rings (they come back empty).
+pub fn drain() -> TraceDump {
+    collect(true)
+}
+
+/// Copy the rings without clearing them — what the flight recorder uses,
+/// so a post-crash dump does not eat the trace a `--trace-out` run still
+/// wants to export.
+pub fn snapshot() -> TraceDump {
+    collect(false)
+}
+
+/// Drop all buffered events.
+pub fn clear() {
+    let rings: Vec<Arc<ThreadRing>> = registry().rings.lock().unwrap().clone();
+    for ring in rings {
+        let mut g = ring.buf.lock().unwrap();
+        g.events.clear();
+        g.dropped = 0;
+    }
+}
+
+/// Render a dump in the Chrome Trace Event JSON format (loadable in
+/// `chrome://tracing` and ui.perfetto.dev). Wall-clock events live under
+/// pid 1, sim-clock events under pid 2. Keys are emitted alphabetically so
+/// the output round-trips byte-identically through `util::json`.
+pub fn chrome_trace_json(dump: &TraceDump) -> String {
+    let mut w = JsonWriter::with_capacity(64 + dump.events.len() * 96);
+    w.begin_obj();
+    w.key("displayTimeUnit");
+    w.str("ms");
+    w.key("otherData");
+    w.begin_obj();
+    w.key("dropped");
+    w.u64(dump.dropped);
+    w.end_obj();
+    w.key("traceEvents");
+    w.begin_arr();
+    for e in &dump.events {
+        w.begin_obj();
+        w.key("args");
+        w.begin_obj();
+        w.key("arg");
+        w.u64(e.arg);
+        w.key("corr");
+        w.u64(e.corr);
+        w.end_obj();
+        w.key("cat");
+        w.str(e.cat);
+        w.key("name");
+        w.str(e.name);
+        w.key("ph");
+        w.str(e.phase.ph());
+        w.key("pid");
+        w.u64(if e.sim { 2 } else { 1 });
+        if e.phase == Phase::Instant {
+            w.key("s");
+            w.str("t");
+        }
+        w.key("tid");
+        w.u64(e.tid);
+        w.key("ts");
+        w.u64(e.t_us);
+        w.end_obj();
+    }
+    w.end_arr();
+    w.end_obj();
+    String::from_utf8(w.finish()).expect("JsonWriter emits UTF-8")
+}
+
+/// A parsed-back trace event: what [`parse_chrome_trace`] yields. `cat` and
+/// `name` are owned (the static strs don't survive the round-trip).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParsedEv {
+    pub phase: Phase,
+    pub cat: String,
+    pub name: String,
+    pub corr: u64,
+    pub arg: u64,
+    pub tid: u64,
+    pub t_us: u64,
+    pub sim: bool,
+}
+
+/// Parse a Chrome trace JSON document back into events — the read side the
+/// crash-matrix harness and the trace-validation test use. Returns the
+/// events plus the recorded drop count.
+pub fn parse_chrome_trace(text: &str) -> Result<(Vec<ParsedEv>, u64)> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("trace json: {e}"))?;
+    let dropped = j.at(&["otherData", "dropped"]).as_u64().unwrap_or(0);
+    let evs = j
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .context("trace json: no traceEvents array")?;
+    let mut out = Vec::with_capacity(evs.len());
+    for e in evs {
+        let phase = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .and_then(Phase::parse)
+            .context("trace event: bad ph")?;
+        out.push(ParsedEv {
+            phase,
+            cat: e.get("cat").and_then(Json::as_str).unwrap_or("").to_string(),
+            name: e.get("name").and_then(Json::as_str).unwrap_or("").to_string(),
+            corr: e.at(&["args", "corr"]).as_u64().unwrap_or(0),
+            arg: e.at(&["args", "arg"]).as_u64().unwrap_or(0),
+            tid: e.get("tid").and_then(Json::as_u64).unwrap_or(0),
+            t_us: e.get("ts").and_then(Json::as_u64).unwrap_or(0),
+            sim: e.get("pid").and_then(Json::as_u64) == Some(2),
+        });
+    }
+    Ok((out, dropped))
+}
+
+/// Check span well-formedness the way the validation test needs it: within
+/// every (pid, tid) lane, each `End` must close the innermost open `Begin`
+/// with the same (cat, name, corr); nothing may stay open at the stream's
+/// end unless `allow_open` (a flight dump can legitimately cut off
+/// mid-span). Returns the number of matched begin/end pairs.
+pub fn check_nesting(events: &[ParsedEv], allow_open: bool) -> Result<usize> {
+    use std::collections::HashMap;
+    let mut stacks: HashMap<(bool, u64), Vec<&ParsedEv>> = HashMap::new();
+    let mut matched = 0usize;
+    for e in events {
+        let lane = stacks.entry((e.sim, e.tid)).or_default();
+        match e.phase {
+            Phase::Begin => lane.push(e),
+            Phase::End => {
+                let open = lane
+                    .pop()
+                    .with_context(|| format!("end without begin: {}/{}", e.cat, e.name))?;
+                anyhow::ensure!(
+                    open.cat == e.cat && open.name == e.name && open.corr == e.corr,
+                    "mismatched span: begin {}/{} corr {} closed by {}/{} corr {}",
+                    open.cat,
+                    open.name,
+                    open.corr,
+                    e.cat,
+                    e.name,
+                    e.corr
+                );
+                matched += 1;
+            }
+            Phase::Instant => {}
+        }
+    }
+    if !allow_open {
+        for ((sim, tid), lane) in &stacks {
+            anyhow::ensure!(
+                lane.is_empty(),
+                "{} spans left open on {} tid {}",
+                lane.len(),
+                if *sim { "sim" } else { "wall" },
+                tid
+            );
+        }
+    }
+    Ok(matched)
+}
+
+// -- flight recorder --------------------------------------------------------
+
+/// Dump the flight recorder (a snapshot of every ring, rings untouched) to
+/// `path` as Chrome trace JSON.
+pub fn flight_dump(path: impl AsRef<Path>) -> Result<()> {
+    let dump = snapshot();
+    let text = chrome_trace_json(&dump);
+    if let Some(dir) = path.as_ref().parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path.as_ref(), text)
+        .with_context(|| format!("writing flight dump {}", path.as_ref().display()))?;
+    Ok(())
+}
+
+/// Install a panic hook that writes the flight recorder to `path` before
+/// delegating to the previous hook. Idempotent per path; the dump is
+/// best-effort (a failing write must not mask the panic).
+pub fn install_panic_hook(path: impl Into<PathBuf>) {
+    let path = path.into();
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let _ = flight_dump(&path);
+        prev(info);
+    }));
+}
+
+// -- span taxonomy ----------------------------------------------------------
+
+/// Layer categories (DESIGN.md §Observability span taxonomy). Using these
+/// consts keeps category strings greppable and typo-proof.
+pub mod cat {
+    pub const TRAINER: &str = "trainer";
+    pub const COORD: &str = "coord";
+    pub const SMP: &str = "smp";
+    pub const PERSIST: &str = "persist";
+    pub const ELASTIC: &str = "elastic";
+    pub const SIM: &str = "sim";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tracing state is process-global; unit tests that enable it take
+    /// this lock so they cannot interleave.
+    fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = test_lock();
+        disable();
+        clear();
+        {
+            let _s = span(cat::TRAINER, "noop", 1);
+            instant(cat::TRAINER, "ev", 1, 0);
+        }
+        assert!(drain().events.is_empty());
+    }
+
+    #[test]
+    fn span_round_trip_through_json() {
+        let _g = test_lock();
+        enable();
+        {
+            let _outer = span_arg(cat::COORD, "round", 7, 42);
+            let _inner = span(cat::SMP, "bucket", 7);
+            instant(cat::PERSIST, "commit", 7, 3);
+        }
+        sim_span(cat::SIM, "xfer", 7, 100, 50);
+        disable();
+        let dump = drain();
+        assert_eq!(dump.events.len(), 7, "2 spans + 1 instant + 1 sim span");
+        assert_eq!(dump.dropped, 0);
+        let text = chrome_trace_json(&dump);
+        let (evs, dropped) = parse_chrome_trace(&text).unwrap();
+        assert_eq!(evs.len(), 7);
+        assert_eq!(dropped, 0);
+        let matched = check_nesting(&evs, false).unwrap();
+        assert_eq!(matched, 3);
+        // correlation id survives the round trip on every event
+        assert!(evs.iter().all(|e| e.corr == 7));
+        // the begin arg survives
+        let b = evs.iter().find(|e| e.name == "round" && e.phase == Phase::Begin).unwrap();
+        assert_eq!(b.arg, 42);
+        // sim events land on pid 2 with their explicit stamps
+        let sims: Vec<_> = evs.iter().filter(|e| e.sim).collect();
+        assert_eq!(sims.len(), 2);
+        assert_eq!((sims[0].t_us, sims[1].t_us), (100, 150));
+    }
+
+    #[test]
+    fn ring_drops_oldest_under_pressure() {
+        let _g = test_lock();
+        enable();
+        set_ring_capacity(64);
+        for i in 0..200u64 {
+            instant(cat::TRAINER, "tick", i, 0);
+        }
+        disable();
+        let dump = drain();
+        set_ring_capacity(DEFAULT_RING_CAP);
+        assert_eq!(dump.events.len(), 64);
+        assert_eq!(dump.dropped, 136);
+        // the survivors are exactly the newest events
+        assert!(dump.events.iter().all(|e| e.corr >= 136));
+    }
+
+    #[test]
+    fn mismatched_nesting_is_rejected() {
+        let evs = vec![
+            ParsedEv {
+                phase: Phase::Begin,
+                cat: "a".into(),
+                name: "x".into(),
+                corr: 1,
+                arg: 0,
+                tid: 1,
+                t_us: 0,
+                sim: false,
+            },
+            ParsedEv {
+                phase: Phase::End,
+                cat: "a".into(),
+                name: "y".into(),
+                corr: 1,
+                arg: 0,
+                tid: 1,
+                t_us: 1,
+                sim: false,
+            },
+        ];
+        assert!(check_nesting(&evs, false).is_err(), "wrong name must not close the span");
+        let only_begin = vec![evs[0].clone()];
+        assert!(check_nesting(&only_begin, false).is_err(), "open span rejected");
+        assert_eq!(check_nesting(&only_begin, true).unwrap(), 0, "unless a cut-off is allowed");
+        let only_end = vec![evs[1].clone()];
+        assert!(check_nesting(&only_end, true).is_err(), "an end always needs its begin");
+    }
+
+    #[test]
+    fn flight_dump_snapshot_leaves_rings_intact() {
+        let _g = test_lock();
+        enable();
+        instant(cat::ELASTIC, "plan", 9, 1);
+        disable();
+        let dir = std::env::temp_dir().join("reft-obs-test");
+        let path = dir.join("flight.json");
+        flight_dump(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let (evs, _) = parse_chrome_trace(&text).unwrap();
+        assert!(evs.iter().any(|e| e.name == "plan" && e.corr == 9));
+        // snapshot, not drain: the event is still in the ring
+        assert!(drain().events.iter().any(|e| e.name == "plan"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn panic_hook_writes_the_black_box() {
+        let _g = test_lock();
+        enable();
+        instant(cat::PERSIST, "doomed", 13, 0);
+        let dir = std::env::temp_dir().join("reft-obs-panic-test");
+        let path = dir.join("flight.json");
+        let _ = std::fs::remove_file(&path);
+        install_panic_hook(path.clone());
+        let res = std::panic::catch_unwind(|| panic!("injected"));
+        assert!(res.is_err());
+        // restore a quiet hook for the rest of the test binary
+        let _ = std::panic::take_hook();
+        disable();
+        let text = std::fs::read_to_string(&path).expect("panic hook wrote the dump");
+        let (evs, _) = parse_chrome_trace(&text).unwrap();
+        assert!(evs.iter().any(|e| e.name == "doomed" && e.corr == 13));
+        clear();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -12,7 +12,7 @@ use anyhow::Result;
 
 use crate::checkpoint::Storage;
 use crate::config::FtConfig;
-use crate::metrics::Metrics;
+use crate::metrics::{keys, Metrics};
 use crate::smp::SmpMsg;
 use crate::snapshot::SnapshotPlan;
 
@@ -129,10 +129,10 @@ impl PersistDriver {
         metrics: &Metrics,
     ) -> Result<()> {
         let version_steps: Vec<(u64, u64)> = self.recent_versions.iter().copied().collect();
-        metrics.time("persist_stall", || {
+        metrics.time_k(keys::PERSIST_STALL, || {
             self.engine.enqueue(step, sources, version_steps)
         })?;
-        metrics.inc("persist_enqueues", 1);
+        metrics.inc_k(keys::PERSIST_ENQUEUES, 1);
         self.sync(metrics);
         Ok(())
     }
@@ -171,7 +171,7 @@ impl PersistDriver {
     /// Shutdown barrier: block until every enqueued job committed or
     /// aborted, then sync counters. The only blocking persistence call.
     pub fn flush(&mut self, metrics: &Metrics) -> Result<()> {
-        metrics.time("persist_flush", || self.engine.flush())?;
+        metrics.time_k(keys::PERSIST_FLUSH, || self.engine.flush())?;
         self.sync(metrics);
         Ok(())
     }
@@ -185,7 +185,13 @@ impl PersistDriver {
     /// / `persist_parts_*` read like every other counter.
     fn sync(&mut self, metrics: &Metrics) {
         let st = self.engine.stats();
-        metrics.inc("persisted_bytes", st.persisted_bytes - self.seen.persisted_bytes);
+        // one `persist_job` histogram sample per commit batch: the engine
+        // only retains the latest job's wall-clock, so the distribution is
+        // sampled at the sync cadence, not per job
+        if st.manifests_committed > self.seen.manifests_committed && st.last_job_secs > 0.0 {
+            metrics.record_secs_k(keys::PERSIST_JOB, st.last_job_secs);
+        }
+        metrics.inc_k(keys::PERSISTED_BYTES, st.persisted_bytes - self.seen.persisted_bytes);
         metrics.inc(
             "persisted_full_bytes",
             st.persisted_full_bytes - self.seen.persisted_full_bytes,
@@ -198,7 +204,7 @@ impl PersistDriver {
             "persist_commits",
             st.manifests_committed - self.seen.manifests_committed,
         );
-        metrics.inc("persist_aborts", st.jobs_aborted - self.seen.jobs_aborted);
+        metrics.inc_k(keys::PERSIST_ABORTS, st.jobs_aborted - self.seen.jobs_aborted);
         metrics.inc(
             "persist_parts_uploaded",
             st.parts_uploaded - self.seen.parts_uploaded,

@@ -67,6 +67,7 @@ use anyhow::{Context, Result};
 
 use crate::checkpoint::Storage;
 use crate::config::PersistConfig;
+use crate::obs;
 use crate::smp::SmpMsg;
 use crate::snapshot::plan::NodeShard;
 use crate::snapshot::{ExtentTable, SnapshotPlan};
@@ -109,6 +110,7 @@ impl Throttle {
         };
         let wait = until.saturating_duration_since(now);
         if !wait.is_zero() {
+            obs::instant(obs::cat::PERSIST, "throttle_stall", 0, wait.as_micros() as u64);
             std::thread::sleep(wait);
         }
         wait.as_secs_f64()
@@ -474,6 +476,7 @@ impl PersistEngine {
         version_steps: Vec<(u64, u64)>,
     ) -> Result<()> {
         self.stats.lock().unwrap().jobs_enqueued += 1;
+        obs::instant(obs::cat::PERSIST, "enqueue", step, 0);
         self.tx
             .send(EngineMsg::Job { step, sources, version_steps })
             .map_err(|_| anyhow::anyhow!("persistence engine is gone"))
@@ -525,6 +528,10 @@ struct UploadAcc {
     /// seconds this worker spent in storage puts (throttle sleeps excluded
     /// via `waited` — pacing is policy, not storage RTT)
     upload_s: f64,
+    /// the snapshot version the SMP served, recorded even when the upload
+    /// later fails — the flight recorder ties a job's abort back to the
+    /// round it actually drained
+    seen_version: Option<u64>,
 }
 
 /// What one writer worker produced on success.
@@ -927,6 +934,8 @@ fn write_node_inner(
                 format!("no clean snapshot for stage {} on node {node} yet", shard.stage)
             })?;
         acc.fetch_s += t_fetch.elapsed().as_secs_f64();
+        acc.seen_version = Some(v);
+        obs::instant(obs::cat::PERSIST, "fetch", v, node as u64);
         anyhow::ensure!(
             bytes.len() as u64 == shard.len(),
             "clean shard on node {node} is {} bytes, plan says {}",
@@ -947,6 +956,7 @@ fn write_node_inner(
         let table = (grain > 0).then(|| ExtentTable::build(&bytes, grain));
         let waited_before = acc.waited;
         let t_upload = Instant::now();
+        let _upload_sp = obs::span_arg(obs::cat::PERSIST, "upload", v, node as u64);
         let entry = match (&table, base) {
             (Some(t), Some(base)) => {
                 // delta round: every shard ships as an extent list. A shard
@@ -991,6 +1001,7 @@ fn run_job(
     version_steps: &[(u64, u64)],
 ) {
     let t0 = Instant::now();
+    let _job_sp = obs::span_arg(obs::cat::PERSIST, "job", step, seq);
     // the diff base, snapshotted ONCE per job so every writer diffs against
     // the same committed round; `None` ⇒ this job lands a full base (delta
     // off, nothing committed yet, or the chain hit its depth cap)
@@ -1039,6 +1050,7 @@ fn run_job(
     let mut parts_reused = 0u64;
     let mut fetch_s = 0f64;
     let mut upload_s = 0f64;
+    let mut seen_version: Option<u64> = None;
     let mut error: Option<String> = None;
     for w in results {
         wait_s += w.acc.waited;
@@ -1046,6 +1058,7 @@ fn run_job(
         parts_reused += w.acc.parts_reused;
         fetch_s += w.acc.fetch_s;
         upload_s += w.acc.upload_s;
+        seen_version = seen_version.or(w.acc.seen_version);
         match w.outcome {
             Ok(o) => {
                 versions.insert(o.version);
@@ -1072,7 +1085,10 @@ fn run_job(
     // cost: it must not inflate `last_job_secs`, which the cadence
     // scheduler treats as the per-job durable-save cost (t_persist)
     let t_gate = Instant::now();
-    shared.gate.wait_turn(seq);
+    {
+        let _gate_sp = obs::span_arg(obs::cat::PERSIST, "gate_wait", step, seq);
+        shared.gate.wait_turn(seq);
+    }
     let gate_wait = t_gate.elapsed();
     // cross-job monotonicity: overlapped jobs fetch in no particular order,
     // so a descheduled writer can hand an EARLIER step a NEWER promoted
@@ -1111,6 +1127,7 @@ fn run_job(
         }
     }
     if let Some(e) = error {
+        obs::instant(obs::cat::PERSIST, "abort", seen_version.unwrap_or(0), step);
         let mut g = shared.stats.lock().unwrap();
         g.throttle_wait_s += wait_s;
         g.parts_uploaded += parts_uploaded;
@@ -1188,6 +1205,7 @@ fn run_job(
     g.parts_reused += parts_reused;
     match committed {
         Ok(()) => {
+            obs::instant(obs::cat::PERSIST, "commit", version, step);
             g.manifests_committed += 1;
             g.persisted_bytes += full_bytes + delta_bytes;
             g.persisted_full_bytes += full_bytes;
@@ -1198,6 +1216,8 @@ fn run_job(
                 t0.elapsed().saturating_sub(gate_wait).as_secs_f64();
             match gc {
                 Some(Ok(report)) => {
+                    let swept = (report.manifests_deleted + report.blobs_deleted) as u64;
+                    obs::instant(obs::cat::PERSIST, "gc_pass", version, swept);
                     g.gc_manifests_deleted += report.manifests_deleted as u64;
                     g.gc_blobs_deleted += report.blobs_deleted as u64;
                 }
@@ -1206,6 +1226,7 @@ fn run_job(
             }
         }
         Err(e) => {
+            obs::instant(obs::cat::PERSIST, "abort", version, step);
             g.jobs_aborted += 1;
             g.last_error = Some(format!("manifest commit: {e:#}"));
         }

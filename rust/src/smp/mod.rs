@@ -25,6 +25,7 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
+use crate::obs;
 use crate::snapshot::payload::PayloadView;
 
 /// Elastic signals (paper §4.2 "Elastic Functionality").
@@ -138,6 +139,7 @@ struct DirtyBuf {
 }
 
 struct SmpState {
+    node: usize,
     status: Signal,
     /// per stage: in-flight dirty snapshot
     dirty: BTreeMap<usize, DirtyBuf>,
@@ -188,6 +190,7 @@ impl SmpState {
             }
             SmpMsg::BeginSnapshot { version, stage, total_len } => {
                 if self.accepting {
+                    obs::instant(obs::cat::SMP, "begin", version, self.node as u64);
                     // recycle a retired buffer of the right size if we have
                     // one: buckets are disjoint and promotion requires full
                     // coverage, so stale content can never leak out
@@ -201,6 +204,7 @@ impl SmpState {
             }
             SmpMsg::BeginDeltaSnapshot { version, stage, total_len, delta_len } => {
                 if self.accepting {
+                    obs::instant(obs::cat::SMP, "begin_delta", version, self.node as u64);
                     let seed = self
                         .clean
                         .get(&stage)
@@ -247,8 +251,10 @@ impl SmpState {
                         }
                     }
                     self.promotions += 1;
+                    obs::instant(obs::cat::SMP, "promote", version, self.node as u64);
                 } else {
                     self.stale_end_snapshots += 1;
+                    obs::instant(obs::cat::SMP, "stale_end", version, self.node as u64);
                 }
             }
             SmpMsg::AbortSnapshot { version, stage } => {
@@ -265,6 +271,7 @@ impl SmpState {
                         pool.push(buf.data);
                     }
                     self.aborted_in_flight += 1;
+                    obs::instant(obs::cat::SMP, "abort", version, self.node as u64);
                 }
             }
             SmpMsg::StoreParity { version, stage, data } => {
@@ -334,6 +341,7 @@ impl Smp {
             .name(format!("smp-{node}"))
             .spawn(move || {
                 let mut st = SmpState {
+                    node,
                     status: Signal::Healthy,
                     dirty: BTreeMap::new(),
                     clean: BTreeMap::new(),

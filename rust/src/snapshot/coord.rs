@@ -30,6 +30,7 @@ use std::ops::Range;
 use anyhow::Result;
 
 use crate::ec::Raim5Group;
+use crate::obs;
 use crate::snapshot::delta::StageShip;
 use crate::snapshot::payload::{PayloadView, SharedPayload};
 use crate::snapshot::plan::{NodeShard, SnapshotPlan};
@@ -297,7 +298,10 @@ impl SnapshotCoordinator {
                 self.plan.stage_bytes[stage]
             );
         }
-        if self.inflight.is_some() {
+        let total_bytes: u64 = payloads.iter().map(|p| p.len() as u64).sum();
+        let _sp = obs::span_arg(obs::cat::COORD, "submit", version, total_bytes);
+        if let Some(stale) = self.inflight.as_ref().map(|f| f.version) {
+            obs::instant(obs::cat::COORD, "supersede", stale, version);
             self.abort_in_flight(sink);
             self.stats.superseded += 1;
         }
@@ -369,6 +373,7 @@ impl SnapshotCoordinator {
         let Some(mut f) = self.inflight.take() else {
             return Ok(report);
         };
+        let _sp = obs::span(obs::cat::COORD, "drain_tick", f.version);
         self.stats.ticks += 1;
         report.version = Some(f.version);
 
@@ -443,6 +448,7 @@ impl SnapshotCoordinator {
             }
             self.stats.completed += 1;
             self.stats.last_completed_version = Some(f.version);
+            obs::instant(obs::cat::COORD, "round_complete", f.version, 0);
             report.completed = true;
             report.pending_buckets = 0;
             return Ok(report);
@@ -462,6 +468,7 @@ impl SnapshotCoordinator {
     /// XOR-linear, so outside the changed contributors' stripes the hosted
     /// block is already byte-identical to the new one.
     fn flush_completed(&mut self, f: &Inflight, sink: &mut impl CoordSink) -> Result<()> {
+        let _sp = obs::span(obs::cat::COORD, "promote", f.version);
         for w in &f.workers {
             sink.end(w.shard.node, f.version, w.shard.stage)?;
         }
@@ -505,6 +512,7 @@ impl SnapshotCoordinator {
     /// it. Send failures are ignored — aborts race node death by design.
     pub fn abort_in_flight(&mut self, sink: &mut impl CoordSink) {
         if let Some(f) = self.inflight.take() {
+            obs::instant(obs::cat::COORD, "round_abort", f.version, 0);
             let mut seen: Vec<(usize, usize)> = Vec::new();
             for w in &f.workers {
                 let key = (w.shard.node, w.shard.stage);

@@ -14,8 +14,9 @@ use anyhow::{Context, Result};
 use crate::checkpoint::{storage::step_key, CheckpointFile, SectionKind, Storage};
 use crate::config::{FtMethod, RunConfig};
 use crate::elastic::{DurableTier, RecoveryPath, RecoveryPlan, ReftCluster};
-use crate::metrics::Metrics;
+use crate::metrics::{keys, Metrics};
 use crate::model::{StageState, SyntheticCorpus};
+use crate::obs;
 use crate::persist::{self, PersistDriver, PersistStats, SnapshotScheduler};
 use crate::runtime::{self, Engine, In, Manifest};
 use crate::snapshot::SharedPayload;
@@ -143,7 +144,7 @@ impl DpTrainer {
         let mut loss_sum = 0f32;
         for _path in 0..dp {
             let (tokens, targets) = self.corpus.next_batch(b, t);
-            let outs = self.metrics.time("fwd_bwd", || {
+            let outs = self.metrics.time_k(keys::FWD_BWD, || {
                 self.engine.run_inputs(
                     &self.fwd_bwd_path,
                     &[
@@ -163,7 +164,7 @@ impl DpTrainer {
         // fused-Adam artifact advances the canonical replica
         self.state.step += 1;
         let step_in = [self.state.step as f32];
-        let outs = self.metrics.time("adam", || {
+        let outs = self.metrics.time_k(keys::ADAM, || {
             self.engine.run_inputs(
                 &self.adam_path,
                 &[
@@ -183,7 +184,7 @@ impl DpTrainer {
 
         let loss = loss_sum / dp as f32;
         self.losses.push(loss);
-        self.metrics.inc("steps", 1);
+        self.metrics.inc_k(keys::STEPS, 1);
 
         // iteration-boundary drain of any in-flight snapshot backlog (§4.1
         // L2): a bounded bucket budget per node, never O(payload)
@@ -235,7 +236,7 @@ impl DpTrainer {
         }
 
         // live cadence re-derivation from this run's measured costs
-        self.metrics.record_secs("step_wall", t_step0.elapsed().as_secs_f64());
+        self.metrics.record_secs_k(keys::STEP_WALL, t_step0.elapsed().as_secs_f64());
         let metrics = Arc::clone(&self.metrics);
         if let Some(d) = self.persist.as_mut() {
             d.observe(&metrics);
@@ -298,25 +299,28 @@ impl DpTrainer {
         let reft = self.reft.as_mut().context("REFT not enabled")?;
         let v = if use_async {
             let superseded_before = reft.coordinator().stats().superseded;
-            let v = self.metrics.time("snapshot", || reft.request_snapshot(vec![payload]))?;
+            let v = self
+                .metrics
+                .time_k(keys::SNAPSHOT, || reft.request_snapshot(vec![payload]))?;
             // chronic supersession means the interference budget never lets
             // a round finish (drain_buckets_per_tick * snapshot_interval <
             // max_node_buckets): in-memory protection would silently be
             // zero, so surface it as a counter operators can alert on
             if reft.coordinator().stats().superseded > superseded_before {
-                self.metrics.inc("snapshots_superseded", 1);
+                self.metrics.inc_k(keys::SNAPSHOTS_SUPERSEDED, 1);
             }
             v
         } else {
-            self.metrics.time("snapshot", || reft.snapshot_all(&[payload]))?
+            self.metrics.time_k(keys::SNAPSHOT, || reft.snapshot_all(&[payload]))?
         };
         // remember which step this version captured, so a later persist of
         // the round labels its manifest with the contained state honestly
         let step = self.state.step;
+        obs::instant(obs::cat::TRAINER, "snapshot", v, step);
         if let Some(d) = self.persist.as_mut() {
             d.note_snapshot(v, step);
         }
-        self.metrics.inc("snapshots", 1);
+        self.metrics.inc_k(keys::SNAPSHOTS, 1);
         Ok(v)
     }
 
@@ -329,12 +333,12 @@ impl DpTrainer {
         let Some(reft) = self.reft.as_mut() else {
             return Ok(());
         };
-        let report = self.metrics.time("snapshot_tick", || reft.tick())?;
+        let report = self.metrics.time_k(keys::SNAPSHOT_TICK, || reft.tick())?;
         if report.completed {
-            self.metrics.inc("snapshots_completed", 1);
+            self.metrics.inc_k(keys::SNAPSHOTS_COMPLETED, 1);
         }
         if report.aborted {
-            self.metrics.inc("snapshots_aborted", 1);
+            self.metrics.inc_k(keys::SNAPSHOTS_ABORTED, 1);
         }
         Ok(())
     }
@@ -348,12 +352,12 @@ impl DpTrainer {
         // "snapshot" stall measurement (enqueue cost on the async path)
         let v = self
             .metrics
-            .time("snapshot_recovery", || reft.snapshot_all_blocking(&[payload]))?;
+            .time_k(keys::SNAPSHOT_RECOVERY, || reft.snapshot_all_blocking(&[payload]))?;
         let step = self.state.step;
         if let Some(d) = self.persist.as_mut() {
             d.note_snapshot(v, step);
         }
-        self.metrics.inc("snapshots", 1);
+        self.metrics.inc_k(keys::SNAPSHOTS, 1);
         Ok(v)
     }
 
@@ -362,9 +366,9 @@ impl DpTrainer {
         let mut file = CheckpointFile::new(&self.cfg.model, self.state.step);
         file.add_section(SectionKind::StagePayload, 0, self.state.to_payload());
         let key = step_key(&self.cfg.model, self.state.step);
-        let bytes = self.metrics.time("ckpt_encode", || file.encode());
-        self.metrics.time("ckpt_put", || self.storage.put(&key, &bytes))?;
-        self.metrics.inc("checkpoints", 1);
+        let bytes = self.metrics.time_k(keys::CKPT_ENCODE, || file.encode());
+        self.metrics.time_k(keys::CKPT_PUT, || self.storage.put(&key, &bytes))?;
+        self.metrics.inc_k(keys::CHECKPOINTS, 1);
         Ok(key)
     }
 
@@ -413,7 +417,8 @@ impl DpTrainer {
         self.state.params.clear();
         self.state.adam_m.clear();
         self.state.adam_v.clear();
-        self.metrics.inc("failures_software", 1);
+        obs::instant(obs::cat::TRAINER, "sw_failure", 0, self.state.step);
+        self.metrics.inc_k(keys::FAILURES_SOFTWARE, 1);
     }
 
     /// Hardware failure: a node goes away entirely. The event also feeds
@@ -422,6 +427,7 @@ impl DpTrainer {
     /// `lambda_node` knob (hwsim-driven runs inject their Weibull schedule
     /// through here, so the Weibull stream reaches the scheduler live).
     pub fn inject_node_failure(&mut self, node: usize) {
+        obs::instant(obs::cat::TRAINER, "hw_failure", 0, node as u64);
         if let Some(reft) = self.reft.as_mut() {
             reft.kill_node(node);
         }
@@ -446,6 +452,7 @@ impl DpTrainer {
     /// mismatches under `recovery_mispredictions`). Returns the step we
     /// resumed from.
     pub fn recover(&mut self, dead: &[usize]) -> Result<u64> {
+        let _sp = obs::span_arg(obs::cat::TRAINER, "recover", 0, dead.len() as u64);
         let plan = match &self.reft {
             Some(_) => RecoveryPlan::probe(
                 &self.topo,
@@ -466,7 +473,7 @@ impl DpTrainer {
                 .and_then(|r| r.restore_all(dead))?;
             let n_params = me.manifest.total_params;
             me.state = StageState::from_payload(0, n_params, &payloads[0])?;
-            me.metrics.inc("recoveries_inmemory", 1);
+            me.metrics.inc_k(keys::RECOVERIES_INMEMORY, 1);
             Ok(())
         };
         let actual = match plan.predicted() {
@@ -520,8 +527,8 @@ impl DpTrainer {
             legacy_key.as_deref(),
         ) {
             self.state = StageState::from_payload(0, n_params, &stages[0])?;
-            self.metrics.inc("recoveries_checkpoint", 1);
-            self.metrics.inc("recoveries_manifest", 1);
+            self.metrics.inc_k(keys::RECOVERIES_CHECKPOINT, 1);
+            self.metrics.inc_k(keys::RECOVERIES_MANIFEST, 1);
             self.metrics
                 .gauge("recovered_manifest_step", man.snapshot_step as f64);
             let restored: usize = stages.iter().map(Vec::len).sum();
@@ -541,8 +548,8 @@ impl DpTrainer {
             .stage_payload(0)
             .context("checkpoint missing stage payload")?;
         self.state = StageState::from_payload(0, n_params, payload)?;
-        self.metrics.inc("recoveries_checkpoint", 1);
-        self.metrics.inc("recoveries_legacy", 1);
+        self.metrics.inc_k(keys::RECOVERIES_CHECKPOINT, 1);
+        self.metrics.inc_k(keys::RECOVERIES_LEGACY, 1);
         Ok(RecoveryPath::Durable(DurableTier::Legacy))
     }
 }

@@ -20,8 +20,9 @@ use anyhow::{Context, Result};
 use crate::checkpoint::{storage::step_key, CheckpointFile, SectionKind, Storage};
 use crate::config::{FtMethod, RunConfig};
 use crate::elastic::{DurableTier, RecoveryPath, RecoveryPlan, ReftCluster};
-use crate::metrics::Metrics;
+use crate::metrics::{keys, Metrics};
 use crate::model::{StageState, SyntheticCorpus};
+use crate::obs;
 use crate::persist::{self, PersistDriver, PersistStats, SnapshotScheduler};
 use crate::pipeline::{self, Op, Schedule};
 use crate::runtime::{self, Engine, In, Manifest};
@@ -217,7 +218,7 @@ impl PipelineTrainer {
 
         let loss = loss_total / (dp * n_micro) as f32;
         self.losses.push(loss);
-        self.metrics.inc("steps", 1);
+        self.metrics.inc_k(keys::STEPS, 1);
 
         // iteration-boundary drain of any in-flight snapshot backlog (§4.1
         // L2): a bounded bucket budget per node, never O(payload)
@@ -263,7 +264,7 @@ impl PipelineTrainer {
         }
 
         // live cadence re-derivation from this run's measured costs
-        self.metrics.record_secs("step_wall", t_step0.elapsed().as_secs_f64());
+        self.metrics.record_secs_k(keys::STEP_WALL, t_step0.elapsed().as_secs_f64());
         let metrics = Arc::clone(&self.metrics);
         if let Some(d) = self.persist.as_mut() {
             d.observe(&metrics);
@@ -310,7 +311,7 @@ impl PipelineTrainer {
         if s == 0 && pp == 1 {
             // single-stage: fused fwd_bwd artifact
             let path = meta.artifacts.get("fwd_bwd")?.to_string();
-            let outs = self.metrics.time("stage_fwd", || {
+            let outs = self.metrics.time_k(keys::STAGE_FWD, || {
                 self.engine.run_inputs(
                     &path,
                     &[
@@ -329,7 +330,7 @@ impl PipelineTrainer {
         }
         if s == 0 {
             let path = meta.artifacts.get("fwd")?.to_string();
-            let outs = self.metrics.time("stage_fwd", || {
+            let outs = self.metrics.time_k(keys::STAGE_FWD, || {
                 self.engine.run_inputs(
                     &path,
                     &[In::f32(&self.stages[s].params, &[n]), In::i32(tokens, &[b, t])],
@@ -346,7 +347,7 @@ impl PipelineTrainer {
         if s == pp - 1 {
             // last stage: fused fwd+bwd (loss, dx, grads)
             let path = meta.artifacts.get("fwdbwd")?.to_string();
-            let outs = self.metrics.time("stage_fwdbwd", || {
+            let outs = self.metrics.time_k(keys::STAGE_FWDBWD, || {
                 self.engine.run_inputs(
                     &path,
                     &[
@@ -367,7 +368,7 @@ impl PipelineTrainer {
         }
         // middle stage
         let path = meta.artifacts.get("fwd")?.to_string();
-        let outs = self.metrics.time("stage_fwd", || {
+        let outs = self.metrics.time_k(keys::STAGE_FWD, || {
             self.engine.run_inputs(
                 &path,
                 &[In::f32(&self.stages[s].params, &[n]), In::f32(&x, &[b, t, d])],
@@ -404,7 +405,7 @@ impl PipelineTrainer {
         let (tokens, _) = batch;
         if s == 0 {
             let path = meta.artifacts.get("bwd")?.to_string();
-            let outs = self.metrics.time("stage_bwd", || {
+            let outs = self.metrics.time_k(keys::STAGE_BWD, || {
                 self.engine.run_inputs(
                     &path,
                     &[
@@ -423,7 +424,7 @@ impl PipelineTrainer {
                 .remove(&(s, micro))
                 .with_context(|| format!("missing activation for bwd stage {s} micro {micro}"))?;
             let path = meta.artifacts.get("bwd")?.to_string();
-            let outs = self.metrics.time("stage_bwd", || {
+            let outs = self.metrics.time_k(keys::STAGE_BWD, || {
                 self.engine.run_inputs(
                     &path,
                     &[
@@ -449,7 +450,7 @@ impl PipelineTrainer {
         let path = meta.artifacts.get("adam")?.to_string();
         let step = self.stages[s].step + 1;
         let step_in = [step as f32];
-        let outs = self.metrics.time("adam", || {
+        let outs = self.metrics.time_k(keys::ADAM, || {
             self.engine.run_inputs(
                 &path,
                 &[
@@ -500,23 +501,26 @@ impl PipelineTrainer {
         let reft = self.reft.as_mut().context("REFT not enabled")?;
         let v = if use_async {
             let superseded_before = reft.coordinator().stats().superseded;
-            let v = self.metrics.time("snapshot", || reft.request_snapshot(payloads))?;
+            let v = self
+                .metrics
+                .time_k(keys::SNAPSHOT, || reft.request_snapshot(payloads))?;
             // chronic supersession = the interference budget never lets a
             // round finish; protection would silently be zero, so count it
             if reft.coordinator().stats().superseded > superseded_before {
-                self.metrics.inc("snapshots_superseded", 1);
+                self.metrics.inc_k(keys::SNAPSHOTS_SUPERSEDED, 1);
             }
             v
         } else {
-            self.metrics.time("snapshot", || reft.snapshot_all(&payloads))?
+            self.metrics.time_k(keys::SNAPSHOT, || reft.snapshot_all(&payloads))?
         };
         // remember which step this version captured, so a later persist of
         // the round labels its manifest with the contained state honestly
         let step = self.stages[0].step;
+        obs::instant(obs::cat::TRAINER, "snapshot", v, step);
         if let Some(d) = self.persist.as_mut() {
             d.note_snapshot(v, step);
         }
-        self.metrics.inc("snapshots", 1);
+        self.metrics.inc_k(keys::SNAPSHOTS, 1);
         Ok(v)
     }
 
@@ -529,12 +533,12 @@ impl PipelineTrainer {
         let Some(reft) = self.reft.as_mut() else {
             return Ok(());
         };
-        let report = self.metrics.time("snapshot_tick", || reft.tick())?;
+        let report = self.metrics.time_k(keys::SNAPSHOT_TICK, || reft.tick())?;
         if report.completed {
-            self.metrics.inc("snapshots_completed", 1);
+            self.metrics.inc_k(keys::SNAPSHOTS_COMPLETED, 1);
         }
         if report.aborted {
-            self.metrics.inc("snapshots_aborted", 1);
+            self.metrics.inc_k(keys::SNAPSHOTS_ABORTED, 1);
         }
         Ok(())
     }
@@ -553,12 +557,12 @@ impl PipelineTrainer {
         // "snapshot" stall measurement (enqueue cost on the async path)
         let v = self
             .metrics
-            .time("snapshot_recovery", || reft.snapshot_all_blocking(&payloads))?;
+            .time_k(keys::SNAPSHOT_RECOVERY, || reft.snapshot_all_blocking(&payloads))?;
         let step = self.stages[0].step;
         if let Some(d) = self.persist.as_mut() {
             d.note_snapshot(v, step);
         }
-        self.metrics.inc("snapshots", 1);
+        self.metrics.inc_k(keys::SNAPSHOTS, 1);
         Ok(v)
     }
 
@@ -569,9 +573,9 @@ impl PipelineTrainer {
             file.add_section(SectionKind::StagePayload, s as u32, st.to_payload());
         }
         let key = step_key(&self.cfg.model, step);
-        let bytes = self.metrics.time("ckpt_encode", || file.encode());
-        self.metrics.time("ckpt_put", || self.storage.put(&key, &bytes))?;
-        self.metrics.inc("checkpoints", 1);
+        let bytes = self.metrics.time_k(keys::CKPT_ENCODE, || file.encode());
+        self.metrics.time_k(keys::CKPT_PUT, || self.storage.put(&key, &bytes))?;
+        self.metrics.inc_k(keys::CHECKPOINTS, 1);
         Ok(key)
     }
 
@@ -620,13 +624,15 @@ impl PipelineTrainer {
             st.adam_m.clear();
             st.adam_v.clear();
         }
-        self.metrics.inc("failures_software", 1);
+        obs::instant(obs::cat::TRAINER, "sw_failure", 0, self.stages[0].step);
+        self.metrics.inc_k(keys::FAILURES_SOFTWARE, 1);
     }
 
     /// Hardware failure: a node goes away entirely. The event also feeds
     /// the live persist-cadence scheduler's rolling empirical λ (see
     /// `DpTrainer::inject_node_failure`).
     pub fn inject_node_failure(&mut self, node: usize) {
+        obs::instant(obs::cat::TRAINER, "hw_failure", 0, node as u64);
         if let Some(reft) = self.reft.as_mut() {
             reft.kill_node(node);
         }
@@ -638,7 +644,7 @@ impl PipelineTrainer {
         if let Some(s) = self.snap_sched.as_mut() {
             s.note_failure();
         }
-        self.metrics.inc("failures_hardware", 1);
+        self.metrics.inc_k(keys::FAILURES_HARDWARE, 1);
     }
 
     /// Recover from the failure described by `dead`, driven by the elastic
@@ -646,6 +652,7 @@ impl PipelineTrainer {
     /// predict → execute → predicted-vs-actual telemetry flow, over
     /// per-stage states here).
     pub fn recover(&mut self, dead: &[usize]) -> Result<u64> {
+        let _sp = obs::span_arg(obs::cat::TRAINER, "recover", 0, dead.len() as u64);
         let sizes: Vec<usize> = self.manifest.stages.iter().map(|m| m.n_params).collect();
         let plan = match &self.reft {
             Some(_) => RecoveryPlan::probe(
@@ -667,7 +674,7 @@ impl PipelineTrainer {
             for (s, payload) in payloads.iter().enumerate() {
                 me.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
             }
-            me.metrics.inc("recoveries_inmemory", 1);
+            me.metrics.inc_k(keys::RECOVERIES_INMEMORY, 1);
             Ok(())
         };
         let actual = match plan.predicted() {
@@ -722,8 +729,8 @@ impl PipelineTrainer {
             for (s, payload) in payloads.iter().enumerate() {
                 self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
             }
-            self.metrics.inc("recoveries_checkpoint", 1);
-            self.metrics.inc("recoveries_manifest", 1);
+            self.metrics.inc_k(keys::RECOVERIES_CHECKPOINT, 1);
+            self.metrics.inc_k(keys::RECOVERIES_MANIFEST, 1);
             self.metrics
                 .gauge("recovered_manifest_step", man.snapshot_step as f64);
             let restored: usize = payloads.iter().map(Vec::len).sum();
@@ -744,8 +751,8 @@ impl PipelineTrainer {
                 .with_context(|| format!("checkpoint missing stage {s}"))?;
             self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
         }
-        self.metrics.inc("recoveries_checkpoint", 1);
-        self.metrics.inc("recoveries_legacy", 1);
+        self.metrics.inc_k(keys::RECOVERIES_CHECKPOINT, 1);
+        self.metrics.inc_k(keys::RECOVERIES_LEGACY, 1);
         Ok(RecoveryPath::Durable(DurableTier::Legacy))
     }
 }

@@ -638,6 +638,104 @@ fn crash_matrix_sweep() {
     assert_eq!(ran, 36, "the matrix must cover every (shape x crash) cell");
 }
 
+/// The flight-recorder cell: one async snapshot round fully drains, then
+/// its persist job dies mid-upload (Chaos kills the shard puts). The dump
+/// a crash handler would write on that injected failure must be non-empty,
+/// parse back through util/json.rs, and contain the failed round's whole
+/// span chain — coordinator enqueue → drain → persist fetch → abort —
+/// reconstructible by the round's correlation id (the snapshot version),
+/// with the abort stamped with the persist step it interrupted.
+///
+/// CI runs this cell with `FLIGHT_DUMP_PATH` pointed at an artifact path
+/// and uploads the dump; locally it lands in `target/`.
+#[test]
+fn crash_matrix_flight_recorder_dump() {
+    reft::obs::enable();
+    let mut rng = Rng::seed_from(SEED ^ 0xF11);
+    let topo = Topology::build(ParallelPlan::dp_only(24), 6, 4).unwrap();
+    let stage_bytes = vec![24_000u64];
+    let ft = FtConfig {
+        bucket_bytes: 1024,
+        async_snapshot: true,
+        drain_buckets_per_tick: 64,
+        ..FtConfig::default()
+    };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    let model = "cm-flight";
+    let inner = Arc::new(MemStorage::new());
+    let v1 = payloads(&stage_bytes, &mut rng);
+    let v = cluster.request_snapshot(v1).unwrap();
+    cluster.drain_pending().unwrap();
+
+    // the persist drain survives exactly one shard put, then every later
+    // put is the injected failure — the job must abort manifest-less
+    let step = 777u64;
+    let chaos = Arc::new(Chaos {
+        puts_remaining: AtomicI64::new(1),
+        ..Chaos::wrap(Arc::clone(&inner))
+    });
+    let engine = PersistEngine::start(
+        model,
+        chaos as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        base_persist(),
+    );
+    engine.enqueue(step, cluster.persist_sources(), vec![]).unwrap();
+    engine.flush().unwrap();
+    let st = engine.stats();
+    assert_eq!(
+        (st.manifests_committed, st.jobs_aborted),
+        (0, 1),
+        "{:?}",
+        st.last_error
+    );
+
+    // what the panic hook does on a real crash: snapshot the rings to disk
+    let dump_path = std::env::var("FLIGHT_DUMP_PATH")
+        .unwrap_or_else(|_| "target/flight_recorder_cm.json".to_string());
+    reft::obs::flight_dump(&dump_path).unwrap();
+    reft::obs::disable();
+
+    // parse the dump back and reconstruct the failed round's chain by corr
+    // id. Existence checks only — this binary's other tests may interleave
+    // their own (differently-numbered) events into the shared rings.
+    let text = std::fs::read_to_string(&dump_path).unwrap();
+    let (events, _dropped) = reft::obs::parse_chrome_trace(&text).unwrap();
+    assert!(!events.is_empty(), "flight-recorder dump must not be empty");
+    let has = |cat: &str, name: &str, corr: u64| {
+        events
+            .iter()
+            .any(|e| e.cat == cat && e.name == name && e.corr == corr)
+    };
+    assert!(
+        has(reft::obs::cat::COORD, "submit", v),
+        "round v{v}: coordinator enqueue missing from the dump"
+    );
+    assert!(
+        has(reft::obs::cat::COORD, "drain_tick", v),
+        "round v{v}: L2 drain missing from the dump"
+    );
+    assert!(
+        has(reft::obs::cat::PERSIST, "fetch", v),
+        "round v{v}: persist shard fetch missing from the dump"
+    );
+    let abort_tied = events.iter().any(|e| {
+        e.cat == reft::obs::cat::PERSIST
+            && e.name == "abort"
+            && e.corr == v
+            && e.arg == step
+    });
+    assert!(
+        abort_tied,
+        "round v{v}: the persist abort must carry the drained round's \
+         version and the step-{step} job it interrupted"
+    );
+    let enqueued = events.iter().any(|e| {
+        e.cat == reft::obs::cat::PERSIST && e.name == "enqueue" && e.corr == step
+    });
+    assert!(enqueued, "step-{step} persist enqueue missing from the dump");
+}
+
 /// Cross-tier tie-break, live: a legacy checkpoint strictly newer than the
 /// newest manifest's contained state is both PREDICTED and SERVED — no
 /// misprediction, even though a manifest exists.

@@ -1,0 +1,115 @@
+//! End-to-end trace validation: run a real async-snapshot + persist
+//! sequence with the span tracer on, export the Chrome/Perfetto JSON, and
+//! load it back through util/json.rs — the trace must be well-formed
+//! (every Begin closed, properly nested per thread and clock lane) and the
+//! round correlation ids must be consistent across every layer a round
+//! crosses: trainer-facing coordinator enqueue → L2 drain → SMP intake and
+//! promotion → persist fetch → manifest commit.
+//!
+//! This is its own integration binary on purpose: the tracer is global
+//! per-process state, and this test wants a ring containing exactly one
+//! run's events.
+
+use std::sync::Arc;
+
+use reft::checkpoint::{MemStorage, Storage};
+use reft::config::{FtConfig, PersistConfig};
+use reft::elastic::ReftCluster;
+use reft::obs;
+use reft::persist::PersistEngine;
+use reft::snapshot::SharedPayload;
+use reft::topology::{ParallelPlan, Topology};
+use reft::util::rng::Rng;
+
+fn payloads(stage_bytes: &[u64], rng: &mut Rng) -> Vec<SharedPayload> {
+    stage_bytes
+        .iter()
+        .map(|&b| SharedPayload::new((0..b).map(|_| rng.next_u64() as u8).collect()))
+        .collect()
+}
+
+#[test]
+fn trace_roundtrip_async_snapshot_and_persist() {
+    obs::enable();
+    let mut rng = Rng::seed_from(0x0B5_7ACE);
+    let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+    let stage_bytes = vec![20_000u64, 16_000, 18_000];
+    let ft = FtConfig {
+        bucket_bytes: 2048,
+        async_snapshot: true,
+        drain_buckets_per_tick: 4,
+        ..FtConfig::default()
+    };
+    let mut cluster = ReftCluster::start(topo, &stage_bytes, ft).unwrap();
+    let storage = Arc::new(MemStorage::new());
+    let engine = PersistEngine::start(
+        "obs-trace",
+        Arc::clone(&storage) as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        PersistConfig {
+            enabled: true,
+            throttle_bytes_per_sec: 0,
+            chunk_bytes: 4096,
+            keep_last: 8,
+            ..PersistConfig::default()
+        },
+    );
+
+    // two full async rounds, each drained to promotion and persisted
+    for round in 0..2u64 {
+        let p = payloads(&stage_bytes, &mut rng);
+        cluster.request_snapshot(p).unwrap();
+        cluster.drain_pending().unwrap();
+        engine
+            .enqueue(10 * (round + 1), cluster.persist_sources(), vec![])
+            .unwrap();
+        engine.flush().unwrap();
+    }
+    let st = engine.stats();
+    assert_eq!(st.manifests_committed, 2, "{:?}", st.last_error);
+
+    let text = obs::chrome_trace_json(&obs::drain());
+    obs::disable();
+
+    // the export must load back through the crate's own JSON layer
+    let (events, dropped) = obs::parse_chrome_trace(&text).unwrap();
+    assert!(!events.is_empty(), "the run must record events");
+    assert_eq!(dropped, 0, "a run this small must not overflow the rings");
+
+    // well-formed nesting: every Begin closed by its End, LIFO per
+    // (clock, thread) lane — no span from one layer half-open in another
+    let matched = obs::check_nesting(&events, false).unwrap();
+    assert!(matched > 0, "the run must record at least one closed span");
+
+    // cross-layer round-id consistency: both committed rounds' corr chains
+    // exist in every layer the round crossed
+    let committed: Vec<u64> = events
+        .iter()
+        .filter(|e| e.cat == obs::cat::PERSIST && e.name == "commit")
+        .map(|e| e.corr)
+        .collect();
+    assert_eq!(committed.len(), 2, "both persisted rounds must commit in-trace");
+    for v in committed {
+        for (cat, name) in [
+            (obs::cat::COORD, "submit"),
+            (obs::cat::COORD, "drain_tick"),
+            (obs::cat::COORD, "round_complete"),
+            (obs::cat::SMP, "begin"),
+            (obs::cat::SMP, "promote"),
+            (obs::cat::PERSIST, "fetch"),
+        ] {
+            assert!(
+                events
+                    .iter()
+                    .any(|e| e.cat == cat && e.name == name && e.corr == v),
+                "round v{v}: missing {cat}/{name} in the exported trace"
+            );
+        }
+    }
+
+    // the two-clock rule: nothing in this run stamped the sim lane
+    assert!(
+        events.iter().all(|e| !e.sim),
+        "wall-clock-only run must not emit sim-lane events"
+    );
+}

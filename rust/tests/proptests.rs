@@ -707,3 +707,95 @@ fn prop_state_payload_roundtrip() {
         assert_eq!(back.rng_state, st.rng_state);
     }
 }
+
+/// Every nanosecond sample lands in the log2 bucket whose `[lo, hi)` range
+/// contains it, for arbitrary magnitudes including the boundary powers of
+/// two themselves.
+#[test]
+fn prop_histogram_bucket_boundaries() {
+    use reft::metrics::{bucket_bounds, bucket_of};
+    let mut rng = Rng::seed_from(0xB1C);
+    for case in 0..2000 {
+        // spread cases across the full 64-bucket dynamic range: a random
+        // bucket, then a random offset within it (plus the exact bounds)
+        let b = rng.below(63);
+        let (lo, hi) = bucket_bounds(b);
+        let span = hi - lo;
+        let samples = [lo, hi - 1, lo + rng.next_u64() % span];
+        for ns in samples {
+            let got = bucket_of(ns);
+            let (glo, ghi) = bucket_bounds(got);
+            assert!(
+                (glo..ghi).contains(&ns),
+                "case {case}: {ns} ns filed in bucket {got} [{glo},{ghi})"
+            );
+            if ns > 0 {
+                assert_eq!(got, b, "case {case}: {ns} ns left bucket {b}");
+            }
+        }
+    }
+}
+
+/// Quantiles are monotone in `q`, clamped to the observed `[min, max]`,
+/// and the empty histogram answers a defined 0.0 everywhere — for random
+/// sample sets spanning nanoseconds to minutes.
+#[test]
+fn prop_histogram_quantiles_monotone_and_bounded() {
+    use reft::metrics::Histogram;
+    let mut rng = Rng::seed_from(0x9A77);
+    for case in 0..300 {
+        let mut h = Histogram::default();
+        let n = 1 + rng.below(400);
+        let (mut min_ns, mut max_ns) = (u64::MAX, 0u64);
+        for _ in 0..n {
+            // log-uniform magnitudes: 1 ns .. ~100 s
+            let mag = rng.below(38) as u32;
+            let ns = 1u64 + rng.next_u64() % 2u64.pow(mag).max(1);
+            min_ns = min_ns.min(ns);
+            max_ns = max_ns.max(ns);
+            h.record_ns(ns);
+        }
+        let qs = [0.0, 0.1, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0];
+        let mut prev = f64::MIN;
+        for q in qs {
+            let v = h.quantile(q);
+            assert!(
+                v >= prev,
+                "case {case}: quantile not monotone at q={q}: {v} < {prev}"
+            );
+            assert!(
+                v >= min_ns as f64 / 1e9 - 1e-12 && v <= max_ns as f64 / 1e9 + 1e-12,
+                "case {case}: q={q} -> {v}s outside observed [{min_ns},{max_ns}] ns"
+            );
+            prev = v;
+        }
+        assert_eq!(h.count, n as u64);
+    }
+    // the empty histogram: every quantile defined, no panic, exactly 0.0
+    let empty = Histogram::default();
+    for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+        assert_eq!(empty.quantile(q), 0.0);
+    }
+}
+
+/// The live `Metrics` histogram plane agrees with a reference count: what
+/// goes in via `record_secs` comes back out of `histogram()`/`timer_quantile`
+/// with the same population and a p99 no smaller than the p50.
+#[test]
+fn prop_metrics_histogram_plane_consistent() {
+    use reft::metrics::Metrics;
+    let mut rng = Rng::seed_from(0xFA57);
+    for case in 0..60 {
+        let m = Metrics::new();
+        let n = 1 + rng.below(200);
+        for _ in 0..n {
+            // 1 us .. ~1 s
+            m.record_secs("op", (1 + rng.below(1_000_000)) as f64 * 1e-6);
+        }
+        let h = m.histogram("op");
+        assert_eq!(h.count, n as u64, "case {case}");
+        let (p50, p99) = (m.timer_quantile("op", 0.5), m.timer_quantile("op", 0.99));
+        assert!(p99 >= p50, "case {case}: p99 {p99} < p50 {p50}");
+        assert!(p50 > 0.0, "case {case}: positive samples give a positive p50");
+    }
+}
