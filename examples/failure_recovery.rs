@@ -5,6 +5,7 @@
 //!
 //! ```bash
 //! cargo run --release --example failure_recovery
+//! cargo run --release --example failure_recovery -- --seed 1234   # replay
 //! ```
 //! (No artifacts needed — this exercises the FT fabric directly.)
 
@@ -37,6 +38,17 @@ fn main() -> anyhow::Result<()> {
     if trace_out.is_some() {
         reft::obs::enable();
     }
+    // `--seed N` replays the walkthrough byte for byte: both clusters'
+    // payloads fork off this one master through the hwsim seed-stream
+    // discipline (domain-tagged forks, so extra draws in one consumer
+    // never shift another)
+    let master_seed: u64 = args
+        .iter()
+        .position(|a| a == "--seed")
+        .and_then(|i| args.get(i + 1))
+        .map(|s| s.parse().expect("--seed takes a u64"))
+        .unwrap_or(42);
+    let mut payload_rng = reft::hwsim::seed::stream(master_seed, reft::hwsim::seed::PAYLOAD);
 
     // the paper's Fig. 3 topology: 2 DP x 4 TP x 3 PP on 6 nodes x 4 GPUs
     let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4)?;
@@ -44,6 +56,7 @@ fn main() -> anyhow::Result<()> {
     let ft = FtConfig::default();
 
     println!("== REFT failure-recovery walkthrough ==");
+    println!("seed: {master_seed} (replay with --seed {master_seed})");
     println!("topology: 2 DP x 4 TP x 3 PP on 6 nodes (paper Fig. 3 setup)");
     for sg in topo.sharding_groups() {
         println!("  SG_{} (stage {}) = nodes {:?}", sg.stage, sg.stage, sg.nodes);
@@ -51,7 +64,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n-- bring-up + first snapshot round --");
     let mut cluster = ReftCluster::start(topo.clone(), &stage_bytes, ft)?;
-    let data = payloads(&stage_bytes, 42);
+    let data = payloads(&stage_bytes, payload_rng.next_u64());
     let v = cluster.snapshot_all(&data)?;
     println!(
         "snapshot v{v}: {} sharded across SGs, RAIM5 parity placed",
@@ -153,7 +166,7 @@ fn main() -> anyhow::Result<()> {
         plan.predicted()
     );
     assert_eq!(plan.predicted(), Some(RecoveryPath::InMemory));
-    let restored = cluster2_restore(&topo, &stage_bytes)?;
+    let restored = cluster2_restore(&topo, &stage_bytes, payload_rng.next_u64())?;
     plan.record_actual(&metrics, RecoveryPath::InMemory);
     println!(
         "restored {} bytes from a fresh fabric; plans {} mispredictions {}",
@@ -175,9 +188,9 @@ fn main() -> anyhow::Result<()> {
 
 /// A fresh protected fabric restored end to end — scenario 6's "actual"
 /// leg (the walkthrough cluster above has two nodes down by now).
-fn cluster2_restore(topo: &Topology, stage_bytes: &[u64]) -> anyhow::Result<usize> {
+fn cluster2_restore(topo: &Topology, stage_bytes: &[u64], seed: u64) -> anyhow::Result<usize> {
     let mut cluster = ReftCluster::start(topo.clone(), stage_bytes, FtConfig::default())?;
-    let data = payloads(stage_bytes, 7);
+    let data = payloads(stage_bytes, seed);
     cluster.snapshot_all(&data)?;
     let restored = cluster.restore_all(&[])?;
     anyhow::ensure!(restored == data, "scenario 6 restore diverged");

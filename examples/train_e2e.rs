@@ -11,6 +11,8 @@
 //! cargo run --release --example train_e2e -- --model tiny --steps 40
 //! # 2-stage pipeline flavour:
 //! cargo run --release --example train_e2e -- --model e2e-25m --pp 2 --steps 100
+//! # replay a run bit-for-bit (data stream + init are seed-derived):
+//! cargo run --release --example train_e2e -- --seed 1234
 //! ```
 //!
 //! Outputs `artifacts/e2e_loss.csv` (step, loss, event) — the run recorded in
@@ -81,9 +83,14 @@ fn main() -> anyhow::Result<()> {
     if trace_out.is_some() {
         reft::obs::enable();
     }
+    // `--seed N` replays the exact run: parameter init and the synthetic
+    // corpus stream both derive from RunConfig::seed, so a recorded seed
+    // reproduces the loss curve byte for byte
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).unwrap_or(Ok(RunConfig::default().seed))?;
 
     let mut cfg = RunConfig::default();
     cfg.model = model.clone();
+    cfg.seed = seed;
     cfg.plan = if pp > 1 {
         ParallelPlan::new(dp, 1, pp)
     } else {
@@ -123,7 +130,7 @@ fn main() -> anyhow::Result<()> {
         "model={model} steps={steps} plan=dp{dp}/pp{pp} ft=reft-ckpt \
          snapshot_every=5 persist_every=20 async_snapshot={async_on} \
          persist_engine={persist_on} auto_cadence={auto_cadence} \
-         delta_extent={}",
+         delta_extent={} seed={seed}",
         cfg.ft.delta_extent_bytes
     );
 

@@ -1,0 +1,362 @@
+//! Correlated failure-trace generation: the modes the independent
+//! per-node Weibull model (Assumption 1) cannot express.
+//!
+//! Real clusters fail in bursts, not just as independent renewals
+//! (PAPERS.md: Gemini's checkpoint-placement study and the MegaScale
+//! production postmortems both report rack- and switch-scoped outages as
+//! the recovery-critical tail):
+//!
+//! * **Rack/switch burst** — a ToR switch or rack PDU dies and every node
+//!   behind it goes OFFLINE in the *same tick*. When the rack hosts a whole
+//!   sharding group this exceeds RAIM5's one-loss-per-SG budget by
+//!   construction, so every burst is a forced durable-tier recovery — the
+//!   case Eq. 7's independence assumption prices as negligibly rare.
+//! * **Flapping node** — marginal hardware (ECC, thermals, a bad link)
+//!   producing a rapid train of *software*-class failures on one node:
+//!   each kill is individually benign (SMP survives), but the burst keeps
+//!   re-triggering recovery and starves goodput.
+//! * **Storage brownout** — the durable backend (object store, PFS) goes
+//!   unavailable or degraded for a window. No node dies; instead persists
+//!   stall and — the dangerous overlap — a protection-exceeding loss
+//!   *during* the window finds the durable tier unreachable and must wait
+//!   it out.
+//!
+//! The generator layers these processes over the base Weibull schedule
+//! from ONE forked [`Rng`] stream, tags every event with its
+//! [`FailureClass`] so the soak harness can account goodput per class
+//! (paper fig. 8 style), and flattens to the plain [`FailureSchedule`]
+//! the cadence trackers ingest.
+
+use super::failure::{FailureEvent, FailureKind, FailureModel, FailureSchedule};
+use crate::util::rng::Rng;
+
+/// Which injection process produced an event — the soak's per-class
+/// goodput split keys on this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FailureClass {
+    /// independent per-node Weibull TTF (the Assumption 1 base process)
+    Independent,
+    /// rack/switch burst: every node of one rack OFFLINE in the same tick
+    RackBurst,
+    /// flapping node: a rapid train of software kills on one node
+    Flap,
+}
+
+impl FailureClass {
+    /// Stable lowercase name (report keys, trace dumps).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FailureClass::Independent => "independent",
+            FailureClass::RackBurst => "rack_burst",
+            FailureClass::Flap => "flap",
+        }
+    }
+}
+
+/// One event of a correlated trace: the base failure event plus the
+/// process that produced it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaggedEvent {
+    pub event: FailureEvent,
+    pub class: FailureClass,
+}
+
+/// A transient storage-backend brownout: durable-tier operations stall
+/// (or fail) throughout `[at, at + duration)`. Not a node failure — it is
+/// injected at the `Storage` layer, which is why it lives beside the node
+/// events rather than among them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Brownout {
+    pub at: f64,
+    pub duration: f64,
+}
+
+impl Brownout {
+    /// End of the window (first instant the backend is healthy again).
+    pub fn end(&self) -> f64 {
+        self.at + self.duration
+    }
+
+    /// Whether the backend is browned out at time `t`.
+    pub fn covers(&self, t: f64) -> bool {
+        t >= self.at && t < self.end()
+    }
+}
+
+/// Rates for the correlated modes layered over the independent Weibull
+/// base process. All rates are cluster-wide Poisson arrival rates per unit
+/// time (the correlated processes scope to racks / single marginal nodes /
+/// the shared storage backend, so they do not scale per-node the way
+/// Assumption 1 does).
+#[derive(Debug, Clone, Copy)]
+pub struct CorrelatedSpec {
+    /// rack/switch bursts per unit time (0 disables the mode)
+    pub rack_burst_rate: f64,
+    /// flap episodes per unit time (0 disables)
+    pub flap_rate: f64,
+    /// software kills per flap episode
+    pub flap_burst: usize,
+    /// spacing between kills within one episode
+    pub flap_spacing: f64,
+    /// storage brownouts per unit time (0 disables)
+    pub brownout_rate: f64,
+    /// length of each brownout window
+    pub brownout_duration: f64,
+}
+
+impl Default for CorrelatedSpec {
+    fn default() -> Self {
+        CorrelatedSpec {
+            rack_burst_rate: 0.0,
+            flap_rate: 0.0,
+            flap_burst: 4,
+            flap_spacing: 5.0,
+            brownout_rate: 0.0,
+            brownout_duration: 120.0,
+        }
+    }
+}
+
+/// A pre-drawn correlated trace: time-ordered tagged node events plus the
+/// storage brownout windows.
+#[derive(Debug, Clone, Default)]
+pub struct CorrelatedTrace {
+    /// tagged node failures, sorted by `event.at`
+    pub events: Vec<TaggedEvent>,
+    /// brownout windows, sorted and non-overlapping
+    pub brownouts: Vec<Brownout>,
+}
+
+impl CorrelatedTrace {
+    /// Flatten to the plain schedule the λ trackers and legacy harness
+    /// paths ingest (the class tags are a soak-side refinement).
+    pub fn schedule(&self) -> FailureSchedule {
+        FailureSchedule { events: self.events.iter().map(|t| t.event).collect() }
+    }
+
+    /// All tagged events within `(t0, t1]`.
+    pub fn in_window(&self, t0: f64, t1: f64) -> impl Iterator<Item = &TaggedEvent> {
+        self.events.iter().filter(move |t| t.event.at > t0 && t.event.at <= t1)
+    }
+
+    /// The brownout window covering time `t`, if the backend is dark then.
+    pub fn brownout_at(&self, t: f64) -> Option<&Brownout> {
+        self.brownouts.iter().find(|b| b.covers(t))
+    }
+}
+
+impl CorrelatedSpec {
+    /// Draw a correlated trace over `[0, horizon]`: the independent
+    /// Weibull base from `model`, plus rack bursts / flaps / brownouts at
+    /// this spec's rates. `racks` lists the physical blast domains (the
+    /// soak passes the topology's sharding groups — one rack per SG, the
+    /// worst case for RAIM5); every arrival of the burst process kills
+    /// EVERY node of one uniformly chosen rack at the same instant.
+    ///
+    /// One `rng` stream drives all four processes, so a single seed
+    /// reproduces the whole trace.
+    pub fn trace(
+        &self,
+        model: &FailureModel,
+        rng: &mut Rng,
+        racks: &[Vec<usize>],
+        horizon: f64,
+    ) -> CorrelatedTrace {
+        let nodes: usize = racks.iter().map(|r| r.len()).sum();
+        let mut events: Vec<TaggedEvent> = model
+            .schedule(rng, nodes, horizon)
+            .events
+            .into_iter()
+            .map(|event| TaggedEvent { event, class: FailureClass::Independent })
+            .collect();
+
+        // rack/switch bursts: Poisson arrivals, whole-rack OFFLINE per hit
+        if self.rack_burst_rate > 0.0 && !racks.is_empty() {
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(self.rack_burst_rate);
+                if t > horizon {
+                    break;
+                }
+                let rack = &racks[rng.below(racks.len())];
+                for &node in rack {
+                    events.push(TaggedEvent {
+                        event: FailureEvent { at: t, node, kind: FailureKind::Hardware },
+                        class: FailureClass::RackBurst,
+                    });
+                }
+            }
+        }
+
+        // flap episodes: one marginal node, a train of software kills
+        if self.flap_rate > 0.0 && nodes > 0 {
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(self.flap_rate);
+                if t > horizon {
+                    break;
+                }
+                let node = rng.below(nodes);
+                for k in 0..self.flap_burst.max(1) {
+                    let at = t + k as f64 * self.flap_spacing;
+                    if at > horizon {
+                        break;
+                    }
+                    events.push(TaggedEvent {
+                        event: FailureEvent { at, node, kind: FailureKind::Software },
+                        class: FailureClass::Flap,
+                    });
+                }
+            }
+        }
+
+        events.sort_by(|a, b| a.event.at.total_cmp(&b.event.at));
+
+        // storage brownouts: Poisson gaps BETWEEN windows, so windows
+        // never overlap and the trace stays a clean alternation
+        let mut brownouts = Vec::new();
+        if self.brownout_rate > 0.0 && self.brownout_duration > 0.0 {
+            let mut t = 0.0;
+            loop {
+                t += rng.exponential(self.brownout_rate);
+                if t > horizon {
+                    break;
+                }
+                brownouts.push(Brownout { at: t, duration: self.brownout_duration });
+                t += self.brownout_duration;
+            }
+        }
+
+        CorrelatedTrace { events, brownouts }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn racks(n_racks: usize, width: usize) -> Vec<Vec<usize>> {
+        (0..n_racks)
+            .map(|r| (r * width..(r + 1) * width).collect())
+            .collect()
+    }
+
+    fn spec_all() -> CorrelatedSpec {
+        CorrelatedSpec {
+            rack_burst_rate: 2e-3,
+            flap_rate: 1e-3,
+            flap_burst: 4,
+            flap_spacing: 5.0,
+            brownout_rate: 1e-3,
+            brownout_duration: 120.0,
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_whole_trace() {
+        let m = FailureModel::new(1e-5, 2e-5, 1.0);
+        let rk = racks(8, 4);
+        let a = spec_all().trace(&m, &mut Rng::seed_from(42), &rk, 20_000.0);
+        let b = spec_all().trace(&m, &mut Rng::seed_from(42), &rk, 20_000.0);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.brownouts, b.brownouts);
+        let c = spec_all().trace(&m, &mut Rng::seed_from(43), &rk, 20_000.0);
+        assert_ne!(a.events, c.events, "a different seed must change the trace");
+    }
+
+    #[test]
+    fn rack_burst_kills_every_node_of_one_rack_same_tick() {
+        let m = FailureModel::new(0.0, 0.0, 1.0); // isolate the burst process
+        let rk = racks(16, 4);
+        let spec = CorrelatedSpec { rack_burst_rate: 1e-3, ..CorrelatedSpec::default() };
+        let trace = spec.trace(&m, &mut Rng::seed_from(7), &rk, 50_000.0);
+        assert!(!trace.events.is_empty(), "rate 1e-3 over 50k must yield bursts");
+        // group by timestamp: every burst is exactly one rack, hardware-kind
+        let mut i = 0;
+        while i < trace.events.len() {
+            let t = trace.events[i].event.at;
+            let burst: Vec<_> = trace
+                .events
+                .iter()
+                .filter(|e| e.event.at == t)
+                .collect();
+            let mut nodes: Vec<usize> = burst.iter().map(|e| e.event.node).collect();
+            nodes.sort_unstable();
+            let rack = rk
+                .iter()
+                .find(|r| r.contains(&nodes[0]))
+                .expect("burst node belongs to a rack");
+            assert_eq!(&nodes, rack, "a burst covers its whole rack, exactly");
+            for e in &burst {
+                assert_eq!(e.class, FailureClass::RackBurst);
+                assert_eq!(e.event.kind, FailureKind::Hardware);
+            }
+            i += burst.len();
+        }
+    }
+
+    #[test]
+    fn flap_is_a_software_train_on_one_node() {
+        let m = FailureModel::new(0.0, 0.0, 1.0);
+        let rk = racks(4, 4);
+        let spec = CorrelatedSpec {
+            flap_rate: 5e-4,
+            flap_burst: 4,
+            flap_spacing: 5.0,
+            ..CorrelatedSpec::default()
+        };
+        let trace = spec.trace(&m, &mut Rng::seed_from(11), &rk, 100_000.0);
+        assert!(!trace.events.is_empty());
+        for e in &trace.events {
+            assert_eq!(e.class, FailureClass::Flap);
+            assert_eq!(e.event.kind, FailureKind::Software, "flaps never kill the node");
+            assert!(e.event.node < 16);
+        }
+        // within one episode: same node, fixed spacing
+        let first = trace.events[0];
+        let episode: Vec<_> = trace
+            .events
+            .iter()
+            .filter(|e| e.event.node == first.event.node && e.event.at < first.event.at + 20.0)
+            .collect();
+        for w in episode.windows(2) {
+            assert!((w[1].event.at - w[0].event.at - 5.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn brownouts_are_sorted_and_disjoint() {
+        let m = FailureModel::new(0.0, 0.0, 1.0);
+        let spec = CorrelatedSpec {
+            brownout_rate: 2e-3,
+            brownout_duration: 120.0,
+            ..CorrelatedSpec::default()
+        };
+        let trace = spec.trace(&m, &mut Rng::seed_from(13), &racks(2, 2), 100_000.0);
+        assert!(trace.brownouts.len() >= 2, "rate 2e-3 over 100k must yield windows");
+        for w in trace.brownouts.windows(2) {
+            assert!(w[0].end() <= w[1].at, "brownout windows must not overlap");
+        }
+        let b = trace.brownouts[0];
+        assert!(b.covers(b.at) && b.covers(b.end() - 1e-9));
+        assert!(!b.covers(b.end()) && !b.covers(b.at - 1e-9));
+        assert_eq!(trace.brownout_at(b.at).map(|x| x.at), Some(b.at));
+    }
+
+    #[test]
+    fn flatten_preserves_order_and_count() {
+        let m = FailureModel::new(1e-5, 2e-5, 1.3);
+        let trace = spec_all().trace(&m, &mut Rng::seed_from(3), &racks(8, 4), 30_000.0);
+        let flat = trace.schedule();
+        assert_eq!(flat.events.len(), trace.events.len());
+        for w in flat.events.windows(2) {
+            assert!(w[0].at <= w[1].at);
+        }
+        // the tags partition the events
+        let tagged: usize = [FailureClass::Independent, FailureClass::RackBurst, FailureClass::Flap]
+            .iter()
+            .map(|c| trace.events.iter().filter(|e| e.class == *c).count())
+            .sum();
+        assert_eq!(tagged, trace.events.len());
+    }
+}

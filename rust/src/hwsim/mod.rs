@@ -18,14 +18,48 @@
 //! Failure injection follows the paper's Assumption 1: per-node
 //! Time-To-Failure drawn from a Weibull distribution, independent across
 //! nodes, split into *software* failures (kill the training process, SMP
-//! survives) and *hardware* failures (node offline, memory lost).
+//! survives) and *hardware* failures (node offline, memory lost). The
+//! [`correlated`] module layers the modes Assumption 1 cannot express —
+//! rack/switch bursts, flapping nodes, storage brownouts — on top of that
+//! base process.
+//!
+//! **Determinism.** Every stochastic hwsim process draws from an explicit
+//! [`Rng`](crate::util::rng::Rng). Harnesses derive all their streams from
+//! ONE master seed via [`seed::stream`], so printing that single seed is
+//! enough to replay an entire run — failure schedules, churn, payloads and
+//! all — bit for bit.
 
 pub mod churn;
 pub mod cluster;
+pub mod correlated;
 pub mod failure;
 pub mod resource;
 
 pub use churn::{ChurnReport, SkewedChurn, SkewedChurnSpec};
 pub use cluster::{ClusterHw, HwSpec, NodeHw};
+pub use correlated::{Brownout, CorrelatedSpec, CorrelatedTrace, FailureClass, TaggedEvent};
 pub use failure::{FailureEvent, FailureKind, FailureModel, FailureSchedule};
 pub use resource::{Resource, Timeline};
+
+/// One-master-seed stream derivation: every stochastic domain of a harness
+/// forks its own independent generator from the single printed seed, so
+/// adding draws to one domain never perturbs another (schedule stability
+/// under harness evolution) and one `--seed` value replays everything.
+pub mod seed {
+    use crate::util::rng::Rng;
+
+    /// independent per-node Weibull TTF sampling
+    pub const FAILURES: u64 = 0xFA11;
+    /// correlated modes (rack bursts, flaps, storage brownouts)
+    pub const CORRELATED: u64 = 0xC0FA;
+    /// skewed-churn payload mutation
+    pub const CHURN: u64 = 0xC4E1;
+    /// payload initialization
+    pub const PAYLOAD: u64 = 0xDA7A;
+
+    /// Derive the deterministic stream for `domain` from one master seed.
+    pub fn stream(master: u64, domain: u64) -> Rng {
+        let mut root = Rng::seed_from(master);
+        root.fork(domain)
+    }
+}

@@ -35,6 +35,7 @@ pub mod reliability;
 pub mod runtime;
 pub mod smp;
 pub mod snapshot;
+pub mod soak;
 pub mod topology;
 pub mod trainer;
 pub mod util;

@@ -106,6 +106,19 @@ impl PersistDriver {
         }
     }
 
+    /// A recovery restored training state: open a fresh λ-observation epoch
+    /// on the driver's run clock. The failures counted so far described the
+    /// regime (and often the very hardware) the restore just retired, so
+    /// carrying them forward would keep the durable cadence pinned tight
+    /// long after the cluster went quiet — the posterior returns to the
+    /// knob-derived prior instead. A no-op under the static cadence.
+    pub fn note_restore(&mut self) {
+        let at = self.t0.elapsed().as_secs_f64();
+        if let Some(s) = self.sched.as_mut() {
+            s.reset_epoch(at);
+        }
+    }
+
     /// The live cadence scheduler, when enabled (tests + telemetry).
     pub fn scheduler(&self) -> Option<&IntervalScheduler> {
         self.sched.as_ref()

@@ -22,13 +22,14 @@
 //! * [`retention`] — keep-last-K + keep-every-Nth GC of superseded versions
 //!   and orphaned shard blobs/part-objects.
 //! * [`scheduler`] — the live Appendix-A cadences: measured save overhead
-//!   and the failure rate — the shared [`LambdaTracker`]'s static knob
-//!   until enough *observed* events accrue for a rolling empirical λ —
-//!   pick the persist interval (Eq. 11, [`IntervalScheduler`]) and the
-//!   in-memory snapshot interval (Eq. 9, [`SnapshotScheduler`], which
-//!   holds the static interval below the event floor) instead of the
-//!   static knobs. The engine's [`engine::DepthController`] closes the
-//!   third loop: pipeline depth from the fetch-vs-upload EWMA.
+//!   and the failure rate — the shared [`LambdaTracker`]'s conjugate
+//!   Gamma posterior over λ, anchored on the operator knob as the prior
+//!   mean and sharpening continuously toward the empirical MLE as events
+//!   and exposure accrue — pick the persist interval (Eq. 11,
+//!   [`IntervalScheduler`]) and the in-memory snapshot interval (Eq. 9,
+//!   [`SnapshotScheduler`], which holds the static interval until the
+//!   first observed event). The engine's [`engine::DepthController`]
+//!   closes the third loop: pipeline depth from the fetch-vs-upload EWMA.
 //!
 //! [`Storage`]: crate::checkpoint::Storage
 
@@ -47,4 +48,4 @@ pub use manifest::{
     PartEntry, PartProgress, PersistManifest, ShardEntry,
 };
 pub use retention::{run_gc, GcReport, RetentionPolicy};
-pub use scheduler::{IntervalScheduler, LambdaTracker, SnapshotScheduler, MIN_EMPIRICAL_EVENTS};
+pub use scheduler::{IntervalScheduler, LambdaTracker, SnapshotScheduler, GAMMA_PRIOR_EVENTS};

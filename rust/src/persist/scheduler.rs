@@ -11,17 +11,35 @@
 //! needs the durable tier — so the plain Young interval
 //! ([`optimal_interval`], Eq. 5) against the raw node rate applies instead.
 //!
-//! **Live failure rate.** The per-node rate λ_node starts as the static
-//! `lambda_node` knob, but the scheduler also ingests *observed* failure
-//! events — from the trainers' failure injection or straight from a
-//! pre-drawn hwsim Weibull schedule
+//! **Live failure rate.** The per-node rate λ_node is a conjugate
+//! Gamma-prior posterior over the observed failure process, seeded from the
+//! static `lambda_node` knob. The knob becomes a Gamma(α₀, β₀) prior with
+//! mean α₀/β₀ = knob (α₀ = [`GAMMA_PRIOR_EVENTS`] pseudo-events of mass);
+//! observing k failure events over E node-seconds of exposure yields the
+//! posterior Gamma(α₀ + k, β₀ + E), whose mean
+//!
+//! ```text
+//!   λ̂ = (α₀ + k) / (β₀ + E)
+//! ```
+//!
+//! is what every cadence consumer reads. At zero events and zero exposure
+//! this is *exactly* the knob (no behavior change on the no-failure path);
+//! from the first observed event it shades smoothly toward the empirical
+//! rate, and as k → ∞ it converges to the exposure MLE k/E — no hard
+//! event-count floor. Events arrive from the trainers' failure injection or
+//! straight from a pre-drawn hwsim Weibull schedule
 //! ([`IntervalScheduler::ingest_failure_schedule`]; feed ONE clock domain
-//! per scheduler — wall or sim, never both). Once enough events accrue, the rolling
-//! empirical rate (exponential-interarrival MLE over the event window,
-//! normalized per node) replaces the knob, so the cadence tracks the
-//! cluster the run actually sees rather than the rate the operator guessed.
+//! per scheduler — wall or sim, never both).
+//!
+//! **Horizon awareness.** The observation window is `(origin, horizon]` on
+//! the feeding clock. Quiet time advanced past the last event (via
+//! [`LambdaTracker::advance`], or the `upto` edge of an ingested schedule
+//! window) grows the exposure and decays the posterior — a burst long ago
+//! cannot inflate λ forever. A recovery that rewinds training state calls
+//! [`LambdaTracker::reset_epoch`]: pre-recovery events belong to a
+//! different regime (often the very hardware that was just replaced), so
+//! the window is cleared and the posterior returns to the prior.
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use crate::hwsim::failure::FailureSchedule;
@@ -29,88 +47,148 @@ use crate::reliability::intervals::{
     optimal_interval, reft_ckpt_interval, reft_sn_interval, save_overhead,
 };
 
-/// Minimum observed failure events before the rolling empirical rate
-/// replaces the static `lambda_node` knob.
-pub const MIN_EMPIRICAL_EVENTS: usize = 4;
+/// Pseudo-event mass of the knob-derived Gamma prior: the knob carries the
+/// weight of this many observed events (and the matching `α₀ / knob`
+/// node-seconds of pseudo-exposure), so the first real event already moves
+/// the posterior while a handful of events still cannot swing it to an
+/// extreme on a fluke.
+pub const GAMMA_PRIOR_EVENTS: f64 = 1.0;
 
-/// Rolling window of remembered event times (cluster-wide). Old events age
-/// out, so a burst years of sim-time ago cannot dominate the rate forever.
-const EMPIRICAL_WINDOW: usize = 64;
-
-/// The rolling empirical per-node failure rate, shared by every cadence
-/// scheduler in the control plane: a knob until enough observed events
-/// accrue, then the exponential-interarrival MLE over the event window.
-/// Feed ONE clock domain per tracker — wall or sim, never both.
+/// The live per-node failure-rate estimate shared by every cadence
+/// scheduler in the control plane: a conjugate Gamma posterior whose prior
+/// mean is the operator's `lambda_node` knob (module docs have the math).
+/// Feed ONE clock domain per tracker — wall or sim, never both; the
+/// observation window opens at 0 on that clock (tracker creation time).
 #[derive(Debug, Clone)]
 pub struct LambdaTracker {
     /// static per-node failure rate (per second) — the operator's knob,
-    /// used until enough live events accrue
+    /// i.e. the prior mean
     knob: f64,
-    /// cluster size the empirical rate normalizes over
+    /// cluster size the exposure normalizes over
     nodes: usize,
-    /// observed failure-event times (seconds on the feeding clock),
-    /// ascending, capped at [`EMPIRICAL_WINDOW`]
-    events: VecDeque<f64>,
+    /// Gamma prior shape (pseudo-events) — 0 when the knob is non-positive
+    /// (an uninformative prior: the posterior mean is then the pure MLE)
+    prior_alpha: f64,
+    /// Gamma prior rate (pseudo node-seconds of exposure), α₀ / knob
+    prior_beta: f64,
+    /// observed failure events in the current epoch (cluster-wide count —
+    /// the Poisson likelihood needs only the count and the exposure, so no
+    /// per-event memory is kept and the evidence is never capped)
+    count: u64,
+    /// left edge of the observation window: tracker birth (0 on the
+    /// feeding clock) or the last epoch reset
+    origin: f64,
+    /// right edge of the observation window: the latest event or
+    /// explicitly advanced quiet time
+    horizon: f64,
 }
 
 impl LambdaTracker {
     pub fn new(knob: f64, nodes: usize) -> LambdaTracker {
-        LambdaTracker { knob, nodes: nodes.max(1), events: VecDeque::new() }
+        let (prior_alpha, prior_beta) = if knob > 0.0 {
+            (GAMMA_PRIOR_EVENTS, GAMMA_PRIOR_EVENTS / knob)
+        } else {
+            (0.0, 0.0)
+        };
+        LambdaTracker {
+            knob,
+            nodes: nodes.max(1),
+            prior_alpha,
+            prior_beta,
+            count: 0,
+            origin: 0.0,
+            horizon: 0.0,
+        }
     }
 
     /// One observed failure event at `at_secs` on the feeding clock (any
-    /// node; the rate is normalized by the cluster size). Slightly
-    /// out-of-order deliveries are tolerated — the window is re-sorted so
-    /// the span math stays honest.
+    /// node; the exposure is normalized by the cluster size). Out-of-order
+    /// deliveries are fine — only the count and the window's right edge
+    /// matter. Events stamped before the window's origin (stale deliveries
+    /// from a pre-reset epoch) are dropped.
     pub fn note_event(&mut self, at_secs: f64) {
-        if !at_secs.is_finite() {
+        if !at_secs.is_finite() || at_secs < self.origin {
             return;
         }
-        let out_of_order =
-            self.events.back().is_some_and(|&last| last > at_secs);
-        self.events.push_back(at_secs);
-        if out_of_order {
-            let mut v: Vec<f64> = self.events.drain(..).collect();
-            v.sort_by(f64::total_cmp);
-            self.events = v.into();
-        }
-        while self.events.len() > EMPIRICAL_WINDOW {
-            self.events.pop_front();
+        self.count += 1;
+        self.horizon = self.horizon.max(at_secs);
+    }
+
+    /// Advance the window's right edge to `now_secs` without an event:
+    /// quiet time is evidence too, and grows the exposure the posterior
+    /// divides by. Never moves the edge backward.
+    pub fn advance(&mut self, now_secs: f64) {
+        if now_secs.is_finite() {
+            self.horizon = self.horizon.max(now_secs);
         }
     }
 
+    /// Open a fresh observation epoch at `now_secs`: the event window is
+    /// cleared and the posterior returns to the knob-derived prior.
+    /// Recovery calls this — pre-recovery events described hardware that
+    /// was just replaced and a regime the restored run no longer sees, so
+    /// letting them keep inflating λ after a long quiet stretch would hold
+    /// every cadence too tight forever.
+    pub fn reset_epoch(&mut self, now_secs: f64) {
+        if !now_secs.is_finite() {
+            return;
+        }
+        self.count = 0;
+        self.origin = now_secs;
+        self.horizon = now_secs;
+    }
+
     /// Bulk-feed a pre-drawn hwsim Weibull schedule: every event in
-    /// `(since, upto]` is ingested.
+    /// `(since, upto]` is ingested, and the window's right edge advances to
+    /// `upto` — an event-free window is ingested as pure exposure.
     pub fn ingest_schedule(&mut self, schedule: &FailureSchedule, since: f64, upto: f64) {
         for e in schedule.in_window(since, upto) {
             self.note_event(e.at);
         }
+        self.advance(upto);
     }
 
-    /// How many live failure events the rolling window currently holds.
+    /// How many live failure events the current epoch has observed.
     pub fn events(&self) -> usize {
-        self.events.len()
+        self.count as usize
     }
 
-    /// The rolling empirical rate, available only once
-    /// [`MIN_EMPIRICAL_EVENTS`] events accrued (k events spanning `t`
-    /// seconds across `nodes` nodes → the exponential-interarrival MLE
-    /// `(k-1) / (t * nodes)`).
+    /// Whether at least one live event informs the posterior — the
+    /// criterion [`SnapshotScheduler`] uses to let Eq. 9 take over from the
+    /// operator's static snapshot interval.
+    pub fn informed(&self) -> bool {
+        self.count > 0
+    }
+
+    /// Exposure of the current observation window, in node-seconds.
+    fn exposure(&self) -> f64 {
+        (self.horizon - self.origin).max(0.0) * self.nodes as f64
+    }
+
+    /// The window's pure exposure MLE `k / E` (k events over E
+    /// node-seconds), available once any event accrued with positive
+    /// exposure — the limit the posterior mean converges to, exposed for
+    /// diagnostics and tests.
     pub fn empirical(&self) -> Option<f64> {
-        let k = self.events.len();
-        if k >= MIN_EMPIRICAL_EVENTS {
-            let span = self.events.back().unwrap() - self.events.front().unwrap();
-            if span > 0.0 {
-                return Some((k - 1) as f64 / (span * self.nodes as f64));
-            }
+        let e = self.exposure();
+        if self.count >= 1 && e > 0.0 {
+            return Some(self.count as f64 / e);
         }
         None
     }
 
-    /// The rate driving interval math: the empirical rate when available,
-    /// else the knob.
+    /// The rate driving interval math: the Gamma-posterior mean
+    /// `(α₀ + k) / (β₀ + E)`. Exactly the knob at zero events and zero
+    /// exposure; the MLE in the many-events limit.
     pub fn lambda(&self) -> f64 {
-        self.empirical().unwrap_or(self.knob)
+        let num = self.prior_alpha + self.count as f64;
+        let den = self.prior_beta + self.exposure();
+        if den > 0.0 {
+            num / den
+        } else {
+            // knob <= 0 and no exposure yet: degrade to the knob's floor
+            self.knob.max(0.0)
+        }
     }
 }
 
@@ -176,8 +254,23 @@ impl IntervalScheduler {
         self.lambda.events()
     }
 
-    /// The per-node failure rate driving the interval math: the rolling
-    /// empirical rate once enough events accrued, else the static knob.
+    /// Advance the tracker's quiet-time exposure (see
+    /// [`LambdaTracker::advance`]). Sim harnesses call this each tick so a
+    /// long failure-free stretch decays the posterior.
+    pub fn advance(&mut self, now_secs: f64) {
+        self.lambda.advance(now_secs);
+    }
+
+    /// Open a fresh observation epoch (see [`LambdaTracker::reset_epoch`]).
+    /// Called after a recovery restores training state.
+    pub fn reset_epoch(&mut self, now_secs: f64) {
+        self.lambda.reset_epoch(now_secs);
+    }
+
+    /// The per-node failure rate driving the interval math: the
+    /// Gamma-posterior mean — exactly the `lambda_node` knob until the
+    /// first event or exposure accrues, shading toward the empirical rate
+    /// from the first observed event.
     pub fn lambda_node(&self) -> f64 {
         self.lambda.lambda()
     }
@@ -235,12 +328,14 @@ impl IntervalScheduler {
 /// [`IntervalScheduler`] (Eq. 11).
 ///
 /// Deliberately more conservative than the persist scheduler about its
-/// failure-rate input: below the empirical event floor it holds the
-/// operator's **static snapshot interval** rather than deriving a cadence
-/// from the `lambda_node` knob — that knob was tuned for the durable tier's
+/// failure-rate input: with no observed failures it holds the operator's
+/// **static snapshot interval** rather than deriving a cadence from the
+/// `lambda_node` knob — that knob was tuned for the durable tier's
 /// once-in-a-run exceedance math, and silently repurposing it here could
-/// swing the snapshot frequency by orders of magnitude on a guess. Only
-/// once the run has *observed* enough failures does Eq. 9 take over.
+/// swing the snapshot frequency by orders of magnitude on a guess. From
+/// the first *observed* failure Eq. 9 takes over, fed the Gamma-posterior
+/// mean, so the cadence shades smoothly from the operator's setting toward
+/// the empirical rate instead of jumping at a hard event-count floor.
 #[derive(Debug, Clone)]
 pub struct SnapshotScheduler {
     lambda: LambdaTracker,
@@ -280,6 +375,24 @@ impl SnapshotScheduler {
         self.lambda.note_event(at);
     }
 
+    /// A recovery restored training state: open a fresh observation epoch
+    /// on this scheduler's wall clock, dropping pre-recovery events (see
+    /// [`LambdaTracker::reset_epoch`]).
+    pub fn note_restore(&mut self) {
+        let at = self.t0.elapsed().as_secs_f64();
+        self.lambda.reset_epoch(at);
+    }
+
+    /// Epoch reset on an external (e.g. sim) clock.
+    pub fn reset_epoch(&mut self, at_secs: f64) {
+        self.lambda.reset_epoch(at_secs);
+    }
+
+    /// Advance quiet-time exposure on an external (e.g. sim) clock.
+    pub fn advance(&mut self, now_secs: f64) {
+        self.lambda.advance(now_secs);
+    }
+
     /// One observed failure event on an external (e.g. sim) clock.
     pub fn note_failure_event(&mut self, at_secs: f64) {
         self.lambda.note_event(at_secs);
@@ -306,20 +419,21 @@ impl SnapshotScheduler {
     /// Re-derive the snapshot cadence from measurements: `t_snapshot` is
     /// the per-round snapshot cost the training thread actually pays
     /// (blocking round duration, or enqueue + amortized drain-tick time on
-    /// the async path), `t_step` one training iteration. Below the
-    /// empirical event floor this degrades to the static interval; above
-    /// it, Eq. 9 against the observed node rate. Never returns zero.
+    /// the async path), `t_step` one training iteration. With no observed
+    /// failures this degrades to the static interval; from the first
+    /// observed event, Eq. 9 against the Gamma-posterior node rate takes
+    /// over. Never returns zero.
     pub fn observe(&mut self, t_snapshot: f64, t_step: f64) -> u64 {
-        match self.lambda.empirical() {
-            Some(lam) if t_step > 0.0 && t_snapshot >= 0.0 && lam > 0.0 => {
-                let t_secs = reft_sn_interval(t_snapshot, t_step, lam);
-                self.interval_steps = if t_secs.is_finite() {
-                    ((t_secs / t_step).ceil() as u64).clamp(self.min_steps, self.max_steps)
-                } else {
-                    self.max_steps
-                };
-            }
-            _ => self.interval_steps = self.static_steps,
+        let lam = self.lambda.lambda();
+        if self.lambda.informed() && t_step > 0.0 && t_snapshot >= 0.0 && lam > 0.0 {
+            let t_secs = reft_sn_interval(t_snapshot, t_step, lam);
+            self.interval_steps = if t_secs.is_finite() {
+                ((t_secs / t_step).ceil() as u64).clamp(self.min_steps, self.max_steps)
+            } else {
+                self.max_steps
+            };
+        } else {
+            self.interval_steps = self.static_steps;
         }
         self.interval_steps
     }
@@ -405,20 +519,86 @@ mod tests {
     }
 
     #[test]
-    fn knob_rate_until_enough_events_accrue() {
+    fn posterior_shades_from_knob_toward_empirical_rate() {
         let mut s = IntervalScheduler::new(1e-4, 6, 6, 10);
+        // zero events, zero exposure: EXACTLY the knob (no-failure path)
         assert_eq!(s.lambda_node(), 1e-4);
-        // three events: still below MIN_EMPIRICAL_EVENTS
-        for t in [100.0, 200.0, 300.0] {
+        // each event moves the posterior monotonically toward the (hotter)
+        // empirical rate — no hard event-count floor
+        let mut prev = s.lambda_node();
+        for t in [100.0, 200.0, 300.0, 400.0] {
             s.note_failure_event(t);
+            let lam = s.lambda_node();
+            assert!(lam > prev, "event at {t}: {lam} vs {prev}");
+            prev = lam;
         }
-        assert_eq!(s.empirical_events(), 3);
-        assert_eq!(s.lambda_node(), 1e-4, "knob holds below the event floor");
-        // the fourth event flips to the empirical rate:
-        // 3 renewals over 300 s across 6 nodes = 3 / 1800
-        s.note_failure_event(400.0);
+        assert_eq!(s.empirical_events(), 4);
+        // pinned posterior mean: prior Gamma(1, 1/1e-4) + 4 events over
+        // 400 s * 6 nodes of exposure -> (1 + 4) / (1e4 + 2400)
         let lam = s.lambda_node();
-        assert!((lam - 3.0 / (300.0 * 6.0)).abs() < 1e-12, "{lam}");
+        assert!((lam - 5.0 / 12_400.0).abs() < 1e-12, "{lam}");
+        // the posterior sits strictly between the knob and the window MLE
+        let mle = 4.0 / 2400.0;
+        assert!(lam > 1e-4 && lam < mle, "{lam} vs mle {mle}");
+    }
+
+    #[test]
+    fn gamma_posterior_converges_to_mle() {
+        // a long run at a steady observed rate: the knob's pseudo-exposure
+        // washes out and the posterior mean approaches k / E
+        let mut s = IntervalScheduler::new(1e-4, 6, 6, 10);
+        let mut t = 0.0;
+        let mut last_gap = f64::INFINITY;
+        for k in 1..=5000u64 {
+            t += 10.0;
+            s.note_failure_event(t);
+            if k % 1000 == 0 {
+                let mle = k as f64 / (t * 6.0);
+                let gap = (s.lambda_node() / mle - 1.0).abs();
+                assert!(gap < last_gap, "gap must shrink: {gap} vs {last_gap}");
+                last_gap = gap;
+            }
+        }
+        let mle = 5000.0 / (50_000.0 * 6.0);
+        let lam = s.lambda_node();
+        assert!((lam / mle - 1.0).abs() < 0.05, "{lam} vs {mle}");
+    }
+
+    #[test]
+    fn quiet_exposure_decays_posterior_below_knob() {
+        // horizon awareness: a long failure-free stretch is evidence of a
+        // LOWER rate than the knob guessed — advancing the window without
+        // events must decay the posterior, never hold it pinned
+        let mut s = IntervalScheduler::new(1e-3, 6, 6, 10);
+        assert_eq!(s.lambda_node(), 1e-3);
+        s.advance(10_000.0);
+        let lam = s.lambda_node();
+        // Gamma(1, 1000) + 0 events over 60k node-s -> 1 / 61_000
+        assert!((lam - 1.0 / 61_000.0).abs() < 1e-12, "{lam}");
+        assert!(lam < 1e-3);
+    }
+
+    #[test]
+    fn epoch_reset_on_restore_drops_stale_burst() {
+        // regression (horizon-aware window): a pre-recovery burst must not
+        // keep inflating λ after the restore opened a new regime
+        let mut s = IntervalScheduler::new(1e-4, 6, 6, 10);
+        for k in 0..32 {
+            s.note_failure_event(10.0 * k as f64);
+        }
+        assert!(s.lambda_node() > 1e-3, "burst dominates before the reset");
+        s.reset_epoch(320.0);
+        assert_eq!(s.empirical_events(), 0);
+        assert_eq!(s.lambda_node(), 1e-4, "posterior back to the knob prior");
+        // stale deliveries stamped before the reset are dropped outright
+        s.note_failure_event(200.0);
+        assert_eq!(s.empirical_events(), 0);
+        // fresh post-reset events count from the new origin
+        s.note_failure_event(330.0);
+        assert_eq!(s.empirical_events(), 1);
+        // exposure is measured from the reset, not from t = 0
+        let lam = s.lambda_node();
+        assert!((lam - 2.0 / (1e4 + 60.0)).abs() < 1e-12, "{lam}");
     }
 
     #[test]
@@ -439,36 +619,42 @@ mod tests {
     }
 
     #[test]
-    fn out_of_order_events_are_resorted() {
+    fn out_of_order_events_count_once_each() {
         let mut s = IntervalScheduler::new(1e-4, 6, 2, 10);
         for t in [50.0, 10.0, 30.0, 20.0] {
             s.note_failure_event(t);
         }
-        // 3 renewals over the [10, 50] span across 2 nodes
-        assert!((s.lambda_node() - 3.0 / (40.0 * 2.0)).abs() < 1e-12);
+        // 4 events over the (0, 50] window across 2 nodes: the exposure MLE
+        // only needs the count and the window's right edge
+        let mle = 4.0 / (50.0 * 2.0);
+        let lam = s.lambda_node();
+        assert!(lam > 1e-4 && lam < mle, "{lam} between knob and {mle}");
+        assert!((lam - 5.0 / (1e4 + 100.0)).abs() < 1e-12, "{lam}");
         // non-finite feeds are dropped, not poisoning the window
         s.note_failure_event(f64::NAN);
         assert_eq!(s.empirical_events(), 4);
     }
 
     #[test]
-    fn snapshot_cadence_holds_static_below_event_floor() {
+    fn snapshot_cadence_holds_static_until_first_event() {
         let mut s = SnapshotScheduler::new(1e-3, 6, 5);
         assert_eq!(s.interval_steps(), 5);
         // a cost measurement with no observed failures must NOT repurpose
-        // the lambda knob — the static interval holds
+        // the lambda knob — the static interval holds (no-failure path)
         assert_eq!(s.observe(0.5, 1.0), 5);
-        for t in [10.0, 20.0, 30.0] {
+        // the FIRST event hands Eq. 9 the posterior mean: prior
+        // Gamma(1, 1000) + 1 event over 10 s * 6 nodes -> 2/1060;
+        // o = 4 s -> sqrt(2*4*1060/2) = 65.1 s -> 66 steps at 1 s/step
+        s.note_failure_event(10.0);
+        assert_eq!(s.observe(5.0, 1.0), 66, "Eq. 9 from the posterior mean");
+        // more events at the same pace shade the cadence tighter
+        for t in [20.0, 30.0, 40.0] {
             s.note_failure_event(t);
         }
-        assert_eq!(s.observe(0.5, 1.0), 5, "3 events: still below the floor");
-        // the fourth event crosses the floor: Eq. 9 takes over
-        s.note_failure_event(40.0);
         let derived = s.observe(5.0, 1.0);
-        assert!(derived >= 1);
-        // 3 renewals / (30 s * 6 nodes) = 1/60 per node-second;
-        // o = 4 s -> sqrt(2*4*60) ~ 21.9 s -> 22 steps at 1 s/step
-        assert_eq!(derived, 22, "Eq. 9 from the empirical rate");
+        assert!(derived < 66, "{derived}");
+        // (1 + 4) / (1000 + 240) -> sqrt(2*4*1240/5) = 44.5 s -> 45 steps
+        assert_eq!(derived, 45);
     }
 
     #[test]
@@ -506,16 +692,20 @@ mod tests {
     #[test]
     fn snapshot_cadence_shortens_under_observed_failure_storm() {
         // identical schedulers; one sees a storm -> its Eq. 9 interval must
-        // come in at or below the calm one's static fallback
-        let mut calm = SnapshotScheduler::new(1e-6, 6, 50);
-        let mut hot = SnapshotScheduler::new(1e-6, 6, 50);
+        // come in below the calm one's static fallback
+        let mut calm = SnapshotScheduler::new(1e-3, 6, 50);
+        let mut hot = SnapshotScheduler::new(1e-3, 6, 50);
         for k in 0..16 {
-            hot.note_failure_event(5.0 * k as f64);
+            hot.note_failure_event(5.0 * (k as f64 + 1.0));
         }
-        let calm_steps = calm.observe(2.0, 1.0); // static: below floor
+        let calm_steps = calm.observe(2.0, 1.0); // no events: static holds
         let hot_steps = hot.observe(2.0, 1.0);
         assert_eq!(calm_steps, 50);
         assert!(hot_steps < calm_steps, "{hot_steps} vs {calm_steps}");
+        // a restore opens a new epoch: the storm's evidence is dropped and
+        // the cadence returns to the operator's static setting
+        hot.note_restore();
+        assert_eq!(hot.observe(2.0, 1.0), 50);
     }
 
     #[test]
@@ -524,18 +714,22 @@ mod tests {
         let mut rng = Rng::seed_from(7);
         let sched = model.schedule(&mut rng, 8, 2000.0);
         assert!(sched.events.iter().all(|e| e.kind == FailureKind::Hardware));
-        let mut s = IntervalScheduler::new(1e-9, 6, 8, 10);
+        let mut s = IntervalScheduler::new(1e-4, 6, 8, 10);
         // two half-open windows feed each event exactly once
         s.ingest_failure_schedule(&sched, f64::NEG_INFINITY, 1000.0);
         let first = s.empirical_events();
         s.ingest_failure_schedule(&sched, 1000.0, 2000.0);
         let total = s.empirical_events();
-        assert!(total >= first);
-        let in_horizon = sched.events.len().min(64);
-        assert_eq!(total, in_horizon, "window cap or exact count");
-        // with ~0.01/node/unit observed, the empirical rate is near the
-        // generating rate and far above the 1e-9 knob
+        assert!(total > first);
+        assert_eq!(total, sched.events.len(), "each event fed exactly once");
+        // the window MLE recovers the generating rate (0.01/node/unit over
+        // the full 2000-unit horizon the ingest advanced the window to)...
+        let k = sched.events.len() as f64;
+        let mle = k / (2000.0 * 8.0);
+        assert!((mle / 0.01 - 1.0).abs() < 0.3, "{mle}");
+        // ...and the posterior mean sits between the stale knob and the MLE
         let lam = s.lambda_node();
-        assert!(lam > 1e-3 && lam < 1e-1, "{lam}");
+        assert!(lam > 1e-4 && lam < mle, "{lam} vs {mle}");
+        assert!(lam > 1e-3, "evidence dominates the knob at this volume: {lam}");
     }
 }

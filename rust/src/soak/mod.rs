@@ -1,0 +1,143 @@
+//! 10k-node failure-trace soak harness: correlated fault injection over
+//! the full REFT control plane, with a goodput/survival account per
+//! failure class (paper fig. 8 style) and asserted invariants.
+//!
+//! Two planes, one trace format ([`CorrelatedTrace`](crate::hwsim::CorrelatedTrace)):
+//!
+//! * **Scale plane** ([`sim`]) — a deterministic event-driven simulation of
+//!   10k+ nodes: a *real* [`Topology`](crate::topology::Topology) at full
+//!   size, the *real* [`decide`](crate::elastic::decide) recovery tree per
+//!   incident, and the *real* Gamma-posterior cadence schedulers
+//!   ([`SnapshotScheduler`](crate::persist::SnapshotScheduler) Eq. 9,
+//!   [`IntervalScheduler`](crate::persist::IntervalScheduler) Eq. 11)
+//!   advanced on the sim clock. Only the data plane is abstracted into
+//!   per-path recovery/redo costs — everything above it is the shipping
+//!   control plane, which is the point: the soak proves the *decisions*
+//!   and the *cadence math* survive correlated 10k-node schedules, and
+//!   records the sim-time split (training vs re-doing vs recovering, per
+//!   failure class).
+//! * **Witness plane** ([`witness`]) — a bounded run of the REAL fabric
+//!   (ReftCluster + SMP/RAIM5 + PersistEngine + retention GC on real
+//!   storage) replaying the same incident shapes: software kill, single
+//!   hardware loss, correlated whole-SG rack loss, and a storage brownout
+//!   overlapping a durable recovery. Asserts bit-exact restores on every
+//!   path and zero leaked storage keys after the final GC.
+//!
+//! Determinism: every run derives all its randomness from ONE master seed
+//! via [`seed::stream`](crate::hwsim::seed::stream); the seed is embedded
+//! in `BENCH_soak.json` ([`report`]) so any recorded schedule replays
+//! bit-for-bit.
+
+pub mod report;
+pub mod sim;
+pub mod witness;
+
+pub use report::{write_bench_file, write_bench_json};
+pub use sim::{run_scale, ClassStats, ScaleReport, SoakConfig};
+pub use witness::{run_witness, WitnessReport};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::checkpoint::Storage;
+
+/// Storage decorator modeling a transient backend brownout (object store
+/// or PFS unavailable): while dark, every operation — data *and* metadata
+/// plane — fails or reports absence, exactly what a recovery probing the
+/// durable tier mid-outage sees. The witness plane toggles this around a
+/// protection-exceeding incident to prove the control plane waits the
+/// window out instead of declaring the state unrecoverable.
+pub struct BrownoutStorage {
+    inner: Arc<dyn Storage>,
+    dark: AtomicBool,
+    /// operations refused while dark (telemetry for the report)
+    refusals: AtomicU64,
+}
+
+impl BrownoutStorage {
+    pub fn wrap(inner: Arc<dyn Storage>) -> BrownoutStorage {
+        BrownoutStorage { inner, dark: AtomicBool::new(false), refusals: AtomicU64::new(0) }
+    }
+
+    /// Enter (`true`) or leave (`false`) the brownout window.
+    pub fn set_dark(&self, dark: bool) {
+        self.dark.store(dark, Ordering::SeqCst);
+    }
+
+    pub fn is_dark(&self) -> bool {
+        self.dark.load(Ordering::SeqCst)
+    }
+
+    pub fn refusals(&self) -> u64 {
+        self.refusals.load(Ordering::SeqCst)
+    }
+
+    fn refuse(&self, key: &str) -> Result<()> {
+        if self.is_dark() {
+            self.refusals.fetch_add(1, Ordering::SeqCst);
+            anyhow::bail!("storage brownout: `{key}` unreachable");
+        }
+        Ok(())
+    }
+}
+
+impl Storage for BrownoutStorage {
+    fn put(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.refuse(key)?;
+        self.inner.put(key, bytes)
+    }
+
+    fn get(&self, key: &str) -> Result<Vec<u8>> {
+        self.refuse(key)?;
+        self.inner.get(key)
+    }
+
+    fn exists(&self, key: &str) -> bool {
+        if self.is_dark() {
+            self.refusals.fetch_add(1, Ordering::SeqCst);
+            return false;
+        }
+        self.inner.exists(key)
+    }
+
+    fn list(&self) -> Vec<String> {
+        if self.is_dark() {
+            self.refusals.fetch_add(1, Ordering::SeqCst);
+            return Vec::new();
+        }
+        self.inner.list()
+    }
+
+    fn delete(&self, key: &str) -> Result<()> {
+        self.refuse(key)?;
+        self.inner.delete(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::MemStorage;
+
+    #[test]
+    fn brownout_gates_every_plane() {
+        let s = BrownoutStorage::wrap(Arc::new(MemStorage::new()));
+        s.put("m/a", b"x").unwrap();
+        assert!(s.exists("m/a"));
+        assert_eq!(s.get("m/a").unwrap(), b"x");
+
+        s.set_dark(true);
+        assert!(s.get("m/a").is_err());
+        assert!(s.put("m/b", b"y").is_err());
+        assert!(!s.exists("m/a"), "metadata plane must brown out too");
+        assert!(s.list().is_empty());
+        assert!(s.delete("m/a").is_err());
+        assert!(s.refusals() >= 5);
+
+        s.set_dark(false);
+        assert_eq!(s.get("m/a").unwrap(), b"x", "the window passes, nothing was lost");
+        assert_eq!(s.list(), vec!["m/a".to_string()]);
+    }
+}

@@ -1,0 +1,209 @@
+//! `BENCH_soak.json`: the soak's machine-readable artifact — one record
+//! per scale-plane run (goodput/survival account, per-class split, λ
+//! convergence and cadence picks) plus the witness plane's byte-level
+//! evidence. The embedded seeds make every recorded schedule replayable
+//! bit for bit.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::JsonWriter;
+
+use super::{ClassStats, ScaleReport, WitnessReport};
+
+fn class(w: &mut JsonWriter, name: &str, c: &ClassStats) {
+    w.key(name);
+    w.begin_obj();
+    w.key("incidents");
+    w.u64(c.incidents);
+    w.key("events");
+    w.u64(c.events);
+    w.key("recovery_secs");
+    w.num(c.recovery_secs);
+    w.key("redo_secs");
+    w.num(c.redo_secs);
+    w.end_obj();
+}
+
+fn curve(w: &mut JsonWriter, name: &str, points: &[(f64, f64)]) {
+    w.key(name);
+    w.begin_arr();
+    for &(t, v) in points {
+        w.begin_arr();
+        w.num(t);
+        w.num(v);
+        w.end_arr();
+    }
+    w.end_arr();
+}
+
+fn scale_run(w: &mut JsonWriter, r: &ScaleReport) {
+    w.begin_obj();
+    w.key("name");
+    w.str(r.name);
+    w.key("seed");
+    w.u64(r.seed);
+    w.key("nodes");
+    w.usize(r.nodes);
+    w.key("horizon_secs");
+    w.num(r.horizon);
+
+    w.key("goodput");
+    w.num(r.goodput);
+    w.key("goodput_floor");
+    w.num(r.goodput_floor);
+    w.key("productive_secs");
+    w.num(r.productive_secs);
+    w.key("recovery_secs");
+    w.num(r.recovery_secs);
+    w.key("redo_secs");
+    w.num(r.redo_secs);
+
+    w.key("incidents");
+    w.u64(r.incidents_total);
+    w.key("events");
+    w.u64(r.events_total);
+    w.key("overlap_incidents");
+    w.u64(r.overlap_incidents);
+
+    w.key("recoveries");
+    w.begin_obj();
+    w.key("smp");
+    w.u64(r.smp_recoveries);
+    w.key("raim5");
+    w.u64(r.raim5_recoveries);
+    w.key("durable");
+    w.u64(r.durable_recoveries);
+    w.end_obj();
+    w.key("fatal_decisions");
+    w.u64(r.fatal_decisions);
+
+    w.key("brownouts");
+    w.begin_obj();
+    w.key("windows");
+    w.u64(r.brownout_windows);
+    w.key("overlapped");
+    w.u64(r.brownout_overlaps);
+    w.key("stall_secs");
+    w.num(r.brownout_stall_secs);
+    w.end_obj();
+
+    w.key("classes");
+    w.begin_obj();
+    class(w, "independent", &r.independent);
+    class(w, "rack_burst", &r.rack_burst);
+    class(w, "flap", &r.flap);
+    w.end_obj();
+
+    w.key("lambda");
+    w.begin_obj();
+    w.key("knob");
+    w.num(r.lambda_knob);
+    w.key("posterior");
+    w.num(r.lambda_posterior);
+    w.key("mle");
+    w.num(r.lambda_mle);
+    w.key("events");
+    w.u64(r.events_total);
+    w.end_obj();
+
+    w.key("cadence");
+    w.begin_obj();
+    w.key("snapshot_steps_final");
+    w.u64(r.snapshot_steps_final);
+    w.key("persist_steps_eq11");
+    w.u64(r.persist_steps_eq11);
+    w.key("persist_steps_effective");
+    w.u64(r.persist_steps_effective);
+    w.end_obj();
+
+    curve(w, "goodput_curve", &r.goodput_curve);
+    curve(w, "lambda_curve", &r.lambda_curve);
+    w.end_obj();
+}
+
+/// Serialize the full soak artifact. Key order is fixed, so identical runs
+/// produce byte-identical documents (diffable across CI uploads).
+pub fn write_bench_json(runs: &[ScaleReport], witness: &WitnessReport) -> Vec<u8> {
+    let mut w = JsonWriter::with_capacity(16 * 1024);
+    w.begin_obj();
+    w.key("bench");
+    w.str("soak");
+    w.key("runs");
+    w.begin_arr();
+    for r in runs {
+        scale_run(&mut w, r);
+    }
+    w.end_arr();
+
+    w.key("witness");
+    w.begin_obj();
+    w.key("seed");
+    w.u64(witness.seed);
+    w.key("incidents");
+    w.u64(witness.incidents);
+    w.key("restores");
+    w.begin_obj();
+    w.key("smp");
+    w.u64(witness.smp_restores);
+    w.key("raim5");
+    w.u64(witness.raim5_restores);
+    w.key("durable");
+    w.u64(witness.durable_restores);
+    w.end_obj();
+    w.key("brownout_refusals");
+    w.u64(witness.brownout_refusals);
+    w.key("bytes_verified");
+    w.u64(witness.bytes_verified);
+    w.key("leaked_keys");
+    w.usize(witness.leaked_keys);
+    w.key("gc_second_pass_deletes");
+    w.usize(witness.gc_second_pass_deletes);
+    w.end_obj();
+
+    w.end_obj();
+    w.raw(b"\n");
+    w.finish()
+}
+
+/// Write the artifact where the harness was asked to (`BENCH_soak.json`
+/// next to the manifest by convention; CI uploads it).
+pub fn write_bench_file(
+    path: &Path,
+    runs: &[ScaleReport],
+    witness: &WitnessReport,
+) -> Result<()> {
+    std::fs::write(path, write_bench_json(runs, witness))
+        .with_context(|| format!("writing soak benchmark to {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_json_is_stable_and_parseable() {
+        let run = ScaleReport {
+            name: "unit",
+            seed: 3,
+            goodput_curve: vec![(1.0, 0.5), (2.0, 0.75)],
+            lambda_curve: vec![(1.0, 1e-6)],
+            ..ScaleReport::default()
+        };
+        let wit = WitnessReport { seed: 7, incidents: 4, ..WitnessReport::default() };
+
+        let a = write_bench_json(&[run.clone()], &wit);
+        let b = write_bench_json(&[run], &wit);
+        assert_eq!(a, b, "same inputs must serialize byte-identically");
+
+        let text = String::from_utf8(a).unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.req_str("bench").unwrap(), "soak");
+        assert_eq!(doc.req_arr("runs").unwrap().len(), 1);
+        assert_eq!(
+            doc.get("witness").unwrap().req_u64("seed").unwrap(),
+            7
+        );
+    }
+}

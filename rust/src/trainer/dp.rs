@@ -506,6 +506,15 @@ impl DpTrainer {
         if self.reft.is_some() {
             self.snapshot_blocking_for_recovery()?;
         }
+        // the restore opened a new failure regime: both cadence trackers
+        // drop their pre-recovery event windows (horizon-aware λ — an old
+        // burst must not keep the cadence pinned tight forever)
+        if let Some(d) = self.persist.as_mut() {
+            d.note_restore();
+        }
+        if let Some(s) = self.snap_sched.as_mut() {
+            s.note_restore();
+        }
         Ok(self.state.step)
     }
 

@@ -736,6 +736,62 @@ fn crash_matrix_flight_recorder_dump() {
     assert!(enqueued, "step-{step} persist enqueue missing from the dump");
 }
 
+/// The correlated-rack-loss cell (soak harness failure class `rack_burst`):
+/// EVERY node of one sharding group dies in the same tick — the burst the
+/// independence assumption behind RAIM5 cannot absorb. The plan must route
+/// straight to the durable manifest tier (no in-memory prediction), the
+/// in-memory gather must REFUSE rather than fabricate state, and the
+/// durable restore must be byte-exact with zero mispredictions.
+#[test]
+fn crash_matrix_correlated_rack_loss() {
+    let mut rng = Rng::seed_from(SEED ^ 0x2ACC);
+    let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+    let stage_bytes = vec![24_000u64, 24_000, 24_000];
+    let ft = FtConfig { raim5: true, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo.clone(), &stage_bytes, ft).unwrap();
+    let model = "cm-rack";
+    let storage = Arc::new(MemStorage::new());
+
+    let v1 = payloads(&stage_bytes, &mut rng);
+    cluster.snapshot_all(&v1).unwrap();
+    let engine = PersistEngine::start(
+        model,
+        Arc::clone(&storage) as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        base_persist(),
+    );
+    engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+    engine.flush().unwrap();
+    assert_eq!(engine.stats().manifests_committed, 1);
+
+    // the whole rack backing SG0 goes down in one tick
+    let rack = topo.sharding_group(0).nodes;
+    assert!(rack.len() >= 2, "the cell needs a multi-node SG");
+    for &n in &rack {
+        cluster.kill_node(n);
+    }
+
+    let metrics = Metrics::new();
+    let plan = RecoveryPlan::probe(&topo, &rack, true, storage.as_ref(), model);
+    plan.record_predicted(&metrics);
+    assert_eq!(
+        plan.predicted(),
+        Some(RecoveryPath::Durable(DurableTier::Manifest)),
+        "a whole-SG burst must be planned onto the durable tier, got {:?}",
+        plan.decision
+    );
+    assert!(
+        cluster.restore_all(&rack).is_err(),
+        "the in-memory gather must refuse a whole-SG loss"
+    );
+    let (actual, recovered) =
+        execute_recovery(&plan, &cluster, storage.as_ref(), model, 3, &rack).unwrap();
+    plan.record_actual(&metrics, actual);
+    assert_eq!(actual, RecoveryPath::Durable(DurableTier::Manifest));
+    assert_eq!(recovered, as_bytes(&v1), "durable restore must be byte-exact");
+    assert_eq!(metrics.counter("recovery_mispredictions"), 0);
+}
+
 /// Cross-tier tie-break, live: a legacy checkpoint strictly newer than the
 /// newest manifest's contained state is both PREDICTED and SERVED — no
 /// misprediction, even though a manifest exists.

@@ -240,31 +240,82 @@ fn prop_schedulers_never_emit_zero_interval() {
     }
 }
 
-/// Eq. 9 degrades to the operator's static interval below the empirical
-/// event floor, for arbitrary costs — and switches to the derived cadence
-/// the moment the floor is crossed.
+/// Eq. 9 degrades to the operator's static interval with zero observed
+/// events, for arbitrary costs — and hands the Gamma-posterior mean to the
+/// derived cadence from the FIRST event on.
 #[test]
-fn prop_eq9_degrades_to_static_below_event_floor() {
-    use reft::persist::{SnapshotScheduler, MIN_EMPIRICAL_EVENTS};
+fn prop_eq9_degrades_to_static_at_zero_events() {
+    use reft::persist::SnapshotScheduler;
     let mut rng = Rng::seed_from(0xF100);
     for case in 0..CASES {
         let static_steps = 1 + rng.below(200) as u64;
         let mut s = SnapshotScheduler::new(1e-3, 1 + rng.below(8), static_steps);
-        for k in 0..MIN_EMPIRICAL_EVENTS - 1 {
-            s.note_failure_event(10.0 * (k as f64 + rng.below(100) as f64 / 200.0));
+        // no events: cost measurements must NOT repurpose the lambda knob
+        for _ in 0..3 {
             let t_save = rng.below(1000) as f64 / 10.0;
             assert_eq!(
                 s.observe(t_save, 1.0),
                 static_steps,
-                "case {case}: knob leaked into Eq. 9 below the floor"
+                "case {case}: knob leaked into Eq. 9 with no observed events"
             );
         }
-        s.note_failure_event(1000.0 + rng.below(1000) as f64);
-        assert_eq!(s.empirical_events(), MIN_EMPIRICAL_EVENTS);
-        // above the floor with a real overhead: the interval is derived,
-        // finite, and >= 1 (the static knob no longer pins it)
+        s.note_failure_event(1.0 + rng.below(1000) as f64);
+        assert_eq!(s.empirical_events(), 1);
+        // from the first event on: the interval is derived, finite, >= 1
         let derived = s.observe(100.0, 1.0);
         assert!(derived >= 1, "case {case}");
+        assert_eq!(derived, s.interval_steps(), "case {case}");
+    }
+}
+
+/// The Gamma-posterior λ estimate is a mediant of the knob and the window
+/// MLE: it always lies between them, and converges to the MLE as the same
+/// observed rate accumulates evidence.
+#[test]
+fn prop_gamma_posterior_between_knob_and_mle() {
+    use reft::persist::IntervalScheduler;
+    let mut rng = Rng::seed_from(0x6A77A);
+    for case in 0..CASES {
+        let knob = [1e-5, 1e-4, 1e-3, 1e-2][rng.below(4)];
+        let nodes = 1 + rng.below(12);
+        let mut s = IntervalScheduler::new(knob, 2 + rng.below(6), nodes, 10);
+        let events = 1 + rng.below(40);
+        let gap = 1.0 + rng.below(500) as f64 / 10.0;
+        let mut t = 0.0;
+        for _ in 0..events {
+            t += gap;
+            s.note_failure_event(t);
+        }
+        let mle = events as f64 / (t * nodes as f64);
+        let lam = s.lambda_node();
+        let (lo, hi) = if knob < mle { (knob, mle) } else { (mle, knob) };
+        assert!(
+            lam >= lo && lam <= hi,
+            "case {case}: posterior {lam} outside [{lo}, {hi}] (knob {knob}, mle {mle})"
+        );
+    }
+
+    // convergence: once the observed exposure dwarfs the prior's
+    // pseudo-exposure (1/knob node-seconds), the posterior lands on the
+    // MLE regardless of how wrong the knob was
+    for case in 0..40 {
+        let knob = [1e-3, 1e-2, 1e-1][rng.below(3)];
+        let nodes = 1 + rng.below(8);
+        let gap = 1.0 + rng.below(100) as f64 / 10.0;
+        let mut s = IntervalScheduler::new(knob, 2 + rng.below(6), nodes, 10);
+        // enough events that E = k * gap * nodes >= 30 / knob
+        let k = (30.0 / (knob * gap * nodes as f64)).ceil() as u64 + 1;
+        let mut t = 0.0;
+        for _ in 0..k {
+            t += gap;
+            s.note_failure_event(t);
+        }
+        let mle = k as f64 / (t * nodes as f64);
+        let lam = s.lambda_node();
+        assert!(
+            (lam / mle - 1.0).abs() < 0.1,
+            "case {case}: {lam} has not converged toward {mle} (knob {knob})"
+        );
     }
 }
 
@@ -775,6 +826,99 @@ fn prop_histogram_quantiles_monotone_and_bounded() {
     let empty = Histogram::default();
     for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
         assert_eq!(empty.quantile(q), 0.0);
+    }
+}
+
+/// Weibull sampler statistics (the soak's Assumption-1 base process): at
+/// shape c = 1 the TTF is exponential, so the empirical mean interarrival
+/// tracks 1/λ; for every shape the empirical median lands on the analytic
+/// `(ln 2 / λ)^(1/c)` — both across a grid of rates and seeds.
+#[test]
+fn prop_weibull_mean_interarrival_tracks_rate() {
+    use reft::hwsim::FailureModel;
+    const N: usize = 20_000;
+    let mut rng = Rng::seed_from(0x3B11);
+    for case in 0..8 {
+        let lambda = [1e-3, 1e-2, 0.05, 0.4][case % 4];
+        // c = 1: mean interarrival = 1/λ
+        let m = FailureModel::new(lambda, 0.0, 1.0);
+        let mean: f64 =
+            (0..N).map(|_| m.sample_ttf(&mut rng, lambda)).sum::<f64>() / N as f64;
+        let want = 1.0 / lambda;
+        assert!(
+            (mean / want - 1.0).abs() < 0.05,
+            "case {case}: λ={lambda}: empirical mean {mean} vs 1/λ = {want}"
+        );
+        // every paper shape: empirical median = (ln 2 / λ)^(1/c)
+        for &c in &[0.8, 1.0, 1.3, 1.5, 2.0] {
+            let m = FailureModel::new(lambda, 0.0, c);
+            let mut ts: Vec<f64> = (0..N).map(|_| m.sample_ttf(&mut rng, lambda)).collect();
+            ts.sort_by(f64::total_cmp);
+            let median = ts[N / 2];
+            let want = (2f64.ln() / lambda).powf(1.0 / c);
+            assert!(
+                (median / want - 1.0).abs() < 0.05,
+                "case {case}: λ={lambda} c={c}: median {median} vs {want}"
+            );
+        }
+    }
+}
+
+/// The Weibull shape skews the failure mass the way the paper sweeps it:
+/// raising c monotonically drains BOTH tails — fewer infant-mortality
+/// failures (T ≤ 0.1·t*) and fewer long survivors (T > 2·t*), where
+/// t* = λ^(-1/c) is the characteristic life — concentrating failures
+/// around t*. Checked against the analytic fractions `1 - exp(-0.1^c)`
+/// and `exp(-2^c)` and for strict monotonicity across the shape grid.
+#[test]
+fn prop_weibull_shape_skews_early_and_late_mass() {
+    use reft::hwsim::FailureModel;
+    const N: usize = 20_000;
+    const SHAPES: [f64; 5] = [0.8, 1.0, 1.3, 1.5, 2.0];
+    let mut rng = Rng::seed_from(0x3B12);
+    for case in 0..6 {
+        let lambda = [2e-3, 0.03, 0.2][case % 3];
+        let mut early = Vec::new();
+        let mut late = Vec::new();
+        for &c in &SHAPES {
+            let m = FailureModel::new(lambda, 0.0, c);
+            let t_star = lambda.powf(-1.0 / c);
+            let (mut n_early, mut n_late) = (0usize, 0usize);
+            for _ in 0..N {
+                let t = m.sample_ttf(&mut rng, lambda);
+                if t <= 0.1 * t_star {
+                    n_early += 1;
+                }
+                if t > 2.0 * t_star {
+                    n_late += 1;
+                }
+            }
+            let (fe, fl) = (n_early as f64 / N as f64, n_late as f64 / N as f64);
+            let we = 1.0 - (-(0.1f64.powf(c))).exp();
+            let wl = (-(2f64.powf(c))).exp();
+            assert!(
+                (fe - we).abs() < 0.01,
+                "case {case}: λ={lambda} c={c}: early {fe} vs analytic {we}"
+            );
+            assert!(
+                (fl - wl).abs() < 0.01,
+                "case {case}: λ={lambda} c={c}: late {fl} vs analytic {wl}"
+            );
+            early.push(fe);
+            late.push(fl);
+        }
+        for w in early.windows(2) {
+            assert!(
+                w[1] < w[0],
+                "case {case}: early-failure mass must shrink as c grows: {early:?}"
+            );
+        }
+        for w in late.windows(2) {
+            assert!(
+                w[1] < w[0],
+                "case {case}: long-survivor mass must shrink as c grows: {late:?}"
+            );
+        }
     }
 }
 

@@ -1,0 +1,117 @@
+//! The soak gate CI runs: the 2k-node smoke schedule through the scale
+//! plane (fixed seed, asserted invariants), the witness plane on the real
+//! fabric, the `BENCH_soak.json` artifact both feed, and — when the tiny
+//! model artifacts exist — a trainer leg replaying the soak's failure
+//! classes through `DpTrainer` itself.
+//!
+//! The full 10 000-node schedule lives in `benches/soak.rs`; this lane is
+//! sized for seconds of wall time.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use reft::checkpoint::MemStorage;
+use reft::config::FtMethod;
+use reft::soak::{run_scale, run_witness, write_bench_json, SoakConfig};
+use reft::topology::ParallelPlan;
+use reft::trainer::DpTrainer;
+
+/// Fixed gate seed — a failure under it is a behavior change, not flake.
+const SOAK_SEED: u64 = 0x50AC_0001;
+
+fn artifacts() -> Option<String> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    root.join("tiny/manifest.json")
+        .exists()
+        .then(|| root.to_string_lossy().to_string())
+}
+
+/// The CI smoke soak: 2k nodes, two sim-hours of correlated schedule, every
+/// invariant gated, and the artifact written where CI can upload it
+/// (`BENCH_SOAK_PATH`, default `target/BENCH_soak.json`).
+#[test]
+fn soak_smoke_2k_gates_and_writes_bench() {
+    let scale = run_scale(&SoakConfig::smoke_2k(SOAK_SEED)).unwrap();
+    scale.check_invariants().unwrap_or_else(|e| panic!("scale-plane gate: {e:#}"));
+    // the smoke schedule must exercise every failure class, or the gate is
+    // vacuous for the class it missed
+    assert!(scale.independent.incidents > 0, "no independent failures drawn");
+    assert!(scale.rack_burst.incidents > 0, "no rack bursts drawn");
+    assert!(scale.flap.incidents > 0, "no flap episodes drawn");
+    assert!(scale.brownout_windows > 0, "no storage brownouts drawn");
+    assert!(
+        scale.durable_recoveries >= scale.rack_burst.incidents,
+        "every whole-SG burst must have routed to the durable tier"
+    );
+
+    let witness = run_witness(SOAK_SEED).unwrap_or_else(|e| panic!("witness plane: {e:#}"));
+
+    let path = std::env::var("BENCH_SOAK_PATH")
+        .unwrap_or_else(|_| "target/BENCH_soak.json".to_string());
+    let doc = write_bench_json(std::slice::from_ref(&scale), &witness);
+    if let Some(dir) = std::path::Path::new(&path).parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    std::fs::write(&path, &doc).unwrap();
+
+    // the artifact round-trips through the crate's own JSON reader
+    let parsed = reft::util::json::Json::parse(std::str::from_utf8(&doc).unwrap()).unwrap();
+    assert_eq!(parsed.req_str("bench").unwrap(), "soak");
+    let runs = parsed.req_arr("runs").unwrap();
+    assert_eq!(runs[0].req_u64("seed").unwrap(), SOAK_SEED);
+    assert_eq!(
+        parsed.get("witness").unwrap().req_u64("leaked_keys").unwrap(),
+        0
+    );
+}
+
+/// Same seed → byte-identical artifact: the whole soak (both planes and
+/// the serializer) is a pure function of the master seed.
+#[test]
+fn soak_artifact_is_reproducible() {
+    let mk = || {
+        let scale = run_scale(&SoakConfig::smoke_2k(SOAK_SEED ^ 0x7)).unwrap();
+        let witness = run_witness(SOAK_SEED ^ 0x7).unwrap();
+        write_bench_json(std::slice::from_ref(&scale), &witness)
+    };
+    assert_eq!(mk(), mk());
+}
+
+/// Trainer leg (artifacts-gated): the soak's failure classes replayed
+/// through a real `DpTrainer` — a flap episode (train of software kills,
+/// each resume bit-exact) followed by a hardware loss decoded via RAIM5,
+/// with training descending across all of it.
+#[test]
+fn soak_trainer_leg_survives_flap_then_node_loss() {
+    let Some(root) = artifacts() else { return };
+    let mut cfg = reft::config::RunConfig::default();
+    cfg.model = "tiny".into();
+    cfg.artifacts_dir = root;
+    cfg.plan = ParallelPlan::dp_only(24);
+    cfg.nodes = 6;
+    cfg.gpus_per_node = 4;
+    cfg.ft.method = FtMethod::ReftSn;
+    cfg.ft.snapshot_interval = 1;
+    cfg.ft.bucket_bytes = 64 * 1024;
+    cfg.ft.raim5 = true;
+
+    let mut tr = DpTrainer::new(cfg, Arc::new(MemStorage::new())).unwrap();
+    tr.run(2).unwrap();
+    let params = tr.state.params.clone();
+    let step = tr.state.step;
+
+    // flap: three software kills in a row, every resume bit-exact
+    for _ in 0..3 {
+        tr.inject_software_failure();
+        assert_eq!(tr.recover(&[]).unwrap(), step);
+        assert_eq!(tr.state.params, params, "flap resume must be bit-exact");
+    }
+
+    // then the node hosting rank 3 drops; RAIM5 decodes it back
+    tr.inject_node_failure(3);
+    assert_eq!(tr.recover(&[3]).unwrap(), step);
+    assert_eq!(tr.state.params, params, "RAIM5 restore must be bit-exact");
+
+    let more = tr.run(2).unwrap();
+    assert!(more.iter().all(|l| l.is_finite()));
+}
