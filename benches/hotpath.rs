@@ -816,6 +816,7 @@ fn main() {
         base_step: None,
         stage_bytes: vec![plen as u64; 3],
         shards: Vec::new(),
+        atoms: Vec::new(),
     };
     for i in 0..codec_shards {
         big.shards.push(persist::ShardEntry {
@@ -1199,6 +1200,113 @@ fn main() {
         ("predicted_legacy", rp_metrics.counter("recovery_predicted_legacy") as f64),
         ("mispredictions", mispredicted as f64),
     ]);
+
+    // Reshape-on-restore: regather a 3-stage manifest into a 2-stage shape
+    // through the atom-index range-fetch plan, vs the dense same-shape
+    // restore. Gates: the reshaped plan must fetch no more shard bytes than
+    // the dense restore (the atom index adds only manifest-side metadata,
+    // measured below as its encode overhead), and the reshaped stream must
+    // be byte-identical to the dense payload.
+    let rs_stage = if smoke { 512 * 1024 } else { 8 * mib };
+    println!(
+        "reshape-on-restore, 3-stage -> 2-stage regather ({} MiB total):",
+        3 * rs_stage / mib
+    );
+    let rs_store = MemStorage::new();
+    let rs_bytes = vec![rs_stage as u64; 3];
+    let mut rs_shards = Vec::new();
+    {
+        let mut rng = Rng::seed_from(0x5EA5);
+        for stage in 0..3usize {
+            // 4 shards per stage, the engine's usual sharding grain
+            let chunk = rs_stage / 4;
+            for node in 0..4usize {
+                let body: Vec<u8> = (0..chunk).map(|_| rng.next_u64() as u8).collect();
+                let key = persist::shard_key("bench-reshape", 10, stage, node);
+                rs_store.put(&key, &body).unwrap();
+                rs_shards.push(persist::ShardEntry {
+                    key,
+                    stage,
+                    node,
+                    offset: (node * chunk) as u64,
+                    len: chunk as u64,
+                    crc32: crc32fast::hash(&body),
+                    extents: vec![],
+                    parts: vec![],
+                });
+            }
+        }
+    }
+    let rs_atoms = persist::derive_atoms(&rs_bytes, &rs_shards).unwrap();
+    let rs_man = persist::PersistManifest {
+        model: "bench-reshape".into(),
+        step: 10,
+        version: 1,
+        snapshot_step: 10,
+        stage_bytes: rs_bytes.clone(),
+        shards: rs_shards,
+        base_step: None,
+        atoms: rs_atoms,
+    };
+    rs_store
+        .put(&persist::manifest_key("bench-reshape", 10), &rs_man.encode())
+        .unwrap();
+    let mut bare = rs_man.clone();
+    bare.atoms = vec![];
+    let index_overhead = rs_man.encode().len() - bare.encode().len();
+    let rs_total = 3 * rs_stage;
+    let rs_target = vec![(rs_total / 2) as u64; 2];
+    let rs_iters = if smoke { 5 } else { 15 };
+    let dense_gbps = bench("dense restore (source shape)", rs_total, rs_iters, || {
+        std::hint::black_box(persist::load_manifest_payload(&rs_store, &rs_man).unwrap());
+    });
+    let reshape_gbps = bench("reshaped restore (2-stage target)", rs_total, rs_iters, || {
+        std::hint::black_box(
+            persist::reshape_restore(
+                &rs_store,
+                &rs_man,
+                persist::StageCodec::Opaque,
+                &rs_target,
+                8,
+            )
+            .unwrap(),
+        );
+    });
+    let rs_plan =
+        persist::ReshapePlan::plan(&rs_man, persist::StageCodec::Opaque, &rs_target).unwrap();
+    let dense_out = persist::load_manifest_payload(&rs_store, &rs_man).unwrap();
+    let (reshaped_out, rs_fetched) = persist::reshape_restore(
+        &rs_store,
+        &rs_man,
+        persist::StageCodec::Opaque,
+        &rs_target,
+        8,
+    )
+    .unwrap();
+    assert_eq!(
+        reshaped_out.concat(),
+        dense_out.concat(),
+        "reshaped restore must be stream-identical to the dense restore"
+    );
+    println!(
+        "  -> fetched {rs_fetched} of {rs_total} dense bytes ({} pieces, atom index \
+         {index_overhead} manifest bytes)\n",
+        rs_plan.pieces.len()
+    );
+    rec(&mut report, "reshape_restore", vec![
+        ("dense_gbps", dense_gbps),
+        ("reshape_gbps", reshape_gbps),
+        ("fetched_bytes", rs_fetched as f64),
+        ("dense_bytes", rs_total as f64),
+        ("index_overhead_bytes", index_overhead as f64),
+        ("pieces", rs_plan.pieces.len() as f64),
+    ]);
+    if rs_fetched > rs_total as u64 + index_overhead as u64 {
+        failures.push(format!(
+            "reshaped restore fetched {rs_fetched} bytes, more than the dense restore's \
+             {rs_total} + the {index_overhead}-byte atom index"
+        ));
+    }
 
     // PJRT dispatch overhead (needs artifacts)
     if std::path::Path::new("artifacts/tiny/manifest.json").exists() {

@@ -169,6 +169,12 @@ pub struct FtConfig {
     /// rounds a full base round is forced, bounding delta-chain depth for
     /// both the in-memory patch path and durable chain reconstruction
     pub delta_chain_max: u64,
+    /// reshape-on-restore: accept a committed manifest whose pipeline shape
+    /// differs from the running topology and regather it through the atom
+    /// index instead of aborting the recovery. Off by default — an elastic
+    /// shrink/grow is an operator decision, not something a plain restart
+    /// should do silently.
+    pub reshape_on_restore: bool,
     /// durable-tier persistence engine (REFT-Ckpt background drain)
     pub persist: PersistConfig,
 }
@@ -187,6 +193,7 @@ impl Default for FtConfig {
             auto_snapshot_interval: false,
             delta_extent_bytes: 0,
             delta_chain_max: 8,
+            reshape_on_restore: false,
             persist: PersistConfig::default(),
         }
     }
@@ -304,6 +311,9 @@ impl RunConfig {
             }
             if let Some(n) = ft.get("delta_chain_max").and_then(Json::as_u64) {
                 c.ft.delta_chain_max = n.max(1);
+            }
+            if let Some(b) = ft.get("reshape_on_restore").and_then(Json::as_bool) {
+                c.ft.reshape_on_restore = b;
             }
             if let Some(p) = ft.get("persist") {
                 if let Some(b) = p.get("enabled").and_then(Json::as_bool) {
@@ -481,6 +491,18 @@ mod tests {
         assert_eq!(z.ft.delta_chain_max, 1);
         let z = RunConfig::from_json_text(r#"{"ft": {"delta_extent_bytes": 7}}"#).unwrap();
         assert_eq!(z.ft.delta_extent_bytes, 1024);
+    }
+
+    #[test]
+    fn parse_reshape_on_restore() {
+        // off by default, and untouched by unrelated ft keys
+        assert!(!RunConfig::default().ft.reshape_on_restore);
+        let c = RunConfig::from_json_text(r#"{"ft": {"delta_chain_max": 4}}"#).unwrap();
+        assert!(!c.ft.reshape_on_restore);
+        let c = RunConfig::from_json_text(r#"{"ft": {"reshape_on_restore": true}}"#).unwrap();
+        assert!(c.ft.reshape_on_restore);
+        let c = RunConfig::from_json_text(r#"{"ft": {"reshape_on_restore": false}}"#).unwrap();
+        assert!(!c.ft.reshape_on_restore);
     }
 
     #[test]

@@ -16,6 +16,13 @@
 //!    inline legacy checkpoint — so the controller telemetry can report the
 //!    tier recovery actually used instead of one opaque "load checkpoint";
 //! 4. nothing durable either → fatal (restart from scratch).
+//!
+//! With `ft.reshape_on_restore` on, case 3's manifest leaf is shape-aware
+//! ([`decide_elastic`]): a manifest persisted under a **different** dp/tp/pp
+//! split plans onto the [`RecoveryDecision::Reshape`] leaf — the
+//! redistribution pass in `crate::persist::reshape` regathers it into the
+//! surviving fleet's shape — instead of being skipped (which used to force
+//! an elastic shrink/grow to abort to a fresh run).
 
 pub mod controller;
 
@@ -62,6 +69,11 @@ pub struct DurableAvailability {
     pub manifest_step: Option<u64>,
     /// the step of the newest legacy inline checkpoint
     pub legacy_step: Option<u64>,
+    /// the stage count the newest decodable manifest was persisted under —
+    /// the reshape-on-restore input: when it differs from the recovering
+    /// run's stage count, a shape-matched restore is impossible but a
+    /// [`RecoveryDecision::Reshape`] may still serve
+    pub manifest_stages: Option<usize>,
 }
 
 impl DurableAvailability {
@@ -82,6 +94,7 @@ impl DurableAvailability {
     /// out corrupt.
     pub fn probe(storage: &dyn Storage, model: &str) -> DurableAvailability {
         let mut manifest_step = None;
+        let mut manifest_stages = None;
         for step in crate::persist::persisted_steps(storage, model).into_iter().rev() {
             let decoded = storage
                 .get(&crate::persist::manifest_key(model, step))
@@ -89,6 +102,7 @@ impl DurableAvailability {
                 .and_then(|b| crate::persist::PersistManifest::decode(&b).ok());
             if let Some(man) = decoded {
                 manifest_step = Some(man.snapshot_step);
+                manifest_stages = Some(man.stage_bytes.len());
                 break;
             }
         }
@@ -101,6 +115,7 @@ impl DurableAvailability {
             legacy: legacy_key.is_some(),
             manifest_step,
             legacy_step,
+            manifest_stages,
         }
     }
 
@@ -133,6 +148,12 @@ pub enum RecoveryDecision {
     DecodeRaim5 { lost: Vec<(usize, usize)> },
     /// in-memory protection exceeded — reload from the named durable tier
     LoadCheckpoint { tier: DurableTier },
+    /// in-memory protection exceeded AND the newest manifest was persisted
+    /// under a different stage shape: redistribute it into the recovering
+    /// run's shape through the reshape pass (`persist::reshape`) instead of
+    /// aborting to a fresh run — the elastic shrink/grow-and-continue leaf,
+    /// taken only when `ft.reshape_on_restore` is on
+    Reshape { from_stages: usize, to_stages: usize },
     /// no checkpoint available in either durable tier
     Fatal,
 }
@@ -196,6 +217,36 @@ pub fn decide(
     RecoveryDecision::DecodeRaim5 { lost }
 }
 
+/// [`decide`], shape-aware: when the tree lands on the manifest tier but
+/// the newest manifest was persisted under a different stage count than
+/// the `expected_stages` this run is shaped for, the shape-matched load
+/// would find nothing — with `reshape_on_restore` on, the decision becomes
+/// [`RecoveryDecision::Reshape`] (redistribute and continue); off, the
+/// verdict is unchanged (the loader degrades to older shape-matched
+/// manifests or the legacy tier, the pre-reshape behavior).
+pub fn decide_elastic(
+    topo: &Topology,
+    status: &[NodeStatus],
+    raim5: bool,
+    durable: DurableAvailability,
+    expected_stages: usize,
+    reshape_on_restore: bool,
+) -> RecoveryDecision {
+    let base = decide(topo, status, raim5, durable);
+    if !reshape_on_restore {
+        return base;
+    }
+    match (&base, durable.manifest_stages) {
+        (
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest },
+            Some(from_stages),
+        ) if from_stages != expected_stages => {
+            RecoveryDecision::Reshape { from_stages, to_stages: expected_stages }
+        }
+        _ => base,
+    }
+}
+
 /// Where a recovery actually got its bytes from — the "actual" side of the
 /// control plane's predicted-vs-actual telemetry.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -239,6 +290,39 @@ impl RecoveryPlan {
         RecoveryPlan { decision: decide(topo, &status, raim5, durable), durable }
     }
 
+    /// [`RecoveryPlan::probe`], shape-aware: runs [`decide_elastic`] so a
+    /// manifest persisted under a different stage shape plans onto the
+    /// [`RecoveryDecision::Reshape`] leaf when `reshape_on_restore` allows
+    /// it — the entry point both trainers use.
+    pub fn probe_elastic(
+        topo: &Topology,
+        dead: &[usize],
+        raim5: bool,
+        storage: &dyn Storage,
+        model: &str,
+        expected_stages: usize,
+        reshape_on_restore: bool,
+    ) -> RecoveryPlan {
+        let durable = DurableAvailability::probe(storage, model);
+        let mut status = vec![NodeStatus::Unhealthy; topo.nodes];
+        for &n in dead {
+            if n < status.len() {
+                status[n] = NodeStatus::Offline;
+            }
+        }
+        RecoveryPlan {
+            decision: decide_elastic(
+                topo,
+                &status,
+                raim5,
+                durable,
+                expected_stages,
+                reshape_on_restore,
+            ),
+            durable,
+        }
+    }
+
     /// A plan for a run with no in-memory fabric at all (non-REFT methods):
     /// the durable tier is the only option, so the tree degenerates to the
     /// fallback leaf.
@@ -255,24 +339,32 @@ impl RecoveryPlan {
             | RecoveryDecision::ResumeFromSmp
             | RecoveryDecision::DecodeRaim5 { .. } => Some(RecoveryPath::InMemory),
             RecoveryDecision::LoadCheckpoint { tier } => Some(RecoveryPath::Durable(*tier)),
+            // a reshape serves from the manifest tier — the redistribution
+            // pass is a manifest load with a different target tiling
+            RecoveryDecision::Reshape { .. } => {
+                Some(RecoveryPath::Durable(DurableTier::Manifest))
+            }
             RecoveryDecision::Fatal => None,
         }
     }
 
     /// Record the prediction (`recovery_predicted_*` counters) and leave a
     /// plan-decision event in the flight recorder (arg encodes the leaf:
-    /// 0 in-memory, 1 manifest, 2 legacy, 3 fatal).
+    /// 0 in-memory, 1 manifest, 2 legacy, 3 fatal, 4 reshape).
     pub fn record_predicted(&self, metrics: &Metrics) {
         metrics.inc_k(keys::RECOVERY_PLANS, 1);
-        let (key, code) = match self.predicted() {
-            Some(RecoveryPath::InMemory) => (keys::RECOVERY_PREDICTED_INMEMORY, 0),
-            Some(RecoveryPath::Durable(DurableTier::Manifest)) => {
+        let (key, code) = match (&self.decision, self.predicted()) {
+            (RecoveryDecision::Reshape { .. }, _) => {
+                (keys::RECOVERY_PREDICTED_MANIFEST, 4)
+            }
+            (_, Some(RecoveryPath::InMemory)) => (keys::RECOVERY_PREDICTED_INMEMORY, 0),
+            (_, Some(RecoveryPath::Durable(DurableTier::Manifest))) => {
                 (keys::RECOVERY_PREDICTED_MANIFEST, 1)
             }
-            Some(RecoveryPath::Durable(DurableTier::Legacy)) => {
+            (_, Some(RecoveryPath::Durable(DurableTier::Legacy))) => {
                 (keys::RECOVERY_PREDICTED_LEGACY, 2)
             }
-            None => (keys::RECOVERY_PREDICTED_FATAL, 3),
+            (_, None) => (keys::RECOVERY_PREDICTED_FATAL, 3),
         };
         metrics.inc_k(key, 1);
         obs::instant(obs::cat::ELASTIC, "plan", 0, code);
@@ -312,6 +404,7 @@ mod tests {
             legacy: true,
             manifest_step: Some(10),
             legacy_step: Some(5),
+            manifest_stages: Some(3),
         }
     }
 
@@ -334,6 +427,7 @@ mod tests {
                 parts: vec![],
             }],
             base_step: None,
+            atoms: vec![],
         }
     }
 
@@ -548,5 +642,72 @@ mod tests {
         let plan = RecoveryPlan::probe(&t, &[0, 3], true, &empty, "m");
         assert_eq!(plan.decision, RecoveryDecision::Fatal);
         assert_eq!(plan.predicted(), None);
+    }
+
+    #[test]
+    fn shape_mismatch_reshapes_only_behind_the_knob() {
+        let t = topo_2x4x3(); // 3 pp stages
+        let mut s = vec![NodeStatus::Healthy; 6];
+        // SG0 = {node0, node3}: protection exceeded
+        s[0] = NodeStatus::Offline;
+        s[3] = NodeStatus::Offline;
+        let d = both_tiers(); // newest manifest persisted under 3 stages
+        // same shape: the knob changes nothing
+        assert_eq!(
+            decide_elastic(&t, &s, true, d, 3, true),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
+        );
+        // recovering at 2 stages, knob off: the pre-reshape verdict stands
+        // (the loader will degrade or cross tiers, never redistribute)
+        assert_eq!(
+            decide_elastic(&t, &s, true, d, 2, false),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
+        );
+        // knob on: the shape mismatch becomes the Reshape leaf
+        assert_eq!(
+            decide_elastic(&t, &s, true, d, 2, true),
+            RecoveryDecision::Reshape { from_stages: 3, to_stages: 2 }
+        );
+        // the legacy tie-break outranks reshape: strictly newer inline
+        // state serves from legacy exactly as before
+        let legacy_newer = DurableAvailability {
+            legacy_step: Some(11),
+            ..both_tiers()
+        };
+        assert_eq!(
+            decide_elastic(&t, &s, true, legacy_newer, 2, true),
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Legacy }
+        );
+    }
+
+    #[test]
+    fn probe_elastic_plans_reshape_and_predicts_manifest_tier() {
+        let t = topo_2x4x3();
+        let s = MemStorage::new();
+        // a 1-stage manifest committed; this run is shaped for 3 stages
+        s.put(&crate::persist::manifest_key("m", 9), &tiny_manifest(9, 9).encode())
+            .unwrap();
+        let plan = RecoveryPlan::probe_elastic(&t, &[0, 3], true, &s, "m", 3, true);
+        assert_eq!(
+            plan.decision,
+            RecoveryDecision::Reshape { from_stages: 1, to_stages: 3 }
+        );
+        assert_eq!(
+            plan.predicted(),
+            Some(RecoveryPath::Durable(DurableTier::Manifest)),
+            "a reshape serves from the manifest tier"
+        );
+        let m = Metrics::new();
+        plan.record_predicted(&m);
+        assert_eq!(m.counter("recovery_predicted_manifest"), 1);
+        // a manifest-tier restore is NOT a misprediction of a reshape plan
+        plan.record_actual(&m, RecoveryPath::Durable(DurableTier::Manifest));
+        assert_eq!(m.counter("recovery_mispredictions"), 0);
+        // knob off: same probe degrades to the shape-blind decision
+        let plan = RecoveryPlan::probe_elastic(&t, &[0, 3], true, &s, "m", 3, false);
+        assert_eq!(
+            plan.decision,
+            RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest }
+        );
     }
 }

@@ -13,6 +13,7 @@
 //!              [--persist-adaptive-depth BOOL]
 //!              [--auto-snapshot-interval BOOL]
 //!              [--delta-extent-bytes N] [--delta-chain-max N]
+//!              [--reshape-on-restore BOOL]
 //! reft survival    [--threshold 0.9]        # Fig. 8 curves + crossing table
 //! reft intervals   [--lambda 1e-4] [--sg 6] # Appendix-A optimal intervals
 //! reft save-cost   [--model opt-350m] [--dp 24]  # one-shot save costing
@@ -161,6 +162,9 @@ fn build_config(flags: &HashMap<String, String>) -> Result<RunConfig> {
     cfg.ft.delta_extent_bytes = if extent == 0 { 0 } else { extent.max(1024) };
     cfg.ft.delta_chain_max =
         (get_usize("delta-chain-max", cfg.ft.delta_chain_max as usize)? as u64).max(1);
+    if let Some(a) = flags.get("reshape-on-restore") {
+        cfg.ft.reshape_on_restore = a == "true" || a == "1";
+    }
     if let Some(a) = flags.get("artifacts") {
         cfg.artifacts_dir = a.clone();
     }

@@ -1167,6 +1167,14 @@ fn run_job(
         .find(|(v, _)| *v == version)
         .map(|&(_, s)| s)
         .unwrap_or(step);
+    // base commits carry the parallelism-neutral atom index (reshape's
+    // range-fetch map); deltas inherit their base's through the chain walk
+    let atoms = if base_step.is_none() {
+        crate::persist::manifest::derive_atoms(&shared.plan.stage_bytes, &entries)
+            .unwrap_or_default()
+    } else {
+        vec![]
+    };
     let manifest = PersistManifest {
         model: shared.model.clone(),
         step,
@@ -1175,6 +1183,7 @@ fn run_job(
         stage_bytes: shared.plan.stage_bytes.clone(),
         shards: entries,
         base_step,
+        atoms,
     };
     let storage = shared.storage.as_ref();
     let committed = storage.put(&manifest_key(&shared.model, step), &manifest.encode());

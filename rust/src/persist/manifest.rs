@@ -289,6 +289,31 @@ impl PartProgress {
     }
 }
 
+/// One parallelism-neutral atom of a manifest: a contiguous byte range of
+/// the **global payload stream** (every stage payload concatenated in stage
+/// order) and the shard blob that holds it. Together the atoms form a
+/// tensor-range index over the checkpoint that is independent of the
+/// dp/tp/pp split it was persisted under — the reshape pass
+/// (`persist::reshape`) plans byte-range fetches per *target* shard against
+/// this index, so any committed round can be regathered into a different
+/// stage shape.
+///
+/// `start` is the global-stream offset (`sum(stage_bytes[..stage]) +
+/// shard.offset`); `len` and `key` mirror the owning shard. The index is
+/// redundant with the shard list for manifests this crate wrote (and
+/// [`PersistManifest::atom_index`] derives it on the fly for version-0
+/// manifests, so old manifests reshape too) — carrying it explicitly
+/// versions the layout contract on the wire.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AtomEntry {
+    pub stage: usize,
+    /// byte offset into the global payload stream (stages concatenated)
+    pub start: u64,
+    pub len: u64,
+    /// the shard blob holding these bytes (its first byte is `start`)
+    pub key: String,
+}
+
 /// A committed durable checkpoint: the cluster-wide record that every shard
 /// of one in-memory snapshot round landed in storage.
 #[derive(Debug, Clone, PartialEq)]
@@ -313,6 +338,12 @@ pub struct PersistManifest {
     /// and the field is omitted from the encoding in that case so base
     /// manifests stay byte-identical to them.
     pub base_step: Option<u64>,
+    /// the parallelism-neutral tensor-range index (base manifests only;
+    /// deltas inherit their base's). Omitted from the encoding when empty,
+    /// so pre-atom manifests decode and re-encode byte-identically;
+    /// [`PersistManifest::atom_index`] derives the equivalent index from
+    /// the shard tiling when absent.
+    pub atoms: Vec<AtomEntry>,
 }
 
 impl PersistManifest {
@@ -323,10 +354,30 @@ impl PersistManifest {
     /// format is unchanged from PR 3/4 — including omitting `parts` for
     /// single-blob shards.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = JsonWriter::with_capacity(128 + self.shards.len() * 192);
+        let mut w = JsonWriter::with_capacity(
+            128 + self.shards.len() * 192 + self.atoms.len() * 96,
+        );
         w.begin_obj();
-        // "base_step" sorts before every other top-level key; omitted for
-        // base manifests so their bytes stay identical to the old format
+        // "atoms" then "base_step" sort before every other top-level key;
+        // both are omitted when absent so pre-atom base manifests stay
+        // byte-identical to the old format
+        if !self.atoms.is_empty() {
+            w.key("atoms");
+            w.begin_arr();
+            for a in &self.atoms {
+                w.begin_obj();
+                w.key("key");
+                w.str(&a.key);
+                w.key("len");
+                w.u64(a.len);
+                w.key("stage");
+                w.usize(a.stage);
+                w.key("start");
+                w.u64(a.start);
+                w.end_obj();
+            }
+            w.end_arr();
+        }
         if let Some(b) = self.base_step {
             w.key("base_step");
             w.u64(b);
@@ -460,6 +511,24 @@ impl PersistManifest {
         if let Some(b) = self.base_step {
             top.push(("base_step", Json::num(b as f64)));
         }
+        if !self.atoms.is_empty() {
+            top.push((
+                "atoms",
+                Json::Arr(
+                    self.atoms
+                        .iter()
+                        .map(|a| {
+                            Json::obj(vec![
+                                ("key", Json::str(a.key.clone())),
+                                ("stage", Json::from(a.stage)),
+                                ("start", Json::num(a.start as f64)),
+                                ("len", Json::num(a.len as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
         let j = Json::obj(top);
         format!("{j}\n").into_bytes()
     }
@@ -479,6 +548,7 @@ impl PersistManifest {
         let mut stage_bytes = None;
         let mut shards = None;
         let mut base_step = None;
+        let mut atoms = Vec::new();
         r.obj_begin()?;
         while let Some(top) = r.key()? {
             match top.as_str() {
@@ -487,6 +557,12 @@ impl PersistManifest {
                 "version" => version = Some(r.u64()?),
                 "snapshot_step" => snapshot_step = Some(r.u64()?),
                 "base_step" => base_step = Some(r.u64()?),
+                "atoms" => {
+                    r.arr_begin()?;
+                    while r.arr_next()? {
+                        atoms.push(decode_atom(&mut r)?);
+                    }
+                }
                 "stage_bytes" => {
                     let mut v = Vec::new();
                     r.arr_begin()?;
@@ -516,6 +592,7 @@ impl PersistManifest {
             stage_bytes: stage_bytes.ok_or_else(|| anyhow!("manifest missing `stage_bytes`"))?,
             shards: shards.ok_or_else(|| anyhow!("manifest missing `shards`"))?,
             base_step,
+            atoms,
         })
     }
 
@@ -571,8 +648,89 @@ impl PersistManifest {
                 parts,
             });
         }
-        Ok(PersistManifest { model, step, version, snapshot_step, stage_bytes, shards, base_step })
+        let mut atoms = Vec::new();
+        if let Some(arr) = j.get("atoms").and_then(Json::as_arr) {
+            for a in arr {
+                atoms.push(AtomEntry {
+                    stage: a.req_usize("stage")?,
+                    start: a.req_u64("start")?,
+                    len: a.req_u64("len")?,
+                    key: a.req_str("key")?.to_string(),
+                });
+            }
+        }
+        Ok(PersistManifest {
+            model,
+            step,
+            version,
+            snapshot_step,
+            stage_bytes,
+            shards,
+            base_step,
+            atoms,
+        })
     }
+
+    /// The parallelism-neutral tensor-range index of this manifest: the
+    /// declared `atoms` when present (validated against the shard tiling),
+    /// otherwise **derived** from the shards — so version-0 manifests,
+    /// which never carried the index, reshape exactly like new ones. The
+    /// result tiles the global payload stream contiguously, ascending.
+    pub fn atom_index(&self) -> Result<Vec<AtomEntry>> {
+        let derived = derive_atoms(&self.stage_bytes, &self.shards)?;
+        if self.atoms.is_empty() {
+            return Ok(derived);
+        }
+        let mut declared = self.atoms.clone();
+        declared.sort_by_key(|a| a.start);
+        anyhow::ensure!(
+            declared == derived,
+            "manifest at step {} declares an atom index inconsistent with \
+             its shard tiling",
+            self.step
+        );
+        Ok(declared)
+    }
+}
+
+/// Derive the atom index of a **full** manifest from its shard tiling:
+/// one atom per shard, `start` = the shard's offset into the global
+/// payload stream (stage payloads concatenated in stage order). Fails on
+/// manifests whose shards do not tile the stages exactly.
+pub fn derive_atoms(stage_bytes: &[u64], shards: &[ShardEntry]) -> Result<Vec<AtomEntry>> {
+    let mut prefix = vec![0u64; stage_bytes.len()];
+    let mut acc = 0u64;
+    for (i, &b) in stage_bytes.iter().enumerate() {
+        prefix[i] = acc;
+        acc += b;
+    }
+    let mut order: Vec<usize> = (0..shards.len()).collect();
+    order.sort_by_key(|&i| (shards[i].stage, shards[i].offset));
+    let mut atoms = Vec::with_capacity(shards.len());
+    let mut cursor = 0u64;
+    for &i in &order {
+        let s = &shards[i];
+        anyhow::ensure!(
+            s.stage < stage_bytes.len(),
+            "shard `{}` names stage {} out of range",
+            s.key,
+            s.stage
+        );
+        let start = prefix[s.stage] + s.offset;
+        anyhow::ensure!(
+            start == cursor && s.offset + s.len <= stage_bytes[s.stage],
+            "shards do not tile the payload stream at byte {cursor} \
+             (shard `{}`)",
+            s.key
+        );
+        atoms.push(AtomEntry { stage: s.stage, start, len: s.len, key: s.key.clone() });
+        cursor = start + s.len;
+    }
+    anyhow::ensure!(
+        cursor == acc,
+        "shards cover {cursor} of {acc} payload-stream bytes"
+    );
+    Ok(atoms)
 }
 
 /// One shard object from the streaming reader (cursor just past its `{`'s
@@ -645,6 +803,29 @@ fn decode_part(r: &mut JsonReader<'_>) -> Result<PartEntry> {
     })
 }
 
+fn decode_atom(r: &mut JsonReader<'_>) -> Result<AtomEntry> {
+    r.obj_begin()?;
+    let mut key = None;
+    let mut stage = None;
+    let mut start = None;
+    let mut len = None;
+    while let Some(f) = r.key()? {
+        match f.as_str() {
+            "key" => key = Some(r.str()?),
+            "stage" => stage = Some(r.usize()?),
+            "start" => start = Some(r.u64()?),
+            "len" => len = Some(r.u64()?),
+            _ => r.skip_value()?,
+        }
+    }
+    Ok(AtomEntry {
+        stage: stage.ok_or_else(|| anyhow!("atom missing `stage`"))?,
+        start: start.ok_or_else(|| anyhow!("atom missing `start`"))?,
+        len: len.ok_or_else(|| anyhow!("atom missing `len`"))?,
+        key: key.ok_or_else(|| anyhow!("atom missing `key`"))?,
+    })
+}
+
 /// Every committed step of `model`, ascending.
 pub fn persisted_steps(storage: &dyn Storage, model: &str) -> Vec<u64> {
     let prefix = manifest_prefix(model);
@@ -668,7 +849,7 @@ pub fn persisted_steps(storage: &dyn Storage, model: &str) -> Vec<u64> {
 /// per-part checks alone cannot catch a parts list whose entries were
 /// reordered consistently with their blobs. The shared leaf of the serial
 /// and the parallel loader, so byte-for-byte semantics cannot diverge.
-fn fetch_shard_into(storage: &dyn Storage, s: &ShardEntry, out: &mut [u8]) -> Result<()> {
+pub(crate) fn fetch_shard_into(storage: &dyn Storage, s: &ShardEntry, out: &mut [u8]) -> Result<()> {
     anyhow::ensure!(
         out.len() as u64 == s.len,
         "shard `{}` buffer is {} bytes, manifest says {}",
@@ -814,21 +995,30 @@ fn tiling_order(man: &PersistManifest) -> Result<Vec<usize>> {
 /// gets), not compute-bound, so the cap is independent of the core count.
 const LOAD_WORKERS: usize = 8;
 
-/// Hard cap on delta-chain length at restore. The engine re-bases every
-/// `delta_chain_max` commits (default 8), so a longer walk means corrupt or
-/// cyclic links — fail loudly instead of spinning.
-const MAX_CHAIN_DEPTH: usize = 64;
+/// Default bound on delta hops at restore, used by callers with no
+/// `FtConfig` in hand (`load_latest`, the bench oracles). Kept at the
+/// historical hard cap so those paths behave exactly as before the bound
+/// became configurable. Callers that know the configured budget pass
+/// `ft.delta_chain_max` through the `*_bounded` entry points instead.
+pub const DEFAULT_CHAIN_BUDGET: u64 = 64;
 
 /// Resolve the base→…→`man` manifest chain, base (a full manifest) first.
 /// Every link must strictly decrease the step (no cycles), keep the stage
-/// shape, and resolve to a committed manifest; the walk is bounded by
-/// [`MAX_CHAIN_DEPTH`].
-fn load_chain(storage: &dyn Storage, man: &PersistManifest) -> Result<Vec<PersistManifest>> {
+/// shape, and resolve to a committed manifest; the walk follows at most
+/// `chain_budget` links (so `chain_budget + 1` manifests total, the base
+/// included — the "+1 for the base" of `ft.delta_chain_max`). The engine
+/// re-bases every `delta_chain_max` commits, so a longer walk means
+/// corrupt or cyclic links — fail loudly instead of spinning.
+pub(crate) fn load_chain(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+    chain_budget: u64,
+) -> Result<Vec<PersistManifest>> {
     let mut chain = vec![man.clone()];
     while let Some(base) = chain.last().expect("non-empty").base_step {
         anyhow::ensure!(
-            chain.len() <= MAX_CHAIN_DEPTH,
-            "delta chain from step {} exceeds {MAX_CHAIN_DEPTH} links",
+            (chain.len() as u64) <= chain_budget,
+            "delta chain from step {} exceeds {chain_budget} links",
             man.step
         );
         let cur = chain.last().expect("non-empty");
@@ -969,11 +1159,24 @@ pub fn load_manifest_payload(
     storage: &dyn Storage,
     man: &PersistManifest,
 ) -> Result<Vec<Vec<u8>>> {
+    load_manifest_payload_bounded(storage, man, DEFAULT_CHAIN_BUDGET)
+}
+
+/// [`load_manifest_payload`] with the delta-chain walk bounded to the
+/// **configured** budget (`ft.delta_chain_max` delta hops plus the base)
+/// instead of the historical [`DEFAULT_CHAIN_BUDGET`] hard cap — the entry
+/// point the trainers use, so the restore walk and the engine's re-base
+/// cadence cannot drift apart.
+pub fn load_manifest_payload_bounded(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+    chain_budget: u64,
+) -> Result<Vec<Vec<u8>>> {
     if man.base_step.is_none() {
         ensure_full_manifest(man)?;
         return load_manifest_payload_with(storage, man, fetch_shard_into);
     }
-    let chain = load_chain(storage, man)?;
+    let chain = load_chain(storage, man, chain_budget)?;
     ensure_full_manifest(&chain[0])?;
     let mut stages = load_manifest_payload_with(storage, &chain[0], fetch_shard_into)?;
     for link in &chain[1..] {
@@ -1063,7 +1266,7 @@ pub fn load_manifest_payload_serial(
             vec![man.clone()]
         }
         Some(_) => {
-            let chain = load_chain(storage, man)?;
+            let chain = load_chain(storage, man, DEFAULT_CHAIN_BUDGET)?;
             ensure_full_manifest(&chain[0])?;
             chain
         }
@@ -1083,13 +1286,38 @@ pub fn load_manifest_payload_serial(
     Ok(out)
 }
 
+/// Manifests that failed `PersistManifest::decode` during recovery
+/// resolution — a brownout-torn newest manifest silently degrading
+/// recovery to an older round used to leave zero signal; this counter (and
+/// the paired `manifest_torn` obs instant, corr id = the manifest's step)
+/// is that signal. Process-global because resolution runs before any
+/// `Metrics` registry is in scope on the restart path.
+static MANIFEST_TORN: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Total torn (undecodable) manifests skipped by recovery resolution since
+/// process start.
+pub fn manifest_torn_count() -> u64 {
+    MANIFEST_TORN.load(std::sync::atomic::Ordering::Relaxed)
+}
+
+/// Record one torn manifest skip: bump the process-global counter and emit
+/// the `manifest_torn` instant event with the manifest's step as the
+/// correlation id.
+pub(crate) fn note_torn_manifest(step: u64) {
+    MANIFEST_TORN.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    crate::obs::instant(crate::obs::cat::PERSIST, "manifest_torn", step, 0);
+}
+
 /// The newest manifest of `model` that satisfies `accept` and whose every
 /// shard loads and verifies. Older manifests are tried in turn, so a
 /// corrupt, partially GC-ed, or shape-incompatible newer one degrades,
-/// never blocks, recovery.
+/// never blocks, recovery — but a manifest that fails to *decode* (torn by
+/// a brownout mid-put) is counted and traced on the way past, never
+/// skipped silently.
 fn load_latest_matching(
     storage: &dyn Storage,
     model: &str,
+    chain_budget: u64,
     accept: impl Fn(&PersistManifest) -> bool,
 ) -> Option<(PersistManifest, Vec<Vec<u8>>)> {
     let steps = persisted_steps(storage, model);
@@ -1098,12 +1326,13 @@ fn load_latest_matching(
             continue;
         };
         let Ok(man) = PersistManifest::decode(&bytes) else {
+            note_torn_manifest(step);
             continue;
         };
         if !accept(&man) {
             continue;
         }
-        if let Ok(stages) = load_manifest_payload(storage, &man) {
+        if let Ok(stages) = load_manifest_payload_bounded(storage, &man, chain_budget) {
             return Some((man, stages));
         }
     }
@@ -1117,7 +1346,24 @@ pub fn load_latest(
     storage: &dyn Storage,
     model: &str,
 ) -> Result<Option<(PersistManifest, Vec<Vec<u8>>)>> {
-    Ok(load_latest_matching(storage, model, |_| true))
+    Ok(load_latest_matching(storage, model, DEFAULT_CHAIN_BUDGET, |_| true))
+}
+
+/// Does `legacy_key` name a strictly newer inline checkpoint than a
+/// manifest containing `snapshot_step`? The two **steps** are compared
+/// numerically — the old rendered-string comparison
+/// (`step_key(model, snapshot_step) < legacy_key`) inherited the
+/// model-component sensitivity the CAUTION in `checkpoint::storage` warns
+/// about (a legacy key of a *different* model compares against the model
+/// prefix, not the step) and broke past zero-pad width overflow (a 13-digit
+/// step sorts *before* a 12-digit one). A legacy key whose step cannot be
+/// parsed for this model never outranks a verified manifest.
+pub(crate) fn legacy_is_newer(model: &str, snapshot_step: u64, legacy_key: &str) -> bool {
+    let prefix = format!("{model}/step-");
+    match step_of_key(legacy_key, &prefix) {
+        Some(legacy_step) => legacy_step > snapshot_step,
+        None => false,
+    }
 }
 
 /// The trainers' case-3 (protection exceeded) durable-tier resolution: the
@@ -1127,16 +1373,29 @@ pub fn load_latest(
 /// recovery. Returns `None` when no manifest qualifies or when
 /// `legacy_key` names a strictly newer inline checkpoint (the comparison
 /// uses the manifest's `snapshot_step` — the state it actually contains —
-/// against the zero-padded legacy `step_key`).
+/// against the step parsed out of the legacy key, numerically).
 pub fn resolve_for_recovery(
     storage: &dyn Storage,
     model: &str,
     stages: usize,
     legacy_key: Option<&str>,
 ) -> Option<(PersistManifest, Vec<Vec<u8>>)> {
-    let hit = load_latest_matching(storage, model, |m| m.stage_bytes.len() == stages)?;
+    resolve_for_recovery_bounded(storage, model, stages, legacy_key, DEFAULT_CHAIN_BUDGET)
+}
+
+/// [`resolve_for_recovery`] with the delta-chain walk bounded to the
+/// configured `ft.delta_chain_max` budget.
+pub fn resolve_for_recovery_bounded(
+    storage: &dyn Storage,
+    model: &str,
+    stages: usize,
+    legacy_key: Option<&str>,
+    chain_budget: u64,
+) -> Option<(PersistManifest, Vec<Vec<u8>>)> {
+    let hit =
+        load_latest_matching(storage, model, chain_budget, |m| m.stage_bytes.len() == stages)?;
     if let Some(k) = legacy_key {
-        if crate::checkpoint::storage::step_key(model, hit.0.snapshot_step).as_str() < k {
+        if legacy_is_newer(model, hit.0.snapshot_step, k) {
             return None;
         }
     }
@@ -1224,6 +1483,7 @@ mod tests {
                 },
             ],
             base_step: None,
+            atoms: vec![],
         }
     }
 
@@ -1299,6 +1559,7 @@ mod tests {
             stage_bytes: vec![(1 << 60) + 3],
             shards: vec![],
             base_step: Some((1 << 53) + 7),
+            atoms: vec![],
         };
         let back = PersistManifest::decode(&man.encode()).unwrap();
         assert_eq!(back, man, "no precision loss through the streaming codec");
@@ -1577,10 +1838,12 @@ mod tests {
 
     #[test]
     fn base_manifest_wire_format_is_unchanged() {
-        // full manifests must stay byte-compatible with the pre-delta format
+        // full manifests must stay byte-compatible with the pre-delta,
+        // pre-atom format
         let text = String::from_utf8(sample().encode()).unwrap();
         assert!(!text.contains("base_step"));
         assert!(!text.contains("extents"));
+        assert!(!text.contains("atoms"));
     }
 
     #[test]
@@ -1667,5 +1930,138 @@ mod tests {
         assert!(!s.exists(&part_key("m", 20, 0, 1, 0)), "orphan part swept");
         assert!(s.exists(&shard_key("m", 50, 0, 0)), "in-flight kept");
         assert!(s.exists(&man.shards[0].key), "manifested kept");
+    }
+
+    #[test]
+    fn atom_codec_roundtrip_matches_dom() {
+        let mut man = sample();
+        man.atoms = derive_atoms(&man.stage_bytes, &man.shards).unwrap();
+        assert_eq!(man.encode(), man.encode_dom(), "atoms byte-identical to DOM");
+        assert_eq!(PersistManifest::decode(&man.encode()).unwrap(), man);
+        assert_eq!(PersistManifest::decode_dom(&man.encode()).unwrap(), man);
+    }
+
+    #[test]
+    fn atom_index_derives_for_version0_and_validates_declared() {
+        // a version-0 manifest (no atoms on the wire) derives the index
+        let man = sample();
+        let derived = man.atom_index().unwrap();
+        assert_eq!(
+            derived,
+            vec![
+                AtomEntry { stage: 0, start: 0, len: 6, key: man.shards[0].key.clone() },
+                AtomEntry { stage: 0, start: 6, len: 4, key: man.shards[1].key.clone() },
+                AtomEntry { stage: 1, start: 10, len: 6, key: man.shards[2].key.clone() },
+            ]
+        );
+        // a declared index that matches the tiling is accepted as-is
+        let mut with = man.clone();
+        with.atoms = derived.clone();
+        assert_eq!(with.atom_index().unwrap(), derived);
+        // a declared index inconsistent with the shard tiling is refused
+        with.atoms[1].len = 3;
+        assert!(with.atom_index().is_err());
+        // and a manifest whose shards don't tile cannot produce an index
+        let mut gap = man;
+        gap.shards[1].offset = 7;
+        assert!(gap.atom_index().is_err());
+    }
+
+    #[test]
+    fn legacy_tie_break_is_numeric_not_lexicographic() {
+        use crate::checkpoint::storage::step_key;
+        let s = MemStorage::new();
+        let man = sample(); // model "m", snapshot_step 38
+        s.put(&manifest_key("m", 40), &man.encode()).unwrap();
+        put_shards(&s, &man);
+
+        // zero-pad width overflow: a 13-digit legacy step renders to a key
+        // that sorts BEFORE every 12-digit step_key, so the old string
+        // compare concluded "manifest newer" — numerically 10^12 > 38 and
+        // the legacy checkpoint must win
+        let overflow = step_key("m", 1_000_000_000_005);
+        assert!(
+            step_key("m", 38).as_str() > overflow.as_str(),
+            "precondition: the overflowing key sorts backwards"
+        );
+        assert!(resolve_for_recovery(&s, "m", 2, Some(overflow.as_str())).is_none());
+
+        // a foreign model's legacy key: "z/..." sorts after every "m/..."
+        // key, so the old compare deferred to it unconditionally — it names
+        // no state of THIS model and the manifest must serve
+        let foreign = step_key("z", 1);
+        assert!(
+            step_key("m", 38).as_str() < foreign.as_str(),
+            "precondition: the foreign key sorts as newer"
+        );
+        assert!(resolve_for_recovery(&s, "m", 2, Some(foreign.as_str())).is_some());
+    }
+
+    /// A chain of `hops` empty-extent delta links over the `sample()` base:
+    /// no extent blobs exist (unchanged shards fetch nothing), so the chain
+    /// is cheap to build at any length and every link still re-verifies the
+    /// base bytes against the recorded CRCs.
+    fn put_empty_delta_chain(s: &MemStorage, hops: u64) -> PersistManifest {
+        let base = sample();
+        put_shards(s, &base);
+        s.put(&manifest_key("m", 40), &base.encode()).unwrap();
+        let mut head = base.clone();
+        for h in 1..=hops {
+            let mut d = base.clone();
+            d.step = 40 + h;
+            d.snapshot_step = 40 + h;
+            d.base_step = Some(40 + h - 1);
+            for sh in &mut d.shards {
+                sh.key = shard_key("m", 40 + h, sh.stage, sh.node);
+            }
+            s.put(&manifest_key("m", 40 + h), &d.encode()).unwrap();
+            head = d;
+        }
+        head
+    }
+
+    #[test]
+    fn chain_walk_bound_follows_the_configured_budget() {
+        // boundary: exactly `delta_chain_max` hops loads under a budget of
+        // `delta_chain_max`, and one past it is rejected — the walk bound
+        // derives from the knob, not a hard-coded constant
+        let delta_chain_max = 8u64;
+        let s = MemStorage::new();
+        let head = put_empty_delta_chain(&s, delta_chain_max);
+        let loaded =
+            load_manifest_payload_bounded(&s, &head, delta_chain_max).unwrap();
+        assert_eq!(loaded[0][..6], [1u8; 6], "chain at the bound reconstructs");
+        // one hop past the budget: reject, don't walk on
+        assert!(load_manifest_payload_bounded(&s, &head, delta_chain_max - 1).is_err());
+        let s2 = MemStorage::new();
+        let over = put_empty_delta_chain(&s2, delta_chain_max + 1);
+        let e = load_manifest_payload_bounded(&s2, &over, delta_chain_max)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("exceeds"), "over-budget chain fails loudly: {e}");
+        // the default budget still carries the historical 64-hop cap
+        let s3 = MemStorage::new();
+        let legacy = put_empty_delta_chain(&s3, DEFAULT_CHAIN_BUDGET);
+        assert!(load_manifest_payload(&s3, &legacy).is_ok());
+        let s4 = MemStorage::new();
+        let past = put_empty_delta_chain(&s4, DEFAULT_CHAIN_BUDGET + 1);
+        assert!(load_manifest_payload(&s4, &past).is_err());
+    }
+
+    #[test]
+    fn torn_manifest_skip_is_counted() {
+        let s = MemStorage::new();
+        let man = sample();
+        s.put(&manifest_key("m", 40), &man.encode()).unwrap();
+        put_shards(&s, &man);
+        // a newer manifest torn mid-put by a brownout: truncated JSON
+        s.put(&manifest_key("m", 50), b"{\"model\": \"m\"").unwrap();
+        let before = manifest_torn_count();
+        let (hit, _) = load_latest(&s, "m").unwrap().unwrap();
+        assert_eq!(hit.step, 40, "torn newest degrades to the older round");
+        assert!(
+            manifest_torn_count() >= before + 1,
+            "the skip must leave a signal"
+        );
     }
 }

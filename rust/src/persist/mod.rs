@@ -19,6 +19,10 @@
 //!   only after every shard landed, so `latest` can never name a torn or
 //!   partial checkpoint; loading is a parallel sharded gather (the serial
 //!   loop is kept as the measured baseline/oracle).
+//! * [`reshape`] — reshape-on-restore: the manifest's parallelism-neutral
+//!   atom index turned into a byte-range fetch plan for a **different**
+//!   dp/tp/pp split, so an elastic shrink/grow restores instead of
+//!   aborting (Universal Checkpointing, arxiv 2406.18820).
 //! * [`retention`] — keep-last-K + keep-every-Nth GC of superseded versions
 //!   and orphaned shard blobs/part-objects.
 //! * [`scheduler`] — the live Appendix-A cadences: measured save overhead
@@ -36,16 +40,23 @@
 pub mod driver;
 pub mod engine;
 pub mod manifest;
+pub mod reshape;
 pub mod retention;
 pub mod scheduler;
 
 pub use driver::PersistDriver;
 pub use engine::{NodeThrottles, PersistEngine, PersistStats, Throttle};
 pub use manifest::{
-    load_latest, load_manifest_payload, load_manifest_payload_separate,
-    load_manifest_payload_serial, manifest_key, manifest_prefix, part_key, part_meta_key,
-    persisted_steps, resolve_for_recovery, shard_key, step_of_key, sweep_orphan_shards,
-    PartEntry, PartProgress, PersistManifest, ShardEntry,
+    derive_atoms, load_latest, load_manifest_payload, load_manifest_payload_bounded,
+    load_manifest_payload_separate, load_manifest_payload_serial, manifest_key,
+    manifest_prefix, manifest_torn_count, part_key, part_meta_key, persisted_steps,
+    resolve_for_recovery, resolve_for_recovery_bounded, shard_key, step_of_key,
+    sweep_orphan_shards, AtomEntry, PartEntry, PartProgress, PersistManifest, ShardEntry,
+    DEFAULT_CHAIN_BUDGET,
+};
+pub use reshape::{
+    reshape_compatible, reshape_restore, resolve_for_recovery_reshaped, retile_payload,
+    ReshapePiece, ReshapePlan, StageCodec, STAGE_STATE_HEADER_BYTES,
 };
 pub use retention::{run_gc, GcReport, RetentionPolicy};
 pub use scheduler::{IntervalScheduler, LambdaTracker, SnapshotScheduler, GAMMA_PRIOR_EVENTS};

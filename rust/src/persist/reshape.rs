@@ -1,0 +1,646 @@
+//! Reshape-on-restore: the redistribution pass that regathers any
+//! committed manifest into a **different** dp/tp/pp stage shape (the
+//! *Universal Checkpointing* atom model — PAPERS.md, arxiv 2406.18820).
+//!
+//! The manifest's atom index ([`PersistManifest::atom_index`]) describes
+//! the checkpoint as parallelism-neutral byte ranges of the **global
+//! payload stream** (stage payloads concatenated in stage order). Given a
+//! target shape, [`ReshapePlan::plan`] turns that index into the minimal
+//! set of per-shard byte-range copies: which bytes of which shard blob
+//! land at which offset of which *target* stage buffer. Execution
+//! ([`reshape_restore`]) fetches each needed shard exactly once through
+//! the fused-CRC leaf (`fetch_shard_into` — single-touch verify, multipart
+//! combine included) and memcpys the planned ranges into place, so a
+//! reshaped restore never fetches more bytes than the dense restore at the
+//! source shape would.
+//!
+//! What "neutral" means depends on the payload layout, named by
+//! [`StageCodec`]:
+//!
+//! * [`StageCodec::Opaque`] — the stage payloads are one flat byte stream
+//!   with no per-stage framing (the soak/witness planes, raw tensors). Any
+//!   target tiling of the same total is valid.
+//! * [`StageCodec::StageState`] — the trainers' `StageState` layout: each
+//!   stage payload is a 40-byte header (step + RNG lanes) followed by
+//!   `params ‖ adam_m ‖ adam_v`, each `n × 4` bytes. Headers are **not**
+//!   parallelism-neutral (they repeat per stage), so the pass re-tiles the
+//!   three element streams independently — the params stream of the target
+//!   split is carved out of the concatenated params stream of the source
+//!   split, and likewise for the two Adam moments — and every target stage
+//!   receives a copy of source stage 0's header (the step is
+//!   cluster-uniform; the per-stage RNG lanes are re-anchored by the
+//!   reshape, which is the documented semantic of an elastic restart).
+//!
+//! **Delta chains reshape over the *reshaped base* rule:** a delta
+//! manifest's extents are source-shape-local, so the chain is first
+//! reconstructed at the source shape through the existing bounded chain
+//! walk (every CRC verified exactly as a dense restore would) and the
+//! *result* is re-tiled in memory — no extra storage fetches beyond what
+//! the dense chain load already pays.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::checkpoint::Storage;
+
+use super::manifest::{
+    self, fetch_shard_into, load_manifest_payload_bounded, manifest_key, persisted_steps,
+    PersistManifest,
+};
+
+/// How a stage payload decomposes into parallelism-neutral byte streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageCodec {
+    /// no per-stage framing: the concatenated payloads are one neutral
+    /// stream, any same-total target tiling is valid
+    Opaque,
+    /// the trainers' `StageState` layout: `40-byte header ‖ params ‖
+    /// adam_m ‖ adam_v` per stage — three neutral element streams plus a
+    /// non-neutral header
+    StageState,
+}
+
+/// Bytes of the `StageState` per-stage header: step (u64) + 4 RNG lanes.
+pub const STAGE_STATE_HEADER_BYTES: u64 = 40;
+
+/// Can a checkpoint at `src` stage sizes be reshaped into `dst`?
+///
+/// * `Opaque`: equal byte totals.
+/// * `StageState`: every stage on both sides carries a whole number of
+///   12-byte parameter records after its header, and the record totals
+///   match (same model, different split).
+pub fn reshape_compatible(codec: StageCodec, src: &[u64], dst: &[u64]) -> bool {
+    if src.is_empty() || dst.is_empty() {
+        return false;
+    }
+    match codec {
+        StageCodec::Opaque => src.iter().sum::<u64>() == dst.iter().sum::<u64>(),
+        StageCodec::StageState => {
+            let body = |sb: &[u64]| -> Option<u64> {
+                let mut total = 0u64;
+                for &b in sb {
+                    if b < STAGE_STATE_HEADER_BYTES
+                        || (b - STAGE_STATE_HEADER_BYTES) % 12 != 0
+                    {
+                        return None;
+                    }
+                    total += b - STAGE_STATE_HEADER_BYTES;
+                }
+                Some(total)
+            };
+            matches!((body(src), body(dst)), (Some(a), Some(b)) if a == b)
+        }
+    }
+}
+
+/// One stage-to-stage copy in payload space: `len` bytes from
+/// `(src_stage, src_off)` of the source split to `(dst_stage, dst_off)` of
+/// the target split.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct CopyOp {
+    src_stage: usize,
+    src_off: u64,
+    dst_stage: usize,
+    dst_off: u64,
+    len: u64,
+}
+
+/// The per-stream segment lists of a shape under a codec: each stream is a
+/// run of `(stage, stage-local offset, len)` pieces whose concatenation is
+/// the neutral stream. Headers are not part of any stream.
+fn streams(codec: StageCodec, stage_bytes: &[u64]) -> Result<Vec<Vec<(usize, u64, u64)>>> {
+    match codec {
+        StageCodec::Opaque => Ok(vec![stage_bytes
+            .iter()
+            .enumerate()
+            .map(|(s, &b)| (s, 0u64, b))
+            .collect()]),
+        StageCodec::StageState => {
+            let mut params = Vec::new();
+            let mut adam_m = Vec::new();
+            let mut adam_v = Vec::new();
+            for (s, &b) in stage_bytes.iter().enumerate() {
+                anyhow::ensure!(
+                    b >= STAGE_STATE_HEADER_BYTES
+                        && (b - STAGE_STATE_HEADER_BYTES) % 12 == 0,
+                    "stage {s} payload of {b} bytes is not a StageState layout"
+                );
+                let third = (b - STAGE_STATE_HEADER_BYTES) / 3;
+                let h = STAGE_STATE_HEADER_BYTES;
+                params.push((s, h, third));
+                adam_m.push((s, h + third, third));
+                adam_v.push((s, h + 2 * third, third));
+            }
+            Ok(vec![params, adam_m, adam_v])
+        }
+    }
+}
+
+/// The full copy plan in payload space: zip-walk each neutral stream of the
+/// source and target shapes, emitting maximal copies; for `StageState`,
+/// every target stage additionally receives source stage 0's header.
+fn copy_ops(codec: StageCodec, src: &[u64], dst: &[u64]) -> Result<Vec<CopyOp>> {
+    anyhow::ensure!(
+        reshape_compatible(codec, src, dst),
+        "source shape {src:?} cannot be reshaped into {dst:?} under {codec:?}"
+    );
+    let src_streams = streams(codec, src)?;
+    let dst_streams = streams(codec, dst)?;
+    let mut ops = Vec::new();
+    if codec == StageCodec::StageState {
+        for t in 0..dst.len() {
+            ops.push(CopyOp {
+                src_stage: 0,
+                src_off: 0,
+                dst_stage: t,
+                dst_off: 0,
+                len: STAGE_STATE_HEADER_BYTES,
+            });
+        }
+    }
+    for (ss, ds) in src_streams.iter().zip(&dst_streams) {
+        let (mut si, mut di) = (0usize, 0usize);
+        let (mut s_used, mut d_used) = (0u64, 0u64);
+        while si < ss.len() && di < ds.len() {
+            let (s_stage, s_base, s_len) = ss[si];
+            let (d_stage, d_base, d_len) = ds[di];
+            let take = (s_len - s_used).min(d_len - d_used);
+            if take > 0 {
+                ops.push(CopyOp {
+                    src_stage: s_stage,
+                    src_off: s_base + s_used,
+                    dst_stage: d_stage,
+                    dst_off: d_base + d_used,
+                    len: take,
+                });
+            }
+            s_used += take;
+            d_used += take;
+            if s_used == s_len {
+                si += 1;
+                s_used = 0;
+            }
+            if d_used == d_len {
+                di += 1;
+                d_used = 0;
+            }
+        }
+    }
+    Ok(ops)
+}
+
+/// Pure in-memory re-tile: carve `src_stages` (at their own shape) into
+/// the `target_stage_bytes` shape under `codec`. The leaf shared by the
+/// delta path of [`reshape_restore`] and the tests' oracle comparisons.
+pub fn retile_payload(
+    codec: StageCodec,
+    src_stages: &[Vec<u8>],
+    target_stage_bytes: &[u64],
+) -> Result<Vec<Vec<u8>>> {
+    let src_sb: Vec<u64> = src_stages.iter().map(|s| s.len() as u64).collect();
+    let ops = copy_ops(codec, &src_sb, target_stage_bytes)?;
+    let mut out: Vec<Vec<u8>> =
+        target_stage_bytes.iter().map(|&b| vec![0u8; b as usize]).collect();
+    for op in &ops {
+        let src = &src_stages[op.src_stage]
+            [op.src_off as usize..(op.src_off + op.len) as usize];
+        out[op.dst_stage][op.dst_off as usize..(op.dst_off + op.len) as usize]
+            .copy_from_slice(src);
+    }
+    Ok(out)
+}
+
+/// One planned byte-range copy out of a shard blob: `len` bytes starting
+/// `src_off` into shard `shard`'s payload land at `dst_off` of target
+/// stage `dst_stage`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReshapePiece {
+    /// index into the manifest's `shards`
+    pub shard: usize,
+    /// byte offset within that shard's payload
+    pub src_off: u64,
+    pub dst_stage: usize,
+    pub dst_off: u64,
+    pub len: u64,
+}
+
+/// The byte-range fetch plan of one reshaped restore: which shards are
+/// needed at all, and where each of their byte ranges lands in the target
+/// stage buffers.
+#[derive(Debug, Clone)]
+pub struct ReshapePlan {
+    pub pieces: Vec<ReshapePiece>,
+    /// unique indices of the shards the plan touches, ascending — shards a
+    /// target shape doesn't need are never fetched
+    pub needed: Vec<usize>,
+    /// total bytes the plan fetches (the summed lengths of `needed`) —
+    /// asserted ≤ the dense-restore byte count in `benches/hotpath.rs`
+    pub fetched_bytes: u64,
+    pub target_stage_bytes: Vec<u64>,
+}
+
+impl ReshapePlan {
+    /// Plan the redistribution of full manifest `man` into
+    /// `target_stage_bytes`: payload-space copy ops from the stream
+    /// zip-walk, mapped through the atom index onto shard byte ranges.
+    pub fn plan(
+        man: &PersistManifest,
+        codec: StageCodec,
+        target_stage_bytes: &[u64],
+    ) -> Result<ReshapePlan> {
+        anyhow::ensure!(
+            man.base_step.is_none(),
+            "reshape plans target full manifests; reconstruct delta chains \
+             at the source shape first (reshape_restore does)"
+        );
+        let atoms = man.atom_index()?;
+        let mut prefix = vec![0u64; man.stage_bytes.len()];
+        let mut acc = 0u64;
+        for (i, &b) in man.stage_bytes.iter().enumerate() {
+            prefix[i] = acc;
+            acc += b;
+        }
+        let shard_of: BTreeMap<&str, usize> = man
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.key.as_str(), i))
+            .collect();
+        let ops = copy_ops(codec, &man.stage_bytes, target_stage_bytes)?;
+        let mut pieces = Vec::new();
+        for op in &ops {
+            // split this payload-space copy at atom boundaries and express
+            // each fragment as a shard-local byte range
+            let mut global = prefix[op.src_stage] + op.src_off;
+            let mut dst_off = op.dst_off;
+            let mut left = op.len;
+            // atoms tile [0, total) ascending: find the one covering
+            // `global`, then walk forward
+            let mut ai = atoms.partition_point(|a| a.start + a.len <= global);
+            while left > 0 {
+                let a = atoms
+                    .get(ai)
+                    .with_context(|| format!("atom index ends before byte {global}"))?;
+                let within = global - a.start;
+                let take = left.min(a.len - within);
+                let shard = *shard_of
+                    .get(a.key.as_str())
+                    .with_context(|| format!("atom names unknown shard `{}`", a.key))?;
+                pieces.push(ReshapePiece {
+                    shard,
+                    src_off: within,
+                    dst_stage: op.dst_stage,
+                    dst_off,
+                    len: take,
+                });
+                global += take;
+                dst_off += take;
+                left -= take;
+                ai += 1;
+            }
+        }
+        let mut needed: Vec<usize> = pieces.iter().map(|p| p.shard).collect();
+        needed.sort_unstable();
+        needed.dedup();
+        let fetched_bytes = needed.iter().map(|&i| man.shards[i].len).sum();
+        Ok(ReshapePlan {
+            pieces,
+            needed,
+            fetched_bytes,
+            target_stage_bytes: target_stage_bytes.to_vec(),
+        })
+    }
+
+    /// Execute the plan: fetch every needed shard once through the
+    /// fused-CRC leaf and memcpy the planned ranges into freshly allocated
+    /// target stage buffers.
+    pub fn execute(
+        &self,
+        storage: &dyn Storage,
+        man: &PersistManifest,
+    ) -> Result<Vec<Vec<u8>>> {
+        let mut scratch: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+        for &i in &self.needed {
+            let s = &man.shards[i];
+            let mut buf = vec![0u8; s.len as usize];
+            fetch_shard_into(storage, s, &mut buf)
+                .with_context(|| format!("reshape fetch of shard `{}`", s.key))?;
+            scratch.insert(i, buf);
+        }
+        let mut out: Vec<Vec<u8>> = self
+            .target_stage_bytes
+            .iter()
+            .map(|&b| vec![0u8; b as usize])
+            .collect();
+        for p in &self.pieces {
+            let src =
+                &scratch[&p.shard][p.src_off as usize..(p.src_off + p.len) as usize];
+            out[p.dst_stage][p.dst_off as usize..(p.dst_off + p.len) as usize]
+                .copy_from_slice(src);
+        }
+        Ok(out)
+    }
+}
+
+/// Restore `man` into the `target_stage_bytes` shape. Full manifests go
+/// through the planned range-fetch path (each needed shard fetched once,
+/// CRC-fused); delta manifests reconstruct their chain at the **source**
+/// shape first (bounded by `chain_budget` hops) and re-tile the result in
+/// memory — the delta-over-reshaped-base rule. Returns the target stage
+/// payloads and the number of shard bytes fetched.
+pub fn reshape_restore(
+    storage: &dyn Storage,
+    man: &PersistManifest,
+    codec: StageCodec,
+    target_stage_bytes: &[u64],
+    chain_budget: u64,
+) -> Result<(Vec<Vec<u8>>, u64)> {
+    if man.base_step.is_none() {
+        let plan = ReshapePlan::plan(man, codec, target_stage_bytes)?;
+        let out = plan.execute(storage, man)?;
+        return Ok((out, plan.fetched_bytes));
+    }
+    let src = load_manifest_payload_bounded(storage, man, chain_budget)?;
+    let fetched: u64 = man.stage_bytes.iter().sum();
+    let out = retile_payload(codec, &src, target_stage_bytes)?;
+    Ok((out, fetched))
+}
+
+/// The shape-tolerant sibling of [`super::resolve_for_recovery`]: walk the
+/// committed manifests newest-first and serve the first that either
+/// matches `target_stage_bytes` **exactly** (the dense path — byte-for-byte
+/// the pre-reshape behavior) or is reshape-compatible under `codec` (the
+/// redistribution path). The returned flag is `true` when the hit was
+/// reshaped. Torn manifests are counted and traced on the way past; the
+/// legacy tie-break compares steps numerically.
+pub fn resolve_for_recovery_reshaped(
+    storage: &dyn Storage,
+    model: &str,
+    codec: StageCodec,
+    target_stage_bytes: &[u64],
+    legacy_key: Option<&str>,
+    chain_budget: u64,
+) -> Option<(PersistManifest, Vec<Vec<u8>>, bool)> {
+    let steps = persisted_steps(storage, model);
+    for &step in steps.iter().rev() {
+        let Ok(bytes) = storage.get(&manifest_key(model, step)) else {
+            continue;
+        };
+        let Ok(man) = PersistManifest::decode(&bytes) else {
+            manifest::note_torn_manifest(step);
+            continue;
+        };
+        let hit = if man.stage_bytes == target_stage_bytes {
+            load_manifest_payload_bounded(storage, &man, chain_budget)
+                .ok()
+                .map(|stages| (stages, false))
+        } else if reshape_compatible(codec, &man.stage_bytes, target_stage_bytes) {
+            reshape_restore(storage, &man, codec, target_stage_bytes, chain_budget)
+                .ok()
+                .map(|(stages, _)| (stages, true))
+        } else {
+            None
+        };
+        let Some((stages, reshaped)) = hit else {
+            continue;
+        };
+        if let Some(k) = legacy_key {
+            if manifest::legacy_is_newer(model, man.snapshot_step, k) {
+                return None;
+            }
+        }
+        if reshaped {
+            crate::obs::instant(
+                crate::obs::cat::PERSIST,
+                "reshape_restore",
+                man.step,
+                target_stage_bytes.len() as u64,
+            );
+        }
+        return Some((man, stages, reshaped));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::checkpoint::MemStorage;
+    use crate::persist::manifest::{derive_atoms, shard_key, ShardEntry};
+
+    /// A full manifest over `stage_bytes` with `shards_per_stage` even-ish
+    /// shards per stage, blobs landed in `s`. Returns the manifest and the
+    /// source stage payloads.
+    fn synth_manifest(
+        s: &MemStorage,
+        model: &str,
+        step: u64,
+        stage_bytes: &[u64],
+        shards_per_stage: usize,
+        fill: impl Fn(u64) -> u8,
+    ) -> (PersistManifest, Vec<Vec<u8>>) {
+        let mut global = 0u64;
+        let mut shards = Vec::new();
+        let mut stages = Vec::new();
+        for (stage, &sb) in stage_bytes.iter().enumerate() {
+            let mut payload = Vec::with_capacity(sb as usize);
+            for _ in 0..sb {
+                payload.push(fill(global));
+                global += 1;
+            }
+            let n = shards_per_stage.min(sb.max(1) as usize).max(1);
+            let chunk = (sb as usize).div_ceil(n).max(1);
+            let mut off = 0usize;
+            let mut node = 0usize;
+            while off < sb as usize || (sb == 0 && node == 0) {
+                let end = (off + chunk).min(sb as usize);
+                let body = &payload[off..end];
+                let key = shard_key(model, step, stage, node);
+                s.put(&key, body).unwrap();
+                shards.push(ShardEntry {
+                    key,
+                    stage,
+                    node,
+                    offset: off as u64,
+                    len: (end - off) as u64,
+                    crc32: crc32fast::hash(body),
+                    extents: vec![],
+                    parts: vec![],
+                });
+                off = end;
+                node += 1;
+                if sb == 0 {
+                    break;
+                }
+            }
+            stages.push(payload);
+        }
+        let atoms = derive_atoms(stage_bytes, &shards).unwrap();
+        let man = PersistManifest {
+            model: model.into(),
+            step,
+            version: 1,
+            snapshot_step: step,
+            stage_bytes: stage_bytes.to_vec(),
+            shards,
+            base_step: None,
+            atoms,
+        };
+        s.put(&manifest_key(model, step), &man.encode()).unwrap();
+        (man, stages)
+    }
+
+    #[test]
+    fn opaque_reshape_is_stream_identical() {
+        let s = MemStorage::new();
+        let (man, src) =
+            synth_manifest(&s, "r", 10, &[100, 60, 40], 3, |g| (g % 251) as u8);
+        for target in [vec![200u64], vec![50, 50, 50, 50], vec![100, 60, 40]] {
+            let (out, fetched) =
+                reshape_restore(&s, &man, StageCodec::Opaque, &target, 8).unwrap();
+            let got: Vec<u8> = out.concat();
+            let want: Vec<u8> = src.concat();
+            assert_eq!(got, want, "stream identity at target {target:?}");
+            assert!(fetched <= 200, "never fetch more than the dense restore");
+            // the pure in-memory re-tile agrees with the planned-fetch path
+            assert_eq!(retile_payload(StageCodec::Opaque, &src, &target).unwrap(), out);
+        }
+        // identity target is byte-for-byte per stage
+        let (out, _) =
+            reshape_restore(&s, &man, StageCodec::Opaque, &[100, 60, 40], 8).unwrap();
+        assert_eq!(out, src);
+    }
+
+    #[test]
+    fn partial_target_fetches_only_needed_shards() {
+        let s = MemStorage::new();
+        let (man, src) =
+            synth_manifest(&s, "r", 10, &[120, 120], 4, |g| (g % 249) as u8);
+        // a plan for ONLY the first 30 bytes-worth... not expressible as a
+        // target (targets must cover the stream), but a collapse to one
+        // stage still needs every shard exactly once
+        let plan = ReshapePlan::plan(&man, StageCodec::Opaque, &[240]).unwrap();
+        assert_eq!(plan.needed.len(), man.shards.len());
+        assert_eq!(plan.fetched_bytes, 240);
+        let out = plan.execute(&s, &man).unwrap();
+        assert_eq!(out[0], src.concat());
+    }
+
+    #[test]
+    fn stage_state_reshape_retiles_element_streams_and_reanchors_headers() {
+        // 2 source stages of 3 and 2 params → one target stage of 5 params
+        let n = [3u64, 2u64];
+        let sb: Vec<u64> = n.iter().map(|&k| 40 + 12 * k).collect();
+        let mut stages = Vec::new();
+        let mut next = 0u8;
+        for (i, &k) in n.iter().enumerate() {
+            let mut p = Vec::new();
+            p.extend_from_slice(&(77u64).to_le_bytes()); // step, uniform
+            for lane in 0..4u64 {
+                p.extend_from_slice(&(1000 * (i as u64) + lane).to_le_bytes());
+            }
+            for _ in 0..12 * k {
+                p.push(next);
+                next = next.wrapping_add(1);
+            }
+            stages.push(p);
+        }
+        let target = vec![40 + 12 * 5];
+        let out = retile_payload(StageCodec::StageState, &stages, &target).unwrap();
+        assert_eq!(out.len(), 1);
+        // header: source stage 0's, verbatim
+        assert_eq!(out[0][..40], stages[0][..40]);
+        // params stream: stage0 params (12 bytes) then stage1 params (8)
+        let params: Vec<u8> = [&stages[0][40..52], &stages[1][40..48]].concat();
+        assert_eq!(out[0][40..60], params[..]);
+        // adam_m stream follows the same carve
+        let adam_m: Vec<u8> = [&stages[0][52..64], &stages[1][48..56]].concat();
+        assert_eq!(out[0][60..80], adam_m[..]);
+        // and the round trip back to the source shape restores the element
+        // streams exactly (headers re-anchored to stage 0's)
+        let back = retile_payload(StageCodec::StageState, &out, &sb).unwrap();
+        assert_eq!(back[0][40..], stages[0][40..]);
+        assert_eq!(back[1][40..], stages[1][40..]);
+        assert_eq!(back[1][..40], stages[0][..40], "headers re-anchored");
+    }
+
+    #[test]
+    fn incompatible_shapes_are_refused() {
+        assert!(!reshape_compatible(StageCodec::Opaque, &[100], &[99]));
+        assert!(!reshape_compatible(StageCodec::Opaque, &[], &[100]));
+        assert!(reshape_compatible(StageCodec::Opaque, &[60, 40], &[100]));
+        // StageState: totals match only after header accounting
+        assert!(reshape_compatible(StageCodec::StageState, &[40 + 24, 40 + 12], &[40 + 36]));
+        assert!(!reshape_compatible(StageCodec::StageState, &[40 + 24], &[40 + 25]));
+        assert!(!reshape_compatible(StageCodec::StageState, &[39], &[39]));
+        let src = vec![vec![0u8; 100]];
+        assert!(retile_payload(StageCodec::Opaque, &src, &[99]).is_err());
+    }
+
+    #[test]
+    fn reshaped_resolver_serves_dense_when_shapes_match() {
+        let s = MemStorage::new();
+        let (_, src) = synth_manifest(&s, "r", 10, &[64, 64], 2, |g| (g % 200) as u8);
+        let (man, stages, reshaped) = resolve_for_recovery_reshaped(
+            &s,
+            "r",
+            StageCodec::Opaque,
+            &[64, 64],
+            None,
+            8,
+        )
+        .unwrap();
+        assert!(!reshaped, "exact shape takes the dense path");
+        assert_eq!(man.step, 10);
+        assert_eq!(stages, src);
+        // mismatched but compatible target takes the reshape path
+        let (_, stages, reshaped) =
+            resolve_for_recovery_reshaped(&s, "r", StageCodec::Opaque, &[128], None, 8)
+                .unwrap();
+        assert!(reshaped);
+        assert_eq!(stages[0], src.concat());
+        // incompatible target finds nothing
+        assert!(resolve_for_recovery_reshaped(
+            &s,
+            "r",
+            StageCodec::Opaque,
+            &[127],
+            None,
+            8
+        )
+        .is_none());
+    }
+
+    #[test]
+    fn delta_chain_replays_onto_the_reshaped_base() {
+        // base at step 10, delta at step 14 patching bytes — reshape of the
+        // delta head must equal the dense chain restore, re-tiled
+        let s = MemStorage::new();
+        let (base, src) = synth_manifest(&s, "r", 10, &[60, 40], 2, |g| (g % 97) as u8);
+        let mut d = base.clone();
+        d.step = 14;
+        d.snapshot_step = 14;
+        d.base_step = Some(10);
+        d.atoms = vec![];
+        for sh in &mut d.shards {
+            sh.key = shard_key("r", 14, sh.stage, sh.node);
+        }
+        // patch 4 bytes at offset 2 of stage 0's first shard
+        let mut patched = src.clone();
+        for i in 2..6 {
+            patched[0][i] ^= 0xA5;
+        }
+        d.shards[0].extents = vec![(2, 4)];
+        d.shards[0].crc32 = crc32fast::hash(&patched[0][..d.shards[0].len as usize]);
+        s.put(&d.shards[0].key, &patched[0][2..6]).unwrap();
+        s.put(&manifest_key("r", 14), &d.encode()).unwrap();
+
+        let (hit, stages, reshaped) =
+            resolve_for_recovery_reshaped(&s, "r", StageCodec::Opaque, &[100], None, 8)
+                .unwrap();
+        assert!(reshaped);
+        assert_eq!(hit.step, 14, "the delta head serves, not the base");
+        assert_eq!(stages[0], patched.concat(), "extents land on the reshaped base");
+    }
+}

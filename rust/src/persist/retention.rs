@@ -272,6 +272,7 @@ mod tests {
                     parts: entries,
                 }],
                 base_step: None,
+                atoms: vec![],
             }
         };
         let old = mk_manifest(10, 2);
@@ -326,6 +327,7 @@ mod tests {
                 parts: vec![],
             }],
             base_step: None,
+            atoms: vec![],
         };
         s.put(&manifest_key("m", step), &m.encode()).unwrap();
         m
@@ -359,6 +361,7 @@ mod tests {
                 parts: vec![],
             }],
             base_step: Some(base),
+            atoms: vec![],
         };
         s.put(&manifest_key("m", step), &m.encode()).unwrap();
         m

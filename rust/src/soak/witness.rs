@@ -179,6 +179,13 @@ pub fn run_witness(master_seed: u64) -> Result<WitnessReport> {
     storage.set_dark(false);
     rep.brownout_refusals = storage.refusals();
     ensure!(rep.brownout_refusals > 0, "the dark probe must have been refused");
+    // the brownout also tore a manifest upload mid-write: a truncated
+    // step-35 blob now shadows the committed step-30 round. The resolver
+    // must skip it (newest *decodable* wins) and say so on the torn-skip
+    // counter — a silent skip here would hide real storage corruption.
+    let torn_key = persist::manifest_key(model, 35);
+    storage.put(&torn_key, b"{\"model\": \"soak\"")?;
+    let torn_before = persist::manifest_torn_count();
     let plan = RecoveryPlan::probe(&topo, &rack, true, storage.as_ref(), model);
     ensure!(
         plan.predicted() == Some(RecoveryPath::Durable(DurableTier::Manifest)),
@@ -193,6 +200,13 @@ pub fn run_witness(master_seed: u64) -> Result<WitnessReport> {
         "recovery must land on the newest round, got {}",
         man.snapshot_step
     );
+    ensure!(
+        persist::manifest_torn_count() > torn_before,
+        "skipping the torn step-35 manifest must be counted, not silent"
+    );
+    // the operator replaces the torn blob (here: removes it) before the
+    // retention leg, so GC's keep-last accounting sees only real rounds
+    storage.delete(&torn_key)?;
     rep.bytes_verified += verify(&data, &v2)?;
     rep.durable_restores += 1;
     rep.incidents += 1;

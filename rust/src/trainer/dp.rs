@@ -454,12 +454,14 @@ impl DpTrainer {
     pub fn recover(&mut self, dead: &[usize]) -> Result<u64> {
         let _sp = obs::span_arg(obs::cat::TRAINER, "recover", 0, dead.len() as u64);
         let plan = match &self.reft {
-            Some(_) => RecoveryPlan::probe(
+            Some(_) => RecoveryPlan::probe_elastic(
                 &self.topo,
                 dead,
                 self.cfg.ft.raim5,
                 self.storage.as_ref(),
                 &self.cfg.model,
+                1,
+                self.cfg.ft.reshape_on_restore,
             ),
             // no in-memory fabric: the tree degenerates to the durable leaf
             None => RecoveryPlan::durable_only(self.storage.as_ref(), &self.cfg.model),
@@ -529,15 +531,35 @@ impl DpTrainer {
     fn recover_from_durable(&mut self, inmem_err: Option<&anyhow::Error>) -> Result<RecoveryPath> {
         let n_params = self.manifest.total_params;
         let legacy_key = self.storage.latest_for(&self.cfg.model);
-        if let Some((man, stages)) = persist::resolve_for_recovery(
-            self.storage.as_ref(),
-            &self.cfg.model,
-            1,
-            legacy_key.as_deref(),
-        ) {
+        // behind the knob, a manifest persisted at a different pipeline
+        // shape is regathered through its atom index instead of skipped
+        let resolved = if self.cfg.ft.reshape_on_restore {
+            let target = [n_params as u64 * 12 + persist::STAGE_STATE_HEADER_BYTES];
+            persist::resolve_for_recovery_reshaped(
+                self.storage.as_ref(),
+                &self.cfg.model,
+                persist::StageCodec::StageState,
+                &target,
+                legacy_key.as_deref(),
+                self.cfg.ft.delta_chain_max,
+            )
+        } else {
+            persist::resolve_for_recovery_bounded(
+                self.storage.as_ref(),
+                &self.cfg.model,
+                1,
+                legacy_key.as_deref(),
+                self.cfg.ft.delta_chain_max,
+            )
+            .map(|(man, stages)| (man, stages, false))
+        };
+        if let Some((man, stages, reshaped)) = resolved {
             self.state = StageState::from_payload(0, n_params, &stages[0])?;
             self.metrics.inc_k(keys::RECOVERIES_CHECKPOINT, 1);
             self.metrics.inc_k(keys::RECOVERIES_MANIFEST, 1);
+            if reshaped {
+                self.metrics.inc("recoveries_reshaped", 1);
+            }
             self.metrics
                 .gauge("recovered_manifest_step", man.snapshot_step as f64);
             let restored: usize = stages.iter().map(Vec::len).sum();

@@ -655,12 +655,14 @@ impl PipelineTrainer {
         let _sp = obs::span_arg(obs::cat::TRAINER, "recover", 0, dead.len() as u64);
         let sizes: Vec<usize> = self.manifest.stages.iter().map(|m| m.n_params).collect();
         let plan = match &self.reft {
-            Some(_) => RecoveryPlan::probe(
+            Some(_) => RecoveryPlan::probe_elastic(
                 &self.topo,
                 dead,
                 self.cfg.ft.raim5,
                 self.storage.as_ref(),
                 &self.cfg.model,
+                self.stages.len(),
+                self.cfg.ft.reshape_on_restore,
             ),
             None => RecoveryPlan::durable_only(self.storage.as_ref(), &self.cfg.model),
         };
@@ -729,17 +731,41 @@ impl PipelineTrainer {
         inmem_err: Option<&anyhow::Error>,
     ) -> Result<RecoveryPath> {
         let legacy_key = self.storage.latest_for(&self.cfg.model);
-        if let Some((man, payloads)) = persist::resolve_for_recovery(
-            self.storage.as_ref(),
-            &self.cfg.model,
-            self.stages.len(),
-            legacy_key.as_deref(),
-        ) {
+        // behind the knob, a manifest persisted at a different pipeline
+        // shape is regathered into this run's stage layout through the
+        // manifest's atom index (element streams re-tiled per stage)
+        let resolved = if self.cfg.ft.reshape_on_restore {
+            let target: Vec<u64> = sizes
+                .iter()
+                .map(|&n| n as u64 * 12 + persist::STAGE_STATE_HEADER_BYTES)
+                .collect();
+            persist::resolve_for_recovery_reshaped(
+                self.storage.as_ref(),
+                &self.cfg.model,
+                persist::StageCodec::StageState,
+                &target,
+                legacy_key.as_deref(),
+                self.cfg.ft.delta_chain_max,
+            )
+        } else {
+            persist::resolve_for_recovery_bounded(
+                self.storage.as_ref(),
+                &self.cfg.model,
+                self.stages.len(),
+                legacy_key.as_deref(),
+                self.cfg.ft.delta_chain_max,
+            )
+            .map(|(man, payloads)| (man, payloads, false))
+        };
+        if let Some((man, payloads, reshaped)) = resolved {
             for (s, payload) in payloads.iter().enumerate() {
                 self.stages[s] = StageState::from_payload(s, sizes[s], payload)?;
             }
             self.metrics.inc_k(keys::RECOVERIES_CHECKPOINT, 1);
             self.metrics.inc_k(keys::RECOVERIES_MANIFEST, 1);
+            if reshaped {
+                self.metrics.inc("recoveries_reshaped", 1);
+            }
             self.metrics
                 .gauge("recovered_manifest_step", man.snapshot_step as f64);
             let restored: usize = payloads.iter().map(Vec::len).sum();

@@ -22,7 +22,7 @@ use anyhow::{Context, Result};
 
 use reft::checkpoint::{storage::step_key, CheckpointFile, MemStorage, SectionKind, Storage};
 use reft::config::{FtConfig, PersistConfig};
-use reft::elastic::{DurableTier, RecoveryPath, RecoveryPlan, ReftCluster};
+use reft::elastic::{DurableTier, RecoveryDecision, RecoveryPath, RecoveryPlan, ReftCluster};
 use reft::metrics::Metrics;
 use reft::persist::{self, PersistEngine};
 use reft::snapshot::SharedPayload;
@@ -790,6 +790,112 @@ fn crash_matrix_correlated_rack_loss() {
     assert_eq!(actual, RecoveryPath::Durable(DurableTier::Manifest));
     assert_eq!(recovered, as_bytes(&v1), "durable restore must be byte-exact");
     assert_eq!(metrics.counter("recovery_mispredictions"), 0);
+}
+
+/// The elastic-reshape cell: a rack burst kills a 3-stage-pp run's SG0,
+/// and the cluster comes back SMALLER — 2 pipeline stages on 4 nodes. The
+/// shape-aware probe must plan the [`RecoveryDecision::Reshape`] leaf
+/// (predicting the manifest tier), the in-memory gather must refuse, the
+/// reshaped restore must be stream-identical to the 3-stage round, and the
+/// reshaped payloads must re-seed the new-shape in-memory fabric so the
+/// shrunk cluster is protected again — all with zero mispredictions. With
+/// the knob off the same probe must keep the pre-reshape verdict.
+#[test]
+fn crash_matrix_reshape_after_rack_loss() {
+    let mut rng = Rng::seed_from(SEED ^ 0x2E5A);
+    let topo = Topology::build(ParallelPlan::new(2, 4, 3), 6, 4).unwrap();
+    let stage_bytes = vec![24_000u64, 24_000, 24_000];
+    let ft = FtConfig { raim5: true, ..FtConfig::default() };
+    let mut cluster = ReftCluster::start(topo.clone(), &stage_bytes, ft).unwrap();
+    let model = "cm-reshape";
+    let storage = Arc::new(MemStorage::new());
+
+    let v1 = payloads(&stage_bytes, &mut rng);
+    cluster.snapshot_all(&v1).unwrap();
+    let engine = PersistEngine::start(
+        model,
+        Arc::clone(&storage) as Arc<dyn Storage>,
+        cluster.plan.clone(),
+        base_persist(),
+    );
+    engine.enqueue(10, cluster.persist_sources(), vec![]).unwrap();
+    engine.flush().unwrap();
+    assert_eq!(engine.stats().manifests_committed, 1);
+
+    // the whole rack backing SG0 goes down in one tick; the replacement
+    // capacity only supports a 2-stage pipeline
+    let rack = topo.sharding_group(0).nodes;
+    for &n in &rack {
+        cluster.kill_node(n);
+    }
+    let target_bytes = vec![36_000u64, 36_000];
+
+    // knob off: the pre-reshape verdict is untouched (manifest tier, which
+    // a shape-matched loader would then fail to serve — the old abort)
+    let frozen = RecoveryPlan::probe_elastic(
+        &topo, &rack, true, storage.as_ref(), model, 2, false,
+    );
+    assert_eq!(
+        frozen.decision,
+        RecoveryDecision::LoadCheckpoint { tier: DurableTier::Manifest },
+        "knob off must keep the pre-reshape decision"
+    );
+
+    let metrics = Metrics::new();
+    let plan = RecoveryPlan::probe_elastic(
+        &topo, &rack, true, storage.as_ref(), model, 2, true,
+    );
+    plan.record_predicted(&metrics);
+    assert_eq!(
+        plan.decision,
+        RecoveryDecision::Reshape { from_stages: 3, to_stages: 2 },
+        "shape mismatch behind the knob must plan the reshape leaf"
+    );
+    assert_eq!(plan.predicted(), Some(RecoveryPath::Durable(DurableTier::Manifest)));
+    assert!(
+        cluster.restore_all(&rack).is_err(),
+        "the in-memory gather must refuse a whole-SG loss"
+    );
+
+    let (man, reshaped_stages, reshaped) = persist::resolve_for_recovery_reshaped(
+        storage.as_ref(),
+        model,
+        persist::StageCodec::Opaque,
+        &target_bytes,
+        None,
+        8,
+    )
+    .expect("the 3-stage manifest must serve the 2-stage run");
+    assert!(reshaped, "a shape-mismatched hit must go through the reshape pass");
+    assert_eq!(man.snapshot_step, 10);
+    assert_eq!(
+        reshaped_stages.iter().map(|v| v.len() as u64).collect::<Vec<_>>(),
+        target_bytes
+    );
+    assert_eq!(
+        reshaped_stages.concat(),
+        as_bytes(&v1).concat(),
+        "the reshaped restore must be stream-identical to the 3-stage round"
+    );
+    plan.record_actual(&metrics, RecoveryPath::Durable(DurableTier::Manifest));
+    assert_eq!(metrics.counter("recovery_mispredictions"), 0);
+    assert_eq!(metrics.counter("recovery_predicted_manifest"), 1);
+
+    // the shrunk cluster re-seeds its in-memory tier at the new shape from
+    // the reshaped payloads and is immediately restorable again
+    let topo2 = Topology::build(ParallelPlan::new(2, 4, 2), 4, 4).unwrap();
+    let ft2 = FtConfig { raim5: true, ..FtConfig::default() };
+    let mut cluster2 = ReftCluster::start(topo2, &target_bytes, ft2).unwrap();
+    let seeded: Vec<SharedPayload> = reshaped_stages
+        .iter()
+        .map(|v| SharedPayload::new(v.clone()))
+        .collect();
+    cluster2.snapshot_all(&seeded).unwrap();
+    assert_eq!(
+        cluster2.restore_all(&[]).unwrap(),
+        reshaped_stages,
+        "the new-shape fabric must protect the reshaped state"
+    );
 }
 
 /// Cross-tier tie-break, live: a legacy checkpoint strictly newer than the

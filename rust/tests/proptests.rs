@@ -596,6 +596,16 @@ fn prop_manifest_streaming_codec_matches_dom() {
             stage_bytes: (0..rng.below(4)).map(|_| rng.next_u64() % EXACT).collect(),
             shards,
             base_step: (rng.below(2) == 1).then(|| rng.next_u64() % EXACT),
+            // arbitrary atom rows: the codec round-trips the index as-is
+            // (consistency with the tiling is a restore-time concern)
+            atoms: (0..rng.below(4))
+                .map(|_| reft::persist::AtomEntry {
+                    stage: rng.below(8),
+                    start: rng.next_u64() % EXACT,
+                    len: rng.next_u64() % EXACT,
+                    key: format!("a-{}", s(&mut rng, 10)),
+                })
+                .collect(),
         };
         let streamed = man.encode();
         assert_eq!(
@@ -941,5 +951,174 @@ fn prop_metrics_histogram_plane_consistent() {
         let (p50, p99) = (m.timer_quantile("op", 0.5), m.timer_quantile("op", 0.99));
         assert!(p99 >= p50, "case {case}: p99 {p99} < p50 {p50}");
         assert!(p50 > 0.0, "case {case}: positive samples give a positive p50");
+    }
+}
+
+/// Reshape-on-restore vs the dense oracle: for random source shapes
+/// (pp 1..=4, 1..=4 shards per stage, random tilings) and random targets
+/// — identity, collapse-to-1, and arbitrary cuts of the same stream —
+/// the reshaped restore is byte-identical to the dense restore re-tiled,
+/// never fetches more bytes than the dense restore, and a delta link
+/// replays its extents onto the reshaped base.
+#[test]
+fn prop_reshape_matches_dense_restore_across_shapes() {
+    use reft::checkpoint::MemStorage;
+    use reft::persist::{
+        self, derive_atoms, manifest_key, resolve_for_recovery_reshaped, shard_key,
+        PersistManifest, ShardEntry, StageCodec,
+    };
+
+    // random tiling of `total` bytes into 1..=4 stages (every stage > 0
+    // unless total is too small to go around)
+    fn tiling(rng: &mut Rng, total: u64) -> Vec<u64> {
+        let n = (1 + rng.below(4) as u64).min(total.max(1));
+        let mut cuts: Vec<u64> = (0..n - 1).map(|_| 1 + rng.next_u64() % total).collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut out = Vec::new();
+        let mut prev = 0u64;
+        for c in cuts {
+            out.push(c - prev);
+            prev = c;
+        }
+        out.push(total - prev);
+        out.retain(|&b| b > 0);
+        if out.is_empty() {
+            out.push(total);
+        }
+        out
+    }
+
+    let mut rng = Rng::seed_from(0xA705);
+    for case in 0..60 {
+        let s = MemStorage::new();
+        let pp = 1 + rng.below(4);
+        let stage_bytes: Vec<u64> =
+            (0..pp).map(|_| 1 + rng.below(3000) as u64).collect();
+        let total: u64 = stage_bytes.iter().sum();
+        let shards_per_stage = 1 + rng.below(4);
+        let mut shards = Vec::new();
+        let mut stages: Vec<Vec<u8>> = Vec::new();
+        for (stage, &sb) in stage_bytes.iter().enumerate() {
+            let payload: Vec<u8> = (0..sb).map(|_| rng.next_u64() as u8).collect();
+            let chunk = (sb as usize).div_ceil(shards_per_stage);
+            let (mut off, mut node) = (0usize, 0usize);
+            while off < sb as usize {
+                let end = (off + chunk).min(sb as usize);
+                let key = shard_key("rp", 10, stage, node);
+                s.put(&key, &payload[off..end]).unwrap();
+                shards.push(ShardEntry {
+                    key,
+                    stage,
+                    node,
+                    offset: off as u64,
+                    len: (end - off) as u64,
+                    crc32: crc32fast::hash(&payload[off..end]),
+                    extents: vec![],
+                    parts: vec![],
+                });
+                off = end;
+                node += 1;
+            }
+            stages.push(payload);
+        }
+        let atoms = derive_atoms(&stage_bytes, &shards).unwrap();
+        let man = PersistManifest {
+            model: "rp".into(),
+            step: 10,
+            version: 1,
+            snapshot_step: 10,
+            stage_bytes: stage_bytes.clone(),
+            shards,
+            base_step: None,
+            atoms,
+        };
+        s.put(&manifest_key("rp", 10), &man.encode()).unwrap();
+
+        let dense = persist::load_manifest_payload(&s, &man).unwrap();
+        assert_eq!(dense, stages, "case {case}: dense oracle");
+        let oracle: Vec<u8> = dense.concat();
+
+        // identity target: byte-for-byte per stage, served as a reshape of
+        // the manifest's own shape through the same plan machinery
+        let (out, fetched) =
+            persist::reshape_restore(&s, &man, StageCodec::Opaque, &stage_bytes, 8)
+                .unwrap();
+        assert_eq!(out, stages, "case {case}: identity reshape");
+        assert!(fetched <= total, "case {case}");
+
+        // collapse-to-1 and two random tilings: stream identity, fetch cap
+        let mut targets = vec![vec![total]];
+        targets.push(tiling(&mut rng, total));
+        targets.push(tiling(&mut rng, total));
+        for target in &targets {
+            let (out, fetched) =
+                persist::reshape_restore(&s, &man, StageCodec::Opaque, target, 8)
+                    .unwrap();
+            assert_eq!(
+                out.iter().map(|v| v.len() as u64).collect::<Vec<_>>(),
+                *target,
+                "case {case}: target shape honored"
+            );
+            assert_eq!(out.concat(), oracle, "case {case}: stream identity @ {target:?}");
+            assert!(
+                fetched <= total,
+                "case {case}: reshaped fetch {fetched} > dense {total}"
+            );
+            // the in-memory re-tile oracle agrees with the planned fetch
+            assert_eq!(
+                persist::retile_payload(StageCodec::Opaque, &dense, target).unwrap(),
+                out,
+                "case {case}"
+            );
+        }
+
+        // every third case: chain a one-extent delta on top and resolve at
+        // a random target — extents must land on the reshaped base
+        if case % 3 == 0 {
+            let mut d = man.clone();
+            d.step = 14;
+            d.snapshot_step = 14;
+            d.base_step = Some(10);
+            d.atoms = vec![];
+            for sh in &mut d.shards {
+                sh.key = shard_key("rp", 14, sh.stage, sh.node);
+            }
+            let victim = rng.below(d.shards.len());
+            let mut patched = stages.clone();
+            {
+                let sh = &mut d.shards[victim];
+                let start = rng.next_u64() % sh.len;
+                let len = 1 + rng.next_u64() % (sh.len - start);
+                let (a, b) = (sh.offset as usize, (sh.offset + sh.len) as usize);
+                let stage = sh.stage;
+                for i in start..start + len {
+                    patched[stage][a + i as usize] ^= 0xA5;
+                }
+                sh.extents = vec![(start, len)];
+                sh.crc32 = crc32fast::hash(&patched[stage][a..b]);
+                let blob_from = a + start as usize;
+                s.put(&sh.key, &patched[stage][blob_from..blob_from + len as usize])
+                    .unwrap();
+            }
+            s.put(&manifest_key("rp", 14), &d.encode()).unwrap();
+            let target = tiling(&mut rng, total);
+            let (hit, out, reshaped) = resolve_for_recovery_reshaped(
+                &s,
+                "rp",
+                StageCodec::Opaque,
+                &target,
+                None,
+                8,
+            )
+            .unwrap();
+            assert_eq!(hit.step, 14, "case {case}: the delta head serves");
+            assert_eq!(
+                out.concat(),
+                patched.concat(),
+                "case {case}: extents land on the reshaped base"
+            );
+            assert_eq!(reshaped, target != stage_bytes, "case {case}");
+        }
     }
 }
